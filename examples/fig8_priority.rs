@@ -1,0 +1,113 @@
+//! Figure 8: prioritized partial checkpoints vs round-robin vs random,
+//! sweeping checkpoint granularity at constant data volume.
+//!
+//! x-axis k ∈ {1, 2, 4, 8}: fraction 1/k checkpoints at k× frequency
+//! (same bytes per C iterations as a full checkpoint every C). The lost
+//! fraction is fixed at 1/2 and recovery is partial. The dashed paper
+//! baseline (full checkpoints, k=1) is the first column. Expected shape:
+//! priority decreases with k; random mostly increases; round in between.
+//!
+//!   cargo run --release --example fig8_priority -- \
+//!       [--trials 20] [--panels mlr_covtype,mf_jester] [--interval 8]
+
+use anyhow::Result;
+
+use scar::checkpoint::{CheckpointPolicy, Selector};
+use scar::failure::FailureInjector;
+use scar::harness::{self, Cell, TrialSpec};
+use scar::models::default_engine;
+use scar::models::presets::{build_preset, preset, standard_panels};
+use scar::recovery::RecoveryMode;
+use scar::util::cli::Args;
+use scar::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let trials = args.usize_or("trials", 20);
+    let seed = args.u64_or("seed", 42);
+    let interval = args.usize_or("interval", 8);
+    let lost_fraction = args.f64_or("lost-fraction", 0.5);
+    let panels: Vec<String> = match args.str_opt("panels") {
+        Some(csv) => csv.split(',').map(|s| s.trim().to_string()).collect(),
+        None => standard_panels().iter().map(|p| p.name.to_string()).collect(),
+    };
+    let ks = [1usize, 2, 4, 8];
+    let selectors = [Selector::Priority, Selector::RoundRobin, Selector::Random];
+
+    let engine = default_engine()?;
+    std::fs::create_dir_all("results")?;
+    let mut csv = vec!["panel,k,selector,mean,ci95,n,censored".to_string()];
+
+    for panel in &panels {
+        let p = preset(panel);
+        let mut trainer = if panel.starts_with("lda") {
+            build_preset(None, &p, 1234)?
+        } else {
+            build_preset(Some(engine.clone()), &p, 1234)?
+        };
+        eprintln!("[fig8] {panel}: unperturbed trajectory ({} iters) ...", p.max_iters);
+        let traj = harness::run_trajectory(trainer.as_mut(), seed, p.max_iters, p.target_iters)?;
+        let inj = FailureInjector::new(0.05, traj.converged_iters.saturating_sub(2).max(2));
+        let n_atoms = trainer.layout().n_atoms();
+
+        // Pre-sample one failure schedule per trial, shared by all cells
+        // so strategies are compared on identical failures.
+        let failures: Vec<(usize, Vec<usize>)> = (0..trials)
+            .map(|trial| {
+                let mut rng = Rng::new(seed ^ (0x8000 + trial as u64));
+                let ev = inj.sample_atom_failure(n_atoms, lost_fraction, &mut rng);
+                (ev.iter.max(1), ev.lost_atoms)
+            })
+            .collect();
+
+        let mut cells = Vec::new();
+        for &k in &ks {
+            for &sel in &selectors {
+                // k=1 is the full-checkpoint baseline regardless of selector;
+                // run it once (under the priority label).
+                if k == 1 && sel != Selector::Priority {
+                    continue;
+                }
+                let mut costs = Vec::new();
+                let mut censored = 0usize;
+                for (trial, (fail_iter, lost)) in failures.iter().enumerate() {
+                    let spec = TrialSpec {
+                        policy: CheckpointPolicy::partial(interval, k, sel),
+                        mode: RecoveryMode::Partial,
+                        fail_iter: *fail_iter,
+                        lost_atoms: lost.clone(),
+                    };
+                    let r =
+                        harness::run_trial(trainer.as_mut(), &traj, &spec, seed ^ trial as u64)?;
+                    costs.push(r.iteration_cost);
+                    censored += r.censored as usize;
+                }
+                let label = if k == 1 {
+                    format!("{panel} k=1 full")
+                } else {
+                    format!("{panel} k={k} {sel}")
+                };
+                let cell = Cell::new(label, costs, censored);
+                csv.push(format!(
+                    "{panel},{k},{},{:.3},{:.3},{},{}",
+                    if k == 1 { "full".to_string() } else { sel.to_string() },
+                    cell.summary.mean,
+                    cell.summary.ci95,
+                    cell.summary.n,
+                    cell.censored
+                ));
+                cells.push(cell);
+            }
+        }
+        println!(
+            "{}",
+            harness::render_table(
+                &format!("Fig 8: {panel} (lost fraction {lost_fraction}, partial recovery)"),
+                &cells
+            )
+        );
+    }
+    std::fs::write("results/fig8.csv", csv.join("\n"))?;
+    println!("-> results/fig8.csv");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT entry point: lower every model variant to an HLO-text artifact.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the ``xla`` crate) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs, per variant ``name``:
+  artifacts/<name>.hlo.txt   — HLO text, lowered with return_tuple=True
+  artifacts/<name>.meta.json — interface description (inputs/outputs,
+                               kinds, shapes, dtypes, hyperparams)
+and a global artifacts/manifest.json.
+
+Python runs ONLY here (build time); the Rust coordinator is self-contained
+once artifacts exist.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .models import MODELS
+
+DEFAULT_VARIANTS = [
+    "qp4",
+    "qp32",
+    "mlr_mnist",
+    "mlr_covtype",
+    "mf_movielens",
+    "mf_jester",
+    "cnn_mnist",
+    "tfm_tiny",
+    "tfm_small",
+]
+LARGE_VARIANTS = ["tfm_100m"]
+
+
+def variant_index():
+    idx = {}
+    for model_name, mod in MODELS.items():
+        for variant, cfg in mod.configs().items():
+            idx[variant] = (model_name, mod, cfg)
+    return idx
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: str, outdir: str) -> dict:
+    model_name, mod, cfg = variant_index()[variant]
+    step, example, meta = mod.build(cfg)
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example]
+    lowered = jax.jit(step).lower(*specs)
+    text = to_hlo_text(lowered)
+
+    hlo_path = os.path.join(outdir, f"{variant}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    # Default dtype is f32; models mark exceptions explicitly.
+    for entry in meta["inputs"] + meta["outputs"]:
+        entry.setdefault("dtype", "f32")
+    meta.update(
+        {
+            "name": variant,
+            "model": model_name,
+            "config": cfg,
+            "hlo": f"{variant}.hlo.txt",
+            "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+    )
+    with open(os.path.join(outdir, f"{variant}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return {"variant": variant, "model": model_name, "hlo_bytes": len(text)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--variants", nargs="*", default=None)
+    ap.add_argument("--large", action="store_true", help="also lower tfm_100m")
+    # Back-compat with the original scaffold Makefile invocation.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    outdir = args.outdir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    variants = args.variants or list(DEFAULT_VARIANTS)
+    if args.large:
+        variants += LARGE_VARIANTS
+
+    entries = []
+    for v in variants:
+        entry = lower_variant(v, outdir)
+        entries.append(entry)
+        print(f"lowered {v}: {entry['hlo_bytes']} bytes", file=sys.stderr)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": entries}, f, indent=1)
+    print(f"wrote {len(entries)} artifacts to {outdir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+"""Fused multinomial-logistic-regression gradient Pallas kernel (L1).
+
+Computes, in one pass over the batch,
+
+    logits = X @ W                  (tile-local matmul)
+    p      = softmax(logits)        (on-chip, row-wise, numerically safe)
+    grad   = X^T @ (p - Y) / B      (accumulated across batch tiles)
+    loss   = -sum(Y * log p) / B    (accumulated across batch tiles)
+
+i.e. the entire SGD inner loop of the paper's MLR workload (§5.1) fused
+into a single kernel: one read of X per tile, no logits/probability
+round-trip through HBM.
+
+The grid walks batch tiles; ``W`` (d x k) stays resident in VMEM across
+the whole grid (for the paper's MLR shapes d*k is 784x10 / 54x7 — a few
+tens of KB, far under the ~16 MiB VMEM budget; see EXPERIMENTS.md §Perf
+for the footprint table). interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlr_grad_kernel(x_ref, w_ref, y_ref, g_ref, loss_ref, *, batch: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]  # (bb, d)
+    w = w_ref[...]  # (d, k)
+    y = y_ref[...]  # (bb, k)
+
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - zmax
+    ez = jnp.exp(z)
+    denom = jnp.sum(ez, axis=1, keepdims=True)
+    p = ez / denom
+    # Cross-entropy via logsumexp for stability: -sum(y * (z - log denom)).
+    logp = z - jnp.log(denom)
+
+    inv_b = 1.0 / batch
+    g_ref[...] += jnp.dot(x.T, (p - y), preferred_element_type=jnp.float32) * inv_b
+    loss_ref[...] += -jnp.sum(y * logp, keepdims=False)[None] * inv_b
+
+
+@functools.partial(jax.jit, static_argnames=("bb",))
+def mlr_grad_pallas(x, w, y, bb: int = 128):
+    """Fused MLR gradient + mean cross-entropy loss.
+
+    Args:
+      x: (B, d) batch inputs.
+      w: (d, k) weights.
+      y: (B, k) one-hot labels.
+      bb: batch tile size (must divide B after clamping).
+
+    Returns:
+      (grad (d, k), loss (1,)) — both fp32.
+    """
+    b, d = x.shape
+    _, k = w.shape
+    if y.shape != (b, k):
+        raise ValueError(f"mlr_grad: y shape {y.shape} != {(b, k)}")
+    bb = min(bb, b)
+    while b % bb:
+        bb -= 1
+    grid = (b // bb,)
+    return pl.pallas_call(
+        functools.partial(_mlr_grad_kernel, batch=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, k), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, y)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+These are the ground truth the pytest/hypothesis suites compare against.
+They are deliberately written in the most obvious way possible — no
+tiling, no fusion — so that a mismatch unambiguously implicates the
+kernel, not the reference.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain fp32 matmul."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def softmax_ref(z, axis=-1):
+    z = z - jnp.max(z, axis=axis, keepdims=True)
+    ez = jnp.exp(z)
+    return ez / jnp.sum(ez, axis=axis, keepdims=True)
+
+
+def mlr_loss_ref(x, w, y):
+    """Mean softmax cross-entropy of one-hot labels ``y``."""
+    logits = x @ w
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    logp = z - jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    return -jnp.mean(jnp.sum(y * logp, axis=1))
+
+
+def mlr_grad_ref(x, w, y):
+    """(grad, loss) of mean softmax cross-entropy w.r.t. ``w``."""
+    b = x.shape[0]
+    p = softmax_ref(x @ w, axis=1)
+    grad = x.T @ (p - y) / b
+    return grad, mlr_loss_ref(x, w, y)

@@ -1,0 +1,8 @@
+"""L2 facade: re-exports the model zoo for tests and the AOT driver.
+
+The actual definitions live in ``compile.models.*`` (one module per
+paper workload — QP, MLR, MF-ALS, CNN, Transformer); this module exists
+so ``from compile import model; model.MODELS`` is the single entry point.
+"""
+
+from .models import MODELS, cnn, mf, mlr, qp, transformer  # noqa: F401

@@ -1,0 +1,23 @@
+"""L2 model definitions (build-time JAX; lowered once to HLO artifacts).
+
+Each submodule exposes:
+
+  configs() -> {variant_name: cfg_dict}
+  build(cfg) -> (step_fn, example_args, meta)
+
+where ``step_fn(*args)`` returns a flat tuple whose leading entries are
+the updated ``param``/``opt`` tensors (same order as the inputs of those
+kinds) followed by a ``(1,)`` loss. ``meta`` is the JSON-serializable
+interface description consumed by the Rust runtime (see
+rust/src/runtime/artifact.rs).
+"""
+
+from . import cnn, mf, mlr, qp, transformer  # noqa: F401
+
+MODELS = {
+    "qp": qp,
+    "mlr": mlr,
+    "mf": mf,
+    "cnn": cnn,
+    "transformer": transformer,
+}

@@ -1,0 +1,146 @@
+"""CNN from the paper (§5.1): 2x [conv5x5 + ReLU + maxpool2] + 3 FC, Adam.
+
+The three fully-connected layers run through the blocked Pallas matmul
+(L1, custom-VJP) so that both the forward and backward FC matmuls stay on
+the kernel path under ``jax.grad``. Convolutions use
+``lax.conv_general_dilated`` (native stablehlo convolutions; their
+transposed-gradient forms are also plain convolutions, which XLA-CPU
+0.5.1 executes natively).
+
+Adam first/second moments are separate ``opt``-kind tensors mirroring the
+params; the coordinator co-partitions them with their parameter atoms
+(paper §5.1 "by-layer"/"by-shard" partitioning includes optimizer state).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels.matmul import matmul
+from .common import adam_update, io
+
+
+def configs():
+    return {
+        "cnn_mnist": {
+            "batch": 64,
+            "image": 28,
+            "c1": 8,
+            "c2": 16,
+            "f1": 128,
+            "f2": 64,
+            "classes": 10,
+            "lr": 1e-3,
+        }
+    }
+
+
+def param_shapes(cfg):
+    im, c1, c2, f1, f2, k = (
+        cfg["image"],
+        cfg["c1"],
+        cfg["c2"],
+        cfg["f1"],
+        cfg["f2"],
+        cfg["classes"],
+    )
+    flat = (im // 4) * (im // 4) * c2
+    return [
+        ("c1w", (5, 5, 1, c1)),
+        ("c1b", (c1,)),
+        ("c2w", (5, 5, c1, c2)),
+        ("c2b", (c2,)),
+        ("f1w", (flat, f1)),
+        ("f1b", (f1,)),
+        ("f2w", (f1, f2)),
+        ("f2b", (f2,)),
+        ("f3w", (f2, k)),
+        ("f3b", (k,)),
+    ]
+
+
+def _conv(x, w, b):
+    out = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(out + b)
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(params, x):
+    h = _maxpool2(_conv(x, params["c1w"], params["c1b"]))
+    h = _maxpool2(_conv(h, params["c2w"], params["c2b"]))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(matmul(h, params["f1w"]) + params["f1b"])
+    h = jax.nn.relu(matmul(h, params["f2w"]) + params["f2b"])
+    return matmul(h, params["f3w"]) + params["f3b"]
+
+
+def loss_fn(params, x, y):
+    logits = forward(params, x)
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    logp = z - jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    return -jnp.mean(jnp.sum(y * logp, axis=1))
+
+
+def build(cfg):
+    shapes = param_shapes(cfg)
+    b, im, k = cfg["batch"], cfg["image"], cfg["classes"]
+    lr = cfg["lr"]
+    n = len(shapes)
+
+    def step(*args):
+        params = {name: a for (name, _), a in zip(shapes, args[:n])}
+        ms = {name: a for (name, _), a in zip(shapes, args[n : 2 * n])}
+        vs = {name: a for (name, _), a in zip(shapes, args[2 * n : 3 * n])}
+        t, x, y = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        outs = []
+        new_p, new_m, new_v = {}, {}, {}
+        for name, _ in shapes:
+            p2, m2, v2 = adam_update(params[name], grads[name], ms[name], vs[name], t[0], lr)
+            new_p[name], new_m[name], new_v[name] = p2, m2, v2
+        for d in (new_p, new_m, new_v):
+            outs.extend(d[name] for name, _ in shapes)
+        outs.append(loss[None])
+        return tuple(outs)
+
+    example = (
+        [jnp.zeros(s, jnp.float32) for _, s in shapes] * 3
+        + [
+            jnp.ones((1,), jnp.float32),
+            jnp.zeros((b, im, im, 1), jnp.float32),
+            jnp.zeros((b, k), jnp.float32),
+        ]
+    )
+    inputs = (
+        [io(nm, "param", s) for nm, s in shapes]
+        + [io(f"m_{nm}", "opt", s) for nm, s in shapes]
+        + [io(f"v_{nm}", "opt", s) for nm, s in shapes]
+        + [
+            io("t", "data", (1,)),
+            io("x", "data", (b, im, im, 1)),
+            io("y", "data", (b, k)),
+        ]
+    )
+    outputs = (
+        [io(nm, "param", s) for nm, s in shapes]
+        + [io(f"m_{nm}", "opt", s) for nm, s in shapes]
+        + [io(f"v_{nm}", "opt", s) for nm, s in shapes]
+        + [io("loss", "metric", (1,))]
+    )
+    meta = {
+        "inputs": inputs,
+        "outputs": outputs,
+        "hyper": {"lr": lr},
+        # by-layer atoms: each (w, b) pair is one atom; by-shard handled in
+        # rust by subdividing tensors along the first dim.
+        "atoms": {"scheme": "cnn"},
+    }
+    return step, tuple(example), meta

@@ -1,0 +1,75 @@
+"""Shared L2 building blocks: Adam, batched conjugate gradients, meta spec.
+
+The CG solver exists so that the ALS artifact contains only matmul-class
+HLO ops: ``jnp.linalg.solve`` lowers to LAPACK custom-calls on CPU, which
+xla_extension 0.5.1 (the version behind the ``xla`` crate) does not
+register. A fixed-iteration matrix-free CG on the SPD normal equations is
+numerically equivalent for our well-conditioned, regularized systems and
+round-trips through HLO text cleanly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_update(p, g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step for a single tensor; ``t`` is the 1-based step."""
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def adam_update_tree(params, grads, ms, vs, t, lr):
+    """Adam over pytrees; returns (params, ms, vs)."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(ms)
+    flat_v = treedef.flatten_up_to(vs)
+    out = [adam_update(p, g, m, v, t, lr) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def cg_solve_batched(grams, rhs, x0, iters: int, reg: float):
+    """Solve (grams[i] + reg*I) x[i] = rhs[i] for a batch of SPD systems.
+
+    grams: (B, p, p), rhs/x0: (B, p). Fixed ``iters`` CG iterations (no
+    early exit — shapes must be static for AOT lowering). Warm-starting
+    from ``x0`` (the current ALS factors) both speeds convergence and
+    keeps the factors live inputs of the lowered artifact (jax prunes
+    unused parameters, which would break the L3 state contract).
+    """
+
+    def matvec(x):
+        return jnp.einsum("bpq,bq->bp", grams, x) + reg * x
+
+    x = x0
+    r = rhs - matvec(x)
+    p = r
+    rs = jnp.sum(r * r, axis=1)
+
+    def body(_, state):
+        x, r, p, rs = state
+        ap = matvec(p)
+        denom = jnp.sum(p * ap, axis=1)
+        alpha = rs / jnp.maximum(denom, 1e-30)
+        x = x + alpha[:, None] * p
+        r = r - alpha[:, None] * ap
+        rs_new = jnp.sum(r * r, axis=1)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta[:, None] * p
+        return x, r, p, rs_new
+
+    x, _, _, _ = jax.lax.fori_loop(0, iters, body, (x, r, p, rs))
+    return x
+
+
+def io(name: str, kind: str, shape) -> dict:
+    """One entry of the artifact interface description."""
+    return {"name": name, "kind": kind, "shape": [int(s) for s in shape]}

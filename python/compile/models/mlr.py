@@ -1,0 +1,49 @@
+"""Multinomial logistic regression trained with SGD (paper §5.1).
+
+The gradient + loss are computed by the fused Pallas kernel
+``kernels.mlr_grad`` (L1), so this artifact's hot loop *is* the kernel.
+Variants mirror the paper's two datasets:
+
+  - mnist-like:     d=784, k=10, batch=10000 is the paper's setting; we
+                    default to 2048 to keep 100-trial sweeps tractable on
+                    the CPU PJRT backend (documented in DESIGN.md §3).
+  - covertype-like: d=54,  k=7,  batch=1000.
+"""
+
+import jax.numpy as jnp
+
+from ..kernels.mlr_grad import mlr_grad_pallas
+from .common import io
+
+
+def configs():
+    return {
+        "mlr_mnist": {"dim": 784, "classes": 10, "batch": 2048, "lr": 1e-1, "bb": 256},
+        "mlr_covtype": {"dim": 54, "classes": 7, "batch": 1000, "lr": 1e-2, "bb": 200},
+    }
+
+
+def build(cfg):
+    d, k, b, bb = cfg["dim"], cfg["classes"], cfg["batch"], cfg["bb"]
+    lr = cfg["lr"]
+
+    def step(w, x, y):
+        grad, loss = mlr_grad_pallas(x, w, y, bb=bb)
+        return (w - lr * grad, loss)
+
+    example = (
+        jnp.zeros((d, k), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+        jnp.zeros((b, k), jnp.float32),
+    )
+    meta = {
+        "inputs": [
+            io("w", "param", (d, k)),
+            io("x", "data", (b, d)),
+            io("y", "data", (b, k)),
+        ],
+        "outputs": [io("w", "param", (d, k)), io("loss", "metric", (1,))],
+        "hyper": {"lr": lr},
+        "atoms": {"w": "rows"},
+    }
+    return step, example, meta

@@ -1,0 +1,44 @@
+"""QP model (Fig 3): gradient descent on a d-dimensional quadratic.
+
+loss(x) = 0.5 (x - b)^T A (x - b), A SPD, supplied by the coordinator so
+that Rust controls the problem instance (conditioning determines the
+contraction rate c in Theorem 3.2).
+"""
+
+import jax.numpy as jnp
+
+from .common import io
+
+
+def configs():
+    return {
+        "qp4": {"dim": 4, "lr": 0.05},
+        "qp32": {"dim": 32, "lr": 0.02},
+    }
+
+
+def build(cfg):
+    d = cfg["dim"]
+    lr = cfg["lr"]
+
+    def step(x, a, b):
+        r = x - b
+        grad = a @ r
+        loss = 0.5 * jnp.dot(r, a @ r)
+        return (x - lr * grad, loss[None])
+
+    example = (
+        jnp.zeros((d,), jnp.float32),
+        jnp.eye(d, dtype=jnp.float32),
+        jnp.zeros((d,), jnp.float32),
+    )
+    meta = {
+        "inputs": [
+            io("x", "param", (d,)),
+            io("a", "data", (d, d)),
+            io("b", "data", (d,)),
+        ],
+        "outputs": [io("x", "param", (d,)), io("loss", "metric", (1,))],
+        "hyper": {"lr": lr},
+    }
+    return step, example, meta

@@ -1,0 +1,72 @@
+"""AOT lowering: artifact files, metadata integrity, HLO text sanity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    return str(d)
+
+
+def test_variant_index_covers_defaults():
+    idx = aot.variant_index()
+    for v in aot.DEFAULT_VARIANTS + aot.LARGE_VARIANTS:
+        assert v in idx, v
+
+
+@pytest.mark.parametrize("variant", ["qp4", "mlr_covtype"])
+def test_lower_writes_hlo_and_meta(variant, outdir):
+    entry = aot.lower_variant(variant, outdir)
+    assert entry["hlo_bytes"] > 100
+    hlo = open(os.path.join(outdir, f"{variant}.hlo.txt")).read()
+    assert "HloModule" in hlo
+    # Lowered with return_tuple=True: the root computation returns a tuple.
+    assert "ROOT" in hlo
+
+    meta = json.load(open(os.path.join(outdir, f"{variant}.meta.json")))
+    assert meta["name"] == variant
+    assert meta["outputs"][-1]["kind"] == "metric"
+    state_in = [i["name"] for i in meta["inputs"] if i["kind"] in ("param", "opt")]
+    state_out = [o["name"] for o in meta["outputs"] if o["kind"] in ("param", "opt")]
+    assert state_in == state_out
+    # Parameter count of the ENTRY computation must match the meta inputs:
+    # jax prunes unused arguments, which would silently break the Rust
+    # runtime ("Execution supplied N buffers but compiled program expected
+    # M"). Nested computations (pallas interpret loops) have their own
+    # parameters, so scope the count to the ENTRY block.
+    entry = hlo[hlo.index("ENTRY"):]
+    depth = 0
+    for i, ch in enumerate(entry):
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                entry = entry[: i + 1]
+                break
+    n_params = entry.count("parameter(")
+    assert n_params == len(meta["inputs"]), (
+        f"{variant}: ENTRY has {n_params} parameters, meta lists {len(meta['inputs'])} "
+        "(an unused step-function argument was pruned?)"
+    )
+
+
+def test_meta_dtypes_default_f32(outdir):
+    aot.lower_variant("qp4", outdir)
+    meta = json.load(open(os.path.join(outdir, "qp4.meta.json")))
+    assert all(e["dtype"] == "f32" for e in meta["inputs"] + meta["outputs"])
+
+
+def test_transformer_meta_marks_int_inputs(outdir):
+    aot.lower_variant("tfm_tiny", outdir)
+    meta = json.load(open(os.path.join(outdir, "tfm_tiny.meta.json")))
+    dtypes = {e["name"]: e["dtype"] for e in meta["inputs"]}
+    assert dtypes["tokens"] == "i32"
+    assert dtypes["targets"] == "i32"
+    assert dtypes["emb"] == "f32"

@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and dtypes for the matmul) — the CORE
+correctness signal for the compute hot path. Kernels run in interpret
+mode (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul, matmul_pallas, _pick_block
+from compile.kernels.mlr_grad import mlr_grad_pallas
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = matmul_pallas(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([8, 32, 128, 130, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_blocked_shapes(m, seed):
+    """Shapes that exercise multi-block grids and the padding path."""
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, 64), rand(rng, 64, m)
+    np.testing.assert_allclose(
+        matmul_pallas(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_bf16_accumulates_in_f32():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(64, 64))).astype(jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(64, 64))).astype(jnp.bfloat16)
+    got = matmul_pallas(a, b).astype(jnp.float32)
+    want = jnp.dot(a, b, preferred_element_type=jnp.float32).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_custom_vjp_matches_autodiff(seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, 24, 16), rand(rng, 16, 8)
+
+    def loss_kernel(a, b):
+        return jnp.sum(jnp.tanh(matmul(a, b)))
+
+    def loss_ref(a, b):
+        return jnp.sum(jnp.tanh(ref.matmul_ref(a, b)))
+
+    ga = jax.grad(loss_kernel, argnums=(0, 1))(a, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga[0], gr[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ga[1], gr[1], rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        matmul_pallas(rand(rng, 4, 5), rand(rng, 6, 7))
+    with pytest.raises(ValueError):
+        matmul_pallas(rand(rng, 4), rand(rng, 4, 2))
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 54, 128, 130, 784, 1000]:
+        b = _pick_block(dim, 128)
+        assert 1 <= b <= max(dim, 128)
+        assert dim % b == 0 or b == dim
+
+
+# ---------------------------------------------------------------------------
+# fused MLR gradient
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([8, 32, 100, 128, 256]),
+    d=st.integers(2, 100),
+    k=st.integers(2, 12),
+    bb=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlr_grad_matches_ref(b, d, k, bb, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, d)
+    w = rand(rng, d, k)
+    labels = rng.integers(0, k, size=b)
+    y = jnp.asarray(np.eye(k, dtype=np.float32)[labels])
+    grad, loss = mlr_grad_pallas(x, w, y, bb=bb)
+    gref, lref = ref.mlr_grad_ref(x, w, y)
+    np.testing.assert_allclose(grad, gref, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(loss[0], lref, rtol=1e-4, atol=1e-5)
+
+
+def test_mlr_grad_extreme_logits_stable():
+    """Softmax must not overflow for large logits (stability guard)."""
+    rng = np.random.default_rng(1)
+    x = rand(rng, 32, 10) * 100.0
+    w = rand(rng, 10, 5) * 10.0
+    labels = rng.integers(0, 5, size=32)
+    y = jnp.asarray(np.eye(5, dtype=np.float32)[labels])
+    grad, loss = mlr_grad_pallas(x, w, y, bb=16)
+    assert np.isfinite(np.asarray(grad)).all()
+    assert np.isfinite(np.asarray(loss)).all()
+
+
+def test_mlr_grad_zero_when_perfect():
+    """One-hot probabilities at the labels => near-zero gradient & loss."""
+    k = 4
+    x = jnp.eye(k, dtype=jnp.float32) * 50.0
+    w = jnp.eye(k, dtype=jnp.float32) * 10.0  # logits hugely favor label i
+    y = jnp.eye(k, dtype=jnp.float32)
+    grad, loss = mlr_grad_pallas(x, w, y, bb=2)
+    assert float(loss[0]) < 1e-3
+    assert float(jnp.max(jnp.abs(grad))) < 1e-3
+
+
+def test_mlr_grad_shape_mismatch_raises():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        mlr_grad_pallas(rand(rng, 8, 4), rand(rng, 4, 3), rand(rng, 8, 2))

@@ -1,0 +1,217 @@
+"""L2 model step functions: interface contracts and training numerics.
+
+Each model's `build(cfg)` must produce a step whose outputs are the
+updated state tensors (input order) followed by a (1,) loss, and a few
+steps of each must actually reduce its loss — the property the entire
+iteration-cost framework rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import MODELS, cnn, mf, mlr, qp, transformer
+
+
+def _state_kinds(meta):
+    return [io for io in meta["inputs"] if io["kind"] in ("param", "opt")]
+
+
+@pytest.mark.parametrize("model_name", sorted(MODELS))
+def test_interface_contract(model_name):
+    mod = MODELS[model_name]
+    for variant, cfg in mod.configs().items():
+        if variant == "tfm_100m":
+            continue  # too big to trace in tests
+        step, example, meta = mod.build(cfg)
+        state_in = _state_kinds(meta)
+        state_out = [io for io in meta["outputs"] if io["kind"] in ("param", "opt")]
+        assert [s["name"] for s in state_in] == [s["name"] for s in state_out], variant
+        assert meta["outputs"][-1]["kind"] == "metric", variant
+        assert len(example) == len(meta["inputs"]), variant
+        for arr, io in zip(example, meta["inputs"]):
+            assert list(arr.shape) == list(io["shape"]), f"{variant}:{io['name']}"
+
+
+def _run_steps(mod, variant, n_steps, init_fn, data_fn):
+    cfg = mod.configs()[variant]
+    step, example, meta = mod.build(cfg)
+    jstep = jax.jit(step)
+    rng = np.random.default_rng(0)
+    args = list(example)
+    init_fn(args, meta, rng, cfg)
+    n_state = len(_state_kinds(meta))
+    losses = []
+    for it in range(n_steps):
+        data_fn(args, meta, rng, cfg, it)
+        outs = jstep(*args)
+        assert len(outs) == n_state + 1
+        args[:n_state] = list(outs[:n_state])
+        losses.append(float(outs[-1][0]))
+    return losses
+
+
+def test_qp_descends():
+    def init(args, meta, rng, cfg):
+        d = cfg["dim"]
+        args[0] = jnp.zeros((d,), jnp.float32)
+        a = np.eye(d, dtype=np.float32) * np.linspace(0.5, 1.0, d, dtype=np.float32)
+        args[1] = jnp.asarray(a)
+        args[2] = jnp.asarray(rng.normal(size=d).astype(np.float32))
+
+    losses = _run_steps(qp, "qp4", 30, init, lambda *a: None)
+    assert losses[-1] < losses[0] * 0.5
+    assert all(np.isfinite(losses))
+
+
+def test_mlr_descends():
+    cfg = dict(mlr.configs()["mlr_covtype"])
+
+    def init(args, meta, rng, c):
+        pass  # w = 0 default
+
+    def data(args, meta, rng, c, it):
+        b, d, k = c["batch"], c["dim"], c["classes"]
+        labels = rng.integers(0, k, size=b)
+        x = rng.normal(size=(b, d)).astype(np.float32) + 3.0 * np.eye(k, d, dtype=np.float32)[labels]
+        args[1] = jnp.asarray(x)
+        args[2] = jnp.asarray(np.eye(k, dtype=np.float32)[labels])
+
+    class _Mod:
+        @staticmethod
+        def configs():
+            return {"v": cfg}
+
+        @staticmethod
+        def build(c):
+            return mlr.build(c)
+
+    losses = _run_steps(_Mod, "v", 15, init, data)
+    assert losses[-1] < losses[0]
+
+
+def test_mf_descends_and_is_damped():
+    cfg = dict(mf.configs()["mf_jester"])
+    cfg.update(m=60, n=40, rank=4)
+
+    def init(args, meta, rng, c):
+        m, n, p = c["m"], c["n"], c["rank"]
+        args[0] = jnp.asarray(rng.uniform(size=(m, p)).astype(np.float32))
+        args[1] = jnp.asarray(rng.uniform(size=(p, n)).astype(np.float32))
+        u = rng.normal(size=(m, p)).astype(np.float32)
+        v = rng.normal(size=(p, n)).astype(np.float32)
+        ratings = u @ v + 0.1 * rng.normal(size=(m, n)).astype(np.float32)
+        mask = (rng.uniform(size=(m, n)) < 0.5).astype(np.float32)
+        args[2] = jnp.asarray(ratings)
+        args[3] = jnp.asarray(mask)
+
+    class _Mod:
+        @staticmethod
+        def configs():
+            return {"v": cfg}
+
+        @staticmethod
+        def build(c):
+            return mf.build(c)
+
+    losses = _run_steps(_Mod, "v", 25, init, lambda *a: None)
+    assert losses[-1] < losses[0] * 0.5
+    # Damping: single step must NOT jump to the plateau.
+    assert losses[1] > losses[-1] * 1.5
+
+
+def test_cnn_descends():
+    cfg = dict(cnn.configs()["cnn_mnist"])
+    cfg.update(batch=16, image=12, c1=4, c2=8, f1=32, f2=16)
+
+    def init(args, meta, rng, c):
+        shapes = cnn.param_shapes(c)
+        for i, (_, s) in enumerate(shapes):
+            if len(s) >= 2:
+                fan_in = int(np.prod(s[:-1]))
+                args[i] = jnp.asarray(
+                    (rng.normal(size=s) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+                )
+
+    def data(args, meta, rng, c, it):
+        b, im, k = c["batch"], c["image"], c["classes"]
+        labels = rng.integers(0, k, size=b)
+        x = rng.normal(size=(b, im, im, 1)).astype(np.float32) * 0.2
+        for i, lab in enumerate(labels):
+            x[i, lab % im, :, 0] += 2.0  # class-dependent stripe
+        args[-3] = jnp.asarray([float(it + 1)], dtype=jnp.float32)
+        args[-2] = jnp.asarray(x)
+        args[-1] = jnp.asarray(np.eye(k, dtype=np.float32)[labels])
+
+    class _Mod:
+        @staticmethod
+        def configs():
+            return {"v": cfg}
+
+        @staticmethod
+        def build(c):
+            return cnn.build(c)
+
+    losses = _run_steps(_Mod, "v", 10, init, data)
+    assert losses[-1] < losses[0]
+
+
+def test_transformer_descends_on_repeated_batch():
+    cfg = dict(transformer.configs()["tfm_tiny"])
+    cfg.update(vocab=64, d=32, layers=2, heads=2, ff=64, seq=16, batch=4)
+
+    fixed = {}
+
+    def init(args, meta, rng, c):
+        shapes = transformer.param_shapes(c)
+        for i, (name, s) in enumerate(shapes):
+            if name.startswith("ln") and name.endswith("g"):
+                args[i] = jnp.ones(s, jnp.float32)
+            elif not name.startswith(("ln", "b")):
+                args[i] = jnp.asarray((rng.normal(size=s) * 0.05).astype(np.float32))
+        toks = rng.integers(0, c["vocab"], size=(c["batch"], c["seq"]))
+        fixed["tokens"] = jnp.asarray(toks, dtype=jnp.int32)
+        fixed["targets"] = jnp.asarray(np.roll(toks, -1, axis=1), dtype=jnp.int32)
+
+    def data(args, meta, rng, c, it):
+        args[-3] = jnp.asarray([float(it + 1)], dtype=jnp.float32)
+        args[-2] = fixed["tokens"]
+        args[-1] = fixed["targets"]
+
+    class _Mod:
+        @staticmethod
+        def configs():
+            return {"v": cfg}
+
+        @staticmethod
+        def build(c):
+            return transformer.build(c)
+
+    losses = _run_steps(_Mod, "v", 12, init, data)
+    # Memorizing one batch must drive loss down hard.
+    assert losses[-1] < losses[0] * 0.9
+    assert all(np.isfinite(losses))
+
+
+def test_transformer_causality():
+    """Changing future tokens must not change past logits."""
+    cfg = dict(transformer.configs()["tfm_tiny"])
+    cfg.update(vocab=32, d=16, layers=1, heads=2, ff=32, seq=8, batch=1)
+    rng = np.random.default_rng(0)
+    shapes = transformer.param_shapes(cfg)
+    params = {}
+    for name, s in shapes:
+        if name.startswith("ln") and name.endswith("g"):
+            params[name] = jnp.ones(s, jnp.float32)
+        elif name.startswith("ln") or name.startswith("b"):
+            params[name] = jnp.zeros(s, jnp.float32)
+        else:
+            params[name] = jnp.asarray((rng.normal(size=s) * 0.1).astype(np.float32))
+    toks = rng.integers(0, 32, size=(1, 8)).astype(np.int32)
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % 32
+    la = transformer.forward(params, jnp.asarray(toks), cfg)
+    lb = transformer.forward(params, jnp.asarray(toks2), cfg)
+    np.testing.assert_allclose(la[0, :-1], lb[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(la[0, -1], lb[0, -1])

@@ -1,0 +1,47 @@
+//! Bench: full checkpoint barrier (T_dump blocking part, §5.5) across
+//! policies — the SCAR claim is that partial prioritized checkpoints add
+//! only cache-update + selection cost to the training loop, with the
+//! same bytes/iteration as full checkpoints.
+
+use scar::checkpoint::{CheckpointCoordinator, CheckpointPolicy, Selector};
+use scar::params::{AtomLayout, ParamStore, Tensor};
+use scar::storage::MemStore;
+use scar::util::bench::Bench;
+use scar::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let mut b = Bench::new("checkpoint_overhead").with_budget(0.3, 500);
+
+    // LDA-clueweb-scale state: 4000 docs x 50 topics.
+    for (n_atoms, atom_len) in [(784usize, 10usize), (4000, 50), (20_000, 64)] {
+        let mut t = Tensor::zeros("w", &[n_atoms, atom_len]);
+        t.data.iter_mut().for_each(|v| *v = rng.normal() as f32);
+        let state = ParamStore::new(vec![t]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&state, "w"));
+
+        for (label, policy) in [
+            ("full/8", CheckpointPolicy::full(8)),
+            ("1/4@2", CheckpointPolicy::partial(8, 4, Selector::Priority)),
+            ("1/8@1", CheckpointPolicy::partial(8, 8, Selector::Priority)),
+        ] {
+            let mut store = MemStore::new();
+            let mut coord =
+                CheckpointCoordinator::new(policy, &state, &layout, &mut store).unwrap();
+            let mut c_rng = rng.derive(3);
+            let mut drifted = state.clone();
+            drifted
+                .get_mut("w")
+                .data
+                .iter_mut()
+                .for_each(|v| *v += 0.01);
+            b.iter(&format!("{label} n={n_atoms} len={atom_len}"), || {
+                coord
+                    .checkpoint_now(5, &drifted, &layout, &mut store, &mut c_rng)
+                    .unwrap()
+            });
+        }
+    }
+    b.report();
+    println!("\n(§4.2 parity: 1/k policies save 1/k the atoms per barrier, k× as often)");
+}

@@ -1,0 +1,43 @@
+//! Bench: the SCAR checkpoint barrier's blocking cost (§5.5 / §4.3) —
+//! per-atom distance computation + top-k selection over the in-memory
+//! running-checkpoint cache. This is the only per-checkpoint work the
+//! training loop waits on, so it bounds SCAR's overhead vs traditional
+//! checkpointing.
+
+use scar::checkpoint::select::{select_atoms, Selector};
+use scar::params::{AtomLayout, ParamStore, Tensor};
+use scar::util::bench::Bench;
+use scar::util::rng::Rng;
+
+fn fixtures(n_atoms: usize, atom_len: usize, rng: &mut Rng) -> (ParamStore, ParamStore, AtomLayout) {
+    let mut t = Tensor::zeros("w", &[n_atoms, atom_len]);
+    t.data.iter_mut().for_each(|v| *v = rng.normal() as f32);
+    let cur = ParamStore::new(vec![t]);
+    let mut cache = cur.clone();
+    cache
+        .get_mut("w")
+        .data
+        .iter_mut()
+        .for_each(|v| *v += rng.normal() as f32 * 0.1);
+    let layout = AtomLayout::new(AtomLayout::rows_of(&cur, "w"));
+    (cur, cache, layout)
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut b = Bench::new("priority_selection").with_budget(0.3, 2000);
+
+    for (n_atoms, atom_len) in [(784usize, 10usize), (1871, 20), (5000, 50), (50_000, 10)] {
+        let (cur, cache, layout) = fixtures(n_atoms, atom_len, &mut rng);
+        let k = n_atoms / 8;
+        for sel in [Selector::Priority, Selector::RoundRobin, Selector::Random] {
+            let mut cursor = 0;
+            let mut s_rng = rng.derive(7);
+            b.iter(&format!("{sel} n={n_atoms} len={atom_len} k={k}"), || {
+                select_atoms(sel, k, &cur, &cache, &layout, &mut cursor, &mut s_rng)
+            });
+        }
+    }
+    b.report();
+    println!("\n(priority ≈ one pass over all state elems + O(n) select; round/random are O(k))");
+}

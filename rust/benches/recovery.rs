@@ -1,0 +1,42 @@
+//! Bench: T_restart — recovery-coordinator latency for partial vs full
+//! restore at varying lost fractions (paper §4: restart cost is a small
+//! fraction of T_iter; partial restore reads only the lost atoms).
+
+use scar::checkpoint::{CheckpointCoordinator, CheckpointPolicy};
+use scar::params::{AtomLayout, ParamStore, Tensor};
+use scar::recovery::{recover, RecoveryMode};
+use scar::storage::MemStore;
+use scar::util::bench::Bench;
+use scar::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let mut b = Bench::new("recovery").with_budget(0.3, 1000);
+
+    for (n_atoms, atom_len) in [(784usize, 10usize), (4000, 50), (20_000, 64)] {
+        let mut t = Tensor::zeros("w", &[n_atoms, atom_len]);
+        t.data.iter_mut().for_each(|v| *v = rng.normal() as f32);
+        let ckpt = ParamStore::new(vec![t]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&ckpt, "w"));
+        let mut store = MemStore::new();
+        let _ = CheckpointCoordinator::new(CheckpointPolicy::full(1), &ckpt, &layout, &mut store)
+            .unwrap();
+        let mut current = ckpt.clone();
+        current.get_mut("w").data.iter_mut().for_each(|v| *v += 0.5);
+
+        for frac in [0.25, 0.5, 0.75] {
+            let lost = rng.sample_indices(n_atoms, (n_atoms as f64 * frac) as usize);
+            b.iter(&format!("partial p={frac} n={n_atoms} len={atom_len}"), || {
+                let mut s = current.clone();
+                recover(RecoveryMode::Partial, &mut s, &layout, &lost, &store).unwrap()
+            });
+        }
+        let lost = rng.sample_indices(n_atoms, n_atoms / 2);
+        b.iter(&format!("full p=0.5 n={n_atoms} len={atom_len}"), || {
+            let mut s = current.clone();
+            recover(RecoveryMode::Full, &mut s, &layout, &lost, &store).unwrap()
+        });
+    }
+    b.report();
+    println!("\n(clone overhead included in all cases; partial scales with lost fraction)");
+}

@@ -1,0 +1,32 @@
+//! Bench: end-to-end training step latency per artifact through the PJRT
+//! runtime (T_iter in the paper's cost model) — the denominator of every
+//! overhead claim, and the L3 hot loop target of the perf pass
+//! (EXPERIMENTS.md §Perf).
+//!
+//! Requires `make artifacts`; skips otherwise.
+
+use scar::models::{build_trainer, default_engine, BuildOpts};
+use scar::trainer::Trainer;
+use scar::util::bench::Bench;
+
+fn main() {
+    if !scar::artifact_dir().join("manifest.json").exists() {
+        println!("runtime_step: artifacts not built; skipping (run `make artifacts`)");
+        return;
+    }
+    let engine = default_engine().unwrap();
+    let mut b = Bench::new("runtime_step").with_budget(1.0, 200);
+
+    for variant in ["qp4", "mlr_covtype", "mlr_mnist", "mf_jester", "mf_movielens", "cnn_mnist", "tfm_tiny"] {
+        let mut t = build_trainer(engine.clone(), variant, &BuildOpts::default()).unwrap();
+        t.init(1).unwrap();
+        let mut iter = 0usize;
+        b.iter(variant, || {
+            let l = t.step(iter).unwrap();
+            iter += 1;
+            l
+        });
+    }
+    b.report();
+    println!("\n(step = host->literal upload + PJRT execute + literal->host download)");
+}

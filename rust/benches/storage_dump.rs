@@ -1,0 +1,62 @@
+//! Bench: shared-storage dump throughput (T_dump, §5.5) for the on-disk
+//! segment-log store vs the in-memory store, plus the §4.2 bytes-parity
+//! check between full and partial policies.
+
+use scar::checkpoint::{CheckpointCoordinator, CheckpointPolicy, Selector};
+use scar::params::{AtomLayout, ParamStore, Tensor};
+use scar::storage::{CheckpointStore, DiskStore, MemStore};
+use scar::util::bench::Bench;
+use scar::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(4);
+    let n_atoms = 4000usize;
+    let atom_len = 50usize;
+    let mut t = Tensor::zeros("w", &[n_atoms, atom_len]);
+    t.data.iter_mut().for_each(|v| *v = rng.normal() as f32);
+    let state = ParamStore::new(vec![t]);
+    let layout = AtomLayout::new(AtomLayout::rows_of(&state, "w"));
+    let payload: Vec<(usize, Vec<f32>)> = (0..n_atoms)
+        .map(|a| (a, state.get("w").data[a * atom_len..(a + 1) * atom_len].to_vec()))
+        .collect();
+    let refs: Vec<(usize, &[f32])> = payload.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+    let bytes = (n_atoms * atom_len * 4) as f64;
+
+    let mut b = Bench::new("storage_dump").with_budget(0.5, 200);
+
+    let mut mem = MemStore::new();
+    b.iter(&format!("mem put {} atoms ({:.1} KiB)", n_atoms, bytes / 1024.0), || {
+        mem.put_atoms(1, &refs).unwrap();
+    });
+
+    let dir = std::env::temp_dir().join(format!("scar-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut disk = DiskStore::open(&dir).unwrap();
+    b.iter(&format!("disk put {} atoms ({:.1} KiB)", n_atoms, bytes / 1024.0), || {
+        disk.put_atoms(1, &refs).unwrap();
+    });
+    b.iter("disk get one atom", || disk.get_atom(17).unwrap());
+    b.report();
+
+    // §4.2 data-volume parity.
+    println!("\n-- §4.2 bytes-per-C-iterations parity (C = 8) --");
+    for (label, policy) in [
+        ("full every 8", CheckpointPolicy::full(8)),
+        ("1/2 every 4 (priority)", CheckpointPolicy::partial(8, 2, Selector::Priority)),
+        ("1/8 every 1 (priority)", CheckpointPolicy::partial(8, 8, Selector::Priority)),
+    ] {
+        let mut store = MemStore::new();
+        let mut coord = CheckpointCoordinator::new(policy, &state, &layout, &mut store).unwrap();
+        let base = store.bytes_written();
+        let mut c_rng = rng.derive(5);
+        for iter in 1..=24 {
+            coord.maybe_checkpoint(iter, &state, &layout, &mut store, &mut c_rng).unwrap();
+        }
+        println!(
+            "{:<26} {:>12} over 24 iters",
+            label,
+            scar::util::fmt_bytes(store.bytes_written() - base)
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

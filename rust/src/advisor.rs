@@ -1,0 +1,253 @@
+//! Runtime policy advisor — the paper's §7 future-work item, implemented:
+//!
+//! > "By approximating c and ‖x⁽⁰⁾ − x*‖, we may obtain a predictive model
+//! > which can be evaluated on-the-fly to inform decisions made by a
+//! > system during run-time."
+//!
+//! [`OnlineRateEstimator`] tracks the contraction rate `c` from the live
+//! loss curve (no x* needed: for linearly-convergent iterates the excess
+//! loss ratio tends to the same c; we use robust one-step ratios of the
+//! loss *decrement*, which is ∝ the error for smooth objectives).
+//!
+//! [`recommend_policy`] evaluates Theorem 3.2 over a candidate policy
+//! grid using the closed form that follows from Thm 4.2 + eq. (6):
+//! with checkpoint lag L = T − C and lost fraction p, the expected
+//! perturbation is E‖δ'‖ ≈ √p · e₀c^T (c^{−L} + 1), so
+//! `ι(L, p) ≤ log(1 + √p (c^{−L} + 1)) / log(1/c)` —
+//! notably independent of T itself. Expected total overhead per
+//! failure window then trades rework iterations against dump cost, the
+//! same structure as Daly's optimum-checkpoint-interval analysis but with
+//! SCAR's partial-recovery iteration cost in place of full rework.
+
+use crate::checkpoint::{CheckpointPolicy, Selector};
+
+/// Online estimate of the contraction rate from observed losses.
+///
+/// For a linearly-convergent sequence loss_k = ℓ* + A·c^k, successive
+/// *decrements* d_k = loss_{k-1} − loss_k = A c^{k-1}(1−c) also decay at
+/// exactly rate c, and unlike excess-over-floor they need no estimate of
+/// ℓ*. The estimator keeps a sliding window of losses, EMA-smooths the
+/// curve (stochastic trainers produce noisy losses), and fits
+/// log(decrement) against iteration by least squares — `exp(slope)` is c.
+#[derive(Debug, Clone)]
+pub struct OnlineRateEstimator {
+    /// smoothing factor for the loss curve
+    smooth_alpha: f64,
+    /// (iteration index, smoothed loss)
+    window: std::collections::VecDeque<(usize, f64)>,
+    window_cap: usize,
+    smoothed: Option<f64>,
+    n: usize,
+}
+
+impl Default for OnlineRateEstimator {
+    fn default() -> Self {
+        Self::new(0.3)
+    }
+}
+
+impl OnlineRateEstimator {
+    pub fn new(smooth_alpha: f64) -> Self {
+        OnlineRateEstimator {
+            smooth_alpha,
+            window: std::collections::VecDeque::new(),
+            window_cap: 512,
+            smoothed: None,
+            n: 0,
+        }
+    }
+
+    /// Feed the loss after one iteration.
+    pub fn observe(&mut self, loss: f64) {
+        if !loss.is_finite() {
+            return;
+        }
+        let s = match self.smoothed {
+            None => loss,
+            Some(prev) => (1.0 - self.smooth_alpha) * prev + self.smooth_alpha * loss,
+        };
+        self.smoothed = Some(s);
+        self.window.push_back((self.n, s));
+        if self.window.len() > self.window_cap {
+            self.window.pop_front();
+        }
+        self.n += 1;
+    }
+
+    /// Current estimate of c (None until enough improving observations).
+    pub fn rate(&self) -> Option<f64> {
+        let pts: Vec<(f64, f64)> = self
+            .window
+            .iter()
+            .zip(self.window.iter().skip(1))
+            .filter_map(|(&(_, a), &(k, b))| {
+                let dec = a - b;
+                (dec > 0.0).then(|| (k as f64, dec.ln()))
+            })
+            .collect();
+        if pts.len() < 8 {
+            return None;
+        }
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (_, slope) = crate::util::stats::linfit(&xs, &ys);
+        Some(slope.exp().clamp(1e-3, 0.99999))
+    }
+
+    pub fn observations(&self) -> usize {
+        self.n
+    }
+}
+
+/// Environment + cost model inputs for a recommendation.
+#[derive(Debug, Clone)]
+pub struct AdvisorInputs {
+    /// Estimated contraction rate (from [`OnlineRateEstimator`] or
+    /// offline fitting).
+    pub c: f64,
+    /// Expected fraction of parameters lost per failure (e.g. 1/n_nodes
+    /// for single-node failures under random partitioning).
+    pub lost_fraction: f64,
+    /// Failures per iteration (geometric p of §5.3).
+    pub failure_rate: f64,
+    /// Seconds per training iteration.
+    pub t_iter: f64,
+    /// Blocking seconds per *full-size* checkpoint barrier; partial
+    /// checkpoints scale this by their fraction (§4.2 parity).
+    pub t_dump_full: f64,
+    /// Base full-checkpoint interval C under consideration.
+    pub base_interval: usize,
+}
+
+/// Expected rework iterations after one failure under lag `l` and lost
+/// fraction `p` (closed form from Thm 3.2 + Thm 4.2; see module docs).
+pub fn expected_rework_iters(c: f64, lag: f64, lost_fraction: f64) -> f64 {
+    assert!(c > 0.0 && c < 1.0);
+    let p = lost_fraction.clamp(0.0, 1.0);
+    if p == 0.0 {
+        return 0.0;
+    }
+    (1.0 + p.sqrt() * (c.powf(-lag) + 1.0)).ln() / (1.0 / c).ln()
+}
+
+/// One evaluated candidate.
+#[derive(Debug, Clone)]
+pub struct PolicyScore {
+    pub policy: CheckpointPolicy,
+    pub k: usize,
+    /// Expected rework iterations per failure.
+    pub rework_iters: f64,
+    /// Expected overhead seconds per iteration (dump amortized + rework
+    /// weighted by failure rate).
+    pub overhead_per_iter: f64,
+}
+
+/// Evaluate the candidate grid k ∈ {1, 2, 4, 8, ...} (fraction 1/k every
+/// C/k iterations; same bytes per C iterations) and return the scores
+/// sorted best-first.
+pub fn recommend_policy(inputs: &AdvisorInputs) -> Vec<PolicyScore> {
+    assert!(inputs.c > 0.0 && inputs.c < 1.0, "advisor needs 0 < c < 1");
+    let mut scores = Vec::new();
+    let mut k = 1usize;
+    while k <= inputs.base_interval {
+        let policy = CheckpointPolicy::partial(inputs.base_interval, k, Selector::Priority);
+        // Mean staleness of a parameter in the running checkpoint: half
+        // the effective refresh period. Priority refreshes the
+        // fastest-moving atoms sooner; we use the conservative uniform
+        // mean (interval * k / 2 would be the refresh period of the
+        // *coldest* atom; the mean atom is refreshed every `interval`
+        // barriers when fraction 1/k covers all atoms over k barriers).
+        let mean_lag = (inputs.base_interval as f64) / 2.0 + (policy.interval as f64) / 2.0;
+        let rework = expected_rework_iters(inputs.c, mean_lag, inputs.lost_fraction);
+        let dump_per_iter = inputs.t_dump_full * policy.fraction / policy.interval as f64;
+        let overhead = dump_per_iter + inputs.failure_rate * rework * inputs.t_iter;
+        scores.push(PolicyScore { policy, k, rework_iters: rework, overhead_per_iter: overhead });
+        k *= 2;
+    }
+    scores.sort_by(|a, b| a.overhead_per_iter.partial_cmp(&b.overhead_per_iter).unwrap());
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_estimator_recovers_rate() {
+        let c: f64 = 0.92;
+        let mut est = OnlineRateEstimator::new(0.1);
+        // loss = floor + excess with excess decaying at rate c
+        for k in 0..200 {
+            est.observe(1.0 + 5.0 * c.powi(k));
+        }
+        let got = est.rate().expect("enough observations");
+        assert!((got - c).abs() < 0.03, "got {got}");
+    }
+
+    #[test]
+    fn online_estimator_robust_to_noise() {
+        let c: f64 = 0.9;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut est = OnlineRateEstimator::new(0.05);
+        for k in 0..400 {
+            let noise = 1.0 + 0.1 * rng.normal();
+            est.observe(2.0 + 10.0 * c.powi(k / 2) * noise.abs());
+        }
+        let got = est.rate().unwrap();
+        assert!(got > 0.8 && got < 1.0, "got {got}");
+    }
+
+    #[test]
+    fn no_rate_until_warm() {
+        let mut est = OnlineRateEstimator::default();
+        for k in 0..5 {
+            est.observe(10.0 - k as f64);
+        }
+        assert!(est.rate().is_none());
+    }
+
+    #[test]
+    fn rework_monotone_in_lag_and_fraction() {
+        let base = expected_rework_iters(0.9, 4.0, 0.5);
+        assert!(expected_rework_iters(0.9, 8.0, 0.5) > base);
+        assert!(expected_rework_iters(0.9, 4.0, 0.75) > base);
+        assert_eq!(expected_rework_iters(0.9, 4.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn recommendation_prefers_fine_checkpoints_when_failures_frequent() {
+        let mk = |failure_rate| AdvisorInputs {
+            c: 0.9,
+            lost_fraction: 0.5,
+            failure_rate,
+            t_iter: 1.0,
+            t_dump_full: 0.2,
+            base_interval: 8,
+        };
+        // Frequent failures: fine-grained (large k) should win.
+        let frequent = recommend_policy(&mk(0.05));
+        assert!(frequent[0].k >= 4, "frequent: {:?}", frequent[0]);
+        // Failure-free: all candidates cost the same dump bytes; the
+        // ordering must then follow dump amortization only and k=1 must
+        // not be strictly worse than k=8.
+        let rare = recommend_policy(&mk(0.0));
+        let k1 = rare.iter().find(|s| s.k == 1).unwrap();
+        let k8 = rare.iter().find(|s| s.k == 8).unwrap();
+        assert!((k1.overhead_per_iter - k8.overhead_per_iter).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scores_sorted_best_first() {
+        let scores = recommend_policy(&AdvisorInputs {
+            c: 0.95,
+            lost_fraction: 0.25,
+            failure_rate: 0.01,
+            t_iter: 2.0,
+            t_dump_full: 0.5,
+            base_interval: 8,
+        });
+        for w in scores.windows(2) {
+            assert!(w[0].overhead_per_iter <= w[1].overhead_per_iter);
+        }
+    }
+}

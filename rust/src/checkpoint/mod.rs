@@ -1,0 +1,284 @@
+//! Checkpoint coordinator (paper §4.2–4.3, Fig 4).
+//!
+//! Implements both the traditional baseline (full checkpoints every `C`
+//! iterations) and SCAR's prioritized partial checkpoints: a fraction `r`
+//! of atoms every `rC` iterations, selected by one of
+//!
+//! * **priority** — atoms whose current values have drifted farthest from
+//!   their last-saved values (distance under the layout's norm);
+//! * **round** — round-robin over atom ids;
+//! * **random** — uniform without replacement;
+//!
+//! writing into a *running checkpoint*: persistent storage initialized
+//! with x⁽⁰⁾ and updated per partial checkpoint, so at any time it holds a
+//! mix of atoms saved at different iterations.
+//!
+//! Each PS node keeps an in-memory cache of the running checkpoint for
+//! distance computation (§4.3); in this single-store coordinator the cache
+//! is one `ParamStore` and the distance pass is the hot path measured in
+//! `benches/priority_selection.rs`.
+
+pub mod select;
+
+use anyhow::Result;
+
+use crate::params::{AtomLayout, ParamStore};
+use crate::storage::CheckpointStore;
+use crate::util::rng::Rng;
+
+pub use select::Selector;
+
+/// Checkpoint policy: the paper's (r, rC) scheme. `fraction = 1.0` with
+/// `interval = C` is the traditional full-checkpoint baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointPolicy {
+    /// Fraction r of atoms saved per checkpoint (0 < r <= 1).
+    pub fraction: f64,
+    /// Iterations between checkpoints (the paper's rC).
+    pub interval: usize,
+    pub selector: Selector,
+}
+
+impl CheckpointPolicy {
+    pub fn full(interval: usize) -> Self {
+        CheckpointPolicy { fraction: 1.0, interval, selector: Selector::Priority }
+    }
+
+    /// SCAR policy with data-volume parity against `full(base_interval)`:
+    /// fraction 1/k every base_interval/k iterations.
+    pub fn partial(base_interval: usize, k: usize, selector: Selector) -> Self {
+        assert!(k >= 1);
+        let interval = (base_interval / k).max(1);
+        CheckpointPolicy { fraction: 1.0 / k as f64, interval, selector }
+    }
+
+    pub fn atoms_per_checkpoint(&self, n_atoms: usize) -> usize {
+        ((self.fraction * n_atoms as f64).round() as usize).clamp(1, n_atoms)
+    }
+}
+
+/// Outcome of one checkpoint barrier, for §5.5 accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointStats {
+    pub iter: usize,
+    pub atoms_saved: usize,
+    pub bytes: u64,
+    /// Seconds spent selecting atoms + updating the in-memory cache — the
+    /// only part the training loop blocks on (storage output is async in
+    /// SCAR; §4.3 step 4).
+    pub blocking_secs: f64,
+}
+
+pub struct CheckpointCoordinator {
+    pub policy: CheckpointPolicy,
+    /// In-memory cache of the running checkpoint (what the PS nodes use
+    /// for distance computation, and what recovery reads through).
+    cache: ParamStore,
+    /// Iteration at which each atom was last saved.
+    saved_iter: Vec<usize>,
+    rr_cursor: usize,
+    scratch: Vec<f32>,
+}
+
+impl CheckpointCoordinator {
+    /// Initialize the running checkpoint with the initial parameters x⁽⁰⁾
+    /// (paper §4.2) and persist them.
+    pub fn new(
+        policy: CheckpointPolicy,
+        init: &ParamStore,
+        layout: &AtomLayout,
+        store: &mut dyn CheckpointStore,
+    ) -> Result<CheckpointCoordinator> {
+        let mut coord = CheckpointCoordinator {
+            policy,
+            cache: init.clone(),
+            saved_iter: vec![0; layout.n_atoms()],
+            rr_cursor: 0,
+            scratch: Vec::new(),
+        };
+        // Persist x(0) as the initial running checkpoint.
+        coord.persist_atoms(0, &(0..layout.n_atoms()).collect::<Vec<_>>(), init, layout, store)?;
+        Ok(coord)
+    }
+
+    pub fn cache(&self) -> &ParamStore {
+        &self.cache
+    }
+
+    pub fn saved_iter(&self, atom: usize) -> usize {
+        self.saved_iter[atom]
+    }
+
+    /// Run a checkpoint barrier if the policy schedules one at `iter`.
+    pub fn maybe_checkpoint(
+        &mut self,
+        iter: usize,
+        current: &ParamStore,
+        layout: &AtomLayout,
+        store: &mut dyn CheckpointStore,
+        rng: &mut Rng,
+    ) -> Result<Option<CheckpointStats>> {
+        if iter == 0 || iter % self.policy.interval != 0 {
+            return Ok(None);
+        }
+        Ok(Some(self.checkpoint_now(iter, current, layout, store, rng)?))
+    }
+
+    /// Force a checkpoint barrier at `iter` regardless of schedule.
+    pub fn checkpoint_now(
+        &mut self,
+        iter: usize,
+        current: &ParamStore,
+        layout: &AtomLayout,
+        store: &mut dyn CheckpointStore,
+        rng: &mut Rng,
+    ) -> Result<CheckpointStats> {
+        let k = self.policy.atoms_per_checkpoint(layout.n_atoms());
+        let t0 = std::time::Instant::now();
+        let chosen = select::select_atoms(
+            self.policy.selector,
+            k,
+            current,
+            &self.cache,
+            layout,
+            &mut self.rr_cursor,
+            rng,
+        );
+        // Update the in-memory cache — after this the training loop can
+        // resume; the persistent write is accounted separately.
+        for &a in &chosen {
+            current.read_atom(layout, a, &mut self.scratch);
+            self.cache.write_atom(layout, a, &self.scratch);
+            self.saved_iter[a] = iter;
+        }
+        let blocking_secs = t0.elapsed().as_secs_f64();
+        let bytes_before = store.bytes_written();
+        self.persist_atoms(iter, &chosen, current, layout, store)?;
+        Ok(CheckpointStats {
+            iter,
+            atoms_saved: chosen.len(),
+            bytes: store.bytes_written() - bytes_before,
+            blocking_secs,
+        })
+    }
+
+    fn persist_atoms(
+        &mut self,
+        iter: usize,
+        atoms: &[usize],
+        from: &ParamStore,
+        layout: &AtomLayout,
+        store: &mut dyn CheckpointStore,
+    ) -> Result<()> {
+        // Collect owned buffers first (atoms may have multi-segment values).
+        let mut payloads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(atoms.len());
+        for &a in atoms {
+            let mut buf = Vec::new();
+            from.read_atom(layout, a, &mut buf);
+            payloads.push((a, buf));
+        }
+        let refs: Vec<(usize, &[f32])> =
+            payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+        store.put_atoms(iter, &refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{AtomLayout, ParamStore, Tensor};
+    use crate::storage::MemStore;
+
+    fn setup(n: usize) -> (ParamStore, AtomLayout) {
+        let store = ParamStore::new(vec![Tensor::zeros("w", &[n, 2])]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&store, "w"));
+        (store, layout)
+    }
+
+    #[test]
+    fn initial_checkpoint_holds_x0() {
+        let (mut ps, layout) = setup(4);
+        ps.get_mut("w").data[0] = 5.0;
+        let mut store = MemStore::new();
+        let coord = CheckpointCoordinator::new(
+            CheckpointPolicy::full(4),
+            &ps,
+            &layout,
+            &mut store,
+        )
+        .unwrap();
+        assert_eq!(store.records_written(), 4);
+        assert_eq!(coord.cache().get("w").data[0], 5.0);
+        assert_eq!(store.get_atom(0).unwrap().unwrap().values, vec![5.0, 0.0]);
+    }
+
+    #[test]
+    fn schedule_respected() {
+        let (ps, layout) = setup(4);
+        let mut store = MemStore::new();
+        let mut coord =
+            CheckpointCoordinator::new(CheckpointPolicy::full(3), &ps, &layout, &mut store)
+                .unwrap();
+        let mut rng = Rng::new(0);
+        assert!(coord.maybe_checkpoint(1, &ps, &layout, &mut store, &mut rng).unwrap().is_none());
+        assert!(coord.maybe_checkpoint(2, &ps, &layout, &mut store, &mut rng).unwrap().is_none());
+        let stats = coord.maybe_checkpoint(3, &ps, &layout, &mut store, &mut rng).unwrap().unwrap();
+        assert_eq!(stats.atoms_saved, 4);
+    }
+
+    #[test]
+    fn priority_saves_most_changed() {
+        let (mut ps, layout) = setup(4);
+        let mut store = MemStore::new();
+        let policy = CheckpointPolicy { fraction: 0.25, interval: 1, selector: Selector::Priority };
+        let mut coord = CheckpointCoordinator::new(policy, &ps, &layout, &mut store).unwrap();
+        let mut rng = Rng::new(0);
+        // Atom 2 drifts the most.
+        ps.get_mut("w").data[4] = 100.0;
+        ps.get_mut("w").data[0] = 1.0;
+        let stats = coord.checkpoint_now(1, &ps, &layout, &mut store, &mut rng).unwrap();
+        assert_eq!(stats.atoms_saved, 1);
+        assert_eq!(store.get_atom(2).unwrap().unwrap().values, vec![100.0, 0.0]);
+        assert_eq!(coord.saved_iter(2), 1);
+        assert_eq!(coord.saved_iter(0), 0);
+    }
+
+    #[test]
+    fn parity_of_bytes_written() {
+        // fraction 1/2 at interval 2 writes the same bytes per 4 iters as
+        // full at interval 4 (§4.2 parity).
+        let (ps, layout) = setup(8);
+        let mut rng = Rng::new(0);
+
+        let mut bytes_for = |policy: CheckpointPolicy| -> u64 {
+            let mut store = MemStore::new();
+            let mut coord =
+                CheckpointCoordinator::new(policy, &ps, &layout, &mut store).unwrap();
+            let base = store.bytes_written();
+            for iter in 1..=8 {
+                coord.maybe_checkpoint(iter, &ps, &layout, &mut store, &mut rng).unwrap();
+            }
+            store.bytes_written() - base
+        };
+
+        let full = bytes_for(CheckpointPolicy::full(4));
+        let half = bytes_for(CheckpointPolicy::partial(4, 2, Selector::RoundRobin));
+        assert_eq!(full, half);
+    }
+
+    #[test]
+    fn round_robin_cycles_all_atoms() {
+        let (ps, layout) = setup(6);
+        let mut store = MemStore::new();
+        let policy = CheckpointPolicy { fraction: 1.0 / 3.0, interval: 1, selector: Selector::RoundRobin };
+        let mut coord = CheckpointCoordinator::new(policy, &ps, &layout, &mut store).unwrap();
+        let mut rng = Rng::new(0);
+        for iter in 1..=3 {
+            coord.checkpoint_now(iter, &ps, &layout, &mut store, &mut rng).unwrap();
+        }
+        // After 3 checkpoints of 2 atoms each, every atom saved at >= 1.
+        for a in 0..6 {
+            assert!(coord.saved_iter(a) >= 1, "atom {a} never saved");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Atom selection strategies for partial checkpoints (paper §4.2, §5.4).
+//!
+//! The priority selector implements the paper's heuristic — "save the
+//! parameters which have changed the most since they were previously
+//! saved" — as a top-k over per-atom distances between the current state
+//! and the in-memory running-checkpoint cache. Selection is O(n) via
+//! `select_nth_unstable` (no full sort): this is per-iteration overhead
+//! on the training path, benchmarked in `benches/priority_selection.rs`.
+
+use crate::params::{AtomLayout, ParamStore};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selector {
+    /// Largest distance from last-saved value first (SCAR's strategy).
+    Priority,
+    /// Cyclic over atom ids (paper's `round` baseline).
+    RoundRobin,
+    /// Uniform without replacement (paper's `random` baseline).
+    Random,
+}
+
+impl std::str::FromStr for Selector {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "priority" => Ok(Selector::Priority),
+            "round" | "round-robin" => Ok(Selector::RoundRobin),
+            "random" => Ok(Selector::Random),
+            other => Err(format!("unknown selector '{other}' (priority|round|random)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Selector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Selector::Priority => "priority",
+            Selector::RoundRobin => "round",
+            Selector::Random => "random",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Pick `k` atoms to checkpoint. `rr_cursor` is the coordinator's
+/// persistent round-robin position (advanced on use).
+pub fn select_atoms(
+    selector: Selector,
+    k: usize,
+    current: &ParamStore,
+    cache: &ParamStore,
+    layout: &AtomLayout,
+    rr_cursor: &mut usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n = layout.n_atoms();
+    let k = k.min(n);
+    if k == n {
+        return (0..n).collect();
+    }
+    match selector {
+        Selector::Priority => top_k_by_distance(k, current, cache, layout),
+        Selector::RoundRobin => {
+            let mut out = Vec::with_capacity(k);
+            for i in 0..k {
+                out.push((*rr_cursor + i) % n);
+            }
+            *rr_cursor = (*rr_cursor + k) % n;
+            out
+        }
+        Selector::Random => rng.sample_indices(n, k),
+    }
+}
+
+/// Top-k atom ids by distance, O(n) average via quickselect then a sort of
+/// only the selected prefix (stable output order for determinism).
+fn top_k_by_distance(
+    k: usize,
+    current: &ParamStore,
+    cache: &ParamStore,
+    layout: &AtomLayout,
+) -> Vec<usize> {
+    let n = layout.n_atoms();
+    let mut scored: Vec<(f64, usize)> = (0..n)
+        .map(|a| (current.atom_distance(cache, layout, a), a))
+        .collect();
+    // Partition so the k largest are in the front (descending by score).
+    scored.select_nth_unstable_by(k.saturating_sub(1).min(n - 1), |a, b| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut out: Vec<usize> = scored[..k].iter().map(|&(_, a)| a).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{AtomLayout, ParamStore, Tensor};
+
+    fn fixtures(n: usize) -> (ParamStore, ParamStore, AtomLayout) {
+        let cur = ParamStore::new(vec![Tensor::zeros("w", &[n, 1])]);
+        let cache = cur.clone();
+        let layout = AtomLayout::new(AtomLayout::rows_of(&cur, "w"));
+        (cur, cache, layout)
+    }
+
+    #[test]
+    fn priority_picks_largest_distances() {
+        let (mut cur, cache, layout) = fixtures(10);
+        for (i, v) in [(3usize, 9.0f32), (7, 5.0), (1, 2.0)] {
+            cur.get_mut("w").data[i] = v;
+        }
+        let mut cursor = 0;
+        let mut rng = Rng::new(0);
+        let got = select_atoms(Selector::Priority, 2, &cur, &cache, &layout, &mut cursor, &mut rng);
+        assert_eq!(got, vec![3, 7]);
+    }
+
+    #[test]
+    fn priority_full_selection_returns_all() {
+        let (cur, cache, layout) = fixtures(5);
+        let mut cursor = 0;
+        let mut rng = Rng::new(0);
+        let got = select_atoms(Selector::Priority, 5, &cur, &cache, &layout, &mut cursor, &mut rng);
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn round_robin_wraps() {
+        let (cur, cache, layout) = fixtures(5);
+        let mut cursor = 0;
+        let mut rng = Rng::new(0);
+        let a = select_atoms(Selector::RoundRobin, 3, &cur, &cache, &layout, &mut cursor, &mut rng);
+        let b = select_atoms(Selector::RoundRobin, 3, &cur, &cache, &layout, &mut cursor, &mut rng);
+        assert_eq!(a, vec![0, 1, 2]);
+        assert_eq!(b, vec![3, 4, 0]);
+        assert_eq!(cursor, 1);
+    }
+
+    #[test]
+    fn random_is_distinct_and_in_range() {
+        let (cur, cache, layout) = fixtures(20);
+        let mut cursor = 0;
+        let mut rng = Rng::new(7);
+        let got = select_atoms(Selector::Random, 8, &cur, &cache, &layout, &mut cursor, &mut rng);
+        assert_eq!(got.len(), 8);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 8);
+    }
+
+    #[test]
+    fn selector_parses() {
+        assert_eq!("priority".parse::<Selector>().unwrap(), Selector::Priority);
+        assert_eq!("round".parse::<Selector>().unwrap(), Selector::RoundRobin);
+        assert!("bogus".parse::<Selector>().is_err());
+    }
+}

@@ -1,0 +1,404 @@
+//! Threaded parameter-server deployment (paper Fig 4 architecture).
+//!
+//! PS nodes run as OS threads owning their atom partitions and posting
+//! heartbeats; the fault-tolerance controller (this module, driven by the
+//! training loop) routes gets/puts, detects silent nodes via
+//! [`HeartbeatDetector`], and on failure re-partitions lost atoms onto
+//! survivors and reloads them from the shared checkpoint store — i.e.
+//! partial recovery, end to end, over real message passing.
+//!
+//! The offline crate set has no tokio; `std::thread` + `mpsc` provide the
+//! same coordination semantics (the paper's PS is thread-per-node too).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{CheckpointCoordinator, CheckpointPolicy};
+use crate::failure::{HeartbeatDetector, Liveness};
+use crate::params::{AtomLayout, ParamStore};
+use crate::partition::Partition;
+use crate::storage::CheckpointStore;
+use crate::trainer::Trainer;
+use crate::util::rng::Rng;
+
+/// Messages understood by a PS node thread.
+enum PsMsg {
+    Get { atoms: Vec<usize>, reply: Sender<Vec<(usize, Vec<f32>)>> },
+    Put { values: Vec<(usize, Vec<f32>)> },
+    /// Simulated hardware failure: drop all state and exit silently
+    /// (no more heartbeats — the detector must notice).
+    Kill,
+    /// Graceful shutdown at end of job.
+    Shutdown,
+}
+
+struct NodeHandle {
+    tx: Sender<PsMsg>,
+    join: Option<JoinHandle<()>>,
+    alive: bool,
+}
+
+fn spawn_node(id: usize, beat_tx: Sender<(usize, Instant)>) -> NodeHandle {
+    let (tx, rx): (Sender<PsMsg>, Receiver<PsMsg>) = channel();
+    let join = std::thread::Builder::new()
+        .name(format!("ps-node-{id}"))
+        .spawn(move || {
+            let mut store: HashMap<usize, Vec<f32>> = HashMap::new();
+            loop {
+                // Heartbeat on every wakeup (including idle timeouts).
+                let _ = beat_tx.send((id, Instant::now()));
+                match rx.recv_timeout(Duration::from_millis(2)) {
+                    Ok(PsMsg::Get { atoms, reply }) => {
+                        let vals = atoms
+                            .into_iter()
+                            .filter_map(|a| store.get(&a).map(|v| (a, v.clone())))
+                            .collect();
+                        let _ = reply.send(vals);
+                    }
+                    Ok(PsMsg::Put { values }) => {
+                        for (a, v) in values {
+                            store.insert(a, v);
+                        }
+                    }
+                    Ok(PsMsg::Kill) => {
+                        // Hardware failure: state vanishes, thread dies,
+                        // no deregistration — silence is the signal.
+                        return;
+                    }
+                    Ok(PsMsg::Shutdown) => return,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            }
+        })
+        .expect("spawning ps node thread");
+    NodeHandle { tx, join: Some(join), alive: true }
+}
+
+/// A notable runtime event, for logs and assertions in tests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    NodeKilled { node: usize, iter: usize },
+    NodeDeclaredDead { node: usize, iter: usize },
+    Recovered { nodes: Vec<usize>, atoms: usize, iter: usize },
+    Checkpoint { iter: usize, atoms: usize },
+}
+
+/// The live PS deployment: node threads + partition + FT controller.
+pub struct Cluster {
+    nodes: Vec<NodeHandle>,
+    pub partition: Partition,
+    detector: HeartbeatDetector,
+    beat_rx: Receiver<(usize, Instant)>,
+    pub events: Vec<ClusterEvent>,
+    scratch: Vec<f32>,
+}
+
+impl Cluster {
+    /// Spawn `n_nodes` PS threads and randomly partition the layout's
+    /// atoms across them, seeding node state from `init`.
+    pub fn start(
+        n_nodes: usize,
+        init: &ParamStore,
+        layout: &AtomLayout,
+        heartbeat_timeout: Duration,
+        rng: &mut Rng,
+    ) -> Result<Cluster> {
+        let (beat_tx, beat_rx) = channel();
+        let mut detector = HeartbeatDetector::new(heartbeat_timeout);
+        let nodes: Vec<NodeHandle> = (0..n_nodes)
+            .map(|id| {
+                detector.register(id);
+                spawn_node(id, beat_tx.clone())
+            })
+            .collect();
+        let partition = Partition::random(layout.n_atoms(), n_nodes, rng);
+        let mut cluster = Cluster {
+            nodes,
+            partition,
+            detector,
+            beat_rx,
+            events: Vec::new(),
+            scratch: Vec::new(),
+        };
+        cluster.scatter_all(init, layout)?;
+        Ok(cluster)
+    }
+
+    fn drain_beats(&mut self) {
+        while let Ok((node, at)) = self.beat_rx.try_recv() {
+            self.detector.beat_at(node, at);
+        }
+    }
+
+    /// Push every atom to its owner.
+    pub fn scatter_all(&mut self, state: &ParamStore, layout: &AtomLayout) -> Result<()> {
+        let atoms: Vec<usize> = (0..layout.n_atoms()).collect();
+        self.scatter(state, layout, &atoms)
+    }
+
+    /// Push a subset of atoms to their owners.
+    pub fn scatter(
+        &mut self,
+        state: &ParamStore,
+        layout: &AtomLayout,
+        atoms: &[usize],
+    ) -> Result<()> {
+        let mut per_node: HashMap<usize, Vec<(usize, Vec<f32>)>> = HashMap::new();
+        for &a in atoms {
+            state.read_atom(layout, a, &mut self.scratch);
+            per_node
+                .entry(self.partition.owner[a])
+                .or_default()
+                .push((a, self.scratch.clone()));
+        }
+        for (node, values) in per_node {
+            if self.nodes[node].alive {
+                let _ = self.nodes[node].tx.send(PsMsg::Put { values });
+            }
+        }
+        self.drain_beats();
+        Ok(())
+    }
+
+    /// Pull every atom from the PS nodes into `state`. Atoms on dead
+    /// nodes are left untouched (the caller runs recovery first).
+    pub fn gather(&mut self, state: &mut ParamStore, layout: &AtomLayout) -> Result<()> {
+        let mut pending = Vec::new();
+        for node in 0..self.nodes.len() {
+            if !self.nodes[node].alive || self.partition.atoms_of[node].is_empty() {
+                continue;
+            }
+            let (reply_tx, reply_rx) = channel();
+            let atoms = self.partition.atoms_of[node].clone();
+            if self.nodes[node]
+                .tx
+                .send(PsMsg::Get { atoms, reply: reply_tx })
+                .is_err()
+            {
+                continue; // node died between liveness check and send
+            }
+            pending.push((node, reply_rx));
+        }
+        for (node, rx) in pending {
+            match rx.recv_timeout(Duration::from_millis(500)) {
+                Ok(values) => {
+                    for (a, v) in values {
+                        state.write_atom(layout, a, &v);
+                    }
+                }
+                Err(_) => {
+                    // Treat as failed; detector will confirm.
+                    let _ = node;
+                }
+            }
+        }
+        self.drain_beats();
+        Ok(())
+    }
+
+    /// Simulate a hardware failure of `node` at `iter`.
+    pub fn kill_node(&mut self, node: usize, iter: usize) {
+        if self.nodes[node].alive {
+            let _ = self.nodes[node].tx.send(PsMsg::Kill);
+            self.nodes[node].alive = false; // controller-side bookkeeping
+            self.events.push(ClusterEvent::NodeKilled { node, iter });
+        }
+    }
+
+    /// Poll the failure detector; returns nodes newly declared dead.
+    pub fn poll_failures(&mut self, iter: usize) -> Vec<usize> {
+        self.drain_beats();
+        let dead = self.detector.check();
+        for &node in &dead {
+            self.events.push(ClusterEvent::NodeDeclaredDead { node, iter });
+        }
+        dead
+    }
+
+    /// Recovery coordinator (§4.3): re-partition the dead nodes' atoms
+    /// onto survivors and reload their values from the running checkpoint
+    /// in shared storage. Returns the recovered atom ids.
+    pub fn recover_nodes(
+        &mut self,
+        dead: &[usize],
+        _layout: &AtomLayout,
+        store: &dyn CheckpointStore,
+        iter: usize,
+    ) -> Result<Vec<usize>> {
+        if dead.is_empty() {
+            return Ok(Vec::new());
+        }
+        let moved = self.partition.repartition(dead);
+        if moved.is_empty() && self.partition.n_atoms() > 0 {
+            bail!("all PS nodes failed; cannot recover in place");
+        }
+        // Reload lost atoms from persistent storage into their new owners.
+        let mut per_node: HashMap<usize, Vec<(usize, Vec<f32>)>> = HashMap::new();
+        for &a in &moved {
+            let saved = store
+                .get_atom(a)?
+                .with_context(|| format!("atom {a} missing from checkpoint store"))?;
+            per_node
+                .entry(self.partition.owner[a])
+                .or_default()
+                .push((a, saved.values));
+        }
+        for (node, values) in per_node {
+            let _ = self.nodes[node].tx.send(PsMsg::Put { values });
+        }
+        self.events.push(ClusterEvent::Recovered {
+            nodes: dead.to_vec(),
+            atoms: moved.len(),
+            iter,
+        });
+        Ok(moved)
+    }
+
+    pub fn alive_nodes(&self) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&n| self.detector.liveness(n) == Liveness::Alive && self.nodes[n].alive)
+            .collect()
+    }
+
+    pub fn shutdown(mut self) {
+        for node in &self.nodes {
+            let _ = node.tx.send(PsMsg::Shutdown);
+        }
+        for node in self.nodes.iter_mut() {
+            if let Some(j) = node.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Outcome of a full cluster training run.
+#[derive(Debug)]
+pub struct ClusterRunReport {
+    pub losses: Vec<f64>,
+    pub events: Vec<ClusterEvent>,
+    pub checkpoint_bytes: u64,
+}
+
+/// Drive a full training job on a threaded cluster: gather → step →
+/// scatter, with checkpointing, an optional scheduled node kill, and
+/// heartbeat-triggered partial recovery.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cluster_training(
+    trainer: &mut dyn Trainer,
+    n_nodes: usize,
+    iters: usize,
+    policy: CheckpointPolicy,
+    store: &mut dyn CheckpointStore,
+    kill_at: Option<(usize, usize)>, // (iteration, node)
+    seed: u64,
+    heartbeat_timeout: Duration,
+) -> Result<ClusterRunReport> {
+    trainer.init(seed)?;
+    let layout = trainer.layout().clone();
+    let mut rng = Rng::new(seed ^ 0xC1A5);
+    let mut cluster = Cluster::start(n_nodes, trainer.state(), &layout, heartbeat_timeout, &mut rng)?;
+    let mut coord = CheckpointCoordinator::new(policy, trainer.state(), &layout, store)?;
+
+    let mut losses = Vec::with_capacity(iters);
+    for iter in 0..iters {
+        if let Some((kill_iter, node)) = kill_at {
+            if iter == kill_iter {
+                cluster.kill_node(node, iter);
+            }
+        }
+        // Give the detector a chance to notice silence before the gather.
+        let dead = cluster.poll_failures(iter);
+        if !dead.is_empty() {
+            cluster.recover_nodes(&dead, &layout, store, iter)?;
+        }
+
+        // Worker: pull params, compute the step via the AOT artifact,
+        // push updates back.
+        let mut state = trainer.state().clone();
+        cluster.gather(&mut state, &layout)?;
+        trainer.set_state(state);
+        let loss = trainer.step(iter)?;
+        losses.push(loss);
+        let atoms: Vec<usize> = (0..layout.n_atoms()).collect();
+        cluster.scatter(trainer.state(), &layout, &atoms)?;
+
+        if let Some(stats) =
+            coord.maybe_checkpoint(iter + 1, trainer.state(), &layout, store, &mut rng)?
+        {
+            cluster
+                .events
+                .push(ClusterEvent::Checkpoint { iter: iter + 1, atoms: stats.atoms_saved });
+        }
+    }
+    let events = cluster.events.clone();
+    let bytes = store.bytes_written();
+    cluster.shutdown();
+    Ok(ClusterRunReport { losses, events, checkpoint_bytes: bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{Tensor};
+
+    fn setup(n_atoms: usize) -> (ParamStore, AtomLayout) {
+        let store = ParamStore::new(vec![Tensor::zeros("w", &[n_atoms, 3])]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&store, "w"));
+        (store, layout)
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let (mut state, layout) = setup(12);
+        for (i, v) in state.get_mut("w").data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let mut rng = Rng::new(1);
+        let mut cluster =
+            Cluster::start(3, &state, &layout, Duration::from_millis(50), &mut rng).unwrap();
+        let mut out = ParamStore::new(vec![Tensor::zeros("w", &[12, 3])]);
+        cluster.gather(&mut out, &layout).unwrap();
+        assert_eq!(out.get("w").data, state.get("w").data);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn killed_node_is_detected_and_recovered() {
+        let (state, layout) = setup(10);
+        let mut rng = Rng::new(2);
+        let mut cluster =
+            Cluster::start(3, &state, &layout, Duration::from_millis(10), &mut rng).unwrap();
+        // Checkpoint store holding x(0) for every atom.
+        let mut store = crate::storage::MemStore::new();
+        {
+            let mut buf = Vec::new();
+            let mut payload = Vec::new();
+            for a in 0..layout.n_atoms() {
+                state.read_atom(&layout, a, &mut buf);
+                payload.push((a, buf.clone()));
+            }
+            let refs: Vec<(usize, &[f32])> =
+                payload.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+            store.put_atoms(0, &refs).unwrap();
+        }
+        cluster.kill_node(1, 0);
+        // Wait for silence to exceed 2x timeout.
+        std::thread::sleep(Duration::from_millis(40));
+        let dead = cluster.poll_failures(1);
+        assert_eq!(dead, vec![1]);
+        let moved = cluster.recover_nodes(&dead, &layout, &store, 1).unwrap();
+        assert!(!moved.is_empty());
+        assert!(cluster.partition.atoms_of[1].is_empty());
+        assert!(cluster.partition.is_consistent());
+        // All atoms still gatherable.
+        let mut out = ParamStore::new(vec![Tensor::zeros("w", &[10, 3])]);
+        cluster.gather(&mut out, &layout).unwrap();
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,178 @@
+//! Run configuration: JSON config files + CLI overrides.
+//!
+//! A `RunConfig` fully describes one training job under SCAR: the model
+//! variant, the PS topology, the checkpoint policy, the recovery mode and
+//! the failure-injection schedule. `scar train --config run.json
+//! --override key=value ...` is the launcher entry point.
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{CheckpointPolicy, Selector};
+use crate::recovery::RecoveryMode;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Artifact variant name (or `lda_<dataset>` for the Rust substrate).
+    pub model: String,
+    pub seed: u64,
+    /// Iterations to run (0 = run to the convergence target).
+    pub iters: usize,
+    /// Target iterations used to fix the convergence threshold ε.
+    pub target_iters: usize,
+    pub ps_nodes: usize,
+    pub workers: usize,
+    /// Base (full-checkpoint) interval C.
+    pub checkpoint_interval: usize,
+    /// Partial-checkpoint divisor k: fraction 1/k every C/k iterations.
+    pub checkpoint_k: usize,
+    pub selector: Selector,
+    pub recovery: RecoveryMode,
+    /// Inject a failure? (fraction of atoms lost; 0 disables)
+    pub fail_fraction: f64,
+    /// Geometric parameter for the failure iteration.
+    pub fail_geom_p: f64,
+    /// Where checkpoints go (empty = in-memory store).
+    pub checkpoint_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "mlr_covtype".to_string(),
+            seed: 42,
+            iters: 100,
+            target_iters: 60,
+            ps_nodes: 4,
+            workers: 1,
+            checkpoint_interval: 8,
+            checkpoint_k: 1,
+            selector: Selector::Priority,
+            recovery: RecoveryMode::Partial,
+            fail_fraction: 0.0,
+            fail_geom_p: 0.05,
+            checkpoint_dir: String::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn policy(&self) -> CheckpointPolicy {
+        CheckpointPolicy::partial(self.checkpoint_interval, self.checkpoint_k, self.selector)
+    }
+
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let mut cfg = RunConfig::default();
+        let obj = v.as_obj().context("config must be a JSON object")?;
+        for (k, val) in obj {
+            cfg.apply(k, &json_to_str(val))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `key=value` override.
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "model" => self.model = value.to_string(),
+            "seed" => self.seed = value.parse().context("seed")?,
+            "iters" => self.iters = value.parse().context("iters")?,
+            "target_iters" => self.target_iters = value.parse().context("target_iters")?,
+            "ps_nodes" => self.ps_nodes = value.parse().context("ps_nodes")?,
+            "workers" => self.workers = value.parse().context("workers")?,
+            "checkpoint_interval" => {
+                self.checkpoint_interval = value.parse().context("checkpoint_interval")?
+            }
+            "checkpoint_k" => self.checkpoint_k = value.parse().context("checkpoint_k")?,
+            "selector" => {
+                self.selector = Selector::from_str(value).map_err(anyhow::Error::msg)?
+            }
+            "recovery" => {
+                self.recovery = RecoveryMode::from_str(value).map_err(anyhow::Error::msg)?
+            }
+            "fail_fraction" => self.fail_fraction = value.parse().context("fail_fraction")?,
+            "fail_geom_p" => self.fail_geom_p = value.parse().context("fail_geom_p")?,
+            "checkpoint_dir" => self.checkpoint_dir = value.to_string(),
+            other => bail!("unknown config key '{other}'"),
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.ps_nodes == 0 {
+            bail!("ps_nodes must be >= 1");
+        }
+        if self.checkpoint_interval == 0 {
+            bail!("checkpoint_interval must be >= 1");
+        }
+        if self.checkpoint_k == 0 || self.checkpoint_k > self.checkpoint_interval {
+            bail!(
+                "checkpoint_k must be in [1, checkpoint_interval={}]",
+                self.checkpoint_interval
+            );
+        }
+        if !(0.0..=1.0).contains(&self.fail_fraction) {
+            bail!("fail_fraction must be in [0, 1]");
+        }
+        if !(0.0..1.0).contains(&self.fail_geom_p) && self.fail_geom_p != 1.0 {
+            bail!("fail_geom_p must be in (0, 1]");
+        }
+        Ok(())
+    }
+}
+
+fn json_to_str(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = RunConfig::default();
+        cfg.apply("model", "mf_jester").unwrap();
+        cfg.apply("checkpoint_k", "4").unwrap();
+        cfg.apply("selector", "random").unwrap();
+        cfg.apply("recovery", "full").unwrap();
+        assert_eq!(cfg.model, "mf_jester");
+        assert_eq!(cfg.policy().fraction, 0.25);
+        assert_eq!(cfg.selector, Selector::Random);
+        assert_eq!(cfg.recovery, RecoveryMode::Full);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply("checkpoint_k", "0").is_err());
+        assert!(cfg.apply("nonsense", "1").is_err());
+        assert!(cfg.apply("fail_fraction", "1.5").is_err());
+    }
+
+    #[test]
+    fn parses_config_file() {
+        let dir = std::env::temp_dir().join(format!("scar-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.json");
+        std::fs::write(&p, r#"{"model":"qp4","iters":200,"selector":"round"}"#).unwrap();
+        let cfg = RunConfig::from_file(&p).unwrap();
+        assert_eq!(cfg.model, "qp4");
+        assert_eq!(cfg.iters, 200);
+        assert_eq!(cfg.selector, Selector::RoundRobin);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,339 @@
+//! Synthetic dataset generators (DESIGN.md §3 substitutions).
+//!
+//! The paper's datasets (MNIST, CoverType, MovieLens, Jester, 20News,
+//! Reuters, ClueWeb12) are not available offline; each generator below
+//! produces a synthetic workload matched on the statistics that govern
+//! the training dynamics the paper measures — dimensionality, class
+//! structure, rank/sparsity, topic structure — so iteration-cost
+//! behaviour is preserved even though absolute losses differ.
+
+use crate::util::rng::Rng;
+
+/// Dense classification dataset: Gaussian mixture with one component per
+/// class (stand-in for MNIST / CoverType in MLR and CNN experiments).
+#[derive(Debug, Clone)]
+pub struct Classification {
+    pub dim: usize,
+    pub classes: usize,
+    /// xs is row-major (n, dim)
+    pub xs: Vec<f32>,
+    pub labels: Vec<usize>,
+}
+
+impl Classification {
+    pub fn gaussian_mixture(
+        dim: usize,
+        classes: usize,
+        n: usize,
+        sep: f64,
+        seed: u64,
+    ) -> Classification {
+        let mut rng = Rng::new(seed);
+        // Random unit mean per class, scaled by `sep`.
+        let mut means = vec![0f32; classes * dim];
+        for c in 0..classes {
+            let mut norm = 0.0f64;
+            for d in 0..dim {
+                let v = rng.normal();
+                means[c * dim + d] = v as f32;
+                norm += v * v;
+            }
+            let norm = norm.sqrt().max(1e-9);
+            for d in 0..dim {
+                means[c * dim + d] = (means[c * dim + d] as f64 / norm * sep) as f32;
+            }
+        }
+        let mut xs = vec![0f32; n * dim];
+        let mut labels = vec![0usize; n];
+        for i in 0..n {
+            let c = rng.below(classes);
+            labels[i] = c;
+            for d in 0..dim {
+                xs[i * dim + d] = means[c * dim + d] + rng.normal() as f32;
+            }
+        }
+        Classification { dim, classes, xs, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Sample a batch: (x row-major (b, dim), one-hot y (b, classes)).
+    pub fn batch(&self, b: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let mut x = vec![0f32; b * self.dim];
+        let mut y = vec![0f32; b * self.classes];
+        for i in 0..b {
+            let j = rng.below(self.len());
+            x[i * self.dim..(i + 1) * self.dim]
+                .copy_from_slice(&self.xs[j * self.dim..(j + 1) * self.dim]);
+            y[i * self.classes + self.labels[j]] = 1.0;
+        }
+        (x, y)
+    }
+}
+
+/// Low-rank + noise ratings matrix with a Bernoulli observation mask
+/// (stand-in for MovieLens / Jester in the MF-ALS experiments).
+#[derive(Debug, Clone)]
+pub struct Ratings {
+    pub m: usize,
+    pub n: usize,
+    /// row-major (m, n); zero where unobserved
+    pub values: Vec<f32>,
+    /// row-major (m, n) in {0.0, 1.0}
+    pub mask: Vec<f32>,
+}
+
+impl Ratings {
+    pub fn lowrank(m: usize, n: usize, rank: usize, density: f64, noise: f64, seed: u64) -> Ratings {
+        let mut rng = Rng::new(seed);
+        let mut u = vec![0f32; m * rank];
+        let mut v = vec![0f32; rank * n];
+        for x in u.iter_mut() {
+            *x = rng.normal() as f32 / (rank as f32).sqrt();
+        }
+        for x in v.iter_mut() {
+            *x = rng.normal() as f32 / (rank as f32).sqrt();
+        }
+        let mut values = vec![0f32; m * n];
+        let mut mask = vec![0f32; m * n];
+        let mut observed = 0usize;
+        for i in 0..m {
+            for j in 0..n {
+                if rng.bernoulli(density) {
+                    let mut dot = 0f32;
+                    for k in 0..rank {
+                        dot += u[i * rank + k] * v[k * n + j];
+                    }
+                    values[i * n + j] = dot + (noise * rng.normal()) as f32;
+                    mask[i * n + j] = 1.0;
+                    observed += 1;
+                }
+            }
+        }
+        // Guarantee every row/col has at least one observation so the ALS
+        // normal equations stay well posed.
+        if observed == 0 {
+            mask[0] = 1.0;
+        }
+        for i in 0..m {
+            if mask[i * n..(i + 1) * n].iter().all(|&x| x == 0.0) {
+                let j = rng.below(n);
+                mask[i * n + j] = 1.0;
+            }
+        }
+        for j in 0..n {
+            if (0..m).all(|i| mask[i * n + j] == 0.0) {
+                let i = rng.below(m);
+                mask[i * n + j] = 1.0;
+            }
+        }
+        Ratings { m, n, values, mask }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.mask.iter().filter(|&&x| x > 0.0).count()
+    }
+}
+
+/// Corpus drawn from the LDA generative model (stand-in for 20News /
+/// Reuters / ClueWeb12). Ground-truth topics are Dirichlet(beta) over the
+/// vocabulary; each document mixes topics via Dirichlet(alpha).
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub vocab: usize,
+    pub docs: Vec<Vec<u32>>,
+}
+
+impl Corpus {
+    pub fn lda_generative(
+        n_docs: usize,
+        vocab: usize,
+        topics: usize,
+        mean_len: usize,
+        alpha: f64,
+        beta: f64,
+        seed: u64,
+    ) -> Corpus {
+        let mut rng = Rng::new(seed);
+        let phi: Vec<Vec<f64>> = (0..topics).map(|_| rng.dirichlet(beta, vocab)).collect();
+        let mut docs = Vec::with_capacity(n_docs);
+        for _ in 0..n_docs {
+            let theta = rng.dirichlet(alpha, topics);
+            // Document lengths: uniform in [mean/2, 3*mean/2).
+            let len = (mean_len / 2 + rng.below(mean_len)).max(4);
+            let mut doc = Vec::with_capacity(len);
+            for _ in 0..len {
+                let z = rng.categorical(&theta);
+                let w = rng.categorical(&phi[z]);
+                doc.push(w as u32);
+            }
+            docs.push(doc);
+        }
+        Corpus { vocab, docs }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.docs.iter().map(|d| d.len()).sum()
+    }
+}
+
+/// Markov-chain token stream for the transformer LM: structured enough
+/// that the loss curve has headroom to drop, reproducible per (seed).
+#[derive(Debug, Clone)]
+pub struct TokenStream {
+    pub vocab: usize,
+    /// Sparse per-state transition tables: each state has `branch`
+    /// successors with geometric-ish weights.
+    succ: Vec<Vec<u32>>,
+}
+
+impl TokenStream {
+    pub fn markov(vocab: usize, branch: usize, seed: u64) -> TokenStream {
+        let mut rng = Rng::new(seed);
+        let succ = (0..vocab)
+            .map(|_| (0..branch).map(|_| rng.below(vocab) as u32).collect())
+            .collect();
+        TokenStream { vocab, succ }
+    }
+
+    /// Sample a (tokens, targets) batch of shape (b, s): targets are the
+    /// next-token shift of tokens.
+    pub fn batch(&self, b: usize, s: usize, rng: &mut Rng) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = vec![0i32; b * s];
+        let mut targets = vec![0i32; b * s];
+        for row in 0..b {
+            let mut cur = rng.below(self.vocab) as u32;
+            for col in 0..s {
+                tokens[row * s + col] = cur as i32;
+                // Prefer early successors (geometric-ish): index j w.p. ~ 2^-j.
+                let succ = &self.succ[cur as usize];
+                let mut j = 0;
+                while j + 1 < succ.len() && rng.bernoulli(0.5) {
+                    j += 1;
+                }
+                cur = succ[j];
+                targets[row * s + col] = cur as i32;
+            }
+        }
+        (tokens, targets)
+    }
+}
+
+/// SPD matrix with prescribed condition number for the QP experiments:
+/// A = Q diag(λ) Qᵀ with λ log-spaced in [1/cond, 1], Q a random rotation.
+pub fn spd_matrix(dim: usize, cond: f64, rng: &mut Rng) -> Vec<f32> {
+    // Random orthogonal Q via Gram-Schmidt on a Gaussian matrix.
+    let mut q = vec![0f64; dim * dim];
+    for v in q.iter_mut() {
+        *v = rng.normal();
+    }
+    for i in 0..dim {
+        for j in 0..i {
+            let dot: f64 = (0..dim).map(|k| q[i * dim + k] * q[j * dim + k]).sum();
+            for k in 0..dim {
+                q[i * dim + k] -= dot * q[j * dim + k];
+            }
+        }
+        let norm: f64 = (0..dim).map(|k| q[i * dim + k] * q[i * dim + k]).sum::<f64>().sqrt();
+        for k in 0..dim {
+            q[i * dim + k] /= norm.max(1e-12);
+        }
+    }
+    // Eigenvalues log-spaced.
+    let lambdas: Vec<f64> = (0..dim)
+        .map(|i| {
+            let t = if dim == 1 { 0.0 } else { i as f64 / (dim - 1) as f64 };
+            (1.0 / cond).powf(1.0 - t)
+        })
+        .collect();
+    let mut a = vec![0f32; dim * dim];
+    for r in 0..dim {
+        for c in 0..dim {
+            let mut acc = 0f64;
+            for k in 0..dim {
+                acc += q[k * dim + r] * lambdas[k] * q[k * dim + c];
+            }
+            a[r * dim + c] = acc as f32;
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixture_is_classifiable() {
+        let d = Classification::gaussian_mixture(8, 3, 500, 4.0, 1);
+        assert_eq!(d.len(), 500);
+        // Nearest-class-mean error should beat chance easily at sep=4.
+        // (cheap proxy: points closer to own-class sample than random one)
+        let mut rng = Rng::new(2);
+        let (x, y) = d.batch(64, &mut rng);
+        assert_eq!(x.len(), 64 * 8);
+        assert_eq!(y.len(), 64 * 3);
+        for row in y.chunks(3) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ratings_density_and_coverage() {
+        let r = Ratings::lowrank(50, 40, 5, 0.2, 0.05, 3);
+        let frac = r.nnz() as f64 / (50.0 * 40.0);
+        assert!((frac - 0.2).abs() < 0.08, "density={frac}");
+        for i in 0..50 {
+            assert!(r.mask[i * 40..(i + 1) * 40].iter().any(|&m| m > 0.0));
+        }
+    }
+
+    #[test]
+    fn corpus_tokens_in_vocab() {
+        let c = Corpus::lda_generative(20, 100, 5, 30, 0.5, 0.1, 4);
+        assert_eq!(c.docs.len(), 20);
+        for doc in &c.docs {
+            assert!(doc.len() >= 4);
+            assert!(doc.iter().all(|&w| (w as usize) < 100));
+        }
+    }
+
+    #[test]
+    fn token_stream_shapes() {
+        let ts = TokenStream::markov(64, 3, 5);
+        let mut rng = Rng::new(6);
+        let (t, y) = ts.batch(4, 16, &mut rng);
+        assert_eq!(t.len(), 64);
+        assert_eq!(y.len(), 64);
+        assert!(t.iter().all(|&v| (0..64).contains(&v)));
+    }
+
+    #[test]
+    fn spd_matrix_is_symmetric_positive() {
+        let mut rng = Rng::new(7);
+        let dim = 6;
+        let a = spd_matrix(dim, 50.0, &mut rng);
+        for i in 0..dim {
+            for j in 0..dim {
+                assert!((a[i * dim + j] - a[j * dim + i]).abs() < 1e-4);
+            }
+        }
+        // x^T A x > 0 for a few random x.
+        for _ in 0..5 {
+            let x: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let mut quad = 0f64;
+            for i in 0..dim {
+                for j in 0..dim {
+                    quad += x[i] * a[i * dim + j] as f64 * x[j];
+                }
+            }
+            assert!(quad > 0.0);
+        }
+    }
+}

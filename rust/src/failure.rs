@@ -1,0 +1,254 @@
+//! Failure injection and detection (paper §4.3, §5.3).
+//!
+//! * [`FailureInjector`] draws the experiment-side failure schedule: the
+//!   failure iteration is geometric ("we sample the failure iteration
+//!   from a geometric distribution", §5.3) and the lost set is either a
+//!   uniformly-random fraction of atoms (Fig 6/7/8 semantics) or the atom
+//!   set owned by a random subset of PS nodes (cluster semantics).
+//! * [`HeartbeatDetector`] is the in-process stand-in for the paper's
+//!   ZooKeeper-style failure detector used by the threaded cluster
+//!   runtime: nodes post heartbeats; a node silent for longer than the
+//!   timeout is declared failed.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::partition::Partition;
+use crate::util::rng::Rng;
+
+/// What fails and when, for one simulated trial.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureEvent {
+    /// Training iteration during which the failure strikes.
+    pub iter: usize,
+    /// Atom ids whose values are lost.
+    pub lost_atoms: Vec<usize>,
+    /// PS nodes that died (empty when injecting at atom granularity).
+    pub failed_nodes: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct FailureInjector {
+    /// Geometric parameter for the failure iteration: P(fail at k) =
+    /// p(1-p)^{k-1}. Mean 1/p.
+    pub geom_p: f64,
+    /// Cap so failures land inside the unperturbed trajectory (failures
+    /// sampled past the cap are wrapped back in, preserving shape).
+    pub max_iter: usize,
+}
+
+impl FailureInjector {
+    pub fn new(geom_p: f64, max_iter: usize) -> Self {
+        assert!(geom_p > 0.0 && geom_p <= 1.0);
+        assert!(max_iter >= 1);
+        FailureInjector { geom_p, max_iter }
+    }
+
+    pub fn sample_iter(&self, rng: &mut Rng) -> usize {
+        let k = rng.geometric(self.geom_p);
+        ((k - 1) % self.max_iter) + 1
+    }
+
+    /// Lose a uniformly-random `fraction` of atoms (Fig 7 semantics).
+    pub fn sample_atom_failure(
+        &self,
+        n_atoms: usize,
+        fraction: f64,
+        rng: &mut Rng,
+    ) -> FailureEvent {
+        let k = ((n_atoms as f64 * fraction).round() as usize).clamp(1, n_atoms);
+        let mut lost = rng.sample_indices(n_atoms, k);
+        lost.sort_unstable();
+        FailureEvent { iter: self.sample_iter(rng), lost_atoms: lost, failed_nodes: vec![] }
+    }
+
+    /// Kill `n_failed` random PS nodes; lost atoms follow the partition
+    /// (cluster semantics, §4.3).
+    pub fn sample_node_failure(
+        &self,
+        partition: &Partition,
+        n_failed: usize,
+        rng: &mut Rng,
+    ) -> FailureEvent {
+        let n_nodes = partition.n_nodes();
+        let n_failed = n_failed.min(n_nodes.saturating_sub(1)); // keep one survivor
+        let mut nodes = rng.sample_indices(n_nodes, n_failed);
+        nodes.sort_unstable();
+        FailureEvent {
+            iter: self.sample_iter(rng),
+            lost_atoms: partition.lost_atoms(&nodes),
+            failed_nodes: nodes,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heartbeat detector
+// ---------------------------------------------------------------------------
+
+/// Liveness state of one monitored node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Liveness {
+    Alive,
+    Suspected,
+    Dead,
+}
+
+/// In-process heartbeat failure detector. PS node threads call
+/// [`HeartbeatDetector::beat`]; the controller polls [`check`]. A node is
+/// `Suspected` after `timeout` without a beat and `Dead` after
+/// `2*timeout` (two-level so transient scheduling hiccups don't trigger
+/// recovery — mirrors ZooKeeper session vs connection timeouts).
+#[derive(Debug)]
+pub struct HeartbeatDetector {
+    timeout: Duration,
+    last: HashMap<usize, Instant>,
+    declared_dead: HashMap<usize, bool>,
+}
+
+impl HeartbeatDetector {
+    pub fn new(timeout: Duration) -> Self {
+        HeartbeatDetector { timeout, last: HashMap::new(), declared_dead: HashMap::new() }
+    }
+
+    pub fn register(&mut self, node: usize) {
+        self.last.insert(node, Instant::now());
+        self.declared_dead.insert(node, false);
+    }
+
+    pub fn beat(&mut self, node: usize) {
+        self.beat_at(node, Instant::now());
+    }
+
+    /// Record a beat with its *send* timestamp. Controllers that drain
+    /// beat channels lazily must use this — processing-time stamps would
+    /// make stale buffered beats look fresh and mask real failures.
+    pub fn beat_at(&mut self, node: usize, at: Instant) {
+        // Beats from deregistered/dead nodes are ignored (a node must be
+        // re-registered by the controller after replacement).
+        if self.declared_dead.get(&node) == Some(&false) {
+            let entry = self.last.entry(node).or_insert(at);
+            if at > *entry {
+                *entry = at;
+            }
+        }
+    }
+
+    pub fn deregister(&mut self, node: usize) {
+        self.last.remove(&node);
+        self.declared_dead.remove(&node);
+    }
+
+    pub fn liveness(&self, node: usize) -> Liveness {
+        if self.declared_dead.get(&node) == Some(&true) {
+            return Liveness::Dead;
+        }
+        match self.last.get(&node) {
+            None => Liveness::Dead,
+            Some(t) => {
+                let dt = t.elapsed();
+                if dt > 2 * self.timeout {
+                    Liveness::Dead
+                } else if dt > self.timeout {
+                    Liveness::Suspected
+                } else {
+                    Liveness::Alive
+                }
+            }
+        }
+    }
+
+    /// Poll: returns nodes newly declared dead (each reported once).
+    pub fn check(&mut self) -> Vec<usize> {
+        let mut newly_dead = Vec::new();
+        let nodes: Vec<usize> = self.last.keys().copied().collect();
+        for node in nodes {
+            if self.declared_dead.get(&node) == Some(&true) {
+                continue;
+            }
+            if self.last[&node].elapsed() > 2 * self.timeout {
+                self.declared_dead.insert(node, true);
+                newly_dead.push(node);
+            }
+        }
+        newly_dead.sort_unstable();
+        newly_dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_iter_within_cap() {
+        let inj = FailureInjector::new(0.05, 30);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let it = inj.sample_iter(&mut rng);
+            assert!((1..=30).contains(&it));
+        }
+    }
+
+    #[test]
+    fn atom_failure_fraction() {
+        let inj = FailureInjector::new(0.1, 50);
+        let mut rng = Rng::new(2);
+        let ev = inj.sample_atom_failure(100, 0.25, &mut rng);
+        assert_eq!(ev.lost_atoms.len(), 25);
+        let mut sorted = ev.lost_atoms.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 25);
+    }
+
+    #[test]
+    fn node_failure_respects_partition() {
+        let inj = FailureInjector::new(0.1, 50);
+        let mut rng = Rng::new(3);
+        let partition = Partition::random(40, 4, &mut rng);
+        let ev = inj.sample_node_failure(&partition, 2, &mut rng);
+        assert_eq!(ev.failed_nodes.len(), 2);
+        for &a in &ev.lost_atoms {
+            assert!(ev.failed_nodes.contains(&partition.owner[a]));
+        }
+    }
+
+    #[test]
+    fn node_failure_keeps_a_survivor() {
+        let inj = FailureInjector::new(0.1, 50);
+        let mut rng = Rng::new(4);
+        let partition = Partition::random(10, 3, &mut rng);
+        let ev = inj.sample_node_failure(&partition, 99, &mut rng);
+        assert_eq!(ev.failed_nodes.len(), 2);
+    }
+
+    #[test]
+    fn heartbeat_lifecycle() {
+        // Generous margins: the suspected window is [T, 2T]; sleeps sit
+        // mid-window so scheduler jitter on a loaded box cannot flip the
+        // expected state.
+        let mut det = HeartbeatDetector::new(Duration::from_millis(150));
+        det.register(0);
+        det.register(1);
+        assert_eq!(det.liveness(0), Liveness::Alive);
+        std::thread::sleep(Duration::from_millis(200));
+        det.beat(1);
+        assert_eq!(det.liveness(0), Liveness::Suspected);
+        assert_eq!(det.liveness(1), Liveness::Alive);
+        std::thread::sleep(Duration::from_millis(200));
+        let dead = det.check();
+        assert_eq!(dead, vec![0]);
+        // Reported once only.
+        assert!(det.check().is_empty());
+        assert_eq!(det.liveness(0), Liveness::Dead);
+        // Beats after death are ignored.
+        det.beat(0);
+        assert_eq!(det.liveness(0), Liveness::Dead);
+    }
+
+    #[test]
+    fn unknown_node_is_dead() {
+        let det = HeartbeatDetector::new(Duration::from_millis(10));
+        assert_eq!(det.liveness(99), Liveness::Dead);
+    }
+}

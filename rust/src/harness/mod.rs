@@ -1,0 +1,485 @@
+//! Experiment harness: iteration-cost measurement (§3, §5).
+//!
+//! The iteration cost ι(δ, ε) = κ(y, ε) − κ(x, ε) is measured exactly as
+//! in the paper: run the unperturbed trainer once to fix the convergence
+//! threshold ε ("the value of ε is set so that an unperturbed trial
+//! converges in roughly N iterations") and the baseline iteration count;
+//! then, per trial, perturb/fail at iteration T and count how many extra
+//! iterations the perturbed run needs to reach ε.
+//!
+//! Trajectory caching: the unperturbed run snapshots the full state at
+//! every iteration, so each trial replays only the post-failure suffix —
+//! this is what makes 100-trial sweeps tractable on the CPU PJRT backend.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::{CheckpointCoordinator, CheckpointPolicy};
+use crate::params::ParamStore;
+use crate::recovery::{recover, RecoveryMode, RecoveryReport};
+use crate::storage::MemStore;
+use crate::trainer::Trainer;
+use crate::util::rng::Rng;
+use crate::util::stats::{summarize, Summary};
+
+/// Cached unperturbed run.
+pub struct Trajectory {
+    pub seed: u64,
+    /// losses[i] = loss after iteration i (0-based).
+    pub losses: Vec<f64>,
+    /// snapshots[i] = full state after i iterations (so snapshots[0] is
+    /// the initial state and snapshots.len() == losses.len() + 1).
+    pub snapshots: Vec<ParamStore>,
+    /// Convergence threshold ε (loss space).
+    pub threshold: f64,
+    /// Iterations the unperturbed run needed to first reach ε.
+    pub converged_iters: usize,
+}
+
+impl Trajectory {
+    pub fn max_iters(&self) -> usize {
+        self.losses.len()
+    }
+
+    /// State after `iter` iterations.
+    pub fn state_at(&self, iter: usize) -> &ParamStore {
+        &self.snapshots[iter]
+    }
+
+    /// Best available approximation of x*: the final snapshot.
+    pub fn x_star(&self) -> &ParamStore {
+        self.snapshots.last().unwrap()
+    }
+}
+
+/// Run the unperturbed trajectory. ε is set to the loss reached after
+/// `target_iters` iterations, and the run continues to `max_iters` so the
+/// final snapshot can serve as the x* estimate.
+pub fn run_trajectory(
+    trainer: &mut dyn Trainer,
+    seed: u64,
+    max_iters: usize,
+    target_iters: usize,
+) -> Result<Trajectory> {
+    assert!(target_iters >= 1 && target_iters <= max_iters);
+    trainer.init(seed)?;
+    let mut losses = Vec::with_capacity(max_iters);
+    let mut snapshots = Vec::with_capacity(max_iters + 1);
+    snapshots.push(trainer.state().clone());
+    for iter in 0..max_iters {
+        losses.push(trainer.step(iter)?);
+        snapshots.push(trainer.state().clone());
+    }
+    let threshold = losses[target_iters - 1];
+    let converged_iters = losses
+        .iter()
+        .position(|&l| l <= threshold)
+        .map(|i| i + 1)
+        .unwrap_or(target_iters);
+    Ok(Trajectory { seed, losses, snapshots, threshold, converged_iters })
+}
+
+/// Resume from `state` at iteration `start_iter` and train until the loss
+/// reaches `threshold` or `cap` total iterations elapse. Returns total
+/// iteration count at convergence (`None` if censored at the cap).
+pub fn continue_from(
+    trainer: &mut dyn Trainer,
+    state: ParamStore,
+    start_iter: usize,
+    threshold: f64,
+    cap: usize,
+) -> Result<Option<usize>> {
+    trainer.set_state(state);
+    for iter in start_iter..cap {
+        let loss = trainer.step(iter)?;
+        if loss <= threshold {
+            return Ok(Some(iter + 1));
+        }
+    }
+    Ok(None)
+}
+
+/// Replay the checkpoint coordinator along the cached trajectory up to
+/// (and including) iteration `upto`, under `policy`. Returns the
+/// coordinator (whose cache is the running checkpoint at failure time)
+/// and the backing store.
+pub fn replay_checkpoints(
+    traj: &Trajectory,
+    trainer: &dyn Trainer,
+    policy: CheckpointPolicy,
+    upto: usize,
+    ckpt_seed: u64,
+) -> Result<(CheckpointCoordinator, MemStore)> {
+    let layout = trainer.layout();
+    let mut store = MemStore::new();
+    let mut coord = CheckpointCoordinator::new(policy, traj.state_at(0), layout, &mut store)?;
+    let mut rng = Rng::new(ckpt_seed);
+    for iter in 1..=upto {
+        coord.maybe_checkpoint(iter, traj.state_at(iter), layout, &mut store, &mut rng)?;
+    }
+    Ok((coord, store))
+}
+
+/// One failure-recovery trial (Fig 7/8 semantics).
+#[derive(Debug, Clone)]
+pub struct TrialSpec {
+    pub policy: CheckpointPolicy,
+    pub mode: RecoveryMode,
+    pub fail_iter: usize,
+    pub lost_atoms: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrialResult {
+    /// Rework iterations: total iterations to ε minus the unperturbed
+    /// count. Censored trials are reported at the cap.
+    pub iteration_cost: f64,
+    pub censored: bool,
+    pub recovery: RecoveryReport,
+}
+
+/// Cap for perturbed runs: generous multiple of the baseline so heavy
+/// perturbations still resolve, while keeping worst-case trial time
+/// bounded.
+pub fn default_cap(traj: &Trajectory) -> usize {
+    traj.converged_iters * 4 + 60
+}
+
+pub fn run_trial(
+    trainer: &mut dyn Trainer,
+    traj: &Trajectory,
+    spec: &TrialSpec,
+    trial_seed: u64,
+) -> Result<TrialResult> {
+    let (_, store) = replay_checkpoints(traj, trainer, spec.policy, spec.fail_iter, trial_seed)?;
+    let mut state = traj.state_at(spec.fail_iter).clone();
+    let report = recover(spec.mode, &mut state, trainer.layout(), &spec.lost_atoms, &store)
+        .context("recovery failed")?;
+    let cap = default_cap(traj);
+    // The trainer replays the *same* data stream (same seed) from the
+    // failure iteration onward.
+    trainer.init(traj.seed)?;
+    let total = continue_from(trainer, state, spec.fail_iter, traj.threshold, cap)?;
+    let (total, censored) = match total {
+        Some(t) => (t, false),
+        None => (cap, true),
+    };
+    Ok(TrialResult {
+        iteration_cost: total as f64 - traj.converged_iters as f64,
+        censored,
+        recovery: report,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Direct perturbation trials (Fig 3, 5, 6)
+// ---------------------------------------------------------------------------
+
+/// Perturbation generators from §5.2.
+#[derive(Debug, Clone, Copy)]
+pub enum Perturb {
+    /// Gaussian direction scaled to exactly `norm`.
+    Random { norm: f64 },
+    /// Directly away from x* (opposite the direction of convergence),
+    /// scaled to `norm`.
+    Adversarial { norm: f64 },
+    /// Reset a uniformly-random `fraction` of atoms to their initial
+    /// values (the partial-recovery-shaped perturbation of Fig 6).
+    ResetFraction { fraction: f64 },
+}
+
+/// Apply a perturbation to `state` (at trajectory iteration `iter`).
+/// Returns ‖δ‖.
+pub fn apply_perturbation(
+    state: &mut ParamStore,
+    traj: &Trajectory,
+    layout: &crate::params::AtomLayout,
+    kind: Perturb,
+    rng: &mut Rng,
+) -> f64 {
+    match kind {
+        Perturb::Random { norm } => {
+            let mut dirs: Vec<Vec<f32>> = state
+                .tensors
+                .iter()
+                .map(|t| t.data.iter().map(|_| rng.normal() as f32).collect())
+                .collect();
+            let total: f64 = dirs
+                .iter()
+                .flat_map(|v| v.iter())
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-12);
+            let scale = (norm / total) as f32;
+            for (t, d) in state.tensors.iter_mut().zip(dirs.iter_mut()) {
+                for (x, dx) in t.data.iter_mut().zip(d.iter()) {
+                    *x += dx * scale;
+                }
+            }
+            norm
+        }
+        Perturb::Adversarial { norm } => {
+            let xstar = traj.x_star();
+            let mut total = 0.0f64;
+            for (t, s) in state.tensors.iter().zip(&xstar.tensors) {
+                for (x, opt) in t.data.iter().zip(&s.data) {
+                    let d = (*x - *opt) as f64;
+                    total += d * d;
+                }
+            }
+            let total = total.sqrt().max(1e-12);
+            let scale = (norm / total) as f32;
+            for (t, s) in state.tensors.iter_mut().zip(&xstar.tensors) {
+                for (x, opt) in t.data.iter_mut().zip(&s.data) {
+                    *x += (*x - *opt) * scale;
+                }
+            }
+            norm
+        }
+        Perturb::ResetFraction { fraction } => {
+            let n = layout.n_atoms();
+            let k = ((n as f64 * fraction).round() as usize).clamp(1, n);
+            let lost = rng.sample_indices(n, k);
+            let before = state.clone();
+            let init = traj.state_at(0);
+            let mut buf = Vec::new();
+            for &a in &lost {
+                init.read_atom(layout, a, &mut buf);
+                state.write_atom(layout, a, &buf);
+            }
+            state.l2_distance(&before)
+        }
+    }
+}
+
+/// Run one direct-perturbation trial at iteration `iter`; returns
+/// (‖δ‖, iteration cost, censored).
+pub fn run_perturbation_trial(
+    trainer: &mut dyn Trainer,
+    traj: &Trajectory,
+    iter: usize,
+    kind: Perturb,
+    trial_seed: u64,
+) -> Result<(f64, f64, bool)> {
+    let mut rng = Rng::new(trial_seed);
+    let mut state = traj.state_at(iter).clone();
+    let layout = trainer.layout().clone();
+    let delta = apply_perturbation(&mut state, traj, &layout, kind, &mut rng);
+    let cap = default_cap(traj);
+    trainer.init(traj.seed)?;
+    let total = continue_from(trainer, state, iter, traj.threshold, cap)?;
+    let (total, censored) = match total {
+        Some(t) => (t, false),
+        None => (cap, true),
+    };
+    Ok((delta, total as f64 - traj.converged_iters as f64, censored))
+}
+
+// ---------------------------------------------------------------------------
+// Reporting
+// ---------------------------------------------------------------------------
+
+/// Aggregate of one sweep cell (e.g. "partial recovery, 1/2 lost").
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub label: String,
+    pub costs: Vec<f64>,
+    pub summary: Summary,
+    pub censored: usize,
+}
+
+impl Cell {
+    pub fn new(label: impl Into<String>, costs: Vec<f64>, censored: usize) -> Cell {
+        let summary = summarize(&costs);
+        Cell { label: label.into(), costs, summary, censored }
+    }
+}
+
+/// Render cells as an aligned table (paper-style rows).
+pub fn render_table(title: &str, cells: &[Cell]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<38} {:>8} {:>10} {:>10} {:>9}\n",
+        "cell", "n", "mean", "ci95", "censored"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<38} {:>8} {:>10.2} {:>10.2} {:>9}\n",
+            c.label, c.summary.n, c.summary.mean, c.summary.ci95, c.censored
+        ));
+    }
+    out
+}
+
+/// Write a CSV of per-trial costs for external plotting; one column per
+/// cell, rows are trials.
+pub fn write_csv(path: &std::path::Path, cells: &[Cell]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut rows = String::new();
+    let header: Vec<&str> = cells.iter().map(|c| c.label.as_str()).collect();
+    rows.push_str(&header.join(","));
+    rows.push('\n');
+    let max_len = cells.iter().map(|c| c.costs.len()).max().unwrap_or(0);
+    for i in 0..max_len {
+        let row: Vec<String> = cells
+            .iter()
+            .map(|c| c.costs.get(i).map(|v| format!("{v}")).unwrap_or_default())
+            .collect();
+        rows.push_str(&row.join(","));
+        rows.push('\n');
+    }
+    std::fs::write(path, rows)?;
+    Ok(())
+}
+
+/// Per-series key/value results (for EXPERIMENTS.md extraction).
+pub fn render_kv(title: &str, kv: &BTreeMap<String, f64>) -> String {
+    let mut out = format!("-- {title} --\n");
+    for (k, v) in kv {
+        out.push_str(&format!("{k} = {v:.4}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Selector;
+    use crate::params::{AtomLayout, Tensor};
+    use crate::trainer::Trainer;
+
+    /// Scalar-per-atom geometric decay toward zero; loss = L2 norm.
+    struct Decay {
+        state: ParamStore,
+        layout: crate::params::AtomLayout,
+        c: f32,
+    }
+
+    impl Decay {
+        fn new(n: usize, c: f32) -> Decay {
+            let mut t = Tensor::zeros("x", &[n, 1]);
+            t.data.iter_mut().enumerate().for_each(|(i, v)| *v = 1.0 + i as f32);
+            let state = ParamStore::new(vec![t]);
+            let layout = AtomLayout::new(AtomLayout::rows_of(&state, "x"));
+            Decay { state, layout, c }
+        }
+    }
+
+    impl Trainer for Decay {
+        fn name(&self) -> &str {
+            "decay"
+        }
+
+        fn init(&mut self, _seed: u64) -> anyhow::Result<()> {
+            let n = self.state.get("x").len();
+            self.state
+                .get_mut("x")
+                .data
+                .iter_mut()
+                .enumerate()
+                .for_each(|(i, v)| *v = 1.0 + (i % n) as f32);
+            Ok(())
+        }
+
+        fn step(&mut self, _iter: usize) -> anyhow::Result<f64> {
+            let mut norm = 0.0f64;
+            for v in self.state.get_mut("x").data.iter_mut() {
+                *v *= self.c;
+                norm += (*v as f64) * (*v as f64);
+            }
+            Ok(norm.sqrt())
+        }
+
+        fn state(&self) -> &ParamStore {
+            &self.state
+        }
+
+        fn state_mut(&mut self) -> &mut ParamStore {
+            &mut self.state
+        }
+
+        fn layout(&self) -> &crate::params::AtomLayout {
+            &self.layout
+        }
+    }
+
+    #[test]
+    fn trajectory_threshold_is_target_loss() {
+        let mut t = Decay::new(8, 0.9);
+        let traj = run_trajectory(&mut t, 0, 50, 20).unwrap();
+        assert_eq!(traj.converged_iters, 20);
+        assert!((traj.threshold - traj.losses[19]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continue_from_converges_and_caps() {
+        let mut t = Decay::new(8, 0.9);
+        let traj = run_trajectory(&mut t, 0, 50, 20).unwrap();
+        // Resuming from the state at iter 10 must take ~10 more iters.
+        let total = continue_from(&mut t, traj.state_at(10).clone(), 10, traj.threshold, 100)
+            .unwrap()
+            .unwrap();
+        assert_eq!(total, 20);
+        // Impossible threshold: censored.
+        let capped =
+            continue_from(&mut t, traj.state_at(0).clone(), 0, -1.0, 15).unwrap();
+        assert!(capped.is_none());
+    }
+
+    #[test]
+    fn replay_checkpoints_tracks_policy() {
+        let mut t = Decay::new(6, 0.8);
+        let traj = run_trajectory(&mut t, 0, 30, 15).unwrap();
+        let policy = CheckpointPolicy::partial(4, 2, Selector::RoundRobin);
+        let (coord, store) = replay_checkpoints(&traj, &t, policy, 9, 1).unwrap();
+        // Barriers at 2,4,6,8 -> every atom refreshed at least once.
+        for a in 0..6 {
+            assert!(coord.saved_iter(a) > 0, "atom {a}");
+        }
+        use crate::storage::CheckpointStore;
+        assert!(store.bytes_written() > 0);
+    }
+
+    #[test]
+    fn run_trial_zero_cost_when_checkpoint_fresh() {
+        let mut t = Decay::new(6, 0.8);
+        let traj = run_trajectory(&mut t, 0, 40, 15).unwrap();
+        // Failure lands exactly on a checkpoint iteration: δ = 0, cost 0.
+        let spec = TrialSpec {
+            policy: CheckpointPolicy::full(5),
+            mode: RecoveryMode::Partial,
+            fail_iter: 5,
+            lost_atoms: vec![0, 1, 2],
+            };
+        let r = run_trial(&mut t, &traj, &spec, 3).unwrap();
+        assert_eq!(r.recovery.delta_norm, 0.0);
+        assert_eq!(r.iteration_cost, 0.0);
+    }
+
+    #[test]
+    fn csv_writer_emits_ragged_columns() {
+        let cells = vec![
+            Cell::new("a", vec![1.0, 2.0], 0),
+            Cell::new("b", vec![3.0], 1),
+        ];
+        let dir = std::env::temp_dir().join(format!("scar-csv-{}", std::process::id()));
+        let path = dir.join("t.csv");
+        write_csv(&path, &cells).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n1,3\n2,"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn render_table_contains_cells() {
+        let cells = vec![Cell::new("hello", vec![1.0, 3.0], 2)];
+        let s = render_table("T", &cells);
+        assert!(s.contains("hello"));
+        assert!(s.contains("T"));
+    }
+}

@@ -1,0 +1,50 @@
+//! # SCAR — Self-Correcting Algorithm Recovery
+//!
+//! A from-scratch reproduction of *Fault Tolerance in Iterative-Convergent
+//! Machine Learning* (Qiao, Aragam, Zhang, Xing; ICML 2019) as a
+//! three-layer Rust + JAX + Pallas training framework:
+//!
+//! * **L3 (this crate)** — the parameter-server coordinator: random atom
+//!   partitioning, the fault-tolerance controller (checkpoint coordinator
+//!   with priority/round/random partial checkpoints, recovery coordinator
+//!   with partial/full recovery), failure injection/detection, shared
+//!   persistent storage, the Theorem 3.2 iteration-cost bound, and the
+//!   experiment harness that regenerates every figure in the paper.
+//! * **L2** — JAX step functions (QP, MLR, MF-ALS, CNN, Transformer)
+//!   AOT-lowered once to HLO text (`python/compile/`).
+//! * **L1** — Pallas kernels for the dense hot-spots (fused MLR gradient,
+//!   blocked matmul), verified against pure-jnp oracles.
+//!
+//! The Rust binary is self-contained after `make artifacts`; Python never
+//! runs on the training path.
+//!
+//! Quick tour: [`models::build_trainer`] binds an artifact to a
+//! [`params::ParamStore`] + [`params::AtomLayout`]; a
+//! [`checkpoint::CheckpointCoordinator`] and [`recovery::recover`]
+//! implement the paper's strategies; [`harness`] measures iteration
+//! costs; [`cluster`] runs the threaded PS deployment.
+
+pub mod advisor;
+pub mod checkpoint;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod failure;
+pub mod harness;
+pub mod models;
+pub mod params;
+pub mod partition;
+pub mod recovery;
+pub mod runtime;
+pub mod storage;
+pub mod theory;
+pub mod trainer;
+pub mod util;
+
+/// Default artifact directory relative to the repo root; overridable with
+/// `SCAR_ARTIFACTS` (used by every example and bench).
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("SCAR_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

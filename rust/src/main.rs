@@ -1,0 +1,322 @@
+//! `scar` — launcher CLI for the SCAR fault-tolerant training runtime.
+//!
+//! Subcommands:
+//!   info                       list artifacts and their interfaces
+//!   train   [--config f] [--set k=v ...]   run one training job (local loop)
+//!   cluster [--set k=v ...]    run on the threaded PS cluster with an
+//!                              injected node failure
+//!   bound   --model V          estimate c / ‖x0−x*‖ and print Theorem 3.2
+//!                              bounds for a range of perturbation sizes
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use scar::checkpoint::CheckpointCoordinator;
+use scar::config::RunConfig;
+use scar::failure::FailureInjector;
+use scar::harness;
+use scar::models::{build_trainer, default_engine, BuildOpts};
+use scar::recovery;
+use scar::runtime::artifact;
+use scar::storage::{CheckpointStore, DiskStore, MemStore};
+use scar::theory;
+use scar::trainer::Trainer;
+use scar::util::cli::Args;
+use scar::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(),
+        "train" => cmd_train(&args),
+        "cluster" => cmd_cluster(&args),
+        "bound" => cmd_bound(&args),
+        "advisor" => cmd_advisor(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown subcommand '{other}'");
+        }
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "scar — self-correcting checkpoint-based fault tolerance for ML training
+
+USAGE: scar <info|train|cluster|bound> [flags]
+
+  info                          list AOT artifacts
+  train   --set k=v ...         local training loop with SCAR checkpointing
+          [--config run.json]     and optional injected failure
+  cluster --set k=v ...         threaded PS cluster with heartbeats and a
+                                  scheduled node kill
+  bound   --model <variant>     Theorem 3.2 iteration-cost bounds
+  advisor --model <variant>     run a probe, estimate c on-the-fly, and
+          [--fail-rate p]         recommend a checkpoint policy (§7)
+
+Config keys (for --set): model seed iters target_iters ps_nodes workers
+  checkpoint_interval checkpoint_k selector recovery fail_fraction
+  fail_geom_p checkpoint_dir"
+    );
+}
+
+fn parse_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.str_opt("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    // --set k=v may appear multiple times; our tiny parser keeps only the
+    // last one per key, so also accept direct --key value for every key.
+    for key in [
+        "model", "seed", "iters", "target_iters", "ps_nodes", "workers",
+        "checkpoint_interval", "checkpoint_k", "selector", "recovery",
+        "fail_fraction", "fail_geom_p", "checkpoint_dir",
+    ] {
+        if let Some(v) = args.str_opt(key) {
+            cfg.apply(key, v)?;
+        }
+    }
+    if let Some(kv) = args.str_opt("set") {
+        let (k, v) = kv.split_once('=').context("--set expects key=value")?;
+        cfg.apply(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = scar::artifact_dir();
+    let metas = artifact::discover(&dir)?;
+    println!("{} artifacts in {}", metas.len(), dir.display());
+    for m in metas {
+        let params: usize = m
+            .state_specs()
+            .iter()
+            .map(|s| s.elem_count())
+            .sum();
+        println!(
+            "  {:<14} model={:<12} state elems={:<10} inputs={} outputs={}",
+            m.name,
+            m.model,
+            params,
+            m.inputs.len(),
+            m.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn make_store(cfg: &RunConfig) -> Result<Box<dyn CheckpointStore>> {
+    if cfg.checkpoint_dir.is_empty() {
+        Ok(Box::new(MemStore::new()))
+    } else {
+        Ok(Box::new(DiskStore::open(std::path::Path::new(&cfg.checkpoint_dir))?))
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let engine = default_engine()?;
+    let mut trainer = build_trainer(engine, &cfg.model, &BuildOpts::default())?;
+    let mut store = make_store(&cfg)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xF00D);
+
+    trainer.init(cfg.seed)?;
+    let layout = trainer.layout().clone();
+    let mut coord =
+        CheckpointCoordinator::new(cfg.policy(), trainer.state(), &layout, store.as_mut())?;
+
+    // Optional failure schedule.
+    let failure = if cfg.fail_fraction > 0.0 {
+        let inj = FailureInjector::new(cfg.fail_geom_p, cfg.iters.max(2) - 1);
+        Some(inj.sample_atom_failure(layout.n_atoms(), cfg.fail_fraction, &mut rng))
+    } else {
+        None
+    };
+    if let Some(f) = &failure {
+        println!(
+            "scheduled failure: iter={} lost_atoms={}/{}",
+            f.iter,
+            f.lost_atoms.len(),
+            layout.n_atoms()
+        );
+    }
+
+    println!(
+        "training {} for {} iters (policy: r={:.3} every {} iters, {} selector; recovery: {:?})",
+        cfg.model, cfg.iters, cfg.policy().fraction, cfg.policy().interval,
+        cfg.selector, cfg.recovery,
+    );
+    let t0 = std::time::Instant::now();
+    for iter in 0..cfg.iters {
+        if let Some(f) = &failure {
+            if f.iter == iter {
+                let report = recovery::recover(
+                    cfg.recovery,
+                    trainer.state_mut(),
+                    &layout,
+                    &f.lost_atoms,
+                    store.as_ref(),
+                )?;
+                println!(
+                    "iter {iter}: FAILURE lost {} atoms -> {:?} recovery, ‖δ‖={:.4}",
+                    f.lost_atoms.len(),
+                    report.mode,
+                    report.delta_norm
+                );
+            }
+        }
+        let loss = trainer.step(iter)?;
+        let ck = coord.maybe_checkpoint(iter + 1, trainer.state(), &layout, store.as_mut(), &mut rng)?;
+        if iter % 10 == 0 || iter + 1 == cfg.iters {
+            println!(
+                "iter {:>4}  loss {:>12.5}  {}",
+                iter,
+                loss,
+                ck.map(|c| format!("[ckpt {} atoms]", c.atoms_saved)).unwrap_or_default()
+            );
+        }
+    }
+    println!(
+        "done in {:.1}s; checkpoint bytes written: {}",
+        t0.elapsed().as_secs_f64(),
+        scar::util::fmt_bytes(store.bytes_written())
+    );
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let engine = default_engine()?;
+    let mut trainer = build_trainer(engine, &cfg.model, &BuildOpts::default())?;
+    let mut store = make_store(&cfg)?;
+    let kill_iter = args.usize_or("kill-iter", cfg.iters / 3);
+    let kill_node = args.usize_or("kill-node", 0);
+    println!(
+        "cluster run: {} nodes, killing node {} at iter {}",
+        cfg.ps_nodes, kill_node, kill_iter
+    );
+    let report = scar::cluster::run_cluster_training(
+        &mut trainer,
+        cfg.ps_nodes,
+        cfg.iters,
+        cfg.policy(),
+        store.as_mut(),
+        Some((kill_iter, kill_node)),
+        cfg.seed,
+        Duration::from_millis(20),
+    )?;
+    for e in &report.events {
+        println!("event: {e:?}");
+    }
+    println!(
+        "final loss: {:.5}; checkpoint bytes: {}",
+        report.losses.last().copied().unwrap_or(f64::NAN),
+        scar::util::fmt_bytes(report.checkpoint_bytes)
+    );
+    Ok(())
+}
+
+fn cmd_bound(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "qp4");
+    let iters = args.usize_or("iters", 200);
+    let target = args.usize_or("target_iters", 60.min(iters));
+    let seed = args.u64_or("seed", 42);
+    let engine = default_engine()?;
+    let mut trainer = build_trainer(engine, &model, &BuildOpts::default())?;
+    let traj = harness::run_trajectory(&mut trainer, seed, iters, target)?;
+    // Errors against x* (final snapshot).
+    let xstar = traj.x_star().clone();
+    let errors: Vec<f64> = traj
+        .snapshots
+        .iter()
+        .take(traj.converged_iters + 1)
+        .map(|s| s.l2_distance(&xstar))
+        .collect();
+    let c = theory::estimate_rate(&errors, errors.last().copied().unwrap_or(0.0) * 2.0);
+    let x0 = errors[0];
+    println!("model={model} empirical c={c:.5} ‖x0−x*‖={x0:.4} ε-iters={}", traj.converged_iters);
+    println!("{:>12} {:>14}", "‖δ‖", "bound (iters)");
+    for mult in [0.01, 0.05, 0.1, 0.25, 0.5, 1.0] {
+        let norm = x0 * mult;
+        let b = theory::iteration_cost_bound(
+            c,
+            x0,
+            &[theory::Perturbation { iter: traj.converged_iters / 2, norm }],
+        );
+        println!("{:>12.4} {:>14.2}", norm, b);
+    }
+    Ok(())
+}
+
+fn cmd_advisor(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "mlr_covtype");
+    let probe_iters = args.usize_or("probe-iters", 40);
+    let fail_rate = args.f64_or("fail-rate", 0.02);
+    let lost_fraction = args.f64_or("lost-fraction", 0.25);
+    let base_interval = args.usize_or("checkpoint_interval", 8);
+    let seed = args.u64_or("seed", 42);
+
+    let engine = default_engine()?;
+    let mut trainer = build_trainer(engine, &model, &BuildOpts::default())?;
+    trainer.init(seed)?;
+
+    // Probe phase: run a few iterations, estimating c online and
+    // measuring T_iter and a full checkpoint barrier's blocking time.
+    let mut est = scar::advisor::OnlineRateEstimator::default();
+    let layout = trainer.layout().clone();
+    let mut store = MemStore::new();
+    let mut coord = CheckpointCoordinator::new(
+        scar::checkpoint::CheckpointPolicy::full(probe_iters + 1),
+        trainer.state(),
+        &layout,
+        &mut store,
+    )?;
+    let t0 = std::time::Instant::now();
+    for iter in 0..probe_iters {
+        let loss = trainer.step(iter)?;
+        est.observe(loss);
+    }
+    let t_iter = t0.elapsed().as_secs_f64() / probe_iters as f64;
+    let mut rng = Rng::new(seed);
+    let stats = coord.checkpoint_now(probe_iters, trainer.state(), &layout, &mut store, &mut rng)?;
+
+    let Some(c) = est.rate() else {
+        bail!("probe too short to estimate c; raise --probe-iters");
+    };
+    println!(
+        "probe: {model}, {probe_iters} iters; c≈{c:.4}, T_iter={:.3}s, full T_dump(blocking)={:.4}s",
+        t_iter, stats.blocking_secs
+    );
+
+    let inputs = scar::advisor::AdvisorInputs {
+        c,
+        lost_fraction,
+        failure_rate: fail_rate,
+        t_iter,
+        t_dump_full: stats.blocking_secs,
+        base_interval,
+    };
+    let scores = scar::advisor::recommend_policy(&inputs);
+    println!(
+        "\n{:>4} {:>10} {:>18} {:>22}",
+        "k", "fraction", "E[rework iters]", "overhead s/iter"
+    );
+    for s in &scores {
+        println!(
+            "{:>4} {:>10.3} {:>18.2} {:>22.6}",
+            s.k, s.policy.fraction, s.rework_iters, s.overhead_per_iter
+        );
+    }
+    let best = &scores[0];
+    println!(
+        "\nrecommendation: 1/{} priority checkpoints every {} iterations (+partial recovery)",
+        best.k, best.policy.interval
+    );
+    Ok(())
+}

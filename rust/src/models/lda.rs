@@ -1,0 +1,311 @@
+//! Latent Dirichlet Allocation by collapsed Gibbs sampling (§5.1, App. C).
+//!
+//! The one paper workload that is not an AOT artifact: collapsed Gibbs is
+//! inherently sequential per-token state mutation (the exact algorithm
+//! the paper's C++ system ran), so it lives as a Rust substrate.
+//!
+//! State/atom semantics follow App. C:
+//! * checkpointed parameters are the **document-topic counts** (one atom
+//!   per document, distance = total variation scaled by document length);
+//! * word-topic counts are *not* checkpointed — they are regenerated from
+//!   token-topic assignments;
+//! * losing a document's topic distribution also loses its token-topic
+//!   assignments, so recovery re-samples the document's assignments from
+//!   the restored distribution, then rebuilds the word-topic tables.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::params::{AtomLayout, AtomNorm, ParamStore, Segment, Tensor};
+use crate::trainer::Trainer;
+use crate::util::rng::Rng;
+
+pub struct LdaTrainer {
+    name: String,
+    corpus: Corpus,
+    topics: usize,
+    alpha: f64,
+    beta: f64,
+    /// token-topic assignments, per document
+    z: Vec<Vec<u16>>,
+    /// word-topic counts (vocab x topics)
+    nwk: Vec<u32>,
+    /// per-topic totals
+    nk: Vec<u32>,
+    /// The coordinator-visible state: doc-topic counts as f32 (docs x K).
+    state: ParamStore,
+    layout: AtomLayout,
+    seed_rng: Rng,
+    /// set when the coordinator rewrote `state` (recovery/perturbation);
+    /// the next step first re-syncs assignments from the restored counts.
+    dirty: bool,
+}
+
+impl LdaTrainer {
+    pub fn new(name: &str, corpus: Corpus, topics: usize, alpha: f64, beta: f64) -> LdaTrainer {
+        let n_docs = corpus.docs.len();
+        let state = ParamStore::new(vec![Tensor::zeros("doc_topic", &[n_docs, topics])]);
+        let atoms: Vec<Vec<Segment>> = (0..n_docs)
+            .map(|d| vec![Segment { tensor: 0, start: d * topics, len: topics }])
+            .collect();
+        let mut layout = AtomLayout::new(atoms);
+        layout.norm = AtomNorm::ScaledTv;
+        // Distance scaled by document length (App. C) so prioritization is
+        // not biased toward short documents.
+        layout.weights = corpus.docs.iter().map(|d| d.len() as f64).collect();
+        LdaTrainer {
+            name: name.to_string(),
+            z: corpus.docs.iter().map(|d| vec![0u16; d.len()]).collect(),
+            nwk: vec![0; corpus.vocab * topics],
+            nk: vec![0; topics],
+            corpus,
+            topics,
+            alpha,
+            beta,
+            state,
+            layout,
+            seed_rng: Rng::new(0),
+            dirty: false,
+        }
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.corpus.docs.len()
+    }
+
+    fn ndk(&self, d: usize, k: usize) -> f32 {
+        self.state.tensors[0].data[d * self.topics + k]
+    }
+
+    fn ndk_add(&mut self, d: usize, k: usize, delta: f32) {
+        self.state.tensors[0].data[d * self.topics + k] += delta;
+    }
+
+    /// Rebuild word-topic tables and doc counts from assignments.
+    fn rebuild_counts(&mut self) {
+        self.nwk.iter_mut().for_each(|c| *c = 0);
+        self.nk.iter_mut().for_each(|c| *c = 0);
+        self.state.tensors[0].data.iter_mut().for_each(|c| *c = 0.0);
+        for d in 0..self.corpus.docs.len() {
+            for (i, &w) in self.corpus.docs[d].iter().enumerate() {
+                let k = self.z[d][i] as usize;
+                self.nwk[w as usize * self.topics + k] += 1;
+                self.nk[k] += 1;
+                self.state.tensors[0].data[d * self.topics + k] += 1.0;
+            }
+        }
+    }
+
+    /// Re-sample a document's assignments to match a (possibly stale)
+    /// doc-topic count row restored from a checkpoint. The restored row is
+    /// treated as an (unnormalized) distribution over topics.
+    fn resync_doc(&mut self, d: usize, rng: &mut Rng) {
+        let row: Vec<f64> = (0..self.topics)
+            .map(|k| (self.ndk(d, k) as f64).max(0.0) + self.alpha)
+            .collect();
+        let len = self.corpus.docs[d].len();
+        for i in 0..len {
+            self.z[d][i] = rng.categorical(&row) as u16;
+        }
+    }
+
+    /// After the coordinator rewrote `state`: adopt it by re-sampling each
+    /// document whose counts no longer match its assignments, then rebuild
+    /// global tables from assignments.
+    fn sync_from_state(&mut self, rng: &mut Rng) {
+        for d in 0..self.corpus.docs.len() {
+            let mut counts = vec![0f32; self.topics];
+            for &zi in &self.z[d] {
+                counts[zi as usize] += 1.0;
+            }
+            let matches = (0..self.topics)
+                .all(|k| (counts[k] - self.ndk(d, k)).abs() < 0.5);
+            if !matches {
+                self.resync_doc(d, rng);
+            }
+        }
+        self.rebuild_counts();
+    }
+
+    /// Negative log-likelihood of the corpus under the current smoothed
+    /// topic estimates (lower = better; the paper's convergence metric).
+    pub fn neg_log_likelihood(&self) -> f64 {
+        let v = self.corpus.vocab as f64;
+        let k_f = self.topics as f64;
+        let mut nll = 0.0f64;
+        for d in 0..self.corpus.docs.len() {
+            let doc_len: f64 = (0..self.topics).map(|k| self.ndk(d, k) as f64).sum();
+            let theta_den = doc_len + k_f * self.alpha;
+            for &w in &self.corpus.docs[d] {
+                let mut p = 0.0f64;
+                for k in 0..self.topics {
+                    let theta = (self.ndk(d, k) as f64 + self.alpha) / theta_den;
+                    let phi = (self.nwk[w as usize * self.topics + k] as f64 + self.beta)
+                        / (self.nk[k] as f64 + v * self.beta);
+                    p += theta * phi;
+                }
+                nll -= p.max(1e-300).ln();
+            }
+        }
+        nll
+    }
+}
+
+impl Trainer for LdaTrainer {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, seed: u64) -> Result<()> {
+        self.seed_rng = Rng::new(seed);
+        let mut rng = self.seed_rng.derive(u64::MAX);
+        for d in 0..self.corpus.docs.len() {
+            for i in 0..self.corpus.docs[d].len() {
+                self.z[d][i] = rng.below(self.topics) as u16;
+            }
+        }
+        self.rebuild_counts();
+        self.dirty = false;
+        Ok(())
+    }
+
+    fn step(&mut self, iter: usize) -> Result<f64> {
+        let mut rng = self.seed_rng.derive(iter as u64);
+        if self.dirty {
+            self.sync_from_state(&mut rng);
+            self.dirty = false;
+        }
+        let v_beta = self.corpus.vocab as f64 * self.beta;
+        let mut probs = vec![0f64; self.topics];
+        for d in 0..self.corpus.docs.len() {
+            for i in 0..self.corpus.docs[d].len() {
+                let w = self.corpus.docs[d][i] as usize;
+                let old = self.z[d][i] as usize;
+                // Remove the token from all counts.
+                self.ndk_add(d, old, -1.0);
+                self.nwk[w * self.topics + old] -= 1;
+                self.nk[old] -= 1;
+                // Collapsed Gibbs conditional.
+                for k in 0..self.topics {
+                    probs[k] = (self.ndk(d, k) as f64 + self.alpha)
+                        * (self.nwk[w * self.topics + k] as f64 + self.beta)
+                        / (self.nk[k] as f64 + v_beta);
+                }
+                let new = rng.categorical(&probs);
+                self.z[d][i] = new as u16;
+                self.ndk_add(d, new, 1.0);
+                self.nwk[w * self.topics + new] += 1;
+                self.nk[new] += 1;
+            }
+        }
+        Ok(self.neg_log_likelihood())
+    }
+
+    fn state(&self) -> &ParamStore {
+        &self.state
+    }
+
+    fn state_mut(&mut self) -> &mut ParamStore {
+        self.dirty = true;
+        &mut self.state
+    }
+
+    fn layout(&self) -> &AtomLayout {
+        &self.layout
+    }
+
+    fn set_state(&mut self, state: ParamStore) {
+        self.state = state;
+        self.dirty = true;
+    }
+
+    fn loss_name(&self) -> &str {
+        "neg_log_likelihood"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> LdaTrainer {
+        let corpus = Corpus::lda_generative(40, 60, 4, 24, 0.5, 0.1, 11);
+        LdaTrainer::new("lda_test", corpus, 4, 1.0, 1.0)
+    }
+
+    #[test]
+    fn nll_decreases_with_training() {
+        let mut t = small();
+        t.init(5).unwrap();
+        let first = t.step(0).unwrap();
+        let mut last = first;
+        for it in 1..15 {
+            last = t.step(it).unwrap();
+        }
+        assert!(last < first, "nll should drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn counts_stay_consistent() {
+        let mut t = small();
+        t.init(6).unwrap();
+        for it in 0..3 {
+            t.step(it).unwrap();
+        }
+        // doc-topic rows sum to doc lengths; topic totals match.
+        for d in 0..t.n_docs() {
+            let sum: f32 = (0..t.topics).map(|k| t.ndk(d, k)).sum();
+            assert_eq!(sum as usize, t.corpus.docs[d].len());
+        }
+        let total_nk: u32 = t.nk.iter().sum();
+        assert_eq!(total_nk as usize, t.corpus.n_tokens());
+    }
+
+    #[test]
+    fn recovery_resync_restores_consistency() {
+        let mut t = small();
+        t.init(7).unwrap();
+        for it in 0..4 {
+            t.step(it).unwrap();
+        }
+        // Simulate a partial recovery: clobber one doc's row with an old
+        // distribution (e.g. all mass on topic 0).
+        let topics = t.topics;
+        let row0: Vec<f32> = {
+            let mut v = vec![0.0; topics];
+            v[0] = t.corpus.docs[3].len() as f32;
+            v
+        };
+        t.state_mut().tensors[0].data[3 * topics..4 * topics].copy_from_slice(&row0);
+        let loss = t.step(4).unwrap();
+        assert!(loss.is_finite());
+        for d in 0..t.n_docs() {
+            let sum: f32 = (0..topics).map(|k| t.ndk(d, k)).sum();
+            assert_eq!(sum as usize, t.corpus.docs[d].len(), "doc {d}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut t = small();
+            t.init(9).unwrap();
+            let mut losses = Vec::new();
+            for it in 0..5 {
+                losses.push(t.step(it).unwrap());
+            }
+            losses
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn layout_uses_scaled_tv_with_doc_length_weights() {
+        let t = small();
+        assert_eq!(t.layout().norm, AtomNorm::ScaledTv);
+        assert_eq!(t.layout().n_atoms(), t.n_docs());
+        for (d, &w) in t.layout().weights.iter().enumerate() {
+            assert_eq!(w as usize, t.corpus.docs[d].len());
+        }
+    }
+}

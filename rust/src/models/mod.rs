@@ -1,0 +1,532 @@
+//! Model glue: bind AOT artifacts to trainers with paper-faithful atom
+//! decompositions, initializers, and synthetic data streams.
+//!
+//! Atomization follows §5.1:
+//! * MLR — rows of the weight matrix;
+//! * MF — rows of L and columns of R;
+//! * LDA — per-document topic distributions (see [`lda`]);
+//! * CNN — *by-layer* (one atom per parameter tensor, bias separate) or
+//!   *by-shard* (one atom per first-dimension slice);
+//! * Transformer — by-shard.
+//! Optimizer moments (`m_*`, `v_*`) are co-located with their parameter
+//! atoms, so losing a PS node loses them together.
+
+pub mod lda;
+pub mod presets;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Classification, Ratings, TokenStream};
+use crate::params::{AtomLayout, ParamStore, Segment, Tensor};
+use crate::runtime::{literal_to_f32, Engine, HostTensor};
+use crate::trainer::Trainer;
+use crate::util::rng::Rng;
+
+/// How to atomize CNN-style per-tensor parameters (§5.1 CNN experiments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioning {
+    /// One atom per parameter tensor (weights and biases separate).
+    ByLayer,
+    /// One atom per first-dimension slice of each parameter tensor.
+    ByShard,
+}
+
+type InitFn = Box<dyn FnMut(&mut ParamStore, &mut Rng) + Send>;
+type DataFn = Box<dyn FnMut(usize, &mut Rng) -> Result<Vec<HostTensor>> + Send>;
+
+/// Artifact-backed trainer: state lives host-side in a [`ParamStore`]
+/// (the checkpoint/recovery machinery operates there); each step uploads
+/// state + data literals, executes the compiled HLO, and downloads the
+/// updated state.
+pub struct HloTrainer {
+    variant: String,
+    engine: Arc<Mutex<Engine>>,
+    state: ParamStore,
+    layout: AtomLayout,
+    n_state: usize,
+    state_shapes: Vec<Vec<usize>>,
+    seed_rng: Rng,
+    init_fn: InitFn,
+    data_fn: DataFn,
+    /// Data inputs are iteration-independent (QP problem matrices, MF
+    /// ratings): upload them to device buffers once and re-use them every
+    /// step instead of re-uploading megabytes per iteration (§Perf L3).
+    const_data: bool,
+    data_cache: Option<Vec<xla::PjRtBuffer>>,
+}
+
+impl HloTrainer {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        engine: Arc<Mutex<Engine>>,
+        variant: &str,
+        layout_fn: impl FnOnce(&ParamStore) -> AtomLayout,
+        init_fn: InitFn,
+        data_fn: DataFn,
+        const_data: bool,
+    ) -> Result<HloTrainer> {
+        let meta = {
+            let mut eng = engine.lock().unwrap();
+            eng.load(variant)?.meta.clone()
+        };
+        let state_specs = meta.state_specs();
+        let tensors: Vec<Tensor> = state_specs
+            .iter()
+            .map(|s| Tensor::zeros(&s.name, &s.shape))
+            .collect();
+        let state_shapes = state_specs.iter().map(|s| s.shape.clone()).collect();
+        let n_state = tensors.len();
+        let state = ParamStore::new(tensors);
+        let layout = layout_fn(&state);
+        assert!(layout.n_atoms() > 0, "{variant}: empty atom layout");
+        Ok(HloTrainer {
+            variant: variant.to_string(),
+            engine,
+            state,
+            layout,
+            n_state,
+            state_shapes,
+            seed_rng: Rng::new(0),
+            init_fn,
+            data_fn,
+            const_data,
+            data_cache: None,
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+}
+
+impl Trainer for HloTrainer {
+    fn name(&self) -> &str {
+        &self.variant
+    }
+
+    fn init(&mut self, seed: u64) -> Result<()> {
+        self.seed_rng = Rng::new(seed);
+        let mut init_rng = self.seed_rng.derive(u64::MAX);
+        for t in self.state.tensors.iter_mut() {
+            t.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        (self.init_fn)(&mut self.state, &mut init_rng);
+        Ok(())
+    }
+
+    fn step(&mut self, iter: usize) -> Result<f64> {
+        let engine = self.engine.lock().unwrap();
+        // Data stream must be a pure function of (seed, iter): snapshots
+        // resumed mid-run replay the identical batches. Constant data is
+        // uploaded once and stays device-resident.
+        if !self.const_data || self.data_cache.is_none() {
+            let mut data_rng = self.seed_rng.derive(iter as u64);
+            let host = (self.data_fn)(iter, &mut data_rng)?;
+            self.data_cache =
+                Some(host.iter().map(|t| engine.to_buffer(t)).collect::<Result<_>>()?);
+        }
+        let data_bufs = self.data_cache.as_ref().unwrap();
+
+        // State upload: host tensor -> device buffer, one copy, no
+        // intermediate Literal (§Perf L3).
+        let state_bufs: Vec<xla::PjRtBuffer> = self
+            .state
+            .tensors
+            .iter()
+            .zip(&self.state_shapes)
+            .map(|(t, shape)| engine.buffer_f32(shape, &t.data))
+            .collect::<Result<_>>()?;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.n_state + data_bufs.len());
+        inputs.extend(state_bufs.iter());
+        inputs.extend(data_bufs.iter());
+
+        let outputs = engine.execute_buffers(&self.variant, &inputs)?;
+        drop(inputs);
+        drop(state_bufs);
+        drop(engine);
+
+        if outputs.len() != self.n_state + 1 {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.variant,
+                self.n_state + 1,
+                outputs.len()
+            );
+        }
+        for (t, out) in self.state.tensors.iter_mut().zip(&outputs[..self.n_state]) {
+            crate::runtime::literal_into_f32(out, &mut t.data)?;
+        }
+        let loss = literal_to_f32(&outputs[self.n_state])?[0] as f64;
+        Ok(loss)
+    }
+
+    fn state(&self) -> &ParamStore {
+        &self.state
+    }
+
+    fn state_mut(&mut self) -> &mut ParamStore {
+        &mut self.state
+    }
+
+    fn layout(&self) -> &AtomLayout {
+        &self.layout
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atom layout helpers
+// ---------------------------------------------------------------------------
+
+/// Atoms = first-dim slices of `param`, each co-located with the matching
+/// slices of its `m_*`/`v_*` optimizer tensors when present.
+fn sharded_atoms(store: &ParamStore, param_names: &[&str]) -> Vec<Vec<Segment>> {
+    let mut atoms = Vec::new();
+    for name in param_names {
+        let ti = store.index(name);
+        let t = &store.tensors[ti];
+        let rl = t.row_len();
+        let opt_ids: Vec<usize> = ["m_", "v_"]
+            .iter()
+            .filter_map(|p| {
+                let oname = format!("{p}{name}");
+                store.tensors.iter().position(|t| t.name == oname)
+            })
+            .collect();
+        for r in 0..t.rows() {
+            let mut segs = vec![Segment { tensor: ti, start: r * rl, len: rl }];
+            for &oi in &opt_ids {
+                segs.push(Segment { tensor: oi, start: r * rl, len: rl });
+            }
+            atoms.push(segs);
+        }
+    }
+    atoms
+}
+
+/// Atoms = whole tensors (by-layer), optimizer moments co-located.
+fn per_tensor_atoms(store: &ParamStore, param_names: &[&str]) -> Vec<Vec<Segment>> {
+    let mut atoms = Vec::new();
+    for name in param_names {
+        let ti = store.index(name);
+        let len = store.tensors[ti].len();
+        let mut segs = vec![Segment { tensor: ti, start: 0, len }];
+        for p in ["m_", "v_"] {
+            let oname = format!("{p}{name}");
+            if let Some(oi) = store.tensors.iter().position(|t| t.name == oname) {
+                segs.push(Segment { tensor: oi, start: 0, len });
+            }
+        }
+        atoms.push(segs);
+    }
+    atoms
+}
+
+fn param_tensor_names(store: &ParamStore) -> Vec<String> {
+    store
+        .tensors
+        .iter()
+        .map(|t| t.name.clone())
+        .filter(|n| !n.starts_with("m_") && !n.starts_with("v_"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Builders
+// ---------------------------------------------------------------------------
+
+/// Options for [`build_trainer`]. Defaults reproduce the paper settings.
+#[derive(Debug, Clone)]
+pub struct BuildOpts {
+    /// Dataset seed (independent of the trainer's init/data seed).
+    pub data_seed: u64,
+    /// CNN/Transformer atomization.
+    pub partitioning: Partitioning,
+    /// QP condition number (controls the contraction rate c).
+    pub qp_cond: f64,
+}
+
+impl Default for BuildOpts {
+    fn default() -> Self {
+        BuildOpts { data_seed: 1234, partitioning: Partitioning::ByShard, qp_cond: 40.0 }
+    }
+}
+
+/// Build a trainer for any artifact variant (`qp4`, `mlr_mnist`,
+/// `mf_jester`, `cnn_mnist`, `tfm_small`, ...). LDA is built separately
+/// via [`lda::LdaTrainer`] (pure-Rust substrate).
+pub fn build_trainer(
+    engine: Arc<Mutex<Engine>>,
+    variant: &str,
+    opts: &BuildOpts,
+) -> Result<HloTrainer> {
+    let meta = {
+        let mut eng = engine.lock().unwrap();
+        eng.load(variant)?.meta.clone()
+    };
+    match meta.model.as_str() {
+        "qp" => build_qp(engine, variant, &meta, opts),
+        "mlr" => build_mlr(engine, variant, &meta, opts),
+        "mf" => build_mf(engine, variant, &meta, opts),
+        "cnn" => build_cnn(engine, variant, &meta, opts),
+        "transformer" => build_transformer(engine, variant, &meta, opts),
+        other => bail!("unknown model family '{other}' for variant {variant}"),
+    }
+}
+
+fn build_qp(
+    engine: Arc<Mutex<Engine>>,
+    variant: &str,
+    meta: &crate::runtime::ArtifactMeta,
+    opts: &BuildOpts,
+) -> Result<HloTrainer> {
+    let dim = meta.inputs[0].shape[0];
+    let mut rng = Rng::new(opts.data_seed);
+    let a = crate::data::spd_matrix(dim, opts.qp_cond, &mut rng);
+    let b: Vec<f32> = (0..dim).map(|_| (rng.normal() * 3.0) as f32).collect();
+    let a2 = a.clone();
+    let b2 = b.clone();
+    HloTrainer::new(
+        engine,
+        variant,
+        |store| AtomLayout::new(AtomLayout::rows_of(store, "x")),
+        Box::new(move |_store, _rng| {
+            // x(0) = 0; the optimum is b, so ‖x(0) − x*‖ = ‖b‖.
+        }),
+        Box::new(move |_iter, _rng| {
+            Ok(vec![
+                HostTensor::f32(&[dim, dim], a2.clone()),
+                HostTensor::f32(&[dim], b2.clone()),
+            ])
+        }),
+        true, // constant problem data: uploaded to device once
+    )
+}
+
+fn build_mlr(
+    engine: Arc<Mutex<Engine>>,
+    variant: &str,
+    meta: &crate::runtime::ArtifactMeta,
+    opts: &BuildOpts,
+) -> Result<HloTrainer> {
+    let (dim, classes) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
+    let batch = meta.inputs[1].shape[0];
+    let n_examples = (batch * 8).max(4096);
+    let ds = Classification::gaussian_mixture(dim, classes, n_examples, 3.0, opts.data_seed);
+    HloTrainer::new(
+        engine,
+        variant,
+        |store| AtomLayout::new(AtomLayout::rows_of(store, "w")),
+        Box::new(|_store, _rng| { /* w(0) = 0 */ }),
+        Box::new(move |_iter, rng| {
+            let (x, y) = ds.batch(batch, rng);
+            Ok(vec![
+                HostTensor::f32(&[batch, dim], x),
+                HostTensor::f32(&[batch, classes], y),
+            ])
+        }),
+        false,
+    )
+}
+
+fn build_mf(
+    engine: Arc<Mutex<Engine>>,
+    variant: &str,
+    meta: &crate::runtime::ArtifactMeta,
+    opts: &BuildOpts,
+) -> Result<HloTrainer> {
+    let (m, rank) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
+    let n = meta.inputs[1].shape[1];
+    // Density mirrors the dataset being stood in for: movielens-small is
+    // sparse (~1.7%), jester dense (~56%); pick by aspect.
+    let density = if n > m { 0.05 } else { 0.5 };
+    let ratings = Ratings::lowrank(m, n, rank, density, 0.3, opts.data_seed);
+    let vals = ratings.values.clone();
+    let mask = ratings.mask.clone();
+    HloTrainer::new(
+        engine,
+        variant,
+        |store| {
+            let mut atoms = AtomLayout::rows_of(store, "l");
+            atoms.extend(AtomLayout::cols_of(store, "r"));
+            AtomLayout::new(atoms)
+        },
+        Box::new(move |store, rng| {
+            // Paper App C: entries uniform in [0, 1).
+            for name in ["l", "r"] {
+                let t = store.get_mut(name);
+                t.data.iter_mut().for_each(|v| *v = rng.f32());
+            }
+        }),
+        Box::new(move |_iter, _rng| {
+            Ok(vec![
+                HostTensor::f32(&[m, n], vals.clone()),
+                HostTensor::f32(&[m, n], mask.clone()),
+            ])
+        }),
+        true, // ratings + mask never change: device-resident (6.4 MB/step saved)
+    )
+}
+
+fn build_cnn(
+    engine: Arc<Mutex<Engine>>,
+    variant: &str,
+    meta: &crate::runtime::ArtifactMeta,
+    opts: &BuildOpts,
+) -> Result<HloTrainer> {
+    let data_spec = meta
+        .inputs
+        .iter()
+        .find(|s| s.name == "x")
+        .context("cnn artifact missing x input")?;
+    let (batch, im) = (data_spec.shape[0], data_spec.shape[1]);
+    let classes = meta
+        .inputs
+        .iter()
+        .find(|s| s.name == "y")
+        .context("cnn artifact missing y input")?
+        .shape[1];
+    let dim = im * im;
+    let ds = Classification::gaussian_mixture(dim, classes, 4096, 6.0, opts.data_seed);
+    let partitioning = opts.partitioning;
+    HloTrainer::new(
+        engine,
+        variant,
+        move |store| {
+            let names = param_tensor_names(store);
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let atoms = match partitioning {
+                Partitioning::ByLayer => per_tensor_atoms(store, &refs),
+                Partitioning::ByShard => sharded_atoms(store, &refs),
+            };
+            AtomLayout::new(atoms)
+        },
+        Box::new(|store, rng| {
+            // He init for weights; zeros for biases and moments.
+            let names = param_tensor_names(store);
+            for name in names {
+                let t = store.get_mut(&name);
+                if t.shape.len() >= 2 {
+                    let fan_in: usize = t.shape[..t.shape.len() - 1].iter().product();
+                    let scale = (2.0 / fan_in as f64).sqrt();
+                    t.data.iter_mut().for_each(|v| *v = (rng.normal() * scale) as f32);
+                }
+            }
+        }),
+        Box::new(move |iter, rng| {
+            let (x, y) = ds.batch(batch, rng);
+            Ok(vec![
+                HostTensor::f32(&[1], vec![(iter + 1) as f32]),
+                HostTensor::f32(&[batch, im, im, 1], x),
+                HostTensor::f32(&[batch, classes], y),
+            ])
+        }),
+        false,
+    )
+}
+
+fn build_transformer(
+    engine: Arc<Mutex<Engine>>,
+    variant: &str,
+    meta: &crate::runtime::ArtifactMeta,
+    opts: &BuildOpts,
+) -> Result<HloTrainer> {
+    let tok_spec = meta
+        .inputs
+        .iter()
+        .find(|s| s.name == "tokens")
+        .context("transformer artifact missing tokens input")?;
+    let (batch, seq) = (tok_spec.shape[0], tok_spec.shape[1]);
+    let vocab = meta.hyper_f64("vocab").context("missing vocab hyper")? as usize;
+    let stream = TokenStream::markov(vocab, 4, opts.data_seed);
+    let partitioning = opts.partitioning;
+    HloTrainer::new(
+        engine,
+        variant,
+        move |store| {
+            let names = param_tensor_names(store);
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let atoms = match partitioning {
+                Partitioning::ByLayer => per_tensor_atoms(store, &refs),
+                Partitioning::ByShard => sharded_atoms(store, &refs),
+            };
+            AtomLayout::new(atoms)
+        },
+        Box::new(|store, rng| {
+            let names = param_tensor_names(store);
+            for name in names {
+                let t = store.get_mut(&name);
+                if name.starts_with("ln") && name.ends_with('g') {
+                    t.data.iter_mut().for_each(|v| *v = 1.0);
+                } else if name.starts_with("ln") || name.starts_with('b') {
+                    // layernorm biases and ff biases stay zero
+                } else {
+                    t.data.iter_mut().for_each(|v| *v = (rng.normal() * 0.02) as f32);
+                }
+            }
+        }),
+        Box::new(move |iter, rng| {
+            let (tokens, targets) = stream.batch(batch, seq, rng);
+            Ok(vec![
+                HostTensor::f32(&[1], vec![(iter + 1) as f32]),
+                HostTensor::i32(&[batch, seq], tokens),
+                HostTensor::i32(&[batch, seq], targets),
+            ])
+        }),
+        false,
+    )
+}
+
+/// Shared engine constructor for examples/benches.
+pub fn default_engine() -> Result<Arc<Mutex<Engine>>> {
+    Ok(Arc::new(Mutex::new(Engine::cpu(&crate::artifact_dir())?)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{ParamStore, Tensor};
+
+    fn store_with_opt() -> ParamStore {
+        ParamStore::new(vec![
+            Tensor::zeros("w", &[4, 3]),
+            Tensor::zeros("b", &[3]),
+            Tensor::zeros("m_w", &[4, 3]),
+            Tensor::zeros("v_w", &[4, 3]),
+            Tensor::zeros("m_b", &[3]),
+            Tensor::zeros("v_b", &[3]),
+        ])
+    }
+
+    #[test]
+    fn sharded_atoms_colocate_moments() {
+        let s = store_with_opt();
+        let atoms = sharded_atoms(&s, &["w", "b"]);
+        // 4 shards of w + 1 shard of b (rows() of [3] is 3... b has shape [3])
+        // b.rows() == 3, row_len == 1 -> 3 atoms.
+        assert_eq!(atoms.len(), 4 + 3);
+        // Each w atom: w slice + m_w + v_w slices.
+        assert_eq!(atoms[0].len(), 3);
+        let layout = AtomLayout::new(atoms);
+        assert!(layout.is_disjoint(&s));
+        assert_eq!(layout.total_len(), s.total_elems());
+    }
+
+    #[test]
+    fn per_tensor_atoms_cover_everything() {
+        let s = store_with_opt();
+        let atoms = per_tensor_atoms(&s, &["w", "b"]);
+        assert_eq!(atoms.len(), 2);
+        let layout = AtomLayout::new(atoms);
+        assert!(layout.is_disjoint(&s));
+        assert_eq!(layout.total_len(), s.total_elems());
+    }
+
+    #[test]
+    fn param_names_exclude_moments() {
+        let s = store_with_opt();
+        assert_eq!(param_tensor_names(&s), vec!["w".to_string(), "b".to_string()]);
+    }
+}

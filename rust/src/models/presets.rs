@@ -1,0 +1,138 @@
+//! Named experiment presets: the eight panels of Fig 7/8 plus the QP and
+//! transformer workloads, with the paper's convergence-horizon settings.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::data::Corpus;
+use crate::models::{build_trainer, lda::LdaTrainer, BuildOpts, Partitioning};
+use crate::runtime::Engine;
+use crate::trainer::Trainer;
+
+/// One experiment workload: how to build it and its horizon settings.
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub name: &'static str,
+    /// Artifact variant, or "lda" for the Rust substrate.
+    pub kind: PresetKind,
+    /// Iterations the unperturbed run should take to reach ε (paper
+    /// App. C: "roughly 60 iterations"; Fig 3 uses ~1000, Fig 5 ~100).
+    pub target_iters: usize,
+    /// Extra iterations past the target recorded in the trajectory (the
+    /// tail refines the x* estimate).
+    pub max_iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum PresetKind {
+    Hlo { variant: &'static str, partitioning: Partitioning },
+    Lda { docs: usize, vocab: usize, topics: usize, mean_len: usize },
+}
+
+/// The eight Fig 7/8 panels in paper order.
+pub fn standard_panels() -> Vec<Preset> {
+    vec![
+        preset("mlr_mnist"),
+        preset("mlr_covtype"),
+        preset("mf_movielens"),
+        preset("mf_jester"),
+        preset("lda_20news"),
+        preset("lda_reuters"),
+        preset("cnn_bylayer"),
+        preset("cnn_byshard"),
+    ]
+}
+
+/// Look up a preset by name (panics on unknown names — preset names are
+/// compile-time constants in the examples).
+pub fn preset(name: &str) -> Preset {
+    let hlo = |variant, partitioning, target, max| Preset {
+        name: Box::leak(name.to_string().into_boxed_str()),
+        kind: PresetKind::Hlo { variant, partitioning },
+        target_iters: target,
+        max_iters: max,
+    };
+    match name {
+        "qp4" => hlo("qp4", Partitioning::ByShard, 1000, 6000),
+        "qp32" => hlo("qp32", Partitioning::ByShard, 1000, 6000),
+        "mlr_mnist" => hlo("mlr_mnist", Partitioning::ByShard, 60, 100),
+        "mlr_mnist_fig5" => hlo("mlr_mnist", Partitioning::ByShard, 100, 320),
+        "mlr_covtype" => hlo("mlr_covtype", Partitioning::ByShard, 60, 100),
+        "mf_movielens" => hlo("mf_movielens", Partitioning::ByShard, 60, 100),
+        "mf_jester" => hlo("mf_jester", Partitioning::ByShard, 60, 100),
+        "cnn_bylayer" => hlo("cnn_mnist", Partitioning::ByLayer, 60, 100),
+        "cnn_byshard" => hlo("cnn_mnist", Partitioning::ByShard, 60, 100),
+        "tfm_tiny" => hlo("tfm_tiny", Partitioning::ByShard, 200, 260),
+        "tfm_small" => hlo("tfm_small", Partitioning::ByShard, 200, 260),
+        "lda_20news" => Preset {
+            name: "lda_20news",
+            kind: PresetKind::Lda { docs: 1200, vocab: 1500, topics: 20, mean_len: 110 },
+            target_iters: 60,
+            max_iters: 100,
+        },
+        "lda_reuters" => Preset {
+            name: "lda_reuters",
+            kind: PresetKind::Lda { docs: 1600, vocab: 1000, topics: 20, mean_len: 70 },
+            target_iters: 60,
+            max_iters: 100,
+        },
+        "lda_clueweb" => Preset {
+            name: "lda_clueweb",
+            kind: PresetKind::Lda { docs: 4000, vocab: 4000, topics: 50, mean_len: 160 },
+            target_iters: 30,
+            max_iters: 40,
+        },
+        other => panic!("unknown preset '{other}'"),
+    }
+}
+
+/// Build the preset's trainer. `engine` is only used by HLO presets.
+pub fn build_preset(
+    engine: Option<Arc<Mutex<Engine>>>,
+    p: &Preset,
+    data_seed: u64,
+) -> Result<Box<dyn Trainer>> {
+    match &p.kind {
+        PresetKind::Hlo { variant, partitioning } => {
+            let Some(engine) = engine else {
+                bail!("preset {} needs a PJRT engine", p.name)
+            };
+            let opts = BuildOpts { data_seed, partitioning: *partitioning, ..BuildOpts::default() };
+            Ok(Box::new(build_trainer(engine, variant, &opts)?))
+        }
+        PresetKind::Lda { docs, vocab, topics, mean_len } => {
+            // alpha=beta=1 per App. C.
+            let corpus =
+                Corpus::lda_generative(*docs, *vocab, *topics, *mean_len, 0.5, 0.1, data_seed);
+            Ok(Box::new(LdaTrainer::new(p.name, corpus, *topics, 1.0, 1.0)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_panels_are_eight() {
+        let panels = standard_panels();
+        assert_eq!(panels.len(), 8);
+        let names: Vec<&str> = panels.iter().map(|p| p.name).collect();
+        assert!(names.contains(&"cnn_bylayer") && names.contains(&"lda_reuters"));
+    }
+
+    #[test]
+    fn lda_preset_builds_without_engine() {
+        let p = preset("lda_20news");
+        let t = build_preset(None, &p, 7).unwrap();
+        assert_eq!(t.name(), "lda_20news");
+        assert!(t.layout().n_atoms() == 1200);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown preset")]
+    fn unknown_preset_panics() {
+        preset("nope");
+    }
+}

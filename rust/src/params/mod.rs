@@ -1,0 +1,334 @@
+//! Model state as named dense tensors decomposed into *atoms*.
+//!
+//! An **atom** is the paper's unit of parameter partitioning, checkpoint
+//! prioritization, and failure: "the rows of the parameter matrix are
+//! randomly partitioned" (MLR), "the rows of L and the columns of R" (MF),
+//! per-document topic distributions (LDA), and layers or layer-shards
+//! (CNN, §5.1). An atom owns one or more *segments* — contiguous f32
+//! ranges inside tensors — so that e.g. a CNN layer atom spans its weight
+//! and bias tensors plus the co-located Adam moments, and an `R`-column
+//! atom spans a strided set of ranges.
+//!
+//! Everything downstream (partitioner, checkpoint coordinator, recovery,
+//! priority distances) operates on atoms, never on raw tensors.
+
+use std::collections::HashMap;
+
+/// A dense f32 tensor with a shape. All model state in the coordinator is
+/// f32 — integer artifact inputs (transformer tokens) are data, not params.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(name: &str, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { name: name.to_string(), shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(name: &str, shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "tensor {name}: shape/data mismatch");
+        Tensor { name: name.to_string(), shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows for a matrix-shaped tensor (first-dim count otherwise).
+    pub fn rows(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Elements per first-dim slice.
+    pub fn row_len(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[1..].iter().product::<usize>().max(1)
+        }
+    }
+}
+
+/// A contiguous range of one tensor's flat data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Segment {
+    pub tensor: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// The atom decomposition of a model's state.
+#[derive(Debug, Clone, Default)]
+pub struct AtomLayout {
+    pub atoms: Vec<Vec<Segment>>,
+    /// Per-atom distance weights (all 1.0 unless the model overrides —
+    /// LDA scales total-variation distance by document length, App. C).
+    pub weights: Vec<f64>,
+    /// Distance metric used by the priority selector.
+    pub norm: AtomNorm,
+}
+
+/// Distance metric between an atom's current value and its checkpointed
+/// value. L2 is the default; scaled total variation is the paper's choice
+/// for LDA's doc-topic distributions (App. C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AtomNorm {
+    #[default]
+    L2,
+    /// 0.5 * sum |p_i - q_i| over the atom after normalizing each side to
+    /// sum 1 (atoms hold unnormalized topic counts), times the atom weight.
+    ScaledTv,
+}
+
+impl AtomLayout {
+    pub fn n_atoms(&self) -> usize {
+        self.atoms.len()
+    }
+
+    /// Uniform-weight layout from segments.
+    pub fn new(atoms: Vec<Vec<Segment>>) -> AtomLayout {
+        let weights = vec![1.0; atoms.len()];
+        AtomLayout { atoms, weights, norm: AtomNorm::L2 }
+    }
+
+    /// One atom per first-dim row of the given tensor.
+    pub fn rows_of(store: &ParamStore, tensor_name: &str) -> Vec<Vec<Segment>> {
+        let ti = store.index(tensor_name);
+        let t = &store.tensors[ti];
+        let rl = t.row_len();
+        (0..t.rows())
+            .map(|r| vec![Segment { tensor: ti, start: r * rl, len: rl }])
+            .collect()
+    }
+
+    /// One atom per column of a 2-D tensor (strided: one segment per row).
+    pub fn cols_of(store: &ParamStore, tensor_name: &str) -> Vec<Vec<Segment>> {
+        let ti = store.index(tensor_name);
+        let t = &store.tensors[ti];
+        assert_eq!(t.shape.len(), 2, "cols_of needs a matrix");
+        let (rows, cols) = (t.shape[0], t.shape[1]);
+        (0..cols)
+            .map(|c| {
+                (0..rows)
+                    .map(|r| Segment { tensor: ti, start: r * cols + c, len: 1 })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Total f32 elements across the atom's segments.
+    pub fn atom_len(&self, atom: usize) -> usize {
+        self.atoms[atom].iter().map(|s| s.len).sum()
+    }
+
+    /// Sum of all atom lengths.
+    pub fn total_len(&self) -> usize {
+        (0..self.atoms.len()).map(|a| self.atom_len(a)).sum()
+    }
+
+    /// Every (tensor, element) covered at most once? (proptest invariant)
+    pub fn is_disjoint(&self, store: &ParamStore) -> bool {
+        let mut seen: Vec<Vec<bool>> =
+            store.tensors.iter().map(|t| vec![false; t.len()]).collect();
+        for segs in &self.atoms {
+            for s in segs {
+                for i in s.start..s.start + s.len {
+                    if seen[s.tensor][i] {
+                        return false;
+                    }
+                    seen[s.tensor][i] = true;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// The coordinator-side value store: the job's full parameter state.
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn new(tensors: Vec<Tensor>) -> ParamStore {
+        let index = tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), i))
+            .collect();
+        ParamStore { tensors, index }
+    }
+
+    pub fn index(&self, name: &str) -> usize {
+        *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("no tensor named '{name}'"))
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[self.index(name)]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        let i = self.index(name);
+        &mut self.tensors[i]
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Copy an atom's values out into a flat buffer.
+    pub fn read_atom(&self, layout: &AtomLayout, atom: usize, out: &mut Vec<f32>) {
+        out.clear();
+        for s in &layout.atoms[atom] {
+            out.extend_from_slice(&self.tensors[s.tensor].data[s.start..s.start + s.len]);
+        }
+    }
+
+    /// Overwrite an atom's values from a flat buffer.
+    pub fn write_atom(&mut self, layout: &AtomLayout, atom: usize, vals: &[f32]) {
+        let mut off = 0;
+        for s in &layout.atoms[atom] {
+            self.tensors[s.tensor].data[s.start..s.start + s.len]
+                .copy_from_slice(&vals[off..off + s.len]);
+            off += s.len;
+        }
+        assert_eq!(off, vals.len(), "atom value length mismatch");
+    }
+
+    /// L2 distance between this store and another over one atom, honoring
+    /// the layout's norm and weight (used by priority selection and by the
+    /// perturbation-size accounting for Theorem 3.2).
+    pub fn atom_distance(&self, other: &ParamStore, layout: &AtomLayout, atom: usize) -> f64 {
+        let w = layout.weights[atom];
+        match layout.norm {
+            AtomNorm::L2 => {
+                let mut acc = 0.0f64;
+                for s in &layout.atoms[atom] {
+                    let a = &self.tensors[s.tensor].data[s.start..s.start + s.len];
+                    let b = &other.tensors[s.tensor].data[s.start..s.start + s.len];
+                    for (x, y) in a.iter().zip(b) {
+                        let d = (*x as f64) - (*y as f64);
+                        acc += d * d;
+                    }
+                }
+                acc.sqrt() * w
+            }
+            AtomNorm::ScaledTv => {
+                // Normalize both sides over the atom, then 0.5*L1.
+                let (mut sa, mut sb) = (0.0f64, 0.0f64);
+                for s in &layout.atoms[atom] {
+                    sa += self.tensors[s.tensor].data[s.start..s.start + s.len]
+                        .iter()
+                        .map(|&x| x as f64)
+                        .sum::<f64>();
+                    sb += other.tensors[s.tensor].data[s.start..s.start + s.len]
+                        .iter()
+                        .map(|&x| x as f64)
+                        .sum::<f64>();
+                }
+                let (sa, sb) = (sa.max(1e-12), sb.max(1e-12));
+                let mut acc = 0.0f64;
+                for s in &layout.atoms[atom] {
+                    let a = &self.tensors[s.tensor].data[s.start..s.start + s.len];
+                    let b = &other.tensors[s.tensor].data[s.start..s.start + s.len];
+                    for (x, y) in a.iter().zip(b) {
+                        acc += ((*x as f64) / sa - (*y as f64) / sb).abs();
+                    }
+                }
+                0.5 * acc * w
+            }
+        }
+    }
+
+    /// Whole-state L2 distance (the perturbation size ‖δ‖ of §3).
+    pub fn l2_distance(&self, other: &ParamStore) -> f64 {
+        let mut acc = 0.0f64;
+        for (a, b) in self.tensors.iter().zip(&other.tensors) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.data.iter().zip(&b.data) {
+                let d = (*x as f64) - (*y as f64);
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore::new(vec![
+            Tensor::from_vec("w", &[3, 2], vec![0., 1., 2., 3., 4., 5.]),
+            Tensor::from_vec("b", &[2], vec![10., 20.]),
+        ])
+    }
+
+    #[test]
+    fn row_atoms_cover_tensor() {
+        let s = store();
+        let atoms = AtomLayout::rows_of(&s, "w");
+        assert_eq!(atoms.len(), 3);
+        let layout = AtomLayout::new(atoms);
+        assert_eq!(layout.total_len(), 6);
+        assert!(layout.is_disjoint(&s));
+    }
+
+    #[test]
+    fn col_atoms_are_strided() {
+        let s = store();
+        let atoms = AtomLayout::cols_of(&s, "w");
+        let layout = AtomLayout::new(atoms);
+        assert_eq!(layout.n_atoms(), 2);
+        let mut buf = Vec::new();
+        s.read_atom(&layout, 1, &mut buf);
+        assert_eq!(buf, vec![1., 3., 5.]);
+        assert!(layout.is_disjoint(&s));
+    }
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut s = store();
+        let layout = AtomLayout::new(AtomLayout::rows_of(&s, "w"));
+        let mut buf = Vec::new();
+        s.read_atom(&layout, 2, &mut buf);
+        assert_eq!(buf, vec![4., 5.]);
+        s.write_atom(&layout, 2, &[9., 9.]);
+        assert_eq!(s.get("w").data, vec![0., 1., 2., 3., 9., 9.]);
+    }
+
+    #[test]
+    fn distances() {
+        let a = store();
+        let mut b = store();
+        b.get_mut("w").data[0] = 3.0; // delta of 3 at one element
+        assert!((a.l2_distance(&b) - 3.0).abs() < 1e-9);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&a, "w"));
+        assert!((a.atom_distance(&b, &layout, 0) - 3.0).abs() < 1e-9);
+        assert_eq!(a.atom_distance(&b, &layout, 1), 0.0);
+    }
+
+    #[test]
+    fn tv_distance_normalizes() {
+        let a = ParamStore::new(vec![Tensor::from_vec("t", &[4], vec![1., 1., 1., 1.])]);
+        let b = ParamStore::new(vec![Tensor::from_vec("t", &[4], vec![2., 2., 2., 2.])]);
+        let mut layout = AtomLayout::new(vec![vec![Segment { tensor: 0, start: 0, len: 4 }]]);
+        layout.norm = AtomNorm::ScaledTv;
+        // Same distribution after normalization => TV distance 0.
+        assert!(a.atom_distance(&b, &layout, 0).abs() < 1e-9);
+    }
+}

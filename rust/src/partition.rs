@@ -1,0 +1,153 @@
+//! Uniform-random atom → PS-node partitioning (paper §4).
+//!
+//! "We will assume that parameters are partitioned uniformly at random
+//! across the PS nodes ... the partitioning scheme is typically within
+//! the control of the PS system, which can choose a random partitioning."
+//!
+//! The partition also drives failure semantics: when a PS node dies, the
+//! atoms it owns are the lost parameters (Thm 4.2's random subset), and
+//! recovery re-partitions them onto the survivors (§4.3 step 2).
+
+use crate::util::rng::Rng;
+
+/// Assignment of atoms to parameter-server nodes.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// owner[atom] = ps node id
+    pub owner: Vec<usize>,
+    /// atoms_of[node] = atom ids owned by that node
+    pub atoms_of: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Shuffle atoms and deal them round-robin so node loads are balanced
+    /// to within one atom while the *subset* owned by each node stays
+    /// uniformly random.
+    pub fn random(n_atoms: usize, n_nodes: usize, rng: &mut Rng) -> Partition {
+        assert!(n_nodes > 0, "need at least one PS node");
+        let mut order: Vec<usize> = (0..n_atoms).collect();
+        rng.shuffle(&mut order);
+        let mut owner = vec![0usize; n_atoms];
+        let mut atoms_of = vec![Vec::new(); n_nodes];
+        for (i, atom) in order.into_iter().enumerate() {
+            let node = i % n_nodes;
+            owner[atom] = node;
+            atoms_of[node].push(atom);
+        }
+        Partition { owner, atoms_of }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.atoms_of.len()
+    }
+
+    pub fn n_atoms(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Atoms lost if `nodes` fail.
+    pub fn lost_atoms(&self, nodes: &[usize]) -> Vec<usize> {
+        let mut lost: Vec<usize> = nodes
+            .iter()
+            .flat_map(|&n| self.atoms_of[n].iter().copied())
+            .collect();
+        lost.sort_unstable();
+        lost
+    }
+
+    /// Move atoms owned by `failed` nodes onto the surviving nodes
+    /// round-robin (recovery coordinator step 1, §4.3). Returns the moved
+    /// atom ids. No-op if every node failed (caller restarts the job).
+    pub fn repartition(&mut self, failed: &[usize]) -> Vec<usize> {
+        let failed_set: Vec<bool> = {
+            let mut v = vec![false; self.n_nodes()];
+            for &f in failed {
+                v[f] = true;
+            }
+            v
+        };
+        let survivors: Vec<usize> =
+            (0..self.n_nodes()).filter(|&n| !failed_set[n]).collect();
+        if survivors.is_empty() {
+            return Vec::new();
+        }
+        let mut moved = Vec::new();
+        for &f in failed {
+            let atoms = std::mem::take(&mut self.atoms_of[f]);
+            for (i, atom) in atoms.into_iter().enumerate() {
+                let dst = survivors[i % survivors.len()];
+                self.owner[atom] = dst;
+                self.atoms_of[dst].push(atom);
+                moved.push(atom);
+            }
+        }
+        moved.sort_unstable();
+        moved
+    }
+
+    /// Internal consistency (proptest target).
+    pub fn is_consistent(&self) -> bool {
+        let mut seen = vec![false; self.n_atoms()];
+        for (node, atoms) in self.atoms_of.iter().enumerate() {
+            for &a in atoms {
+                if a >= self.n_atoms() || seen[a] || self.owner[a] != node {
+                    return false;
+                }
+                seen[a] = true;
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_partition_is_consistent_and_balanced() {
+        let mut rng = Rng::new(1);
+        let p = Partition::random(103, 8, &mut rng);
+        assert!(p.is_consistent());
+        let sizes: Vec<usize> = p.atoms_of.iter().map(|v| v.len()).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn lost_atoms_match_owner() {
+        let mut rng = Rng::new(2);
+        let p = Partition::random(40, 4, &mut rng);
+        let lost = p.lost_atoms(&[1, 3]);
+        for &a in &lost {
+            assert!(p.owner[a] == 1 || p.owner[a] == 3);
+        }
+        assert_eq!(lost.len(), p.atoms_of[1].len() + p.atoms_of[3].len());
+    }
+
+    #[test]
+    fn repartition_moves_everything_to_survivors() {
+        let mut rng = Rng::new(3);
+        let mut p = Partition::random(50, 5, &mut rng);
+        let before = p.lost_atoms(&[0, 2]);
+        let moved = p.repartition(&[0, 2]);
+        assert_eq!(before, moved);
+        assert!(p.is_consistent());
+        assert!(p.atoms_of[0].is_empty() && p.atoms_of[2].is_empty());
+    }
+
+    #[test]
+    fn repartition_all_failed_is_noop() {
+        let mut rng = Rng::new(4);
+        let mut p = Partition::random(10, 2, &mut rng);
+        let moved = p.repartition(&[0, 1]);
+        assert!(moved.is_empty());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let p1 = Partition::random(64, 4, &mut Rng::new(10));
+        let p2 = Partition::random(64, 4, &mut Rng::new(11));
+        assert_ne!(p1.owner, p2.owner);
+    }
+}

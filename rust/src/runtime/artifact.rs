@@ -1,0 +1,265 @@
+//! Artifact metadata: the contract between the L2 compile path and the
+//! L3 coordinator.
+//!
+//! `python/compile/aot.py` writes, per model variant, an HLO-text file and
+//! a `<name>.meta.json` describing the step function's flat signature:
+//! inputs/outputs with a *kind* each —
+//!
+//! * `param`  — model parameters (atomized, checkpointed, recoverable)
+//! * `opt`    — optimizer state co-located with params (checkpointed)
+//! * `data`   — per-iteration inputs the coordinator feeds (batches,
+//!              step counters, problem constants)
+//! * `metric` — outputs only: the loss scalar
+//!
+//! Output convention: updated `param`/`opt` tensors in input order, then
+//! the `(1,)` loss.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoKind {
+    Param,
+    Opt,
+    Data,
+    Metric,
+}
+
+impl IoKind {
+    fn parse(s: &str) -> Result<IoKind> {
+        Ok(match s {
+            "param" => IoKind::Param,
+            "opt" => IoKind::Opt,
+            "data" => IoKind::Data,
+            "metric" => IoKind::Metric,
+            other => bail!("unknown io kind '{other}'"),
+        })
+    }
+
+    /// Is this tensor part of the checkpointed job state?
+    pub fn is_state(self) -> bool {
+        matches!(self, IoKind::Param | IoKind::Opt)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub kind: IoKind,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(v: &Json) -> Result<IoSpec> {
+        let name = v.get("name").as_str().context("io entry missing name")?.to_string();
+        let kind = IoKind::parse(v.get("kind").as_str().context("io entry missing kind")?)?;
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .context("io entry missing shape")?
+            .iter()
+            .map(|s| s.as_usize().context("bad shape entry"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = match v.get("dtype").as_str().unwrap_or("f32") {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unsupported dtype '{other}'"),
+        };
+        Ok(IoSpec { name, kind, shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub model: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub hyper: Json,
+    pub atoms_hint: Json,
+}
+
+impl ArtifactMeta {
+    pub fn load(meta_path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let v = Json::parse(&text)
+            .with_context(|| format!("parsing {}", meta_path.display()))?;
+        Self::from_json(&v, meta_path.parent().unwrap_or(Path::new(".")))
+    }
+
+    pub fn from_json(v: &Json, dir: &Path) -> Result<ArtifactMeta> {
+        let name = v.get("name").as_str().context("meta missing name")?.to_string();
+        let model = v.get("model").as_str().unwrap_or("").to_string();
+        let hlo = v.get("hlo").as_str().context("meta missing hlo")?;
+        let inputs = v
+            .get("inputs")
+            .as_arr()
+            .context("meta missing inputs")?
+            .iter()
+            .map(IoSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .get("outputs")
+            .as_arr()
+            .context("meta missing outputs")?
+            .iter()
+            .map(IoSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let meta = ArtifactMeta {
+            name,
+            model,
+            hlo_path: dir.join(hlo),
+            inputs,
+            outputs,
+            hyper: v.get("hyper").clone(),
+            atoms_hint: v.get("atoms").clone(),
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// Interface sanity: outputs must be the state tensors (in input
+    /// order) followed by exactly one metric.
+    pub fn validate(&self) -> Result<()> {
+        let state_in: Vec<&IoSpec> =
+            self.inputs.iter().filter(|s| s.kind.is_state()).collect();
+        let state_out: Vec<&IoSpec> =
+            self.outputs.iter().filter(|s| s.kind.is_state()).collect();
+        if state_in.len() != state_out.len() {
+            bail!(
+                "artifact {}: {} state inputs but {} state outputs",
+                self.name,
+                state_in.len(),
+                state_out.len()
+            );
+        }
+        for (i, o) in state_in.iter().zip(&state_out) {
+            if i.name != o.name || i.shape != o.shape {
+                bail!(
+                    "artifact {}: state io mismatch {} {:?} vs {} {:?}",
+                    self.name,
+                    i.name,
+                    i.shape,
+                    o.name,
+                    o.shape
+                );
+            }
+        }
+        let metrics: Vec<&IoSpec> = self
+            .outputs
+            .iter()
+            .filter(|s| s.kind == IoKind::Metric)
+            .collect();
+        if metrics.len() != 1 {
+            bail!("artifact {}: expected exactly 1 metric output", self.name);
+        }
+        if self.outputs.last().map(|s| s.kind) != Some(IoKind::Metric) {
+            bail!("artifact {}: metric must be the last output", self.name);
+        }
+        Ok(())
+    }
+
+    pub fn state_specs(&self) -> Vec<&IoSpec> {
+        self.inputs.iter().filter(|s| s.kind.is_state()).collect()
+    }
+
+    pub fn data_specs(&self) -> Vec<&IoSpec> {
+        self.inputs.iter().filter(|s| s.kind == IoKind::Data).collect()
+    }
+
+    pub fn hyper_f64(&self, key: &str) -> Option<f64> {
+        self.hyper.get(key).as_f64()
+    }
+}
+
+/// Discover every artifact in a directory (via `*.meta.json`).
+pub fn discover(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let mut metas = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing artifact dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.file_name().and_then(|n| n.to_str()).map_or(false, |n| n.ends_with(".meta.json"))
+        {
+            metas.push(ArtifactMeta::load(&path)?);
+        }
+    }
+    metas.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(metas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_json(extra_out: &str) -> String {
+        format!(
+            r#"{{
+              "name": "toy", "model": "qp", "hlo": "toy.hlo.txt",
+              "inputs": [
+                {{"name":"x","kind":"param","shape":[4],"dtype":"f32"}},
+                {{"name":"a","kind":"data","shape":[4,4],"dtype":"f32"}}
+              ],
+              "outputs": [
+                {{"name":"x","kind":"param","shape":[4],"dtype":"f32"}}{extra_out}
+              ],
+              "hyper": {{"lr": 0.05}}
+            }}"#
+        )
+    }
+
+    #[test]
+    fn parses_valid_meta() {
+        let j = Json::parse(&meta_json(
+            r#", {"name":"loss","kind":"metric","shape":[1],"dtype":"f32"}"#,
+        ))
+        .unwrap();
+        let m = ArtifactMeta::from_json(&j, Path::new("/tmp")).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.state_specs().len(), 1);
+        assert_eq!(m.data_specs().len(), 1);
+        assert_eq!(m.hyper_f64("lr"), Some(0.05));
+        assert_eq!(m.hlo_path, Path::new("/tmp/toy.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_missing_metric() {
+        let j = Json::parse(&meta_json("")).unwrap();
+        assert!(ArtifactMeta::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_state_mismatch() {
+        let src = r#"{
+          "name":"bad","model":"m","hlo":"h",
+          "inputs":[{"name":"x","kind":"param","shape":[4]}],
+          "outputs":[{"name":"y","kind":"param","shape":[4]},
+                     {"name":"loss","kind":"metric","shape":[1]}]
+        }"#;
+        let j = Json::parse(src).unwrap();
+        assert!(ArtifactMeta::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn elem_count() {
+        let spec = IoSpec { name: "w".into(), kind: IoKind::Param, shape: vec![3, 4], dtype: DType::F32 };
+        assert_eq!(spec.elem_count(), 12);
+    }
+}

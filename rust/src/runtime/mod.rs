@@ -1,0 +1,234 @@
+//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One compiled executable per model variant, cached for the process
+//! lifetime. Python never runs here — artifacts are produced once by
+//! `make artifacts`.
+
+pub mod artifact;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub use artifact::{ArtifactMeta, DType, IoKind, IoSpec};
+
+/// A compiled model variant ready to execute.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+}
+
+/// The process-wide PJRT engine: client + executable cache.
+pub struct Engine {
+    client: PjRtClient,
+    artifact_dir: PathBuf,
+    cache: HashMap<String, LoadedArtifact>,
+}
+
+impl Engine {
+    /// CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: &Path) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, artifact_dir: artifact_dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load + compile (or fetch from cache) a variant by name.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.cache.contains_key(name) {
+            let meta_path = self.artifact_dir.join(format!("{name}.meta.json"));
+            let meta = ArtifactMeta::load(&meta_path)?;
+            let proto = HloModuleProto::from_text_file(
+                meta.hlo_path
+                    .to_str()
+                    .context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text for {name}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(name.to_string(), LoadedArtifact { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Upload an f32 host slice straight to a device buffer (one copy —
+    /// the L3 upload hot path; see EXPERIMENTS.md §Perf).
+    pub fn buffer_f32(&self, shape: &[usize], data: &[f32]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Upload an i32 host slice straight to a device buffer.
+    pub fn buffer_i32(&self, shape: &[usize], data: &[i32]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Upload a [`HostTensor`].
+    pub fn to_buffer(&self, t: &HostTensor) -> Result<PjRtBuffer> {
+        match t {
+            HostTensor::F32 { shape, data } => self.buffer_f32(shape, data),
+            HostTensor::I32 { shape, data } => self.buffer_i32(shape, data),
+        }
+    }
+
+    /// Execute a loaded artifact on device buffers. The artifact was
+    /// lowered with `return_tuple=True`, so the single device output is a
+    /// tuple literal that we decompose into the flat output list.
+    ///
+    /// NOTE: this deliberately routes through `execute_b` (caller-owned
+    /// input buffers): the xla crate's literal-based `execute` leaks every
+    /// input device buffer per call (`buffer.release()` without a
+    /// matching free in xla_rs.cc) — ~MBs/step on our workloads.
+    pub fn execute_buffers<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        name: &str,
+        inputs: &[B],
+    ) -> Result<Vec<Literal>> {
+        let art = self
+            .cache
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        if inputs.len() != art.meta.inputs.len() {
+            bail!(
+                "artifact {name}: got {} inputs, expected {}",
+                inputs.len(),
+                art.meta.inputs.len()
+            );
+        }
+        let result = art.exe.execute_b::<B>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute with host literals (buffers created and freed internally).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        let buffers: Vec<PjRtBuffer> = inputs
+            .iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l.borrow())?))
+            .collect::<Result<_>>()?;
+        self.execute_buffers(name, &buffers)
+    }
+
+    /// Convenience: load-if-needed then execute.
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &mut self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        self.load(name)?;
+        self.execute(name, inputs)
+    }
+}
+
+/// A host-side tensor ready for device upload — what model data streams
+/// produce (avoids building an intermediate `Literal`, which would cost a
+/// second copy on the upload path).
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> host helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from host data. Single memcpy
+/// (`vec1` + `reshape` would copy twice — this is the L3 upload hot path,
+/// see EXPERIMENTS.md §Perf).
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal_f32: shape {:?} wants {} elems, got {}", shape, n, data.len());
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal of the given shape from host data (single memcpy).
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal_i32: shape {:?} wants {} elems, got {}", shape, n, data.len());
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Read an f32 literal back to host.
+pub fn literal_to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Copy an f32 literal into an existing host buffer (no allocation —
+/// the L3 download hot path).
+pub fn literal_into_f32(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    if lit.element_count() != dst.len() {
+        bail!(
+            "literal_into_f32: literal has {} elems, dst has {}",
+            lit.element_count(),
+            dst.len()
+        );
+    }
+    lit.copy_raw_to(dst)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(literal_to_f32(&lit).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+        assert!(literal_i32(&[3], &[1, 2]).is_err());
+    }
+}

@@ -1,0 +1,257 @@
+//! Theory layer: the iteration-cost bounds of §3.
+//!
+//! * [`estimate_rate`] fits the linear contraction rate `c` of assumption
+//!   (3) from an observed error curve ‖x⁽ᵏ⁾ − x*‖ ("the value of c is
+//!   determined empirically", Fig 3/5 captions).
+//! * [`iteration_cost_bound`] is Theorem 3.2 / eq. (6):
+//!   ι ≤ log(1 + Δ_T / ‖x⁽⁰⁾ − x*‖) / log(1/c),
+//!   Δ_T = Σ_{ℓ=0}^{T} c^{−ℓ} E‖δ_ℓ‖.
+//! * [`infinite_horizon_bound`] is eq. (14) (App. B.1) for per-iteration
+//!   perturbations of size ≤ Δ, with the irreducible error (c/(1−c))Δ.
+
+/// A perturbation event: iteration index and expected norm E‖δ_ℓ‖.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Perturbation {
+    pub iter: usize,
+    pub norm: f64,
+}
+
+/// Fit `c` by least squares on log(error): log e_k ≈ log e_0 + k log c.
+/// Points with error below `floor` are dropped (converged plateau /
+/// numerical noise would bias the slope).
+pub fn estimate_rate(errors: &[f64], floor: f64) -> f64 {
+    let pts: Vec<(f64, f64)> = errors
+        .iter()
+        .enumerate()
+        .filter(|(_, &e)| e > floor && e.is_finite())
+        .map(|(k, &e)| (k as f64, e.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return f64::NAN;
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (_, slope) = crate::util::stats::linfit(&xs, &ys);
+    slope.exp().clamp(1e-6, 0.999999)
+}
+
+/// Conservative rate estimate: fit on the *tail* half of the qualifying
+/// points. Multi-mode systems (e.g. a QP with spread eigenvalues) decay
+/// fast early and slow late; assumption (3) requires a `c` valid at every
+/// step, so the bound must use the slowest (asymptotic) mode or it stops
+/// being an upper bound.
+pub fn estimate_rate_tail(errors: &[f64], floor: f64) -> f64 {
+    let qualifying: Vec<f64> = errors
+        .iter()
+        .copied()
+        .take_while(|&e| e > floor && e.is_finite())
+        .collect();
+    if qualifying.len() < 4 {
+        return estimate_rate(errors, floor);
+    }
+    estimate_rate(&qualifying[qualifying.len() / 2..], floor)
+}
+
+/// Conservative empirical `c` for use in the *bound*: assumption (3)
+/// requires a per-step contraction factor valid at EVERY step, so take
+/// the max of the tail regression and a high percentile of observed
+/// one-step ratios e_{k+1}/e_k over the tail (robust to a multi-mode
+/// spectrum where early fast modes bias regressions optimistic, and to
+/// stochastic-trajectory noise).
+pub fn estimate_rate_conservative(errors: &[f64], floor: f64) -> f64 {
+    let regression = estimate_rate_tail(errors, floor);
+    let qualifying: Vec<f64> = errors
+        .iter()
+        .copied()
+        .take_while(|&e| e > floor && e.is_finite())
+        .collect();
+    if qualifying.len() < 6 {
+        return regression;
+    }
+    let tail = &qualifying[qualifying.len() / 2..];
+    let ratios: Vec<f64> = tail
+        .windows(2)
+        .map(|w| w[1] / w[0])
+        .filter(|r| r.is_finite() && *r > 0.0)
+        .collect();
+    if ratios.is_empty() {
+        return regression;
+    }
+    let p92 = crate::util::stats::percentile(&ratios, 92.0);
+    regression.max(p92).clamp(1e-6, 0.99999)
+}
+
+/// Fit the asymptotic (slow) decay mode of an error curve: regression on
+/// the tail half gives `log e = log A + k log c`; returns (A, c).
+///
+/// For multi-mode systems A < ||x0 - x*|| (fast modes carry part of the
+/// initial error but vanish early). Using A as the eq.-(6) denominator
+/// keeps the bound an upper bound: the theorem's kappa(x, eps) assumes
+/// the whole distance decays at rate c, which *understates* how quickly
+/// the real sequence converges (fast modes help), so pairing the measured
+/// baseline iteration count with the full ||x0 - x*|| would produce a
+/// bound the slow mode can beat. See EXPERIMENTS.md (Fig 3).
+pub fn estimate_slow_mode(errors: &[f64], floor: f64) -> (f64, f64) {
+    let qualifying: Vec<(f64, f64)> = errors
+        .iter()
+        .enumerate()
+        .take_while(|(_, &e)| e > floor && e.is_finite())
+        .map(|(k, &e)| (k as f64, e.ln()))
+        .collect();
+    if qualifying.len() < 4 {
+        return (errors.first().copied().unwrap_or(f64::NAN), estimate_rate(errors, floor));
+    }
+    let tail = &qualifying[qualifying.len() / 2..];
+    let xs: Vec<f64> = tail.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = tail.iter().map(|p| p.1).collect();
+    let (intercept, slope) = crate::util::stats::linfit(&xs, &ys);
+    (intercept.exp(), slope.exp().clamp(1e-6, 0.99999))
+}
+
+/// Δ_T = Σ c^{−ℓ} E‖δ_ℓ‖ (the time-discounted aggregate of eq. 6).
+pub fn delta_t(c: f64, perturbations: &[Perturbation]) -> f64 {
+    perturbations
+        .iter()
+        .map(|p| c.powi(-(p.iter as i32)) * p.norm)
+        .sum()
+}
+
+/// Theorem 3.2, eq. (6). `x0_dist` is ‖x⁽⁰⁾ − x*‖.
+pub fn iteration_cost_bound(c: f64, x0_dist: f64, perturbations: &[Perturbation]) -> f64 {
+    assert!(c > 0.0 && c < 1.0, "need 0 < c < 1, got {c}");
+    assert!(x0_dist > 0.0);
+    let dt = delta_t(c, perturbations);
+    (1.0 + dt / x0_dist).ln() / (1.0 / c).ln()
+}
+
+/// κ(x, ε) for the unperturbed linear sequence: iterations to ε-optimality
+/// = log(‖x⁽⁰⁾ − x*‖ / ε) / log(1/c).
+pub fn kappa_unperturbed(c: f64, x0_dist: f64, eps: f64) -> f64 {
+    (x0_dist / eps).ln() / (1.0 / c).ln()
+}
+
+/// Eq. (14): iteration-cost bound under perturbations of size ≤ Δ in
+/// *every* iteration. Returns `None` when the bound is uninformative,
+/// i.e. ε or ‖x⁽⁰⁾ − x*‖ is not above the irreducible error (c/(1−c))Δ.
+pub fn infinite_horizon_bound(c: f64, x0_dist: f64, eps: f64, delta: f64) -> Option<f64> {
+    assert!(c > 0.0 && c < 1.0);
+    let irreducible = c / (1.0 - c) * delta;
+    if x0_dist <= irreducible || eps <= irreducible {
+        return None;
+    }
+    let num = 1.0 - irreducible / x0_dist;
+    let den = 1.0 - irreducible / eps;
+    Some((num / den).ln() / (1.0 / c).ln())
+}
+
+/// The irreducible error floor (c/(1−c))Δ of Example 3.3.
+pub fn irreducible_error(c: f64, delta: f64) -> f64 {
+    c / (1.0 - c) * delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_recovered_from_exact_geometric() {
+        let c: f64 = 0.93;
+        let errors: Vec<f64> = (0..200).map(|k| 10.0 * c.powi(k)).collect();
+        let fit = estimate_rate(&errors, 1e-12);
+        assert!((fit - c).abs() < 1e-6, "fit={fit}");
+    }
+
+    #[test]
+    fn rate_ignores_floor_plateau() {
+        let c: f64 = 0.9;
+        let mut errors: Vec<f64> = (0..100).map(|k| 5.0 * c.powi(k)).collect();
+        errors.extend(std::iter::repeat(1e-9).take(100)); // converged noise
+        let fit = estimate_rate(&errors, 1e-6);
+        assert!((fit - c).abs() < 1e-4, "fit={fit}");
+    }
+
+    #[test]
+    fn tail_rate_tracks_slow_mode() {
+        // Two-mode decay: fast 0.5^k + slow 0.97^k. The whole-curve fit
+        // lands between the modes; the tail fit must find ~0.97.
+        let errors: Vec<f64> =
+            (0..300).map(|k| 10.0 * 0.5f64.powi(k) + 1.0 * 0.97f64.powi(k)).collect();
+        let whole = estimate_rate(&errors, 1e-9);
+        let tail = estimate_rate_tail(&errors, 1e-9);
+        assert!(tail > whole);
+        assert!((tail - 0.97).abs() < 0.005, "tail={tail}");
+    }
+
+    #[test]
+    fn conservative_rate_at_least_slowest_mode() {
+        let errors: Vec<f64> =
+            (0..1000).map(|k| 10.0 * 0.6f64.powi(k) + 2.0 * 0.995f64.powi(k)).collect();
+        let c = estimate_rate_conservative(&errors, 1e-12);
+        assert!(c >= 0.9945, "c={c}");
+        assert!(c <= 0.99999);
+    }
+
+    #[test]
+    fn bound_zero_without_perturbations() {
+        let b = iteration_cost_bound(0.9, 10.0, &[]);
+        assert!(b.abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_monotone_in_norm_and_recency() {
+        let small = iteration_cost_bound(0.9, 10.0, &[Perturbation { iter: 5, norm: 1.0 }]);
+        let large = iteration_cost_bound(0.9, 10.0, &[Perturbation { iter: 5, norm: 2.0 }]);
+        let later = iteration_cost_bound(0.9, 10.0, &[Perturbation { iter: 10, norm: 1.0 }]);
+        assert!(large > small);
+        // Later perturbations are discounted *less* (c^{-l} grows with l).
+        assert!(later > small);
+    }
+
+    #[test]
+    fn bound_matches_hand_computation() {
+        // c=0.5, x0=4, single delta at l=2 of norm 1: Delta_T = 0.5^{-2} = 4.
+        // bound = log(1 + 4/4)/log 2 = 1.
+        let b = iteration_cost_bound(0.5, 4.0, &[Perturbation { iter: 2, norm: 1.0 }]);
+        assert!((b - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_tightness_for_adversarial_delta() {
+        // With delta chosen along the worst-case direction and an exactly-
+        // c-contracting map, the perturbed sequence needs exactly `bound`
+        // extra iterations: simulate the scalar system x <- c x.
+        let c = 0.8f64;
+        let x0 = 8.0f64;
+        let eps = 1e-3;
+        let t = 7usize;
+        let norm = 0.3;
+        // Unperturbed iterations to eps:
+        let k_unpert = kappa_unperturbed(c, x0, eps).ceil() as usize;
+        // Simulate perturbed: error multiplies by c, plus delta at iter t.
+        let mut e = x0;
+        let mut k = 0usize;
+        loop {
+            if k == t {
+                e += norm; // adversarial: directly away from x*
+            }
+            e *= c;
+            k += 1;
+            if e < eps {
+                break;
+            }
+        }
+        let bound = iteration_cost_bound(c, x0, &[Perturbation { iter: t, norm }]);
+        let cost = k as f64 - k_unpert as f64;
+        assert!(cost <= bound.ceil() + 1.0, "cost={cost} bound={bound}");
+        assert!(bound < cost + 2.0, "bound should be tight: cost={cost} bound={bound}");
+    }
+
+    #[test]
+    fn infinite_bound_informative_region() {
+        assert!(infinite_horizon_bound(0.9, 10.0, 1.0, 0.01).is_some());
+        // irreducible = 9*delta; eps below it → None
+        assert!(infinite_horizon_bound(0.9, 10.0, 0.05, 0.01).is_none());
+        let irr = irreducible_error(0.9, 0.01);
+        assert!((irr - 0.09).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,45 @@
+//! The `Trainer` abstraction: one iterative-convergent training job.
+//!
+//! A trainer owns the full job state (a [`ParamStore`]) plus its atom
+//! decomposition, and advances it one iteration at a time — eq. (1)'s
+//! `x(k+1) = f(x(k))`. Implementations:
+//!
+//! * [`crate::models::HloTrainer`] — artifact-backed (QP, MLR, MF, CNN,
+//!   Transformer): the step executes AOT-compiled HLO via PJRT.
+//! * [`crate::models::lda::LdaTrainer`] — pure-Rust collapsed Gibbs
+//!   sampler (inherently sequential per-token state; see DESIGN.md).
+//!
+//! Determinism contract: `step(iter)` must depend only on (seed, iter,
+//! current state) — the harness replays trajectories from mid-run
+//! snapshots and the data stream must reproduce exactly.
+
+use anyhow::Result;
+
+use crate::params::{AtomLayout, ParamStore};
+
+pub trait Trainer {
+    fn name(&self) -> &str;
+
+    /// Reset parameters and data stream to the initial state for `seed`.
+    fn init(&mut self, seed: u64) -> Result<()>;
+
+    /// Run iteration `iter` (0-based), returning the post-step loss.
+    fn step(&mut self, iter: usize) -> Result<f64>;
+
+    fn state(&self) -> &ParamStore;
+
+    fn state_mut(&mut self) -> &mut ParamStore;
+
+    fn layout(&self) -> &AtomLayout;
+
+    /// Replace the full job state (used when resuming from snapshots).
+    fn set_state(&mut self, state: ParamStore) {
+        *self.state_mut() = state;
+    }
+
+    /// Lower is better for every workload in the paper (losses /
+    /// negative log-likelihood).
+    fn loss_name(&self) -> &str {
+        "loss"
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal benchmarking harness (criterion is not in the offline set).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("priority_selection");
+//! b.iter("n=1000", || select(...));
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to exceed a
+//! minimum measurement window; reports mean / p50 / p95 per iteration.
+
+use std::time::Instant;
+
+pub struct CaseResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+pub struct Bench {
+    pub group: String,
+    pub results: Vec<CaseResult>,
+    warmup_iters: usize,
+    min_window_s: f64,
+    max_iters: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        Bench {
+            group: group.to_string(),
+            results: Vec::new(),
+            warmup_iters: 3,
+            min_window_s: 0.5,
+            max_iters: 10_000,
+        }
+    }
+
+    /// For slow cases (> ~100ms per iter), cap the sample count.
+    pub fn with_budget(mut self, min_window_s: f64, max_iters: usize) -> Bench {
+        self.min_window_s = min_window_s;
+        self.max_iters = max_iters;
+        self
+    }
+
+    pub fn iter<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let window_start = Instant::now();
+        while window_start.elapsed().as_secs_f64() < self.min_window_s
+            && samples_ns.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let p50 = samples_ns[n / 2];
+        let p95 = samples_ns[(n * 95 / 100).min(n - 1)];
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            p50_ns: p50,
+            p95_ns: p95,
+        });
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench: {} ==", self.group);
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12}",
+            "case", "samples", "mean", "p50", "p95"
+        );
+        for r in &self.results {
+            println!(
+                "{:<44} {:>8} {:>12} {:>12} {:>12}",
+                r.name,
+                r.iters,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p95_ns)
+            );
+        }
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bench::new("test").with_budget(0.01, 100);
+        let mut acc = 0u64;
+        b.iter("noop", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].iters > 0);
+        assert!(b.results[0].mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_ns(2e9), "2.000 s");
+    }
+}

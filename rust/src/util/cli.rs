@@ -1,0 +1,154 @@
+//! Tiny command-line argument parser (clap is not in the offline set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments. Typed accessors parse on demand and report the
+//! offending flag in the error message.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// flags the program has asked about (for unknown-flag detection)
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(body.to_string(), v);
+                } else {
+                    args.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process args, skipping argv[0].
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// List of unknown flags (present but never queried). Call at the end
+    /// of argument handling to warn about typos.
+    pub fn unknown(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !seen.contains(*k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        // NB: a bare boolean flag followed by a non-flag token would consume
+        // it as a value (ambiguity inherent to `--flag value` grammars), so
+        // positional args come first or flags use `=`.
+        let a = args(&["pos1", "--model", "mlr", "--trials=30", "--verbose"]);
+        assert_eq!(a.str_or("model", ""), "mlr");
+        assert_eq!(a.usize_or("trials", 0), 30);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("p", 0.5), 0.5);
+        assert!(!a.bool("flag"));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args(&["--x", "-3"]);
+        assert_eq!(a.f64_or("x", 0.0), -3.0);
+    }
+
+    #[test]
+    fn unknown_flags_reported() {
+        let a = args(&["--typo", "1", "--ok", "2"]);
+        let _ = a.usize_or("ok", 0);
+        assert_eq!(a.unknown(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        let a = args(&["--n", "abc"]);
+        let _ = a.usize_or("n", 0);
+    }
+}

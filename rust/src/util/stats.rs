@@ -1,0 +1,132 @@
+//! Small statistics toolkit for the experiment harness.
+//!
+//! Mean / sample-std / 95% confidence intervals for the figure error bars
+//! (paper: "error bars indicate 95% confidence intervals, calculated by
+//! repeating each trial 100 times"), plus least-squares line fitting used
+//! to estimate the contraction rate `c` of Theorem 3.2 from an observed
+//! convergence curve.
+
+/// Summary of a sample: mean, sample std, and a 95% CI half-width.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    /// Half-width of the 95% confidence interval on the mean.
+    pub ci95: f64,
+}
+
+/// z-quantile for two-sided 95% (normal approximation; trials >= 30 in all
+/// sweeps, so the t-correction is below our reporting precision).
+const Z95: f64 = 1.959964;
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary { n: 0, mean: f64::NAN, std: f64::NAN, ci95: f64::NAN };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return Summary { n, mean, std: 0.0, ci95: 0.0 };
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+    let std = var.sqrt();
+    let ci95 = Z95 * std / (n as f64).sqrt();
+    Summary { n, mean, std, ci95 }
+}
+
+/// Least squares fit y = a + b*x; returns (a, b).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    assert!(n >= 2.0, "linfit needs >= 2 points");
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+    }
+    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    (my - b * mx, b)
+}
+
+/// Percentile (linear interpolation) of an unsorted sample, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// L2 norm of a slice.
+pub fn l2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// L2 distance between equal-length slices.
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x as f64) - (y as f64);
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!(s.ci95 > 0.0);
+    }
+
+    #[test]
+    fn summary_degenerate() {
+        assert!(summarize(&[]).mean.is_nan());
+        let s = summarize(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.ci95, 0.0);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((l2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert!((l2_dist(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,229 @@
+//! PJRT-backed integration: load every AOT artifact, execute steps from
+//! Rust, and run SCAR trials against the real HLO models.
+//!
+//! Requires `make artifacts` (skipped gracefully if the directory is
+//! missing so `cargo test` works on a fresh checkout).
+
+use std::sync::{Arc, Mutex};
+
+use scar::checkpoint::{CheckpointPolicy, Selector};
+use scar::harness::{self, TrialSpec};
+use scar::models::{build_trainer, BuildOpts, Partitioning};
+use scar::recovery::RecoveryMode;
+use scar::runtime::{artifact, Engine};
+use scar::trainer::Trainer;
+use scar::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    scar::artifact_dir().join("manifest.json").exists()
+}
+
+fn engine() -> Arc<Mutex<Engine>> {
+    Arc::new(Mutex::new(Engine::cpu(&scar::artifact_dir()).unwrap()))
+}
+
+#[test]
+fn discover_finds_all_artifacts() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let metas = artifact::discover(&scar::artifact_dir()).unwrap();
+    assert!(metas.len() >= 9, "expected >= 9 artifacts, got {}", metas.len());
+    for m in &metas {
+        m.validate().unwrap();
+        assert!(m.hlo_path.exists(), "{} missing hlo file", m.name);
+    }
+}
+
+#[test]
+fn every_artifact_loads_and_steps() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let eng = engine();
+    for variant in ["qp4", "qp32", "mlr_covtype", "mlr_mnist", "mf_jester", "cnn_mnist", "tfm_tiny"]
+    {
+        let mut t = build_trainer(eng.clone(), variant, &BuildOpts::default()).unwrap();
+        t.init(1).unwrap();
+        let l0 = t.step(0).unwrap();
+        let l1 = t.step(1).unwrap();
+        assert!(l0.is_finite() && l1.is_finite(), "{variant}: non-finite loss");
+    }
+}
+
+#[test]
+fn hlo_steps_are_deterministic_and_replayable() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let eng = engine();
+    let mut t = build_trainer(eng.clone(), "mlr_covtype", &BuildOpts::default()).unwrap();
+    // Run 5 steps; capture state at step 3; re-run from that state and
+    // check the losses replay exactly (the data stream is (seed, iter)-
+    // deterministic — the contract the trajectory cache relies on).
+    t.init(9).unwrap();
+    let mut losses = Vec::new();
+    let mut snap = None;
+    for iter in 0..5 {
+        if iter == 3 {
+            snap = Some(t.state().clone());
+        }
+        losses.push(t.step(iter).unwrap());
+    }
+    t.init(9).unwrap();
+    t.set_state(snap.unwrap());
+    for iter in 3..5 {
+        let l = t.step(iter).unwrap();
+        assert_eq!(l, losses[iter], "loss replay diverged at iter {iter}");
+    }
+}
+
+#[test]
+fn qp_loss_decreases_monotonically() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut t = build_trainer(engine(), "qp4", &BuildOpts::default()).unwrap();
+    t.init(3).unwrap();
+    let mut prev = f64::INFINITY;
+    for iter in 0..50 {
+        let l = t.step(iter).unwrap();
+        assert!(l <= prev + 1e-9, "QP loss rose at iter {iter}: {l} > {prev}");
+        prev = l;
+    }
+}
+
+#[test]
+fn scar_trial_on_real_mlr_model() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut t = build_trainer(engine(), "mlr_covtype", &BuildOpts::default()).unwrap();
+    let traj = harness::run_trajectory(&mut t, 5, 80, 50).unwrap();
+    let mut rng = Rng::new(31);
+    let n = t.layout().n_atoms();
+    let lost = rng.sample_indices(n, n / 2);
+    let full = harness::run_trial(
+        &mut t,
+        &traj,
+        &TrialSpec {
+            policy: CheckpointPolicy::full(8),
+            mode: RecoveryMode::Full,
+            fail_iter: 25,
+            lost_atoms: lost.clone(),
+        },
+        1,
+    )
+    .unwrap();
+    // Thm 4.1 requires comparing modes against the SAME checkpoint, so
+    // run partial recovery under the identical full-checkpoint policy...
+    let part_same_ckpt = harness::run_trial(
+        &mut t,
+        &traj,
+        &TrialSpec {
+            policy: CheckpointPolicy::full(8),
+            mode: RecoveryMode::Partial,
+            fail_iter: 25,
+            lost_atoms: lost.clone(),
+        },
+        1,
+    )
+    .unwrap();
+    assert!(part_same_ckpt.recovery.delta_norm <= full.recovery.delta_norm + 1e-9);
+    // ...and the full SCAR configuration must still execute cleanly.
+    let scar_cfg = harness::run_trial(
+        &mut t,
+        &traj,
+        &TrialSpec {
+            policy: CheckpointPolicy::partial(8, 8, Selector::Priority),
+            mode: RecoveryMode::Partial,
+            fail_iter: 25,
+            lost_atoms: lost,
+        },
+        1,
+    )
+    .unwrap();
+    assert!(scar_cfg.recovery.delta_norm > 0.0);
+    assert!(!full.censored && !part_same_ckpt.censored && !scar_cfg.censored);
+}
+
+#[test]
+fn cnn_partitionings_cover_same_elements() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let eng = engine();
+    let by_layer = build_trainer(
+        eng.clone(),
+        "cnn_mnist",
+        &BuildOpts { partitioning: Partitioning::ByLayer, ..BuildOpts::default() },
+    )
+    .unwrap();
+    let by_shard = build_trainer(
+        eng,
+        "cnn_mnist",
+        &BuildOpts { partitioning: Partitioning::ByShard, ..BuildOpts::default() },
+    )
+    .unwrap();
+    let (ll, sl) = (by_layer.layout(), by_shard.layout());
+    assert_eq!(ll.total_len(), sl.total_len());
+    assert!(sl.n_atoms() > ll.n_atoms());
+    assert!(ll.is_disjoint(by_layer.state()));
+    assert!(sl.is_disjoint(by_shard.state()));
+}
+
+#[test]
+fn engine_rejects_wrong_input_count() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let eng = engine();
+    let mut guard = eng.lock().unwrap();
+    guard.load("qp4").unwrap();
+    let one = scar::runtime::literal_f32(&[4], &[0.0; 4]).unwrap();
+    let err = guard.execute("qp4", &[one]);
+    assert!(err.is_err());
+}
+
+/// Regression: the xla crate's literal-based `execute` leaks input device
+/// buffers (xla_rs.cc releases without freeing); our runtime must route
+/// through caller-owned buffers. 150 steps of mlr_covtype move ~100 MB of
+/// batch data — RSS growth beyond a small allowance means the leak is
+/// back.
+#[test]
+fn step_loop_does_not_leak_memory() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    fn rss_kb() -> usize {
+        let status = std::fs::read_to_string("/proc/self/status").unwrap();
+        status
+            .lines()
+            .find(|l| l.starts_with("VmRSS:"))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0)
+    }
+    let mut t = build_trainer(engine(), "mlr_covtype", &BuildOpts::default()).unwrap();
+    t.init(1).unwrap();
+    // Warm up allocator pools and XLA arenas.
+    for iter in 0..30 {
+        t.step(iter).unwrap();
+    }
+    let before = rss_kb();
+    for iter in 30..180 {
+        t.step(iter).unwrap();
+    }
+    let after = rss_kb();
+    let grown = after.saturating_sub(before);
+    // 150 steps x ~0.25 MB inputs would leak ~37 MB; allow 8 MB slack.
+    assert!(grown < 8 * 1024, "RSS grew {grown} KB over 150 steps (leak?)");
+}

@@ -1,0 +1,256 @@
+//! Integration tests across runtime + coordinator + harness (no PJRT):
+//! end-to-end SCAR semantics on a fast analytic trainer, plus the full
+//! cluster loop against the LDA substrate.
+//!
+//! (PJRT-backed integration lives in `artifact_roundtrip.rs`, which
+//! requires `make artifacts` to have run.)
+
+use anyhow::Result;
+
+use scar::checkpoint::{CheckpointPolicy, Selector};
+use scar::data::Corpus;
+use scar::failure::FailureInjector;
+use scar::harness::{self, Perturb, TrialSpec};
+use scar::models::lda::LdaTrainer;
+use scar::params::{AtomLayout, ParamStore, Tensor};
+use scar::recovery::RecoveryMode;
+use scar::trainer::Trainer;
+use scar::util::rng::Rng;
+
+/// Analytic linear-contraction trainer: x <- x* + c (x - x*), with loss
+/// ‖x − x*‖. Exactly satisfies assumption (3), so iteration costs follow
+/// Theorem 3.2's worst case for adversarial δ.
+struct Contraction {
+    c: f64,
+    xstar: Vec<f32>,
+    state: ParamStore,
+    layout: AtomLayout,
+}
+
+impl Contraction {
+    fn new(dim: usize, c: f64, seed: u64) -> Contraction {
+        let mut rng = Rng::new(seed);
+        let xstar: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let state = ParamStore::new(vec![Tensor::zeros("x", &[dim, 1])]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&state, "x"));
+        Contraction { c, xstar, state, layout }
+    }
+}
+
+impl Trainer for Contraction {
+    fn name(&self) -> &str {
+        "contraction"
+    }
+
+    fn init(&mut self, _seed: u64) -> Result<()> {
+        self.state.get_mut("x").data.iter_mut().for_each(|v| *v = 0.0);
+        Ok(())
+    }
+
+    fn step(&mut self, _iter: usize) -> Result<f64> {
+        let mut err = 0.0f64;
+        let data = &mut self.state.get_mut("x").data;
+        for (x, s) in data.iter_mut().zip(&self.xstar) {
+            *x = s + ((self.c) as f32) * (*x - s);
+            let d = (*x - s) as f64;
+            err += d * d;
+        }
+        Ok(err.sqrt())
+    }
+
+    fn state(&self) -> &ParamStore {
+        &self.state
+    }
+
+    fn state_mut(&mut self) -> &mut ParamStore {
+        &mut self.state
+    }
+
+    fn layout(&self) -> &AtomLayout {
+        &self.layout
+    }
+}
+
+fn trajectory(c: f64) -> (Contraction, harness::Trajectory) {
+    let mut t = Contraction::new(64, c, 7);
+    let traj = harness::run_trajectory(&mut t, 1, 120, 60).unwrap();
+    (t, traj)
+}
+
+#[test]
+fn trajectory_converges_at_target() {
+    let (_t, traj) = trajectory(0.85);
+    assert_eq!(traj.converged_iters, 60);
+    assert!(traj.losses[59] < traj.losses[0]);
+    assert_eq!(traj.snapshots.len(), traj.losses.len() + 1);
+}
+
+#[test]
+fn zero_loss_failure_has_zero_cost() {
+    let (mut t, traj) = trajectory(0.85);
+    let spec = TrialSpec {
+        policy: CheckpointPolicy::full(10),
+        mode: RecoveryMode::Partial,
+        fail_iter: 30,
+        lost_atoms: vec![], // nothing lost
+    };
+    let r = harness::run_trial(&mut t, &traj, &spec, 3).unwrap();
+    assert_eq!(r.iteration_cost, 0.0);
+    assert_eq!(r.recovery.delta_norm, 0.0);
+}
+
+#[test]
+fn partial_recovery_costs_at_most_full() {
+    let (mut t, traj) = trajectory(0.85);
+    let mut rng = Rng::new(11);
+    let n = t.layout.n_atoms();
+    let mut full_total = 0.0;
+    let mut part_total = 0.0;
+    for trial in 0..20 {
+        let lost = rng.sample_indices(n, n / 2);
+        let mk = |mode| TrialSpec {
+            policy: CheckpointPolicy::full(10),
+            mode,
+            fail_iter: 25 + (trial % 10),
+            lost_atoms: lost.clone(),
+        };
+        full_total += harness::run_trial(&mut t, &traj, &mk(RecoveryMode::Full), trial as u64)
+            .unwrap()
+            .iteration_cost;
+        part_total += harness::run_trial(&mut t, &traj, &mk(RecoveryMode::Partial), trial as u64)
+            .unwrap()
+            .iteration_cost;
+    }
+    assert!(
+        part_total <= full_total,
+        "partial {part_total} should not exceed full {full_total}"
+    );
+    assert!(full_total > 0.0);
+}
+
+#[test]
+fn priority_checkpoints_beat_random_on_average() {
+    let (mut t, traj) = trajectory(0.9);
+    let mut rng = Rng::new(13);
+    let n = t.layout.n_atoms();
+    let mut by_sel = Vec::new();
+    for sel in [Selector::Priority, Selector::Random] {
+        let mut total = 0.0;
+        for trial in 0..30 {
+            let mut f_rng = rng.derive(trial as u64);
+            let lost = f_rng.sample_indices(n, n / 2);
+            let spec = TrialSpec {
+                policy: CheckpointPolicy::partial(8, 8, sel),
+                mode: RecoveryMode::Partial,
+                fail_iter: 20 + (trial % 20),
+                lost_atoms: lost,
+            };
+            total += harness::run_trial(&mut t, &traj, &spec, trial as u64).unwrap().iteration_cost;
+        }
+        by_sel.push(total);
+    }
+    assert!(
+        by_sel[0] <= by_sel[1],
+        "priority {} should not exceed random {}",
+        by_sel[0],
+        by_sel[1]
+    );
+}
+
+#[test]
+fn measured_cost_respects_thm_3_2_bound_for_adversarial_delta() {
+    let c = 0.8;
+    let (mut t, traj) = trajectory(c);
+    let xstar = traj.x_star().clone();
+    let x0 = traj.state_at(0).l2_distance(&xstar);
+    for trial in 0..10 {
+        let norm = x0 * (0.02 + 0.05 * trial as f64);
+        let (delta, cost, censored) = harness::run_perturbation_trial(
+            &mut t,
+            &traj,
+            30,
+            Perturb::Adversarial { norm },
+            trial as u64,
+        )
+        .unwrap();
+        assert!(!censored);
+        let bound = scar::theory::iteration_cost_bound(
+            c,
+            x0,
+            &[scar::theory::Perturbation { iter: 30, norm: delta }],
+        );
+        assert!(
+            cost <= bound.ceil() + 1.0,
+            "cost {cost} exceeds bound {bound} at norm {norm}"
+        );
+    }
+}
+
+#[test]
+fn reset_fraction_perturbation_is_monotone_in_fraction() {
+    let (mut t, traj) = trajectory(0.85);
+    let mut deltas = Vec::new();
+    for frac in [0.1, 0.5, 1.0] {
+        let mut acc = 0.0;
+        for trial in 0..10 {
+            let (d, _, _) = harness::run_perturbation_trial(
+                &mut t,
+                &traj,
+                40,
+                Perturb::ResetFraction { fraction: frac },
+                1000 + trial,
+            )
+            .unwrap();
+            acc += d;
+        }
+        deltas.push(acc);
+    }
+    assert!(deltas[0] < deltas[1] && deltas[1] < deltas[2], "{deltas:?}");
+}
+
+#[test]
+fn cluster_training_with_lda_detects_and_recovers() {
+    let corpus = Corpus::lda_generative(120, 200, 5, 30, 0.5, 0.1, 3);
+    let mut trainer = LdaTrainer::new("lda_it", corpus, 5, 1.0, 1.0);
+    let mut store = scar::storage::MemStore::new();
+    let report = scar::cluster::run_cluster_training(
+        &mut trainer,
+        3,
+        40,
+        CheckpointPolicy::partial(4, 4, Selector::Priority),
+        &mut store,
+        Some((5, 1)),
+        11,
+        std::time::Duration::from_millis(2),
+    )
+    .unwrap();
+    use scar::cluster::ClusterEvent as E;
+    let killed = report.events.iter().any(|e| matches!(e, E::NodeKilled { node: 1, .. }));
+    let dead = report.events.iter().any(|e| matches!(e, E::NodeDeclaredDead { node: 1, .. }));
+    let recovered = report.events.iter().any(|e| matches!(e, E::Recovered { .. }));
+    assert!(killed && dead && recovered, "events: {:?}", report.events);
+    // Training made progress end to end.
+    assert!(report.losses.last().unwrap() < &report.losses[0]);
+    assert!(report.checkpoint_bytes > 0);
+}
+
+#[test]
+fn lda_iteration_costs_behave_like_hlo_models() {
+    let corpus = Corpus::lda_generative(150, 300, 5, 40, 0.5, 0.1, 5);
+    let mut t = LdaTrainer::new("lda_it2", corpus, 5, 1.0, 1.0);
+    let traj = harness::run_trajectory(&mut t, 2, 40, 25).unwrap();
+    let inj = FailureInjector::new(0.1, 20);
+    let mut rng = Rng::new(17);
+    let ev = inj.sample_atom_failure(t.layout().n_atoms(), 0.5, &mut rng);
+    // Pin the failure between checkpoints: a failure landing exactly on a
+    // checkpoint iteration restores just-saved values (δ = 0 by design).
+    let spec = TrialSpec {
+        policy: CheckpointPolicy::full(5),
+        mode: RecoveryMode::Partial,
+        fail_iter: 7,
+        lost_atoms: ev.lost_atoms,
+    };
+    let r = harness::run_trial(&mut t, &traj, &spec, 23).unwrap();
+    assert!(r.recovery.delta_norm > 0.0);
+    assert!(r.iteration_cost >= -5.0); // sanity: no wild negative cost
+}

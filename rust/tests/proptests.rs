@@ -1,0 +1,287 @@
+//! Property-based tests over the coordinator invariants.
+//!
+//! `proptest` is not in the offline crate set, so these use a small
+//! in-repo harness (`prop_check`): seeded random case generation with N
+//! cases per property and first-failure reporting — the same discipline,
+//! minus shrinking.
+
+use scar::checkpoint::{select, CheckpointCoordinator, CheckpointPolicy, Selector};
+use scar::params::{AtomLayout, ParamStore, Segment, Tensor};
+use scar::partition::Partition;
+use scar::recovery::{recover, RecoveryMode};
+use scar::storage::{CheckpointStore, MemStore};
+use scar::theory;
+use scar::util::rng::Rng;
+
+/// Run `cases` random cases of a property; panics with the failing seed.
+fn prop_check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+fn random_store(rng: &mut Rng) -> (ParamStore, AtomLayout) {
+    let n_tensors = 1 + rng.below(3);
+    let mut tensors = Vec::new();
+    for t in 0..n_tensors {
+        let rows = 2 + rng.below(20);
+        let cols = 1 + rng.below(6);
+        let mut tensor = Tensor::zeros(&format!("t{t}"), &[rows, cols]);
+        tensor.data.iter_mut().for_each(|v| *v = rng.normal() as f32);
+        tensors.push(tensor);
+    }
+    let store = ParamStore::new(tensors.clone());
+    // Atoms: rows of every tensor.
+    let mut atoms = Vec::new();
+    for (ti, t) in store.tensors.iter().enumerate() {
+        let rl = t.row_len();
+        for r in 0..t.rows() {
+            atoms.push(vec![Segment { tensor: ti, start: r * rl, len: rl }]);
+        }
+    }
+    let layout = AtomLayout::new(atoms);
+    (store, layout)
+}
+
+fn perturbed(rng: &mut Rng, base: &ParamStore, scale: f32) -> ParamStore {
+    let mut out = base.clone();
+    for t in out.tensors.iter_mut() {
+        for v in t.data.iter_mut() {
+            *v += rng.normal() as f32 * scale;
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_atom_layouts_are_disjoint_and_complete() {
+    prop_check("layout disjoint+complete", 50, |rng| {
+        let (store, layout) = random_store(rng);
+        assert!(layout.is_disjoint(&store));
+        assert_eq!(layout.total_len(), store.total_elems());
+    });
+}
+
+#[test]
+fn prop_partition_covers_each_atom_exactly_once() {
+    prop_check("partition coverage", 50, |rng| {
+        let n_atoms = 1 + rng.below(200);
+        let n_nodes = 1 + rng.below(16);
+        let p = Partition::random(n_atoms, n_nodes, rng);
+        assert!(p.is_consistent());
+        // Balance within one atom.
+        let sizes: Vec<usize> = p.atoms_of.iter().map(|v| v.len()).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(max - min <= 1);
+    });
+}
+
+#[test]
+fn prop_repartition_preserves_consistency() {
+    prop_check("repartition consistency", 50, |rng| {
+        let n_atoms = 1 + rng.below(100);
+        let n_nodes = 2 + rng.below(8);
+        let mut p = Partition::random(n_atoms, n_nodes, rng);
+        let n_fail = 1 + rng.below(n_nodes - 1);
+        let failed = rng.sample_indices(n_nodes, n_fail);
+        let before = p.lost_atoms(&failed);
+        let moved = p.repartition(&failed);
+        assert_eq!(before, moved);
+        assert!(p.is_consistent());
+        for &f in &failed {
+            assert!(p.atoms_of[f].is_empty());
+        }
+    });
+}
+
+#[test]
+fn prop_priority_selection_is_top_k() {
+    prop_check("priority top-k", 50, |rng| {
+        let (cache, layout) = random_store(rng);
+        let current = perturbed(rng, &cache, 1.0);
+        let n = layout.n_atoms();
+        let k = 1 + rng.below(n);
+        let mut cursor = 0;
+        let mut sel_rng = rng.derive(1);
+        let chosen = select::select_atoms(
+            Selector::Priority, k, &current, &cache, &layout, &mut cursor, &mut sel_rng,
+        );
+        assert_eq!(chosen.len(), k.min(n));
+        // Every chosen atom's distance >= every unchosen atom's distance.
+        let dist: Vec<f64> =
+            (0..n).map(|a| current.atom_distance(&cache, &layout, a)).collect();
+        let min_chosen = chosen.iter().map(|&a| dist[a]).fold(f64::INFINITY, f64::min);
+        for a in 0..n {
+            if !chosen.contains(&a) {
+                assert!(
+                    dist[a] <= min_chosen + 1e-12,
+                    "unchosen atom {a} has larger distance"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_thm_4_1_partial_delta_never_exceeds_full() {
+    prop_check("Thm 4.1", 60, |rng| {
+        let (x_c, layout) = random_store(rng); // checkpoint
+        let x_t = perturbed(rng, &x_c, 0.5); // current state at failure
+        let mut store = MemStore::new();
+        let _ = CheckpointCoordinator::new(
+            CheckpointPolicy::full(1),
+            &x_c,
+            &layout,
+            &mut store,
+        )
+        .unwrap();
+        let n = layout.n_atoms();
+        let k = 1 + rng.below(n);
+        let lost = rng.sample_indices(n, k);
+        let full = recover(RecoveryMode::Full, &mut x_t.clone(), &layout, &lost, &store).unwrap();
+        let part =
+            recover(RecoveryMode::Partial, &mut x_t.clone(), &layout, &lost, &store).unwrap();
+        assert!(
+            part.delta_norm <= full.delta_norm + 1e-9,
+            "partial {} > full {}",
+            part.delta_norm,
+            full.delta_norm
+        );
+    });
+}
+
+#[test]
+fn prop_thm_4_2_expected_delta_ratio() {
+    // E‖δ'‖² = p‖δ‖² for uniformly-random lost subsets: check the Monte
+    // Carlo mean over many subsets is within a few percent.
+    let mut rng = Rng::new(0x42d);
+    let (x_c, layout) = {
+        // larger store for tighter concentration
+        let mut t = Tensor::zeros("w", &[400, 2]);
+        t.data.iter_mut().for_each(|v| *v = rng.normal() as f32);
+        let s = ParamStore::new(vec![t]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&s, "w"));
+        (s, layout)
+    };
+    let x_t = perturbed(&mut rng, &x_c, 0.3);
+    let mut store = MemStore::new();
+    let _ = CheckpointCoordinator::new(CheckpointPolicy::full(1), &x_c, &layout, &mut store)
+        .unwrap();
+    let full_sq = {
+        let r = recover(RecoveryMode::Full, &mut x_t.clone(), &layout, &[], &store).unwrap();
+        r.delta_norm * r.delta_norm
+    };
+    for p in [0.25, 0.5, 0.75] {
+        let n = layout.n_atoms();
+        let k = (n as f64 * p) as usize;
+        let trials = 300;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let lost = rng.sample_indices(n, k);
+            let r =
+                recover(RecoveryMode::Partial, &mut x_t.clone(), &layout, &lost, &store).unwrap();
+            acc += r.delta_norm * r.delta_norm;
+        }
+        let ratio = acc / trials as f64 / full_sq;
+        assert!(
+            (ratio - p).abs() < 0.05,
+            "E‖δ'‖²/‖δ‖² = {ratio:.3}, expected {p}"
+        );
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_through_stores() {
+    prop_check("checkpoint roundtrip", 30, |rng| {
+        let (state, layout) = random_store(rng);
+        let mut store = MemStore::new();
+        let mut coord = CheckpointCoordinator::new(
+            CheckpointPolicy::full(1),
+            &state,
+            &layout,
+            &mut store,
+        )
+        .unwrap();
+        let newer = perturbed(rng, &state, 2.0);
+        let mut c_rng = rng.derive(9);
+        coord.checkpoint_now(3, &newer, &layout, &mut store, &mut c_rng).unwrap();
+        // Full recovery must reproduce `newer` exactly.
+        let mut recovered = perturbed(rng, &state, 5.0);
+        recover(RecoveryMode::Full, &mut recovered, &layout, &[], &store).unwrap();
+        assert!(recovered.l2_distance(&newer) < 1e-6);
+    });
+}
+
+#[test]
+fn prop_bound_nonnegative_and_monotone() {
+    prop_check("Thm 3.2 monotonicity", 100, |rng| {
+        let c = rng.range_f64(0.3, 0.99);
+        let x0 = rng.range_f64(0.5, 50.0);
+        let iter = rng.below(40);
+        let norm = rng.range_f64(0.001, 5.0);
+        let b1 = theory::iteration_cost_bound(
+            c,
+            x0,
+            &[theory::Perturbation { iter, norm }],
+        );
+        let b2 = theory::iteration_cost_bound(
+            c,
+            x0,
+            &[theory::Perturbation { iter, norm: norm * 2.0 }],
+        );
+        assert!(b1 >= 0.0);
+        assert!(b2 >= b1);
+        // Splitting a perturbation across two events can only grow Δ_T
+        // when the second lands later (discount c^{-l} grows with l).
+        let b_split = theory::iteration_cost_bound(
+            c,
+            x0,
+            &[
+                theory::Perturbation { iter, norm: norm / 2.0 },
+                theory::Perturbation { iter: iter + 5, norm: norm / 2.0 },
+            ],
+        );
+        assert!(b_split >= b1 - 1e-12);
+    });
+}
+
+#[test]
+fn prop_running_checkpoint_mixes_iterations() {
+    // With partial checkpoints, saved_iter must differ across atoms and
+    // recovery must read each atom's *latest* record.
+    prop_check("running checkpoint", 30, |rng| {
+        let (state, layout) = random_store(rng);
+        let n = layout.n_atoms();
+        if n < 4 {
+            return;
+        }
+        let mut store = MemStore::new();
+        let policy = CheckpointPolicy { fraction: 0.5, interval: 1, selector: Selector::RoundRobin };
+        let mut coord = CheckpointCoordinator::new(policy, &state, &layout, &mut store).unwrap();
+        let mut c_rng = rng.derive(3);
+        let v1 = perturbed(rng, &state, 1.0);
+        let v2 = perturbed(rng, &state, 1.0);
+        coord.checkpoint_now(1, &v1, &layout, &mut store, &mut c_rng).unwrap();
+        coord.checkpoint_now(2, &v2, &layout, &mut store, &mut c_rng).unwrap();
+        let iters: Vec<usize> = (0..n).map(|a| coord.saved_iter(a)).collect();
+        assert!(iters.iter().any(|&i| i == 2));
+        // Each store record matches the snapshot it was saved from.
+        let mut buf = Vec::new();
+        for a in 0..n {
+            let rec = store.get_atom(a).unwrap().unwrap();
+            let src = match rec.iter {
+                0 => &state,
+                1 => &v1,
+                2 => &v2,
+                _ => unreachable!(),
+            };
+            src.read_atom(&layout, a, &mut buf);
+            assert_eq!(rec.values, buf, "atom {a} at iter {}", rec.iter);
+        }
+    });
+}
