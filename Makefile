@@ -1,0 +1,45 @@
+# SCAR build/verify entry points. The Rust crate is fully offline
+# (vendored path deps); `artifacts` needs a Python env with JAX.
+
+CARGO_DIR := rust
+
+.PHONY: build test check fmt clippy doc artifacts figures figures-pjrt clean
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+fmt:
+	cd $(CARGO_DIR) && cargo fmt --check
+
+clippy:
+	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
+
+doc:
+	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# The full gate: formatting, lints, tests, docs.
+check: fmt clippy test doc
+
+# AOT-lower every model variant to HLO text + metadata (L2 -> artifacts/).
+artifacts:
+	python3 python/compile/aot.py --outdir artifacts
+
+# Scenario sweeps runnable on a fresh offline clone (pure-Rust LDA
+# substrate, no PJRT artifacts needed).
+figures: build
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/failure_models.toml
+
+# Paper-figure sweeps: additionally require `make artifacts` plus the
+# real PJRT bindings in place of rust/vendor/xla (the vendored stub
+# refuses to compile HLO by design).
+figures-pjrt: build
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/fig5.toml
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/fig6.toml
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/fig7.toml
+
+clean:
+	cd $(CARGO_DIR) && cargo clean
+	rm -rf results

@@ -38,7 +38,7 @@ fn main() -> Result<()> {
         iters,
         CheckpointPolicy::partial(8, 4, Selector::Priority),
         &mut store,
-        Some((kill_iter, kill_node)),
+        &[(kill_iter, kill_node)],
         seed,
         Duration::from_millis(5),
     )?;

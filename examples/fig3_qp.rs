@@ -17,6 +17,7 @@ use scar::harness::{self, Perturb};
 use scar::models::default_engine;
 use scar::models::presets::{build_preset, preset};
 use scar::theory::{self, Perturbation};
+use scar::trainer::Trainer;
 use scar::util::cli::Args;
 use scar::util::rng::Rng;
 

@@ -1,90 +1,29 @@
-//! Figure 5: iteration costs of MLR on the MNIST-like workload for
-//! (a) random and (b) adversarial perturbations, vs the Theorem 3.2 bound.
+//! Figure 5: iteration costs of MLR for (a) random and (b) adversarial
+//! perturbations, vs the Theorem 3.2 bound.
 //!
-//! A single perturbation is generated at iteration 50; ε is set so an
-//! unperturbed trial converges in roughly 100 iterations (paper caption).
-//! Expected shape: random-δ costs well under the bound (loose), while
-//! adversarial-δ costs approach it (tight worst case).
+//! Thin wrapper over the scenario engine: the experiment itself lives in
+//! `scenarios/fig5.toml`; this driver just loads it, applies CLI
+//! overrides, and runs the sweep (in parallel across cores by default).
 //!
-//!   cargo run --release --example fig5_mlr_perturb -- [--trials 60]
+//!   cargo run --release --example fig5_mlr_perturb -- \
+//!       [--trials 60] [--seed 42] [--workers 4] [--scenario path.toml]
 
 use anyhow::Result;
 
-use scar::harness::{self, Perturb};
-use scar::models::default_engine;
-use scar::models::presets::{build_preset, preset};
-use scar::theory::{self, Perturbation};
+use scar::scenario::{self, Scenario};
 use scar::util::cli::Args;
-use scar::util::rng::Rng;
-use scar::util::stats::summarize;
 
 fn main() -> Result<()> {
     let args = Args::parse();
-    let trials = args.usize_or("trials", 60);
-    let seed = args.u64_or("seed", 42);
-    let preset_name = args.str_or("preset", "mlr_mnist_fig5");
+    let path = scenario::find_bundled(&args.str_or("scenario", "scenarios/fig5.toml"));
+    let mut scn = Scenario::from_file(&path)?;
+    scenario::apply_cli_overrides(&mut scn, &args)?;
 
-    let engine = default_engine()?;
-    let p = preset(&preset_name);
-    let mut trainer = build_preset(Some(engine), &p, 1234)?;
-
-    eprintln!("[fig5] tracing unperturbed trajectory ({} iters) ...", p.max_iters);
-    let traj = harness::run_trajectory(trainer.as_mut(), seed, p.max_iters, p.target_iters)?;
-    let xstar = traj.x_star().clone();
-    let errors: Vec<f64> = traj
-        .snapshots
-        .iter()
-        .take(traj.converged_iters)
-        .map(|s| s.l2_distance(&xstar))
-        .collect();
-    let c = theory::estimate_rate_conservative(&errors, errors[traj.converged_iters - 1] * 1.05);
-    let (amp, _) = theory::estimate_slow_mode(&errors, errors[traj.converged_iters - 1] * 1.05);
-    let x0 = amp.min(errors[0]);
-    println!(
-        "unperturbed: {} iters to ε={:.4}; empirical c={:.5}, ‖x0−x*‖={:.4}",
-        traj.converged_iters, traj.threshold, c, x0
-    );
-
-    let t_pert = 50.min(traj.converged_iters.saturating_sub(5)).max(1);
-    let mut rng = Rng::new(seed ^ 0x515);
-    std::fs::create_dir_all("results")?;
-
-    for (panel, label) in [("a", "random"), ("b", "adversarial")] {
-        let mut rows = vec!["norm,cost,bound".to_string()];
-        let mut within = 0usize;
-        let mut costs = Vec::new();
-        let mut gaps = Vec::new();
-        for trial in 0..trials {
-            let norm = x0 * 10f64.powf(rng.range_f64(-2.0, 0.0));
-            let kind = if label == "random" {
-                Perturb::Random { norm }
-            } else {
-                Perturb::Adversarial { norm }
-            };
-            let (delta, cost, _) = harness::run_perturbation_trial(
-                trainer.as_mut(),
-                &traj,
-                t_pert,
-                kind,
-                seed ^ (0x1000 + trial as u64),
-            )?;
-            let bound =
-                theory::iteration_cost_bound(c, x0, &[Perturbation { iter: t_pert, norm: delta }]);
-            if cost <= bound.ceil() {
-                within += 1;
-            }
-            costs.push(cost);
-            gaps.push(bound - cost);
-            rows.push(format!("{delta},{cost},{bound}"));
-        }
-        std::fs::write(format!("results/fig5{panel}.csv"), rows.join("\n"))?;
-        let s = summarize(&costs);
-        let g = summarize(&gaps);
-        println!(
-            "fig5({panel}) {label:<12}: mean cost {:>7.2} ± {:>5.2}, {}/{} within bound, mean bound-cost gap {:>7.2}",
-            s.mean, s.ci95, within, trials, g.mean
-        );
+    eprintln!("[fig5] running scenario '{}' from {}", scn.name, path.display());
+    let report = scenario::run_with_default_engine(&scn)?;
+    print!("{}", report.render());
+    if let Some(out) = scenario::write_output(&report, &scn)? {
+        println!("-> {out}");
     }
-    println!("-> results/fig5a.csv, results/fig5b.csv");
     Ok(())
 }

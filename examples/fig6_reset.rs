@@ -1,100 +1,28 @@
 //! Figure 6: iteration costs of reset-to-initial-value perturbations for
 //! (a) MLR and (b) LDA.
 //!
-//! Perturbations reset a uniformly-random fraction of atoms to their
-//! initial values at iteration 50 — exactly the perturbation shape that
-//! partial recovery from an x(0)-initialized running checkpoint induces
-//! (§5.2: "simulates the type of perturbations the training algorithm
-//! would observe in the partial recovery scenario").
+//! Thin wrapper over the scenario engine: the sweep (both panels, all
+//! reset fractions) is declared in `scenarios/fig6.toml`.
 //!
-//!   cargo run --release --example fig6_reset -- [--trials 40]
+//!   cargo run --release --example fig6_reset -- \
+//!       [--trials 40] [--seed 42] [--workers 4] [--scenario path.toml]
 
 use anyhow::Result;
 
-use scar::harness::{self, Cell, Perturb};
-use scar::models::default_engine;
-use scar::models::presets::{build_preset, preset};
-use scar::theory::{self, Perturbation};
+use scar::scenario::{self, Scenario};
 use scar::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse();
-    let trials = args.usize_or("trials", 40);
-    let seed = args.u64_or("seed", 42);
-    let fractions = [0.125, 0.25, 0.5, 0.75, 1.0];
+    let path = scenario::find_bundled(&args.str_or("scenario", "scenarios/fig6.toml"));
+    let mut scn = Scenario::from_file(&path)?;
+    scenario::apply_cli_overrides(&mut scn, &args)?;
 
-    let engine = default_engine()?;
-    std::fs::create_dir_all("results")?;
-
-    for (panel, preset_name) in [("a", "mlr_mnist_fig5"), ("b", "lda_20news")] {
-        let p = preset(preset_name);
-        let mut trainer = if preset_name.starts_with("lda") {
-            build_preset(None, &p, 1234)?
-        } else {
-            build_preset(Some(engine.clone()), &p, 1234)?
-        };
-        eprintln!("[fig6{panel}] {} unperturbed trajectory ...", p.name);
-        let traj = harness::run_trajectory(trainer.as_mut(), seed, p.max_iters, p.target_iters)?;
-        let xstar = traj.x_star().clone();
-        let errors: Vec<f64> = traj
-            .snapshots
-            .iter()
-            .take(traj.converged_iters)
-            .map(|s| s.l2_distance(&xstar))
-            .collect();
-        let mut c =
-            theory::estimate_rate_conservative(&errors, errors[traj.converged_iters - 1] * 1.05);
-        if !c.is_finite() {
-            // LDA's Gibbs chain has no L2 state contraction (counts keep
-            // fluctuating); estimate c from the likelihood curve instead.
-            let mut est = scar::advisor::OnlineRateEstimator::default();
-            for &l in &traj.losses[..traj.converged_iters] {
-                est.observe(l);
-            }
-            c = est.rate().unwrap_or(f64::NAN);
-        }
-        let (amp, _) =
-            theory::estimate_slow_mode(&errors, errors[traj.converged_iters - 1] * 1.05);
-        let x0 = if amp.is_finite() { amp.min(errors[0]) } else { errors[0] };
-        let t_pert = 50.min(traj.converged_iters.saturating_sub(5)).max(1);
-
-        let mut cells = Vec::new();
-        let mut rows = vec!["fraction,norm,cost,bound".to_string()];
-        for &frac in &fractions {
-            let mut costs = Vec::new();
-            let mut censored = 0usize;
-            for trial in 0..trials {
-                let (delta, cost, cens) = harness::run_perturbation_trial(
-                    trainer.as_mut(),
-                    &traj,
-                    t_pert,
-                    Perturb::ResetFraction { fraction: frac },
-                    seed ^ (0x6000 + (trial * 31 + (frac * 1000.0) as usize) as u64),
-                )?;
-                let bound = if c.is_finite() {
-                    theory::iteration_cost_bound(
-                        c,
-                        x0,
-                        &[Perturbation { iter: t_pert, norm: delta }],
-                    )
-                } else {
-                    f64::NAN
-                };
-                costs.push(cost);
-                censored += cens as usize;
-                rows.push(format!("{frac},{delta},{cost},{bound}"));
-            }
-            cells.push(Cell::new(format!("{} reset {:.3}", p.name, frac), costs, censored));
-        }
-        println!(
-            "{}",
-            harness::render_table(
-                &format!("Fig 6({panel}): {} reset-to-init perturbations @ iter {t_pert} (c={c:.4})", p.name),
-                &cells
-            )
-        );
-        std::fs::write(format!("results/fig6{panel}.csv"), rows.join("\n"))?;
+    eprintln!("[fig6] running scenario '{}' from {}", scn.name, path.display());
+    let report = scenario::run_with_default_engine(&scn)?;
+    print!("{}", report.render());
+    if let Some(out) = scenario::write_output(&report, &scn)? {
+        println!("-> {out}");
     }
-    println!("-> results/fig6a.csv, results/fig6b.csv");
     Ok(())
 }

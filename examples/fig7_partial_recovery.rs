@@ -1,95 +1,50 @@
 //! Figure 7: partial vs full recovery across all eight model/dataset
 //! panels, sweeping the fraction of failed parameters.
 //!
-//! Per trial: checkpoints are full (interval C), the failure iteration is
-//! geometric, a uniformly-random fraction of atoms is lost, and recovery
-//! is either full (traditional restore of everything) or partial (only
-//! lost atoms). Expected shape (paper §5.3): partial-recovery cost
-//! decreases with the failed fraction; full-recovery cost stays flat at
-//! its maximum; reductions ≈ 12–42% (3/4), 31–62% (1/2), 59–89% (1/4).
+//! Thin wrapper over the scenario engine: the grid (8 panels × 3
+//! fractions × 2 recovery modes) is declared in `scenarios/fig7.toml`;
+//! this driver loads it, applies overrides, runs the sweep on a worker
+//! pool, and prints the paper-style partial-vs-full reduction summary.
 //!
 //!   cargo run --release --example fig7_partial_recovery -- \
-//!       [--trials 20] [--panels mlr_covtype,mf_jester] [--interval 10]
+//!       [--trials 20] [--panels mlr_covtype,mf_jester] [--workers 4]
 
 use anyhow::Result;
 
-use scar::checkpoint::CheckpointPolicy;
-use scar::failure::FailureInjector;
-use scar::harness::{self, Cell, TrialSpec};
-use scar::models::default_engine;
-use scar::models::presets::{build_preset, preset, standard_panels};
-use scar::recovery::RecoveryMode;
+use scar::scenario::{self, Scenario};
 use scar::util::cli::Args;
-use scar::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::parse();
-    let trials = args.usize_or("trials", 20);
-    let seed = args.u64_or("seed", 42);
-    let interval = args.usize_or("interval", 10);
-    let panels: Vec<String> = match args.str_opt("panels") {
-        Some(csv) => csv.split(',').map(|s| s.trim().to_string()).collect(),
-        None => standard_panels().iter().map(|p| p.name.to_string()).collect(),
-    };
-    let fractions = [0.25, 0.5, 0.75];
+    let path = scenario::find_bundled(&args.str_or("scenario", "scenarios/fig7.toml"));
+    let mut scn = Scenario::from_file(&path)?;
+    scenario::apply_cli_overrides(&mut scn, &args)?;
 
-    let engine = default_engine()?;
-    std::fs::create_dir_all("results")?;
-    let mut csv = vec!["panel,fraction,mode,mean,ci95,n,censored".to_string()];
+    eprintln!("[fig7] running scenario '{}' from {}", scn.name, path.display());
+    let report = scenario::run_with_default_engine(&scn)?;
+    print!("{}", report.render());
 
-    for panel in &panels {
-        let p = preset(panel);
-        let mut trainer = if panel.starts_with("lda") {
-            build_preset(None, &p, 1234)?
-        } else {
-            build_preset(Some(engine.clone()), &p, 1234)?
-        };
-        eprintln!("[fig7] {panel}: unperturbed trajectory ({} iters) ...", p.max_iters);
-        let traj = harness::run_trajectory(trainer.as_mut(), seed, p.max_iters, p.target_iters)?;
-        let inj = FailureInjector::new(0.05, traj.converged_iters.saturating_sub(2).max(2));
-        let n_atoms = trainer.layout().n_atoms();
-
-        let mut cells = Vec::new();
-        for &frac in &fractions {
-            for mode in [RecoveryMode::Full, RecoveryMode::Partial] {
-                let mut costs = Vec::new();
-                let mut censored = 0usize;
-                for trial in 0..trials {
-                    let mut rng = Rng::new(seed ^ (trial as u64 * 7919 + (frac * 100.0) as u64));
-                    let ev = inj.sample_atom_failure(n_atoms, frac, &mut rng);
-                    let spec = TrialSpec {
-                        policy: CheckpointPolicy::full(interval),
-                        mode,
-                        fail_iter: ev.iter.max(1),
-                        lost_atoms: ev.lost_atoms,
-                    };
-                    let r = harness::run_trial(trainer.as_mut(), &traj, &spec, seed ^ trial as u64)?;
-                    costs.push(r.iteration_cost);
-                    censored += r.censored as usize;
-                }
-                let cell = Cell::new(format!("{panel} p={frac} {mode:?}"), costs, censored);
-                csv.push(format!(
-                    "{panel},{frac},{mode:?},{:.3},{:.3},{},{}",
-                    cell.summary.mean, cell.summary.ci95, cell.summary.n, cell.censored
-                ));
-                cells.push(cell);
+    // Paper-style reduction summary: cells are (full, partial) pairs per
+    // fraction (see scenarios/fig7.toml ordering).
+    for panel in &report.panels {
+        for pair in panel.cells.chunks(2) {
+            if pair.len() != 2 {
+                continue;
             }
-        }
-        println!("{}", harness::render_table(&format!("Fig 7: {panel}"), &cells));
-        // Paper-style reduction summary per fraction.
-        for (i, &frac) in fractions.iter().enumerate() {
-            let full = cells[2 * i].summary.mean;
-            let part = cells[2 * i + 1].summary.mean;
-            if full > 0.0 {
+            let (full, part) = (&pair[0], &pair[1]);
+            if full.summary.mean > 0.0 {
                 println!(
-                    "  {panel} p={frac}: partial reduces iteration cost by {:.0}%",
-                    100.0 * (1.0 - part / full)
+                    "  {} {} vs {}: partial reduces iteration cost by {:.0}%",
+                    panel.panel,
+                    full.label,
+                    part.label,
+                    100.0 * (1.0 - part.summary.mean / full.summary.mean)
                 );
             }
         }
-        println!();
     }
-    std::fs::write("results/fig7.csv", csv.join("\n"))?;
-    println!("-> results/fig7.csv");
+    if let Some(out) = scenario::write_output(&report, &scn)? {
+        println!("-> {out}");
+    }
     Ok(())
 }

@@ -18,6 +18,7 @@ use scar::harness::{self, Cell, TrialSpec};
 use scar::models::default_engine;
 use scar::models::presets::{build_preset, preset, standard_panels};
 use scar::recovery::RecoveryMode;
+use scar::trainer::Trainer;
 use scar::util::cli::Args;
 use scar::util::rng::Rng;
 

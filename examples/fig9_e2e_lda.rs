@@ -18,6 +18,7 @@ use scar::checkpoint::{CheckpointCoordinator, CheckpointPolicy, Selector};
 use scar::models::presets::{build_preset, preset};
 use scar::recovery::{recover, RecoveryMode};
 use scar::storage::{CheckpointStore, DiskStore, LatencyModel};
+use scar::trainer::Trainer;
 use scar::util::cli::Args;
 use scar::util::rng::Rng;
 

@@ -13,6 +13,7 @@ use scar::harness::{self, TrialSpec};
 use scar::models::default_engine;
 use scar::models::presets::{build_preset, preset, standard_panels};
 use scar::recovery::RecoveryMode;
+use scar::trainer::Trainer;
 use scar::util::cli::Args;
 use scar::util::rng::Rng;
 use scar::util::stats::summarize;

@@ -11,6 +11,7 @@ use scar::harness::{self, TrialSpec};
 use scar::models::default_engine;
 use scar::models::presets::{build_preset, preset};
 use scar::recovery::RecoveryMode;
+use scar::trainer::Trainer;
 use scar::util::rng::Rng;
 
 fn main() -> Result<()> {

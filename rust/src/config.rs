@@ -11,6 +11,7 @@ use std::str::FromStr;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::{CheckpointPolicy, Selector};
+use crate::failure::FailurePlan;
 use crate::recovery::RecoveryMode;
 use crate::util::json::Json;
 
@@ -35,6 +36,22 @@ pub struct RunConfig {
     pub fail_fraction: f64,
     /// Geometric parameter for the failure iteration.
     pub fail_geom_p: f64,
+    /// Failure model: single | correlated | cascade | flaky (see
+    /// [`FailurePlan`]). `correlated` kills `fail_nodes` of `ps_nodes`
+    /// together; the others lose `fail_fraction` of atoms.
+    pub fail_plan: String,
+    /// Correlated plan: PS nodes killed together.
+    pub fail_nodes: usize,
+    /// Cascade plan: follow-up failures after the first.
+    pub fail_cascade_extra: usize,
+    /// Cascade plan: iterations between failures.
+    pub fail_cascade_gap: usize,
+    /// Flaky plan: iterations between repeat occasions.
+    pub fail_flaky_period: usize,
+    /// Flaky plan: probability each later occasion fires.
+    pub fail_flaky_prob: f64,
+    /// Flaky plan: maximum occasions.
+    pub fail_flaky_max: usize,
     /// Where checkpoints go (empty = in-memory store).
     pub checkpoint_dir: String,
 }
@@ -54,6 +71,13 @@ impl Default for RunConfig {
             recovery: RecoveryMode::Partial,
             fail_fraction: 0.0,
             fail_geom_p: 0.05,
+            fail_plan: "single".to_string(),
+            fail_nodes: 1,
+            fail_cascade_extra: 1,
+            fail_cascade_gap: 5,
+            fail_flaky_period: 5,
+            fail_flaky_prob: 0.5,
+            fail_flaky_max: 5,
             checkpoint_dir: String::new(),
         }
     }
@@ -97,6 +121,21 @@ impl RunConfig {
             }
             "fail_fraction" => self.fail_fraction = value.parse().context("fail_fraction")?,
             "fail_geom_p" => self.fail_geom_p = value.parse().context("fail_geom_p")?,
+            "fail_plan" => self.fail_plan = value.to_string(),
+            "fail_nodes" => self.fail_nodes = value.parse().context("fail_nodes")?,
+            "fail_cascade_extra" => {
+                self.fail_cascade_extra = value.parse().context("fail_cascade_extra")?
+            }
+            "fail_cascade_gap" => {
+                self.fail_cascade_gap = value.parse().context("fail_cascade_gap")?
+            }
+            "fail_flaky_period" => {
+                self.fail_flaky_period = value.parse().context("fail_flaky_period")?
+            }
+            "fail_flaky_prob" => {
+                self.fail_flaky_prob = value.parse().context("fail_flaky_prob")?
+            }
+            "fail_flaky_max" => self.fail_flaky_max = value.parse().context("fail_flaky_max")?,
             "checkpoint_dir" => self.checkpoint_dir = value.to_string(),
             other => bail!("unknown config key '{other}'"),
         }
@@ -122,7 +161,41 @@ impl RunConfig {
         if !(0.0..1.0).contains(&self.fail_geom_p) && self.fail_geom_p != 1.0 {
             bail!("fail_geom_p must be in (0, 1]");
         }
+        if !["single", "correlated", "cascade", "flaky"].contains(&self.fail_plan.as_str()) {
+            bail!(
+                "fail_plan must be one of single|correlated|cascade|flaky, got '{}'",
+                self.fail_plan
+            );
+        }
+        if let Some(plan) = self.failure_plan() {
+            plan.validate().map_err(anyhow::Error::msg)?;
+        }
         Ok(())
+    }
+
+    /// The configured failure model, or `None` when failure injection is
+    /// disabled (`fail_fraction = 0` for atom-loss plans).
+    pub fn failure_plan(&self) -> Option<FailurePlan> {
+        match self.fail_plan.as_str() {
+            "correlated" => Some(FailurePlan::Correlated {
+                nodes: self.fail_nodes,
+                of_nodes: self.ps_nodes,
+            }),
+            _ if self.fail_fraction <= 0.0 => None,
+            "single" => Some(FailurePlan::Single { fraction: self.fail_fraction }),
+            "cascade" => Some(FailurePlan::Cascade {
+                fraction: self.fail_fraction,
+                extra: self.fail_cascade_extra,
+                gap: self.fail_cascade_gap,
+            }),
+            "flaky" => Some(FailurePlan::Flaky {
+                fraction: self.fail_fraction,
+                period: self.fail_flaky_period,
+                prob: self.fail_flaky_prob,
+                max_events: self.fail_flaky_max,
+            }),
+            _ => None,
+        }
     }
 }
 
@@ -161,6 +234,38 @@ mod tests {
         assert!(cfg.apply("checkpoint_k", "0").is_err());
         assert!(cfg.apply("nonsense", "1").is_err());
         assert!(cfg.apply("fail_fraction", "1.5").is_err());
+    }
+
+    #[test]
+    fn failure_plan_keys() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.failure_plan().is_none(), "disabled by default");
+        cfg.apply("fail_fraction", "0.25").unwrap();
+        assert_eq!(
+            cfg.failure_plan(),
+            Some(FailurePlan::Single { fraction: 0.25 })
+        );
+        cfg.apply("fail_plan", "cascade").unwrap();
+        cfg.apply("fail_cascade_extra", "3").unwrap();
+        cfg.apply("fail_cascade_gap", "7").unwrap();
+        assert_eq!(
+            cfg.failure_plan(),
+            Some(FailurePlan::Cascade { fraction: 0.25, extra: 3, gap: 7 })
+        );
+        cfg.apply("fail_plan", "correlated").unwrap();
+        cfg.apply("fail_nodes", "2").unwrap();
+        assert_eq!(
+            cfg.failure_plan(),
+            Some(FailurePlan::Correlated { nodes: 2, of_nodes: cfg.ps_nodes })
+        );
+        assert!(cfg.apply("fail_plan", "meteor").is_err());
+        // apply() restores nothing on error, so reset before the flaky case.
+        cfg.fail_plan = "flaky".to_string();
+        cfg.apply("fail_flaky_prob", "0.9").unwrap();
+        assert!(matches!(
+            cfg.failure_plan(),
+            Some(FailurePlan::Flaky { prob, .. }) if (prob - 0.9).abs() < 1e-12
+        ));
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //!   from a geometric distribution", §5.3) and the lost set is either a
 //!   uniformly-random fraction of atoms (Fig 6/7/8 semantics) or the atom
 //!   set owned by a random subset of PS nodes (cluster semantics).
+//! * [`FailurePlan`] is the declarative layer above the injector: a named
+//!   failure *model* (single loss, correlated multi-node loss, cascading
+//!   losses, a flaky node) that expands into the per-trial
+//!   [`FailureEvent`] sequence consumed by
+//!   [`crate::harness::run_plan_trial`] and the scenario engine. The
+//!   correlated and flaky models follow the failure regimes studied in
+//!   related work on unreliable networks (Yu et al. 2019) rather than the
+//!   paper's single-kill experiments.
 //! * [`HeartbeatDetector`] is the in-process stand-in for the paper's
 //!   ZooKeeper-style failure detector used by the threaded cluster
 //!   runtime: nodes post heartbeats; a node silent for longer than the
@@ -79,6 +87,151 @@ impl FailureInjector {
             lost_atoms: partition.lost_atoms(&nodes),
             failed_nodes: nodes,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure plans
+// ---------------------------------------------------------------------------
+
+/// A declarative failure model: what kind of loss a trial suffers and how
+/// often. A plan is sampled per trial into a sorted [`FailureEvent`]
+/// sequence (one event for the classic single-failure experiments, many
+/// for cascades and flaky nodes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FailurePlan {
+    /// One uniformly-random loss of `fraction` of all atoms at a
+    /// geometric iteration (Fig 7/8 semantics).
+    Single { fraction: f64 },
+    /// `nodes` of `of_nodes` PS nodes die *together* at one geometric
+    /// iteration; the lost set is the union of their partitions
+    /// (correlated failures: a rack/switch taking out several nodes).
+    Correlated { nodes: usize, of_nodes: usize },
+    /// An initial loss of `fraction` atoms followed by `extra` further
+    /// independent losses of the same size, `gap` iterations apart
+    /// (cascading failures: recovery load or a spreading fault knocking
+    /// out more capacity).
+    Cascade { fraction: f64, extra: usize, gap: usize },
+    /// A flaky node owning a fixed random `fraction` of atoms loses them
+    /// at its first (geometric) failure and then again with probability
+    /// `prob` every `period` iterations, for at most `max_events`
+    /// occasions (intermittent hardware: same data lost repeatedly).
+    Flaky { fraction: f64, period: usize, prob: f64, max_events: usize },
+}
+
+impl FailurePlan {
+    /// Short kind tag (matches the scenario-file `fail = "..."` values).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FailurePlan::Single { .. } => "single",
+            FailurePlan::Correlated { .. } => "correlated",
+            FailurePlan::Cascade { .. } => "cascade",
+            FailurePlan::Flaky { .. } => "flaky",
+        }
+    }
+
+    /// Validate parameter ranges, with scenario-file-quality messages.
+    pub fn validate(&self) -> Result<(), String> {
+        let frac_ok = |f: f64| f > 0.0 && f <= 1.0;
+        match self {
+            FailurePlan::Single { fraction } => {
+                if !frac_ok(*fraction) {
+                    return Err(format!("single: fraction must be in (0, 1], got {fraction}"));
+                }
+            }
+            FailurePlan::Correlated { nodes, of_nodes } => {
+                if *of_nodes < 2 {
+                    return Err(format!("correlated: of_nodes must be >= 2, got {of_nodes}"));
+                }
+                if *nodes == 0 || nodes >= of_nodes {
+                    return Err(format!(
+                        "correlated: nodes must be in [1, of_nodes-1={}], got {nodes}",
+                        of_nodes - 1
+                    ));
+                }
+            }
+            FailurePlan::Cascade { fraction, gap, .. } => {
+                if !frac_ok(*fraction) {
+                    return Err(format!("cascade: fraction must be in (0, 1], got {fraction}"));
+                }
+                if *gap == 0 {
+                    return Err("cascade: gap must be >= 1".to_string());
+                }
+            }
+            FailurePlan::Flaky { fraction, period, prob, max_events } => {
+                if !frac_ok(*fraction) {
+                    return Err(format!("flaky: fraction must be in (0, 1], got {fraction}"));
+                }
+                if *period == 0 {
+                    return Err("flaky: period must be >= 1".to_string());
+                }
+                if !(0.0..=1.0).contains(prob) {
+                    return Err(format!("flaky: prob must be in [0, 1], got {prob}"));
+                }
+                if *max_events == 0 {
+                    return Err("flaky: max_events must be >= 1".to_string());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw one trial's failure events, sorted by iteration. The first
+    /// event's iteration is geometric via `inj`; follow-up events (cascade
+    /// steps, flaky repeats) are offset from it and may land past
+    /// `inj.max_iter` — the trial runner applies them to the live
+    /// post-recovery run, which extends beyond the unperturbed horizon.
+    pub fn sample_events(
+        &self,
+        inj: &FailureInjector,
+        n_atoms: usize,
+        rng: &mut Rng,
+    ) -> Vec<FailureEvent> {
+        let mut events = match self {
+            FailurePlan::Single { fraction } => {
+                vec![inj.sample_atom_failure(n_atoms, *fraction, rng)]
+            }
+            FailurePlan::Correlated { nodes, of_nodes } => {
+                let partition = Partition::random(n_atoms, *of_nodes, rng);
+                vec![inj.sample_node_failure(&partition, *nodes, rng)]
+            }
+            FailurePlan::Cascade { fraction, extra, gap } => {
+                let first = inj.sample_atom_failure(n_atoms, *fraction, rng);
+                let base_iter = first.iter;
+                let mut evs = vec![first];
+                for i in 1..=*extra {
+                    let mut ev = inj.sample_atom_failure(n_atoms, *fraction, rng);
+                    ev.iter = base_iter + i * gap;
+                    evs.push(ev);
+                }
+                evs
+            }
+            FailurePlan::Flaky { fraction, period, prob, max_events } => {
+                let first = inj.sample_iter(rng);
+                let k = ((n_atoms as f64 * fraction).round() as usize).clamp(1, n_atoms);
+                let mut lost = rng.sample_indices(n_atoms, k);
+                lost.sort_unstable();
+                let mut evs = Vec::new();
+                for i in 0..*max_events {
+                    // The first occasion always fires; later ones flake
+                    // with probability `prob`. The bernoulli draw happens
+                    // for every occasion so the rng stream length is
+                    // independent of the outcomes (determinism across
+                    // refactors).
+                    let fires = rng.bernoulli(*prob);
+                    if i == 0 || fires {
+                        evs.push(FailureEvent {
+                            iter: first + i * period,
+                            lost_atoms: lost.clone(),
+                            failed_nodes: vec![],
+                        });
+                    }
+                }
+                evs
+            }
+        };
+        events.sort_by_key(|e| e.iter);
+        events
     }
 }
 
@@ -250,5 +403,73 @@ mod tests {
     fn unknown_node_is_dead() {
         let det = HeartbeatDetector::new(Duration::from_millis(10));
         assert_eq!(det.liveness(99), Liveness::Dead);
+    }
+
+    #[test]
+    fn plan_single_matches_injector_semantics() {
+        let inj = FailureInjector::new(0.1, 40);
+        let mut rng = Rng::new(5);
+        let evs = FailurePlan::Single { fraction: 0.25 }.sample_events(&inj, 80, &mut rng);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].lost_atoms.len(), 20);
+        assert!((1..=40).contains(&evs[0].iter));
+    }
+
+    #[test]
+    fn plan_correlated_loses_node_partitions() {
+        let inj = FailureInjector::new(0.1, 40);
+        let mut rng = Rng::new(6);
+        let plan = FailurePlan::Correlated { nodes: 2, of_nodes: 4 };
+        let evs = plan.sample_events(&inj, 100, &mut rng);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].failed_nodes.len(), 2);
+        // Random balanced partition: 2 of 4 nodes own half the atoms.
+        assert_eq!(evs[0].lost_atoms.len(), 50);
+    }
+
+    #[test]
+    fn plan_cascade_spaces_events() {
+        let inj = FailureInjector::new(0.1, 40);
+        let mut rng = Rng::new(7);
+        let plan = FailurePlan::Cascade { fraction: 0.1, extra: 3, gap: 5 };
+        let evs = plan.sample_events(&inj, 50, &mut rng);
+        assert_eq!(evs.len(), 4);
+        for (i, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.iter, evs[0].iter + i * 5);
+            assert_eq!(ev.lost_atoms.len(), 5);
+        }
+        // Cascade steps draw independent subsets.
+        assert_ne!(evs[0].lost_atoms, evs[1].lost_atoms);
+    }
+
+    #[test]
+    fn plan_flaky_repeats_same_atoms() {
+        let inj = FailureInjector::new(0.1, 40);
+        let mut rng = Rng::new(8);
+        let plan =
+            FailurePlan::Flaky { fraction: 0.2, period: 4, prob: 1.0, max_events: 3 };
+        let evs = plan.sample_events(&inj, 60, &mut rng);
+        assert_eq!(evs.len(), 3);
+        for ev in &evs {
+            assert_eq!(ev.lost_atoms, evs[0].lost_atoms);
+        }
+        assert_eq!(evs[1].iter, evs[0].iter + 4);
+        assert_eq!(evs[2].iter, evs[0].iter + 8);
+        // prob = 0 still fires the first occasion only.
+        let plan0 =
+            FailurePlan::Flaky { fraction: 0.2, period: 4, prob: 0.0, max_events: 5 };
+        assert_eq!(plan0.sample_events(&inj, 60, &mut rng).len(), 1);
+    }
+
+    #[test]
+    fn plan_validation_messages() {
+        assert!(FailurePlan::Single { fraction: 0.5 }.validate().is_ok());
+        assert!(FailurePlan::Single { fraction: 0.0 }.validate().is_err());
+        assert!(FailurePlan::Correlated { nodes: 4, of_nodes: 4 }.validate().is_err());
+        assert!(FailurePlan::Cascade { fraction: 0.5, extra: 2, gap: 0 }.validate().is_err());
+        let e = FailurePlan::Flaky { fraction: 0.5, period: 0, prob: 0.5, max_events: 2 }
+            .validate()
+            .unwrap_err();
+        assert!(e.contains("period"), "{e}");
     }
 }

@@ -16,6 +16,7 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::checkpoint::{CheckpointCoordinator, CheckpointPolicy};
+use crate::failure::FailureEvent;
 use crate::params::ParamStore;
 use crate::recovery::{recover, RecoveryMode, RecoveryReport};
 use crate::storage::MemStore;
@@ -161,6 +162,85 @@ pub fn run_trial(
     // failure iteration onward.
     trainer.init(traj.seed)?;
     let total = continue_from(trainer, state, spec.fail_iter, traj.threshold, cap)?;
+    let (total, censored) = match total {
+        Some(t) => (t, false),
+        None => (cap, true),
+    };
+    Ok(TrialResult {
+        iteration_cost: total as f64 - traj.converged_iters as f64,
+        censored,
+        recovery: report,
+    })
+}
+
+/// Run one trial under a multi-event failure plan (the generalization of
+/// [`run_trial`] that cascades and flaky nodes need).
+///
+/// The first event behaves exactly like [`run_trial`]: checkpoints are
+/// replayed along the cached trajectory up to the failure, the lost atoms
+/// are recovered, and the run resumes on the same data stream. Unlike the
+/// single-event path, the checkpoint coordinator then *keeps running* on
+/// the live (diverged) suffix, so later events recover from a checkpoint
+/// that reflects post-failure progress — the semantics a real deployment
+/// would see. The trial ends at the first ε-crossing (the κ(y, ε) of §3)
+/// even if later scheduled events never get to strike.
+///
+/// The returned [`RecoveryReport`] aggregates all events: counts are
+/// summed, and `delta_norm` combines the per-event perturbations as
+/// sqrt(Σ‖δᵢ‖²) — exact for the first event, an accounting convention for
+/// the rest (later δs are measured against the live run, not the cached
+/// trajectory).
+pub fn run_plan_trial(
+    trainer: &mut dyn Trainer,
+    traj: &Trajectory,
+    policy: CheckpointPolicy,
+    mode: RecoveryMode,
+    events: &[FailureEvent],
+    trial_seed: u64,
+) -> Result<TrialResult> {
+    assert!(!events.is_empty(), "run_plan_trial needs at least one event");
+    let mut events = events.to_vec();
+    events.sort_by_key(|e| e.iter);
+    let first_iter = events[0].iter.max(1).min(traj.max_iters());
+
+    let (mut coord, mut store) =
+        replay_checkpoints(traj, trainer, policy, first_iter, trial_seed)?;
+    let layout = trainer.layout().clone();
+    let mut state = traj.state_at(first_iter).clone();
+    let mut report = recover(mode, &mut state, &layout, &events[0].lost_atoms, &store)
+        .context("recovery failed")?;
+    let mut delta_sq = report.delta_norm * report.delta_norm;
+
+    let cap = default_cap(traj);
+    trainer.init(traj.seed)?;
+    trainer.set_state(state);
+    let mut ckpt_rng = Rng::new(trial_seed ^ 0x5EED_CA5C);
+    let mut next_event = 1usize;
+    let mut total = None;
+    for iter in first_iter..cap {
+        while next_event < events.len() && events[next_event].iter <= iter {
+            let r = recover(
+                mode,
+                trainer.state_mut(),
+                &layout,
+                &events[next_event].lost_atoms,
+                &store,
+            )
+            .context("recovery failed")?;
+            report.atoms_restored += r.atoms_restored;
+            report.elems_restored += r.elems_restored;
+            report.secs += r.secs;
+            delta_sq += r.delta_norm * r.delta_norm;
+            next_event += 1;
+        }
+        let loss = trainer.step(iter)?;
+        coord.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut store, &mut ckpt_rng)?;
+        if loss <= traj.threshold {
+            total = Some(iter + 1);
+            break;
+        }
+    }
+    report.delta_norm = delta_sq.sqrt();
     let (total, censored) = match total {
         Some(t) => (t, false),
         None => (cap, true),
@@ -459,6 +539,63 @@ mod tests {
         let r = run_trial(&mut t, &traj, &spec, 3).unwrap();
         assert_eq!(r.recovery.delta_norm, 0.0);
         assert_eq!(r.iteration_cost, 0.0);
+    }
+
+    #[test]
+    fn plan_trial_with_single_event_matches_run_trial() {
+        let mut t = Decay::new(8, 0.85);
+        let traj = run_trajectory(&mut t, 0, 60, 25).unwrap();
+        let spec = TrialSpec {
+            policy: CheckpointPolicy::full(7),
+            mode: RecoveryMode::Partial,
+            fail_iter: 12,
+            lost_atoms: vec![1, 4, 6],
+        };
+        let single = run_trial(&mut t, &traj, &spec, 9).unwrap();
+        let ev = crate::failure::FailureEvent {
+            iter: 12,
+            lost_atoms: vec![1, 4, 6],
+            failed_nodes: vec![],
+        };
+        let plan =
+            run_plan_trial(&mut t, &traj, spec.policy, spec.mode, &[ev], 9).unwrap();
+        assert_eq!(plan.iteration_cost, single.iteration_cost);
+        assert_eq!(plan.censored, single.censored);
+        assert!((plan.recovery.delta_norm - single.recovery.delta_norm).abs() < 1e-12);
+        assert_eq!(plan.recovery.atoms_restored, single.recovery.atoms_restored);
+    }
+
+    #[test]
+    fn plan_trial_applies_cascading_events() {
+        let mut t = Decay::new(8, 0.85);
+        let traj = run_trajectory(&mut t, 0, 60, 25).unwrap();
+        let mk = |iter: usize| crate::failure::FailureEvent {
+            iter,
+            lost_atoms: vec![0, 2, 5],
+            failed_nodes: vec![],
+        };
+        let one = run_plan_trial(
+            &mut t,
+            &traj,
+            CheckpointPolicy::full(7),
+            RecoveryMode::Partial,
+            &[mk(10)],
+            3,
+        )
+        .unwrap();
+        let three = run_plan_trial(
+            &mut t,
+            &traj,
+            CheckpointPolicy::full(7),
+            RecoveryMode::Partial,
+            &[mk(10), mk(15), mk(20)],
+            3,
+        )
+        .unwrap();
+        assert_eq!(three.recovery.atoms_restored, 9);
+        // A cascade can only slow convergence down relative to one event.
+        assert!(three.iteration_cost >= one.iteration_cost);
+        assert!(three.recovery.delta_norm >= one.recovery.delta_norm);
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //! [`params::ParamStore`] + [`params::AtomLayout`]; a
 //! [`checkpoint::CheckpointCoordinator`] and [`recovery::recover`]
 //! implement the paper's strategies; [`harness`] measures iteration
-//! costs; [`cluster`] runs the threaded PS deployment.
+//! costs; [`cluster`] runs the threaded PS deployment; [`scenario`] turns
+//! whole experiments into data files (`scenarios/*.toml`) executed as
+//! parallel trial sweeps via `scar run-scenario`.
 
 pub mod advisor;
 pub mod checkpoint;
@@ -36,6 +38,7 @@ pub mod params;
 pub mod partition;
 pub mod recovery;
 pub mod runtime;
+pub mod scenario;
 pub mod storage;
 pub mod theory;
 pub mod trainer;

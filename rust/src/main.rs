@@ -3,8 +3,9 @@
 //! Subcommands:
 //!   info                       list artifacts and their interfaces
 //!   train   [--config f] [--set k=v ...]   run one training job (local loop)
-//!   cluster [--set k=v ...]    run on the threaded PS cluster with an
-//!                              injected node failure
+//!   cluster [--set k=v ...]    run on the threaded PS cluster with a
+//!                              schedule of node kills
+//!   run-scenario <file>        execute a declarative scenario sweep
 //!   bound   --model V          estimate c / ‖x0−x*‖ and print Theorem 3.2
 //!                              bounds for a range of perturbation sizes
 
@@ -14,11 +15,12 @@ use anyhow::{bail, Context, Result};
 
 use scar::checkpoint::CheckpointCoordinator;
 use scar::config::RunConfig;
-use scar::failure::FailureInjector;
+use scar::failure::{FailureEvent, FailureInjector};
 use scar::harness;
 use scar::models::{build_trainer, default_engine, BuildOpts};
 use scar::recovery;
 use scar::runtime::artifact;
+use scar::scenario::{self, Scenario};
 use scar::storage::{CheckpointStore, DiskStore, MemStore};
 use scar::theory;
 use scar::trainer::Trainer;
@@ -32,6 +34,7 @@ fn main() -> Result<()> {
         "info" => cmd_info(),
         "train" => cmd_train(&args),
         "cluster" => cmd_cluster(&args),
+        "run-scenario" => cmd_run_scenario(&args),
         "bound" => cmd_bound(&args),
         "advisor" => cmd_advisor(&args),
         "help" | "--help" | "-h" => {
@@ -49,21 +52,47 @@ fn print_help() {
     eprintln!(
         "scar — self-correcting checkpoint-based fault tolerance for ML training
 
-USAGE: scar <info|train|cluster|bound> [flags]
+USAGE: scar <info|train|cluster|run-scenario|bound|advisor> [flags]
 
   info                          list AOT artifacts
   train   --set k=v ...         local training loop with SCAR checkpointing
-          [--config run.json]     and optional injected failure
+          [--config run.json]     and an optional injected failure plan
   cluster --set k=v ...         threaded PS cluster with heartbeats and a
-                                  scheduled node kill
+          [--kills i:n,i:n]       schedule of node kills
+  run-scenario <file.toml|json> declarative scenario sweep on a worker pool
+          [--workers n] [--trials n] [--seed s] [--output f.csv] [--dry-run]
   bound   --model <variant>     Theorem 3.2 iteration-cost bounds
   advisor --model <variant>     run a probe, estimate c on-the-fly, and
           [--fail-rate p]         recommend a checkpoint policy (§7)
 
 Config keys (for --set): model seed iters target_iters ps_nodes workers
   checkpoint_interval checkpoint_k selector recovery fail_fraction
-  fail_geom_p checkpoint_dir"
+  fail_geom_p fail_plan fail_nodes fail_cascade_extra fail_cascade_gap
+  fail_flaky_period fail_flaky_prob fail_flaky_max checkpoint_dir
+
+Bundled scenarios: scenarios/fig5.toml, fig6.toml, fig7.toml (paper
+figure sweeps), scenarios/failure_models.toml (correlated/cascade/flaky)."
     );
+}
+
+fn cmd_run_scenario(args: &Args) -> Result<()> {
+    let file = args
+        .positional
+        .get(1)
+        .context("usage: scar run-scenario <file.toml|file.json> [--workers n] [--trials n]")?;
+    let path = scenario::find_bundled(file);
+    let mut scn = Scenario::from_file(&path)?;
+    scenario::apply_cli_overrides(&mut scn, args)?;
+    if args.bool("dry-run") {
+        print!("{}", scn.describe());
+        return Ok(());
+    }
+    let report = scenario::run_with_default_engine(&scn)?;
+    print!("{}", report.render());
+    if let Some(out) = scenario::write_output(&report, &scn)? {
+        println!("-> {out}");
+    }
+    Ok(())
 }
 
 fn parse_config(args: &Args) -> Result<RunConfig> {
@@ -76,7 +105,9 @@ fn parse_config(args: &Args) -> Result<RunConfig> {
     for key in [
         "model", "seed", "iters", "target_iters", "ps_nodes", "workers",
         "checkpoint_interval", "checkpoint_k", "selector", "recovery",
-        "fail_fraction", "fail_geom_p", "checkpoint_dir",
+        "fail_fraction", "fail_geom_p", "fail_plan", "fail_nodes",
+        "fail_cascade_extra", "fail_cascade_gap", "fail_flaky_period",
+        "fail_flaky_prob", "fail_flaky_max", "checkpoint_dir",
     ] {
         if let Some(v) = args.str_opt(key) {
             cfg.apply(key, v)?;
@@ -131,19 +162,34 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut coord =
         CheckpointCoordinator::new(cfg.policy(), trainer.state(), &layout, store.as_mut())?;
 
-    // Optional failure schedule.
-    let failure = if cfg.fail_fraction > 0.0 {
-        let inj = FailureInjector::new(cfg.fail_geom_p, cfg.iters.max(2) - 1);
-        Some(inj.sample_atom_failure(layout.n_atoms(), cfg.fail_fraction, &mut rng))
-    } else {
-        None
+    // Optional failure schedule: the configured plan expands to one or
+    // more events (cascades and flaky nodes produce several).
+    let events: Vec<FailureEvent> = match cfg.failure_plan() {
+        Some(plan) => {
+            let inj = FailureInjector::new(cfg.fail_geom_p, cfg.iters.max(2) - 1);
+            let evs = plan.sample_events(&inj, layout.n_atoms(), &mut rng);
+            println!("failure plan: {plan:?}");
+            evs
+        }
+        None => Vec::new(),
     };
-    if let Some(f) = &failure {
+    // Cascade/flaky follow-ups can land past the fixed run length; they
+    // are dropped (and said so) rather than announced and never applied.
+    let (events, skipped): (Vec<FailureEvent>, Vec<FailureEvent>) =
+        events.into_iter().partition(|f| f.iter < cfg.iters);
+    for f in &events {
         println!(
             "scheduled failure: iter={} lost_atoms={}/{}",
             f.iter,
             f.lost_atoms.len(),
             layout.n_atoms()
+        );
+    }
+    if !skipped.is_empty() {
+        println!(
+            "note: {} follow-up failure(s) fell past --iters {} and were dropped",
+            skipped.len(),
+            cfg.iters
         );
     }
 
@@ -154,22 +200,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let t0 = std::time::Instant::now();
     for iter in 0..cfg.iters {
-        if let Some(f) = &failure {
-            if f.iter == iter {
-                let report = recovery::recover(
-                    cfg.recovery,
-                    trainer.state_mut(),
-                    &layout,
-                    &f.lost_atoms,
-                    store.as_ref(),
-                )?;
-                println!(
-                    "iter {iter}: FAILURE lost {} atoms -> {:?} recovery, ‖δ‖={:.4}",
-                    f.lost_atoms.len(),
-                    report.mode,
-                    report.delta_norm
-                );
-            }
+        for f in events.iter().filter(|f| f.iter == iter) {
+            let report = recovery::recover(
+                cfg.recovery,
+                trainer.state_mut(),
+                &layout,
+                &f.lost_atoms,
+                store.as_ref(),
+            )?;
+            println!(
+                "iter {iter}: FAILURE lost {} atoms -> {:?} recovery, ‖δ‖={:.4}",
+                f.lost_atoms.len(),
+                report.mode,
+                report.delta_norm
+            );
         }
         let loss = trainer.step(iter)?;
         let ck = coord.maybe_checkpoint(iter + 1, trainer.state(), &layout, store.as_mut(), &mut rng)?;
@@ -195,19 +239,36 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let engine = default_engine()?;
     let mut trainer = build_trainer(engine, &cfg.model, &BuildOpts::default())?;
     let mut store = make_store(&cfg)?;
-    let kill_iter = args.usize_or("kill-iter", cfg.iters / 3);
-    let kill_node = args.usize_or("kill-node", 0);
-    println!(
-        "cluster run: {} nodes, killing node {} at iter {}",
-        cfg.ps_nodes, kill_node, kill_iter
-    );
+    // Kill schedule: --kills "iter:node,iter:node" (correlated kills share
+    // an iteration); falls back to the single --kill-iter/--kill-node.
+    let kills: Vec<(usize, usize)> = match args.str_opt("kills") {
+        Some(spec) => spec
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|pair| -> Result<(usize, usize)> {
+                let (i, n) = pair
+                    .trim()
+                    .split_once(':')
+                    .with_context(|| format!("--kills expects iter:node, got '{pair}'"))?;
+                Ok((
+                    i.parse().with_context(|| format!("bad kill iter '{i}'"))?,
+                    n.parse().with_context(|| format!("bad kill node '{n}'"))?,
+                ))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![(
+            args.usize_or("kill-iter", cfg.iters / 3),
+            args.usize_or("kill-node", 0),
+        )],
+    };
+    println!("cluster run: {} nodes, kill schedule {:?}", cfg.ps_nodes, kills);
     let report = scar::cluster::run_cluster_training(
         &mut trainer,
         cfg.ps_nodes,
         cfg.iters,
         cfg.policy(),
         store.as_mut(),
-        Some((kill_iter, kill_node)),
+        &kills,
         cfg.seed,
         Duration::from_millis(20),
     )?;

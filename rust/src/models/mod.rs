@@ -13,6 +13,7 @@
 
 pub mod lda;
 pub mod presets;
+pub mod synthetic;
 
 use std::sync::{Arc, Mutex};
 

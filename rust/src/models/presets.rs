@@ -45,15 +45,21 @@ pub fn standard_panels() -> Vec<Preset> {
 }
 
 /// Look up a preset by name (panics on unknown names — preset names are
-/// compile-time constants in the examples).
+/// compile-time constants in the examples). Fallible callers (the
+/// scenario engine, CLI paths fed by user data) use [`try_preset`].
 pub fn preset(name: &str) -> Preset {
+    try_preset(name).unwrap_or_else(|| panic!("unknown preset '{name}'"))
+}
+
+/// Look up a preset by name, returning `None` for unknown names.
+pub fn try_preset(name: &str) -> Option<Preset> {
     let hlo = |variant, partitioning, target, max| Preset {
         name: Box::leak(name.to_string().into_boxed_str()),
         kind: PresetKind::Hlo { variant, partitioning },
         target_iters: target,
         max_iters: max,
     };
-    match name {
+    Some(match name {
         "qp4" => hlo("qp4", Partitioning::ByShard, 1000, 6000),
         "qp32" => hlo("qp32", Partitioning::ByShard, 1000, 6000),
         "mlr_mnist" => hlo("mlr_mnist", Partitioning::ByShard, 60, 100),
@@ -83,16 +89,18 @@ pub fn preset(name: &str) -> Preset {
             target_iters: 30,
             max_iters: 40,
         },
-        other => panic!("unknown preset '{other}'"),
-    }
+        _ => return None,
+    })
 }
 
 /// Build the preset's trainer. `engine` is only used by HLO presets.
+/// The trainer is `Send` so scenario sweeps can run trials on worker
+/// threads (each worker builds and owns its own instance).
 pub fn build_preset(
     engine: Option<Arc<Mutex<Engine>>>,
     p: &Preset,
     data_seed: u64,
-) -> Result<Box<dyn Trainer>> {
+) -> Result<Box<dyn Trainer + Send>> {
     match &p.kind {
         PresetKind::Hlo { variant, partitioning } => {
             let Some(engine) = engine else {

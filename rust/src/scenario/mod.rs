@@ -1,0 +1,40 @@
+//! Scenario engine: declarative failure scenarios and parallel trial
+//! sweeps.
+//!
+//! Every experiment in this repo used to be a bespoke `examples/fig*.rs`
+//! driver running 100-trial sweeps serially. This subsystem folds that
+//! pattern into data + one engine:
+//!
+//! * [`spec`] — the [`Scenario`] data model: model panels, horizons,
+//!   checkpoint/recovery policy, and a grid of perturbation or
+//!   failure-plan cells; constructible from TOML ([`toml`]) or JSON, with
+//!   key-level error messages and a lossless
+//!   [`to_json`](Scenario::to_json) round-trip.
+//! * [`runner`] — the [`ScenarioRunner`-style executor](run_scenario):
+//!   traces the unperturbed [`crate::harness::Trajectory`] once per
+//!   panel, pre-draws all per-trial randomness, then replays trial
+//!   suffixes across a worker-thread pool. Parallel and serial sweeps are
+//!   byte-identical on the same seed.
+//!
+//! End-to-end flow:
+//!
+//! ```text
+//! fig7.toml ──parse──▶ Scenario ──run_scenario──▶ ScenarioReport
+//!                         │                           ├─ render()  (tables)
+//!                         │                           └─ to_csv()  (per trial)
+//!                         └─ cells expand to FailurePlan events /
+//!                            Perturb kinds (crate::failure, crate::harness)
+//! ```
+//!
+//! Entry points: `scar run-scenario <file>` on the CLI, the bundled files
+//! under `scenarios/`, and the thin `examples/fig{5,6,7}_*.rs` wrappers.
+
+pub mod runner;
+pub mod spec;
+pub mod toml;
+
+pub use runner::{
+    apply_cli_overrides, find_bundled, run_scenario, run_with_default_engine, write_output,
+    CellReport, PanelReport, ScenarioReport,
+};
+pub use spec::{CellAction, CellSpec, CheckpointSpec, NormSpec, PerturbSpec, Scenario};

@@ -1,0 +1,584 @@
+//! Scenario execution: trajectory once, trials fanned out over a worker
+//! pool.
+//!
+//! Determinism contract: a sweep's results are a pure function of the
+//! [`Scenario`] — every trial's randomness (failure events, perturbation
+//! norms, checkpoint selection) is derived from `(scenario seed, cell
+//! index, trial index)` *before* the pool starts, and results land in
+//! per-trial slots, so the report is byte-identical whatever the worker
+//! count or scheduling order. `parallel_sweep_matches_serial_byte_for_byte`
+//! in `rust/tests/scenario.rs` pins this.
+//!
+//! Data flow (see `docs/ARCHITECTURE.md` for the long-form version):
+//!
+//! ```text
+//! Scenario ──▶ run_panel (per model panel)
+//!               ├─ build trainer, run unperturbed Trajectory (serial)
+//!               ├─ estimate (c, ‖x0−x*‖) for Theorem 3.2 bounds
+//!               ├─ expand cells × trials into Jobs (all rng here)
+//!               ├─ worker pool: each worker owns a trainer, pulls jobs,
+//!               │   replays the Trajectory suffix per trial
+//!               └─ aggregate per-cell CellReports (trial order)
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::advisor::OnlineRateEstimator;
+use crate::checkpoint::CheckpointPolicy;
+use crate::failure::{FailureEvent, FailureInjector};
+use crate::harness::{self, Perturb, Trajectory};
+use crate::models::presets::{build_preset, try_preset, PresetKind};
+use crate::models::synthetic::SyntheticTrainer;
+use crate::recovery::RecoveryMode;
+use crate::runtime::Engine;
+use crate::theory::{self, Perturbation};
+use crate::trainer::Trainer;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats::{summarize, Summary};
+
+use super::spec::{CellAction, NormSpec, PerturbSpec, Scenario};
+
+/// Dataset seed shared with the `examples/fig*.rs` drivers.
+const DATA_SEED: u64 = 1234;
+
+/// Aggregated results of one (panel, cell): per-trial vectors in trial
+/// order plus the summary statistics.
+#[derive(Debug, Clone)]
+pub struct CellReport {
+    pub label: String,
+    /// Iteration cost per trial (censored trials at the cap).
+    pub costs: Vec<f64>,
+    /// Perturbation size ‖δ‖ per trial.
+    pub deltas: Vec<f64>,
+    /// Theorem 3.2 bound per trial (NaN for failure cells and when `c`
+    /// could not be estimated).
+    pub bounds: Vec<f64>,
+    /// Per-trial censoring flags (cost reported at the cap).
+    pub censored_trials: Vec<bool>,
+    pub censored: usize,
+    pub summary: Summary,
+}
+
+impl CellReport {
+    /// Trials whose cost lands within the (ceiled) Thm 3.2 bound, if
+    /// bounds were computed.
+    pub fn within_bound(&self) -> Option<usize> {
+        if self.bounds.iter().all(|b| b.is_nan()) {
+            return None;
+        }
+        Some(
+            self.costs
+                .iter()
+                .zip(&self.bounds)
+                .filter(|(c, b)| b.is_finite() && **c <= b.ceil())
+                .count(),
+        )
+    }
+}
+
+/// One model panel's sweep results.
+#[derive(Debug, Clone)]
+pub struct PanelReport {
+    pub panel: String,
+    pub converged_iters: usize,
+    pub threshold: f64,
+    /// Empirical contraction rate (NaN when not estimable).
+    pub c: f64,
+    /// Effective ‖x⁽⁰⁾ − x*‖ used for norm scaling and bounds.
+    pub x0: f64,
+    pub cells: Vec<CellReport>,
+}
+
+/// Full scenario results; [`render`](ScenarioReport::render) and
+/// [`to_csv`](ScenarioReport::to_csv) are deterministic byte-for-byte.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub panels: Vec<PanelReport>,
+}
+
+impl ScenarioReport {
+    /// Paper-style summary tables, one per panel.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for p in &self.panels {
+            out.push_str(&format!("== scenario '{}' · panel {} ==\n", self.scenario, p.panel));
+            out.push_str(&format!(
+                "unperturbed: {} iters to ε={:.6}; c={:.5}, ‖x0−x*‖={:.4}\n",
+                p.converged_iters, p.threshold, p.c, p.x0
+            ));
+            out.push_str(&format!(
+                "{:<34} {:>4} {:>10} {:>8} {:>9} {:>10} {:>9}\n",
+                "cell", "n", "mean", "ci95", "censored", "mean ‖δ‖", "in-bound"
+            ));
+            for c in &p.cells {
+                let mean_delta = if c.deltas.is_empty() {
+                    f64::NAN
+                } else {
+                    c.deltas.iter().sum::<f64>() / c.deltas.len() as f64
+                };
+                let within = match c.within_bound() {
+                    Some(w) => format!("{w}/{}", c.costs.len()),
+                    None => "-".to_string(),
+                };
+                out.push_str(&format!(
+                    "{:<34} {:>4} {:>10.2} {:>8.2} {:>9} {:>10.4} {:>9}\n",
+                    c.label, c.summary.n, c.summary.mean, c.summary.ci95, c.censored,
+                    mean_delta, within
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Per-trial CSV (`scenario,panel,cell,trial,cost,delta,bound,censored`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("scenario,panel,cell,trial,cost,delta,bound,censored\n");
+        for p in &self.panels {
+            for c in &p.cells {
+                for i in 0..c.costs.len() {
+                    out.push_str(&format!(
+                        "{},{},{},{},{},{},{},{}\n",
+                        csv_field(&self.scenario),
+                        csv_field(&p.panel),
+                        csv_field(&c.label),
+                        i,
+                        c.costs[i],
+                        c.deltas[i],
+                        c.bounds[i],
+                        c.censored_trials[i] as u8
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Quote a free-form CSV field when it would break the row structure.
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Apply the standard scenario CLI overrides (`--trials`, `--seed`,
+/// `--workers`, `--output`, `--panels`) and re-validate — shared by
+/// `scar run-scenario` and the fig example wrappers.
+pub fn apply_cli_overrides(scn: &mut Scenario, args: &Args) -> Result<()> {
+    if let Some(t) = args.str_opt("trials") {
+        scn.trials = t.parse().context("--trials expects an integer")?;
+    }
+    if let Some(s) = args.str_opt("seed") {
+        scn.seed = s.parse().context("--seed expects an integer")?;
+    }
+    if let Some(w) = args.str_opt("workers") {
+        scn.workers = w.parse().context("--workers expects an integer")?;
+    }
+    if let Some(o) = args.str_opt("output") {
+        scn.output = Some(o.to_string());
+    }
+    if let Some(csv) = args.str_opt("panels") {
+        scn.panels = csv.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    scn.validate()
+}
+
+/// Write the report CSV to the scenario's `output` path, creating parent
+/// directories; returns the path written (None when no output is set).
+pub fn write_output(report: &ScenarioReport, scn: &Scenario) -> Result<Option<String>> {
+    let Some(out) = &scn.output else {
+        return Ok(None);
+    };
+    let path = Path::new(out);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating output dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, report.to_csv())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(Some(out.clone()))
+}
+
+/// Locate a bundled scenario file whether the process runs from the repo
+/// root (examples via `cargo run` configured there) or from `rust/`
+/// (cargo's default test/working directory).
+pub fn find_bundled(rel: &str) -> PathBuf {
+    let direct = PathBuf::from(rel);
+    if direct.exists() {
+        return direct;
+    }
+    let up = Path::new("..").join(rel);
+    if up.exists() {
+        return up;
+    }
+    direct
+}
+
+/// Run a scenario, creating the default PJRT engine only if some panel is
+/// artifact-backed (LDA and synthetic panels never touch PJRT).
+pub fn run_with_default_engine(scn: &Scenario) -> Result<ScenarioReport> {
+    let needs_engine = scn
+        .panels
+        .iter()
+        .any(|p| panel_needs_engine(p).unwrap_or(true));
+    let engine = if needs_engine {
+        Some(crate::models::default_engine()?)
+    } else {
+        None
+    };
+    run_scenario(scn, engine)
+}
+
+/// Run a scenario against an explicit (optional) engine.
+pub fn run_scenario(
+    scn: &Scenario,
+    engine: Option<Arc<Mutex<Engine>>>,
+) -> Result<ScenarioReport> {
+    scn.validate()?;
+    let mut panels = Vec::with_capacity(scn.panels.len());
+    for panel in &scn.panels {
+        panels.push(
+            run_panel(scn, panel, engine.as_ref())
+                .with_context(|| format!("scenario '{}', panel '{panel}'", scn.name))?,
+        );
+    }
+    Ok(ScenarioReport { scenario: scn.name.clone(), panels })
+}
+
+/// Does this panel require the PJRT engine?
+fn panel_needs_engine(panel: &str) -> Result<bool> {
+    if panel.starts_with("synthetic") {
+        return Ok(false);
+    }
+    match try_preset(panel) {
+        Some(p) => Ok(matches!(p.kind, PresetKind::Hlo { .. })),
+        None => bail!(
+            "unknown model '{panel}' (expected a preset name or 'synthetic[:dim=..,c=..]')"
+        ),
+    }
+}
+
+fn build_panel_trainer(
+    panel: &str,
+    engine: Option<&Arc<Mutex<Engine>>>,
+    data_seed: u64,
+) -> Result<Box<dyn Trainer + Send>> {
+    if panel.starts_with("synthetic") {
+        return Ok(Box::new(SyntheticTrainer::from_spec(panel)?));
+    }
+    let p = try_preset(panel).with_context(|| {
+        format!("unknown model '{panel}' (expected a preset name or 'synthetic[:dim=..,c=..]')")
+    })?;
+    match p.kind {
+        PresetKind::Hlo { .. } => {
+            let engine = engine
+                .with_context(|| format!("panel '{panel}' needs a PJRT engine"))?;
+            build_preset(Some(engine.clone()), &p, data_seed)
+        }
+        PresetKind::Lda { .. } => build_preset(None, &p, data_seed),
+    }
+}
+
+/// (target_iters, max_iters) for a panel, honoring scenario overrides.
+fn horizons(scn: &Scenario, panel: &str) -> Result<(usize, usize)> {
+    let (dt, dm) = if panel.starts_with("synthetic") {
+        (60, 100)
+    } else {
+        match try_preset(panel) {
+            Some(p) => (p.target_iters, p.max_iters),
+            None => (60, 100),
+        }
+    };
+    let target = scn.target_iters.unwrap_or(dt);
+    let max = scn.max_iters.unwrap_or(dm.max(target));
+    if target == 0 || target > max {
+        bail!("need 1 <= target_iters={target} <= max_iters={max}");
+    }
+    Ok((target, max))
+}
+
+/// Empirical (c, ‖x0−x*‖) for Theorem 3.2, with the fig6 likelihood-curve
+/// fallback for workloads (LDA) whose state has no L2 contraction.
+fn panel_theory(traj: &Trajectory) -> (f64, f64) {
+    let xstar = traj.x_star();
+    let errors: Vec<f64> = traj
+        .snapshots
+        .iter()
+        .take(traj.converged_iters)
+        .map(|s| s.l2_distance(xstar))
+        .collect();
+    if errors.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let floor = errors[traj.converged_iters - 1] * 1.05;
+    let mut c = theory::estimate_rate_conservative(&errors, floor);
+    if !c.is_finite() {
+        let mut est = OnlineRateEstimator::default();
+        for &l in &traj.losses[..traj.converged_iters] {
+            est.observe(l);
+        }
+        c = est.rate().unwrap_or(f64::NAN);
+    }
+    let (amp, _) = theory::estimate_slow_mode(&errors, floor);
+    let x0 = if amp.is_finite() { amp.min(errors[0]) } else { errors[0] };
+    (c, x0)
+}
+
+/// One unit of work: everything random already resolved.
+#[derive(Debug, Clone)]
+enum JobKind {
+    Perturb { kind: Perturb, at_iter: usize },
+    Plan { policy: CheckpointPolicy, mode: RecoveryMode, events: Vec<FailureEvent> },
+}
+
+#[derive(Debug, Clone)]
+struct Job {
+    kind: JobKind,
+    seed: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Outcome {
+    cost: f64,
+    delta: f64,
+    censored: bool,
+}
+
+fn job_rng(scn_seed: u64, cell: usize, trial: usize) -> Rng {
+    Rng::new(scn_seed ^ 0x5CE7_A110).derive(((cell as u64) << 32) | trial as u64)
+}
+
+fn job_seed(scn_seed: u64, cell: usize, trial: usize) -> u64 {
+    scn_seed
+        ^ (cell as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (trial as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
+/// Expand cells × trials into jobs, drawing all per-trial randomness in
+/// the caller's (deterministic, serial) context.
+fn build_jobs(scn: &Scenario, traj: &Trajectory, n_atoms: usize, x0: f64) -> Vec<Job> {
+    let default_pert_iter = scn
+        .perturb_iter
+        .unwrap_or_else(|| 50.min(traj.converged_iters.saturating_sub(5)).max(1));
+    let pert_iter = default_pert_iter.min(traj.max_iters().saturating_sub(1)).max(1);
+    let inj = FailureInjector::new(
+        scn.fail_geom_p,
+        traj.converged_iters.saturating_sub(2).max(2),
+    );
+    let mut jobs = Vec::with_capacity(scn.cells.len() * scn.trials);
+    for (ci, cell) in scn.cells.iter().enumerate() {
+        for trial in 0..scn.trials {
+            let mut rng = job_rng(scn.seed, ci, trial);
+            let kind = match &cell.action {
+                CellAction::Perturb(p) => {
+                    let resolve = |norm: &NormSpec, rng: &mut Rng| match norm {
+                        NormSpec::Rel(r) => r * x0,
+                        NormSpec::LogUniform { lo, hi } => {
+                            10f64.powf(rng.range_f64(*lo, *hi)) * x0
+                        }
+                    };
+                    let kind = match p {
+                        PerturbSpec::Random { norm } => {
+                            Perturb::Random { norm: resolve(norm, &mut rng) }
+                        }
+                        PerturbSpec::Adversarial { norm } => {
+                            Perturb::Adversarial { norm: resolve(norm, &mut rng) }
+                        }
+                        PerturbSpec::Reset { fraction } => {
+                            Perturb::ResetFraction { fraction: *fraction }
+                        }
+                    };
+                    JobKind::Perturb { kind, at_iter: pert_iter }
+                }
+                CellAction::Fail(plan) => {
+                    let events = plan.sample_events(&inj, n_atoms, &mut rng);
+                    JobKind::Plan {
+                        policy: cell.checkpoint.unwrap_or(scn.checkpoint).policy(),
+                        mode: cell.mode.unwrap_or(scn.recovery),
+                        events,
+                    }
+                }
+            };
+            jobs.push(Job { kind, seed: job_seed(scn.seed, ci, trial) });
+        }
+    }
+    jobs
+}
+
+fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Outcome> {
+    match &job.kind {
+        JobKind::Perturb { kind, at_iter } => {
+            let (delta, cost, censored) =
+                harness::run_perturbation_trial(trainer, traj, *at_iter, *kind, job.seed)?;
+            Ok(Outcome { cost, delta, censored })
+        }
+        JobKind::Plan { policy, mode, events } => {
+            let r = harness::run_plan_trial(trainer, traj, *policy, *mode, events, job.seed)?;
+            Ok(Outcome {
+                cost: r.iteration_cost,
+                delta: r.recovery.delta_norm,
+                censored: r.censored,
+            })
+        }
+    }
+}
+
+fn run_panel(
+    scn: &Scenario,
+    panel: &str,
+    engine: Option<&Arc<Mutex<Engine>>>,
+) -> Result<PanelReport> {
+    let mut trainer = build_panel_trainer(panel, engine, DATA_SEED)?;
+    let (target, max) = horizons(scn, panel)?;
+    let traj = harness::run_trajectory(trainer.as_mut(), scn.seed, max, target)?;
+    let (c, x0) = panel_theory(&traj);
+    let n_atoms = trainer.layout().n_atoms();
+    let jobs = build_jobs(scn, &traj, n_atoms, x0);
+
+    let workers = if scn.workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        scn.workers
+    }
+    .min(jobs.len())
+    .max(1);
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<Result<Outcome, String>>>> =
+        Mutex::new(vec![None; jobs.len()]);
+    let build_error: Mutex<Option<String>> = Mutex::new(None);
+    // Worker 0 inherits the trajectory trainer; the rest build their own
+    // instance inside their thread.
+    let mut main_trainer = Some(trainer);
+
+    std::thread::scope(|s| {
+        for _worker in 0..workers {
+            let mine = main_trainer.take();
+            let (jobs, traj, next, results, build_error) =
+                (&jobs, &traj, &next, &results, &build_error);
+            s.spawn(move || {
+                let mut owned: Box<dyn Trainer + Send> = match mine {
+                    Some(t) => t,
+                    None => match build_panel_trainer(panel, engine, DATA_SEED) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            let mut slot = build_error.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(format!("{e:?}"));
+                            }
+                            return;
+                        }
+                    },
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let out =
+                        run_job(owned.as_mut(), traj, &jobs[i]).map_err(|e| format!("{e:?}"));
+                    results.lock().unwrap()[i] = Some(out);
+                }
+            });
+        }
+    });
+
+    if let Some(e) = build_error.into_inner().unwrap() {
+        // Only fatal if some job never ran (a single surviving worker
+        // still completes the sweep).
+        let results = results.lock().unwrap();
+        if results.iter().any(|r| r.is_none()) {
+            bail!("worker failed to build trainer for '{panel}': {e}");
+        }
+    }
+
+    let results = results.into_inner().unwrap();
+    let mut cells = Vec::with_capacity(scn.cells.len());
+    for (ci, cell) in scn.cells.iter().enumerate() {
+        let mut costs = Vec::with_capacity(scn.trials);
+        let mut deltas = Vec::with_capacity(scn.trials);
+        let mut bounds = Vec::with_capacity(scn.trials);
+        let mut censored_trials = Vec::with_capacity(scn.trials);
+        let mut censored = 0usize;
+        for trial in 0..scn.trials {
+            let idx = ci * scn.trials + trial;
+            let out = results[idx]
+                .as_ref()
+                .with_context(|| format!("cell '{}' trial {trial} never ran", cell.label))?
+                .as_ref()
+                .map_err(|e| {
+                    anyhow::anyhow!("cell '{}' trial {trial} failed: {e}", cell.label)
+                })?;
+            costs.push(out.cost);
+            deltas.push(out.delta);
+            censored_trials.push(out.censored);
+            censored += out.censored as usize;
+            let bound = match &jobs[idx].kind {
+                JobKind::Perturb { at_iter, .. }
+                    if c.is_finite() && c > 0.0 && c < 1.0 && x0 > 0.0 =>
+                {
+                    theory::iteration_cost_bound(
+                        c,
+                        x0,
+                        &[Perturbation { iter: *at_iter, norm: out.delta }],
+                    )
+                }
+                _ => f64::NAN,
+            };
+            bounds.push(bound);
+        }
+        let summary = summarize(&costs);
+        cells.push(CellReport {
+            label: cell.label.clone(),
+            costs,
+            deltas,
+            bounds,
+            censored_trials,
+            censored,
+            summary,
+        });
+    }
+
+    Ok(PanelReport {
+        panel: panel.to_string(),
+        converged_iters: traj.converged_iters,
+        threshold: traj.threshold,
+        c,
+        x0,
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_panel_is_a_clear_error() {
+        let scn = Scenario::from_toml_str(
+            "name=\"t\"\nmodel=\"no_such_model\"\n[[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        let e = run_scenario(&scn, None).unwrap_err();
+        assert!(format!("{e:?}").contains("no_such_model"), "{e:?}");
+    }
+
+    #[test]
+    fn bundled_lookup_prefers_existing() {
+        // Nonexistent stays as given (callers get the original path in
+        // their error message).
+        assert_eq!(find_bundled("scenarios/definitely-missing.toml"),
+                   PathBuf::from("scenarios/definitely-missing.toml"));
+    }
+}

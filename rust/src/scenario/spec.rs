@@ -1,0 +1,781 @@
+//! Declarative scenario specs: what to sweep, constructible from TOML or
+//! JSON.
+//!
+//! A [`Scenario`] is the data-file form of one experiment: the model
+//! panels, the convergence horizon, the checkpoint/recovery policy, and a
+//! grid of [`CellSpec`]s, each describing either a direct perturbation
+//! (Fig 3/5/6 style) or a failure plan (Fig 7/8 style, plus the richer
+//! [`FailurePlan`] models). Both file formats parse into the repo's
+//! [`Json`] value model first ([`super::toml`] handles TOML), so the two
+//! are interchangeable and round-trip through [`Scenario::to_json`].
+//!
+//! Every parse error names the offending key and scenario/cell, so a typo
+//! in a scenario file fails loudly instead of silently changing the
+//! sweep.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{CheckpointPolicy, Selector};
+use crate::failure::FailurePlan;
+use crate::recovery::RecoveryMode;
+use crate::util::json::Json;
+
+/// Checkpoint policy in (base interval, divisor k, selector) form — the
+/// paper's parametrization (fraction 1/k every interval/k iterations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointSpec {
+    pub interval: usize,
+    pub k: usize,
+    pub selector: Selector,
+}
+
+impl Default for CheckpointSpec {
+    fn default() -> Self {
+        CheckpointSpec { interval: 10, k: 1, selector: Selector::Priority }
+    }
+}
+
+impl CheckpointSpec {
+    pub fn policy(&self) -> CheckpointPolicy {
+        CheckpointPolicy::partial(self.interval, self.k, self.selector)
+    }
+
+    fn validate(&self, ctx: &str) -> Result<()> {
+        if self.interval == 0 {
+            bail!("{ctx}: checkpoint interval must be >= 1");
+        }
+        if self.k == 0 || self.k > self.interval {
+            bail!("{ctx}: checkpoint k must be in [1, interval={}]", self.interval);
+        }
+        Ok(())
+    }
+}
+
+/// How a perturbation's L2 norm is chosen, in units of ‖x⁽⁰⁾ − x*‖.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NormSpec {
+    /// Fixed: ‖δ‖ = rel · ‖x⁽⁰⁾ − x*‖.
+    Rel(f64),
+    /// Per-trial log-uniform: ‖δ‖ = 10^U(lo, hi) · ‖x⁽⁰⁾ − x*‖ (the Fig
+    /// 3/5 sampling scheme).
+    LogUniform { lo: f64, hi: f64 },
+}
+
+/// A direct perturbation cell (§5.2 generators).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PerturbSpec {
+    Random { norm: NormSpec },
+    Adversarial { norm: NormSpec },
+    Reset { fraction: f64 },
+}
+
+/// What one sweep cell does to each trial.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CellAction {
+    Perturb(PerturbSpec),
+    Fail(FailurePlan),
+}
+
+/// One cell of the sweep grid: an action plus optional per-cell overrides
+/// of the scenario-level recovery mode and checkpoint policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSpec {
+    pub label: String,
+    pub action: CellAction,
+    pub mode: Option<RecoveryMode>,
+    pub checkpoint: Option<CheckpointSpec>,
+}
+
+/// A full declarative experiment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Model panels: preset names ([`crate::models::presets`]), or
+    /// `"synthetic[:dim=..,c=..,xseed=..]"` for the analytic workload.
+    pub panels: Vec<String>,
+    pub seed: u64,
+    /// Trials per (panel, cell).
+    pub trials: usize,
+    /// Sweep worker threads; 0 = one per available core.
+    pub workers: usize,
+    /// Override the preset's ε-target iteration count.
+    pub target_iters: Option<usize>,
+    /// Override the preset's trajectory length.
+    pub max_iters: Option<usize>,
+    /// Iteration perturbation cells strike at (default: the Fig 5 rule,
+    /// min(50, converged − 5)).
+    pub perturb_iter: Option<usize>,
+    /// Geometric parameter for failure iterations (§5.3).
+    pub fail_geom_p: f64,
+    pub checkpoint: CheckpointSpec,
+    pub recovery: RecoveryMode,
+    /// CSV output path (written by `scar run-scenario` and the fig
+    /// wrappers; in-process callers read the report instead).
+    pub output: Option<String>,
+    pub cells: Vec<CellSpec>,
+}
+
+fn mode_str(m: RecoveryMode) -> &'static str {
+    match m {
+        RecoveryMode::Full => "full",
+        RecoveryMode::Partial => "partial",
+    }
+}
+
+impl Scenario {
+    /// Load from a file; `.toml` parses as TOML, anything else as JSON.
+    pub fn from_file(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        let is_toml = path
+            .extension()
+            .map(|e| e.eq_ignore_ascii_case("toml"))
+            .unwrap_or(false);
+        let parsed = if is_toml {
+            Scenario::from_toml_str(&text)
+        } else {
+            Scenario::from_json_str(&text)
+        };
+        parsed.with_context(|| format!("in scenario file {}", path.display()))
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Scenario> {
+        let v = super::toml::parse(text).map_err(anyhow::Error::msg)?;
+        Scenario::from_json(&v)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Scenario> {
+        let v = Json::parse(text).context("parsing scenario JSON")?;
+        Scenario::from_json(&v)
+    }
+
+    /// Build from a parsed value (the shared back-end of both formats).
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        let obj = v.as_obj().context("scenario: top level must be a table/object")?;
+        const TOP_KEYS: &[&str] = &[
+            "name", "model", "panels", "seed", "trials", "workers", "target_iters",
+            "max_iters", "perturb_iter", "fail_geom_p", "checkpoint", "recovery",
+            "output", "cell", "cells",
+        ];
+        for key in obj.keys() {
+            if !TOP_KEYS.contains(&key.as_str()) {
+                bail!("scenario: unknown key '{key}' (expected one of {TOP_KEYS:?})");
+            }
+        }
+
+        let name = req_str(obj, "name", "scenario")?;
+        let ctx = format!("scenario '{name}'");
+
+        let mut panels: Vec<String> = Vec::new();
+        if let Some(m) = opt_str(obj, "model", &ctx)? {
+            panels.push(m);
+        }
+        if let Some(arr) = obj.get("panels") {
+            let arr = arr
+                .as_arr()
+                .with_context(|| format!("{ctx}: 'panels' must be an array of strings"))?;
+            for (i, p) in arr.iter().enumerate() {
+                panels.push(
+                    p.as_str()
+                        .with_context(|| format!("{ctx}: panels[{i}] must be a string"))?
+                        .to_string(),
+                );
+            }
+        }
+        if panels.is_empty() {
+            bail!("{ctx}: needs 'model = \"...\"' or 'panels = [...]'");
+        }
+
+        let checkpoint = match obj.get("checkpoint") {
+            None => CheckpointSpec::default(),
+            Some(c) => parse_checkpoint(c, &CheckpointSpec::default(), &ctx)?,
+        };
+
+        let recovery = match opt_str(obj, "recovery", &ctx)? {
+            None => RecoveryMode::Partial,
+            Some(s) => RecoveryMode::from_str(&s)
+                .map_err(|e| anyhow::anyhow!("{ctx}: recovery: {e}"))?,
+        };
+
+        let cells_val = match (obj.get("cell"), obj.get("cells")) {
+            (Some(_), Some(_)) => bail!("{ctx}: use either 'cell' or 'cells', not both"),
+            (Some(c), None) | (None, Some(c)) => c,
+            (None, None) => bail!("{ctx}: needs at least one [[cell]]"),
+        };
+        let cells_arr = cells_val
+            .as_arr()
+            .with_context(|| format!("{ctx}: cells must be an array of tables"))?;
+        let mut cells = Vec::with_capacity(cells_arr.len());
+        for (i, c) in cells_arr.iter().enumerate() {
+            cells.push(parse_cell(c, i, &checkpoint, &ctx)?);
+        }
+
+        let scenario = Scenario {
+            name,
+            panels,
+            seed: opt_u64(obj, "seed", &ctx)?.unwrap_or(42),
+            trials: opt_usize(obj, "trials", &ctx)?.unwrap_or(20),
+            workers: opt_usize(obj, "workers", &ctx)?.unwrap_or(0),
+            target_iters: opt_usize(obj, "target_iters", &ctx)?,
+            max_iters: opt_usize(obj, "max_iters", &ctx)?,
+            perturb_iter: opt_usize(obj, "perturb_iter", &ctx)?,
+            fail_geom_p: opt_f64(obj, "fail_geom_p", &ctx)?.unwrap_or(0.05),
+            checkpoint,
+            recovery,
+            output: opt_str(obj, "output", &ctx)?,
+            cells,
+        };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let ctx = format!("scenario '{}'", self.name);
+        if self.trials == 0 {
+            bail!("{ctx}: trials must be >= 1");
+        }
+        if !(self.fail_geom_p > 0.0 && self.fail_geom_p <= 1.0) {
+            bail!("{ctx}: fail_geom_p must be in (0, 1], got {}", self.fail_geom_p);
+        }
+        self.checkpoint.validate(&ctx)?;
+        if let (Some(t), Some(m)) = (self.target_iters, self.max_iters) {
+            if t == 0 || t > m {
+                bail!("{ctx}: need 1 <= target_iters <= max_iters, got {t} > {m}");
+            }
+        }
+        if self.cells.is_empty() {
+            bail!("{ctx}: needs at least one cell");
+        }
+        for cell in &self.cells {
+            let cctx = format!("{ctx}, cell '{}'", cell.label);
+            if let Some(ck) = &cell.checkpoint {
+                ck.validate(&cctx)?;
+            }
+            match &cell.action {
+                CellAction::Fail(plan) => {
+                    plan.validate().map_err(|e| anyhow::anyhow!("{cctx}: {e}"))?
+                }
+                CellAction::Perturb(p) => validate_perturb(p, &cctx)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize back to the shared value model (JSON-compatible, and
+    /// re-parseable by [`Scenario::from_json`] — the round-trip contract).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::from(self.name.as_str()));
+        obj.insert("panels".into(), Json::from(self.panels.clone()));
+        obj.insert("seed".into(), Json::Num(self.seed as f64));
+        obj.insert("trials".into(), Json::from(self.trials));
+        obj.insert("workers".into(), Json::from(self.workers));
+        if let Some(t) = self.target_iters {
+            obj.insert("target_iters".into(), Json::from(t));
+        }
+        if let Some(m) = self.max_iters {
+            obj.insert("max_iters".into(), Json::from(m));
+        }
+        if let Some(p) = self.perturb_iter {
+            obj.insert("perturb_iter".into(), Json::from(p));
+        }
+        obj.insert("fail_geom_p".into(), Json::Num(self.fail_geom_p));
+        obj.insert("checkpoint".into(), checkpoint_json(&self.checkpoint));
+        obj.insert("recovery".into(), Json::from(mode_str(self.recovery)));
+        if let Some(o) = &self.output {
+            obj.insert("output".into(), Json::from(o.as_str()));
+        }
+        obj.insert(
+            "cells".into(),
+            Json::Arr(self.cells.iter().map(cell_json).collect()),
+        );
+        Json::Obj(obj)
+    }
+
+    /// Human-readable summary (used by `scar run-scenario --dry-run`).
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "scenario '{}': {} panel(s) x {} cell(s) x {} trial(s), seed {}\n",
+            self.name,
+            self.panels.len(),
+            self.cells.len(),
+            self.trials,
+            self.seed
+        ));
+        out.push_str(&format!(
+            "  checkpoint: 1/{} every {} iters ({}); recovery: {}; geom p = {}\n",
+            self.checkpoint.k,
+            self.checkpoint.policy().interval,
+            self.checkpoint.selector,
+            mode_str(self.recovery),
+            self.fail_geom_p
+        ));
+        for p in &self.panels {
+            out.push_str(&format!("  panel: {p}\n"));
+        }
+        for c in &self.cells {
+            let action = match &c.action {
+                CellAction::Perturb(p) => format!("perturb {p:?}"),
+                CellAction::Fail(plan) => format!("fail {plan:?}"),
+            };
+            let mode = c.mode.map(|m| format!(" mode={}", mode_str(m))).unwrap_or_default();
+            out.push_str(&format!("  cell '{}': {action}{mode}\n", c.label));
+        }
+        out
+    }
+}
+
+fn checkpoint_json(c: &CheckpointSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("interval".into(), Json::from(c.interval));
+    m.insert("k".into(), Json::from(c.k));
+    m.insert("selector".into(), Json::from(c.selector.to_string()));
+    Json::Obj(m)
+}
+
+fn cell_json(c: &CellSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("label".into(), Json::from(c.label.as_str()));
+    if let Some(mode) = c.mode {
+        m.insert("mode".into(), Json::from(mode_str(mode)));
+    }
+    if let Some(ck) = &c.checkpoint {
+        m.insert("interval".into(), Json::from(ck.interval));
+        m.insert("k".into(), Json::from(ck.k));
+        m.insert("selector".into(), Json::from(ck.selector.to_string()));
+    }
+    match &c.action {
+        CellAction::Perturb(PerturbSpec::Random { norm }) => {
+            m.insert("perturb".into(), Json::from("random"));
+            norm_json(&mut m, norm);
+        }
+        CellAction::Perturb(PerturbSpec::Adversarial { norm }) => {
+            m.insert("perturb".into(), Json::from("adversarial"));
+            norm_json(&mut m, norm);
+        }
+        CellAction::Perturb(PerturbSpec::Reset { fraction }) => {
+            m.insert("perturb".into(), Json::from("reset"));
+            m.insert("fraction".into(), Json::Num(*fraction));
+        }
+        CellAction::Fail(plan) => {
+            m.insert("fail".into(), Json::from(plan.kind()));
+            match plan {
+                FailurePlan::Single { fraction } => {
+                    m.insert("fraction".into(), Json::Num(*fraction));
+                }
+                FailurePlan::Correlated { nodes, of_nodes } => {
+                    m.insert("nodes".into(), Json::from(*nodes));
+                    m.insert("of_nodes".into(), Json::from(*of_nodes));
+                }
+                FailurePlan::Cascade { fraction, extra, gap } => {
+                    m.insert("fraction".into(), Json::Num(*fraction));
+                    m.insert("extra".into(), Json::from(*extra));
+                    m.insert("gap".into(), Json::from(*gap));
+                }
+                FailurePlan::Flaky { fraction, period, prob, max_events } => {
+                    m.insert("fraction".into(), Json::Num(*fraction));
+                    m.insert("period".into(), Json::from(*period));
+                    m.insert("prob".into(), Json::Num(*prob));
+                    m.insert("max_events".into(), Json::from(*max_events));
+                }
+            }
+        }
+    }
+    Json::Obj(m)
+}
+
+fn norm_json(m: &mut BTreeMap<String, Json>, norm: &NormSpec) {
+    match norm {
+        NormSpec::Rel(r) => {
+            m.insert("norm_rel".into(), Json::Num(*r));
+        }
+        NormSpec::LogUniform { lo, hi } => {
+            m.insert("norm_log10".into(), Json::Arr(vec![Json::Num(*lo), Json::Num(*hi)]));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Field helpers
+// ---------------------------------------------------------------------------
+
+fn req_str(obj: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<String> {
+    match obj.get(key) {
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(_) => bail!("{ctx}: '{key}' must be a string"),
+        None => bail!("{ctx}: missing required key '{key}'"),
+    }
+}
+
+fn opt_str(obj: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<Option<String>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => bail!("{ctx}: '{key}' must be a string"),
+    }
+}
+
+fn opt_f64(obj: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<Option<f64>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) => Ok(Some(*n)),
+        Some(_) => bail!("{ctx}: '{key}' must be a number"),
+    }
+}
+
+fn opt_usize(obj: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<Option<usize>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_usize().with_context(|| {
+            format!("{ctx}: '{key}' must be a non-negative integer")
+        })?)),
+    }
+}
+
+fn opt_u64(obj: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<Option<u64>> {
+    // Numbers travel through f64 (the shared Json model), which is exact
+    // only up to 2^53 — reject larger values instead of silently rounding
+    // a seed to a different sweep.
+    let v = opt_usize(obj, key, ctx)?;
+    if let Some(v) = v {
+        if v as u64 > (1u64 << 53) {
+            bail!("{ctx}: '{key}' must be <= 2^53 (JSON/TOML numbers are f64), got {v}");
+        }
+    }
+    Ok(v.map(|v| v as u64))
+}
+
+fn parse_checkpoint(v: &Json, base: &CheckpointSpec, ctx: &str) -> Result<CheckpointSpec> {
+    let obj = v
+        .as_obj()
+        .with_context(|| format!("{ctx}: 'checkpoint' must be a table"))?;
+    for key in obj.keys() {
+        if !["interval", "k", "selector"].contains(&key.as_str()) {
+            bail!("{ctx}: checkpoint: unknown key '{key}' (interval|k|selector)");
+        }
+    }
+    let selector = match opt_str(obj, "selector", ctx)? {
+        None => base.selector,
+        Some(s) => {
+            Selector::from_str(&s).map_err(|e| anyhow::anyhow!("{ctx}: selector: {e}"))?
+        }
+    };
+    Ok(CheckpointSpec {
+        interval: opt_usize(obj, "interval", ctx)?.unwrap_or(base.interval),
+        k: opt_usize(obj, "k", ctx)?.unwrap_or(base.k),
+        selector,
+    })
+}
+
+fn parse_norm(obj: &BTreeMap<String, Json>, ctx: &str) -> Result<NormSpec> {
+    let rel = opt_f64(obj, "norm_rel", ctx)?;
+    let log10 = obj.get("norm_log10");
+    match (rel, log10) {
+        (Some(_), Some(_)) => {
+            bail!("{ctx}: use either 'norm_rel' or 'norm_log10', not both")
+        }
+        (Some(r), None) => Ok(NormSpec::Rel(r)),
+        (None, Some(v)) => {
+            let arr = v
+                .as_arr()
+                .with_context(|| format!("{ctx}: 'norm_log10' must be [lo, hi]"))?;
+            if arr.len() != 2 {
+                bail!("{ctx}: 'norm_log10' must be [lo, hi]");
+            }
+            let lo = arr[0]
+                .as_f64()
+                .with_context(|| format!("{ctx}: norm_log10[0] must be a number"))?;
+            let hi = arr[1]
+                .as_f64()
+                .with_context(|| format!("{ctx}: norm_log10[1] must be a number"))?;
+            Ok(NormSpec::LogUniform { lo, hi })
+        }
+        (None, None) => bail!("{ctx}: perturbation needs 'norm_rel' or 'norm_log10'"),
+    }
+}
+
+fn validate_perturb(p: &PerturbSpec, ctx: &str) -> Result<()> {
+    match p {
+        PerturbSpec::Reset { fraction } => {
+            if !(*fraction > 0.0 && *fraction <= 1.0) {
+                bail!("{ctx}: reset fraction must be in (0, 1], got {fraction}");
+            }
+        }
+        PerturbSpec::Random { norm } | PerturbSpec::Adversarial { norm } => match norm {
+            NormSpec::Rel(r) => {
+                if *r <= 0.0 {
+                    bail!("{ctx}: norm_rel must be > 0, got {r}");
+                }
+            }
+            NormSpec::LogUniform { lo, hi } => {
+                if lo > hi {
+                    bail!("{ctx}: norm_log10 needs lo <= hi, got [{lo}, {hi}]");
+                }
+            }
+        },
+    }
+    Ok(())
+}
+
+fn parse_cell(
+    v: &Json,
+    index: usize,
+    base_ck: &CheckpointSpec,
+    scn_ctx: &str,
+) -> Result<CellSpec> {
+    let obj = v
+        .as_obj()
+        .with_context(|| format!("{scn_ctx}: cell {index} must be a table"))?;
+    let label = req_str(obj, "label", &format!("{scn_ctx}: cell {index}"))?;
+    let ctx = format!("{scn_ctx}, cell '{label}'");
+
+    // Exactly the keys each action kind consumes — an irrelevant key
+    // (e.g. 'gap' on a single-loss cell, or 'mode' on a perturbation
+    // cell, which no recovery ever runs for) is a hard error, never
+    // silently ignored, because it usually means the kind itself is a
+    // typo or the user expects an effect the sweep won't have.
+    const PERTURB_COMMON: &[&str] = &["label", "perturb", "fail"];
+    const FAIL_COMMON: &[&str] = &["label", "perturb", "fail", "mode", "interval", "k", "selector"];
+    let check_keys = |common: &[&str], allowed: &[&str], kind: &str| -> Result<()> {
+        for key in obj.keys() {
+            if !common.contains(&key.as_str()) && !allowed.contains(&key.as_str()) {
+                bail!(
+                    "{ctx}: key '{key}' is not valid for '{kind}' (allowed: {allowed:?})"
+                );
+            }
+        }
+        Ok(())
+    };
+
+    let perturb = opt_str(obj, "perturb", &ctx)?;
+    let fail = opt_str(obj, "fail", &ctx)?;
+    let action = match (perturb, fail) {
+        (Some(_), Some(_)) => bail!("{ctx}: a cell is either 'perturb' or 'fail', not both"),
+        (None, None) => bail!("{ctx}: needs 'perturb = \"...\"' or 'fail = \"...\"'"),
+        (Some(kind), None) => {
+            let spec = match kind.as_str() {
+                "random" => {
+                    check_keys(PERTURB_COMMON, &["norm_rel", "norm_log10"], "perturb = random")?;
+                    PerturbSpec::Random { norm: parse_norm(obj, &ctx)? }
+                }
+                "adversarial" => {
+                    check_keys(
+                        PERTURB_COMMON,
+                        &["norm_rel", "norm_log10"],
+                        "perturb = adversarial",
+                    )?;
+                    PerturbSpec::Adversarial { norm: parse_norm(obj, &ctx)? }
+                }
+                "reset" => {
+                    check_keys(PERTURB_COMMON, &["fraction"], "perturb = reset")?;
+                    PerturbSpec::Reset {
+                        fraction: opt_f64(obj, "fraction", &ctx)?
+                            .with_context(|| format!("{ctx}: reset needs 'fraction'"))?,
+                    }
+                }
+                other => bail!("{ctx}: unknown perturbation '{other}' (random|adversarial|reset)"),
+            };
+            CellAction::Perturb(spec)
+        }
+        (None, Some(kind)) => {
+            let fraction = || -> Result<f64> {
+                opt_f64(obj, "fraction", &ctx)?
+                    .with_context(|| format!("{ctx}: fail '{kind}' needs 'fraction'"))
+            };
+            let plan = match kind.as_str() {
+                "single" => {
+                    check_keys(FAIL_COMMON, &["fraction"], "fail = single")?;
+                    FailurePlan::Single { fraction: fraction()? }
+                }
+                "correlated" => {
+                    check_keys(FAIL_COMMON, &["nodes", "of_nodes"], "fail = correlated")?;
+                    FailurePlan::Correlated {
+                        nodes: opt_usize(obj, "nodes", &ctx)?.unwrap_or(1),
+                        of_nodes: opt_usize(obj, "of_nodes", &ctx)?.unwrap_or(4),
+                    }
+                }
+                "cascade" => {
+                    check_keys(FAIL_COMMON, &["fraction", "extra", "gap"], "fail = cascade")?;
+                    FailurePlan::Cascade {
+                        fraction: fraction()?,
+                        extra: opt_usize(obj, "extra", &ctx)?.unwrap_or(1),
+                        gap: opt_usize(obj, "gap", &ctx)?.unwrap_or(5),
+                    }
+                }
+                "flaky" => {
+                    check_keys(FAIL_COMMON, &["fraction", "period", "prob", "max_events"], "fail = flaky")?;
+                    FailurePlan::Flaky {
+                        fraction: fraction()?,
+                        period: opt_usize(obj, "period", &ctx)?.unwrap_or(5),
+                        prob: opt_f64(obj, "prob", &ctx)?.unwrap_or(0.5),
+                        max_events: opt_usize(obj, "max_events", &ctx)?.unwrap_or(5),
+                    }
+                }
+                other => {
+                    bail!("{ctx}: unknown failure plan '{other}' (single|correlated|cascade|flaky)")
+                }
+            };
+            CellAction::Fail(plan)
+        }
+    };
+
+    let mode = match opt_str(obj, "mode", &ctx)? {
+        None => None,
+        Some(s) => {
+            Some(RecoveryMode::from_str(&s).map_err(|e| anyhow::anyhow!("{ctx}: mode: {e}"))?)
+        }
+    };
+
+    // Per-cell checkpoint override: missing components inherit the
+    // scenario-level spec.
+    let has_ck_override =
+        obj.contains_key("interval") || obj.contains_key("k") || obj.contains_key("selector");
+    let checkpoint = if has_ck_override {
+        Some(parse_checkpoint(
+            &Json::Obj(
+                obj.iter()
+                    .filter(|(k, _)| ["interval", "k", "selector"].contains(&k.as_str()))
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect(),
+            ),
+            base_ck,
+            &ctx,
+        )?)
+    } else {
+        None
+    };
+
+    Ok(CellSpec { label, action, mode, checkpoint })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIG7ISH: &str = r#"
+name = "mini"
+model = "synthetic:dim=16,c=0.8"
+trials = 4
+seed = 7
+
+[checkpoint]
+interval = 8
+k = 2
+selector = "round"
+
+[[cell]]
+label = "single full"
+fail = "single"
+fraction = 0.5
+mode = "full"
+
+[[cell]]
+label = "cascade"
+fail = "cascade"
+fraction = 0.25
+extra = 2
+gap = 3
+
+[[cell]]
+label = "rand"
+perturb = "random"
+norm_log10 = [-2.0, 0.0]
+"#;
+
+    #[test]
+    fn parses_toml_scenario() {
+        let s = Scenario::from_toml_str(FIG7ISH).unwrap();
+        assert_eq!(s.name, "mini");
+        assert_eq!(s.panels, vec!["synthetic:dim=16,c=0.8".to_string()]);
+        assert_eq!(s.trials, 4);
+        assert_eq!(s.checkpoint.k, 2);
+        assert_eq!(s.checkpoint.selector, Selector::RoundRobin);
+        assert_eq!(s.cells.len(), 3);
+        assert_eq!(s.cells[0].mode, Some(RecoveryMode::Full));
+        assert_eq!(
+            s.cells[1].action,
+            CellAction::Fail(FailurePlan::Cascade { fraction: 0.25, extra: 2, gap: 3 })
+        );
+        assert_eq!(
+            s.cells[2].action,
+            CellAction::Perturb(PerturbSpec::Random {
+                norm: NormSpec::LogUniform { lo: -2.0, hi: 0.0 }
+            })
+        );
+    }
+
+    #[test]
+    fn toml_json_roundtrip() {
+        let a = Scenario::from_toml_str(FIG7ISH).unwrap();
+        let json_text = a.to_json().to_string();
+        let b = Scenario::from_json_str(&json_text).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn error_messages_name_the_problem() {
+        let e = Scenario::from_toml_str("model = \"synthetic\"\n[[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n")
+            .unwrap_err();
+        assert!(format!("{e:?}").contains("name"), "{e:?}");
+
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\nbogus=1\n[[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("bogus"), "{e:?}");
+
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[cell]]\nlabel=\"x\"\nfail=\"meteor\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("meteor"), "{e:?}");
+
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[cell]]\nlabel=\"x\"\nfail=\"cascade\"\nfraction=0.5\ngap=0\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("gap"), "{e:?}");
+
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[cell]]\nlabel=\"x\"\nperturb=\"random\"\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("norm"), "{e:?}");
+
+        // Keys from a *different* plan kind are rejected, not ignored.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\nperiod=2\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("period"), "{e:?}");
+    }
+
+    #[test]
+    fn cell_checkpoint_override() {
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\ninterval=4\nk=4\n",
+        )
+        .unwrap();
+        let ck = s.cells[0].checkpoint.unwrap();
+        assert_eq!((ck.interval, ck.k), (4, 4));
+        assert_eq!(ck.policy().fraction, 0.25);
+    }
+
+    #[test]
+    fn json_front_end_accepts_same_shape() {
+        let s = Scenario::from_json_str(
+            r#"{"name":"j","model":"synthetic","cells":[{"label":"c","perturb":"reset","fraction":0.5}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.cells.len(), 1);
+        assert_eq!(
+            s.cells[0].action,
+            CellAction::Perturb(PerturbSpec::Reset { fraction: 0.5 })
+        );
+    }
+}

@@ -1,0 +1,509 @@
+//! Minimal TOML parser for scenario files.
+//!
+//! The `toml` crate is not in the offline set, so scenario files are
+//! parsed with this self-contained implementation, which covers the
+//! subset scenario specs use and produces the repo's own
+//! [`Json`](crate::util::json::Json) value model — the spec layer
+//! ([`super::spec`]) consumes `Json` and therefore accepts TOML and JSON
+//! interchangeably.
+//!
+//! Supported subset:
+//! * `#` comments, blank lines;
+//! * `[table]` and `[a.b]` headers, `[[array-of-tables]]` headers;
+//! * bare, quoted, and dotted keys;
+//! * basic `"..."` strings (with `\n \t \r \\ \" \u....` escapes) and
+//!   literal `'...'` strings;
+//! * integers (with `_` separators), floats, booleans;
+//! * single-line arrays `[1, 2, 3]` and inline tables `{ a = 1 }`.
+//!
+//! Not supported (errors, never silent misparses): multi-line strings,
+//! dates/times, multi-line arrays.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Parse TOML text into a [`Json::Obj`]. Errors carry 1-based line
+/// numbers.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut current: Vec<String> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let at = |msg: String| format!("toml line {lineno}: {msg}");
+        let line = strip_comment(raw).map_err(&at)?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[") {
+            let inner = inner
+                .strip_suffix("]]")
+                .ok_or_else(|| at("unterminated '[[' table header".to_string()))?;
+            let path = parse_key_path(inner).map_err(&at)?;
+            push_array_table(&mut root, &path).map_err(&at)?;
+            current = path;
+        } else if let Some(inner) = line.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| at("unterminated '[' table header".to_string()))?;
+            let path = parse_key_path(inner).map_err(&at)?;
+            walk_mut(&mut root, &path).map_err(&at)?;
+            current = path;
+        } else {
+            let eq = find_unquoted_eq(line)
+                .ok_or_else(|| at("expected 'key = value'".to_string()))?;
+            let keypath = parse_key_path(&line[..eq]).map_err(&at)?;
+            let mut vp = ValueParser::new(line[eq + 1..].trim());
+            let value = vp.value().map_err(&at)?;
+            vp.finish().map_err(&at)?;
+            insert(&mut root, &current, &keypath, value).map_err(&at)?;
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Remove a trailing comment, honoring quotes.
+fn strip_comment(line: &str) -> Result<&str, String> {
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'#' => return Ok(&line[..i]),
+            b'"' => {
+                i += 1;
+                while i < bytes.len() && bytes[i] != b'"' {
+                    if bytes[i] == b'\\' {
+                        i += 1;
+                    }
+                    i += 1;
+                }
+                if i >= bytes.len() {
+                    return Err("unterminated string".to_string());
+                }
+                i += 1;
+            }
+            b'\'' => {
+                i += 1;
+                while i < bytes.len() && bytes[i] != b'\'' {
+                    i += 1;
+                }
+                if i >= bytes.len() {
+                    return Err("unterminated literal string".to_string());
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    Ok(line)
+}
+
+/// Position of the first `=` outside quotes.
+fn find_unquoted_eq(line: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'=' => return Some(i),
+            b'"' | b'\'' => {
+                let quote = bytes[i];
+                i += 1;
+                while i < bytes.len() && bytes[i] != quote {
+                    if quote == b'"' && bytes[i] == b'\\' {
+                        i += 1;
+                    }
+                    i += 1;
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+fn is_bare_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+/// Parse a (possibly dotted, possibly quoted) key path.
+fn parse_key_path(s: &str) -> Result<Vec<String>, String> {
+    let mut parts = Vec::new();
+    let mut rest = s.trim();
+    loop {
+        if rest.is_empty() {
+            return Err("empty key".to_string());
+        }
+        let (part, after) = if let Some(r) = rest.strip_prefix('"') {
+            let end = r.find('"').ok_or_else(|| "unterminated quoted key".to_string())?;
+            (r[..end].to_string(), r[end + 1..].trim_start())
+        } else if let Some(r) = rest.strip_prefix('\'') {
+            let end = r.find('\'').ok_or_else(|| "unterminated quoted key".to_string())?;
+            (r[..end].to_string(), r[end + 1..].trim_start())
+        } else {
+            let end = rest.find(|c: char| !is_bare_key_char(c)).unwrap_or(rest.len());
+            if end == 0 {
+                return Err(format!("invalid key '{rest}'"));
+            }
+            (rest[..end].to_string(), rest[end..].trim_start())
+        };
+        parts.push(part);
+        if after.is_empty() {
+            return Ok(parts);
+        }
+        rest = after
+            .strip_prefix('.')
+            .ok_or_else(|| format!("unexpected characters in key: '{after}'"))?
+            .trim_start();
+    }
+}
+
+/// Descend to (creating as needed) the table at `path`. Array-of-table
+/// entries resolve to their most recent element.
+fn walk_mut<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for key in path {
+        let entry = cur
+            .entry(key.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            Json::Arr(a) => match a.last_mut() {
+                Some(Json::Obj(m)) => m,
+                _ => return Err(format!("'{key}' is not a table array")),
+            },
+            _ => return Err(format!("'{key}' is already a non-table value")),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_array_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    let (last, parent) = path.split_last().ok_or_else(|| "empty header".to_string())?;
+    let map = walk_mut(root, parent)?;
+    let entry = map
+        .entry(last.clone())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    match entry {
+        Json::Arr(a) => {
+            a.push(Json::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(format!("'{last}' is already a non-array value")),
+    }
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Json>,
+    table: &[String],
+    keypath: &[String],
+    value: Json,
+) -> Result<(), String> {
+    let (last, key_parent) = keypath.split_last().ok_or_else(|| "empty key".to_string())?;
+    let mut full = table.to_vec();
+    full.extend_from_slice(key_parent);
+    let map = walk_mut(root, &full)?;
+    if map.contains_key(last) {
+        return Err(format!("duplicate key '{last}'"));
+    }
+    map.insert(last.clone(), value);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Value parser
+// ---------------------------------------------------------------------------
+
+struct ValueParser<'a> {
+    s: &'a str,
+    i: usize,
+}
+
+impl<'a> ValueParser<'a> {
+    fn new(s: &'a str) -> ValueParser<'a> {
+        ValueParser { s, i: 0 }
+    }
+
+    // Returns the tail with the *input's* lifetime (not tied to &self),
+    // so callers can hold slices across `self.i` advances.
+    fn rest(&self) -> &'a str {
+        let s = self.s;
+        &s[self.i..]
+    }
+
+    fn skip_ws(&mut self) {
+        while self.rest().starts_with(' ') || self.rest().starts_with('\t') {
+            self.i += 1;
+        }
+    }
+
+    fn finish(&mut self) -> Result<(), String> {
+        self.skip_ws();
+        if self.rest().is_empty() {
+            Ok(())
+        } else {
+            Err(format!("trailing characters after value: '{}'", self.rest()))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        let rest = self.rest();
+        if rest.starts_with('"') {
+            self.basic_string()
+        } else if rest.starts_with('\'') {
+            self.literal_string()
+        } else if rest.starts_with('[') {
+            self.array()
+        } else if rest.starts_with('{') {
+            self.inline_table()
+        } else if let Some(r) = rest.strip_prefix("true") {
+            if r.starts_with(is_bare_key_char) {
+                return Err(format!("bad value '{rest}'"));
+            }
+            self.i += 4;
+            Ok(Json::Bool(true))
+        } else if let Some(r) = rest.strip_prefix("false") {
+            if r.starts_with(is_bare_key_char) {
+                return Err(format!("bad value '{rest}'"));
+            }
+            self.i += 5;
+            Ok(Json::Bool(false))
+        } else {
+            self.number()
+        }
+    }
+
+    fn basic_string(&mut self) -> Result<Json, String> {
+        debug_assert!(self.rest().starts_with('"'));
+        self.i += 1;
+        let mut out = String::new();
+        let mut chars = self.rest().char_indices();
+        while let Some((off, c)) = chars.next() {
+            match c {
+                '"' => {
+                    self.i += off + 1;
+                    return Ok(Json::Str(out));
+                }
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => out.push('\n'),
+                    Some((_, 't')) => out.push('\t'),
+                    Some((_, 'r')) => out.push('\r'),
+                    Some((_, '\\')) => out.push('\\'),
+                    Some((_, '"')) => out.push('"'),
+                    Some((uoff, 'u')) => {
+                        let hex = self
+                            .rest()
+                            .get(uoff + 1..uoff + 5)
+                            .ok_or_else(|| "bad \\u escape".to_string())?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| "bad \\u escape".to_string())?;
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        for _ in 0..4 {
+                            chars.next();
+                        }
+                    }
+                    other => {
+                        return Err(format!(
+                            "unsupported escape '\\{}'",
+                            other.map(|(_, c)| c).unwrap_or(' ')
+                        ))
+                    }
+                },
+                c => out.push(c),
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn literal_string(&mut self) -> Result<Json, String> {
+        debug_assert!(self.rest().starts_with('\''));
+        self.i += 1;
+        match self.rest().find('\'') {
+            Some(end) => {
+                let out = self.rest()[..end].to_string();
+                self.i += end + 1;
+                Ok(Json::Str(out))
+            }
+            None => Err("unterminated literal string".to_string()),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.i += 1; // '['
+        let mut items = Vec::new();
+        loop {
+            self.skip_ws();
+            if let Some(r) = self.rest().strip_prefix(']') {
+                let _ = r;
+                self.i += 1;
+                return Ok(Json::Arr(items));
+            }
+            items.push(self.value()?);
+            self.skip_ws();
+            if self.rest().starts_with(',') {
+                self.i += 1;
+            } else if !self.rest().starts_with(']') {
+                return Err(format!("expected ',' or ']' in array, got '{}'", self.rest()));
+            }
+        }
+    }
+
+    fn inline_table(&mut self) -> Result<Json, String> {
+        self.i += 1; // '{'
+        let mut map = BTreeMap::new();
+        loop {
+            self.skip_ws();
+            if self.rest().starts_with('}') {
+                self.i += 1;
+                return Ok(Json::Obj(map));
+            }
+            let eq = find_unquoted_eq(self.rest())
+                .ok_or_else(|| "expected 'key = value' in inline table".to_string())?;
+            // Keys in inline tables must precede any ',' or '}'.
+            let key_str = &self.rest()[..eq];
+            if key_str.contains(',') || key_str.contains('}') {
+                return Err("expected 'key = value' in inline table".to_string());
+            }
+            let keypath = parse_key_path(key_str)?;
+            if keypath.len() != 1 {
+                return Err("dotted keys unsupported in inline tables".to_string());
+            }
+            self.i += eq + 1;
+            let val = self.value()?;
+            if map.insert(keypath[0].clone(), val).is_some() {
+                return Err(format!("duplicate key '{}' in inline table", keypath[0]));
+            }
+            self.skip_ws();
+            if self.rest().starts_with(',') {
+                self.i += 1;
+            } else if !self.rest().starts_with('}') {
+                return Err(format!(
+                    "expected ',' or '}}' in inline table, got '{}'",
+                    self.rest()
+                ));
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let end = self
+            .rest()
+            .find(|c: char| !(c.is_ascii_digit() || "+-._eE".contains(c)))
+            .unwrap_or(self.rest().len());
+        let raw = &self.rest()[..end];
+        if raw.is_empty() {
+            return Err(format!("bad value '{}'", self.rest()));
+        }
+        let cleaned: String = raw.chars().filter(|&c| c != '_').collect();
+        let n: f64 = cleaned
+            .parse()
+            .map_err(|_| format!("bad number '{raw}'"))?;
+        self.i += end;
+        Ok(Json::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let v = parse(
+            r#"
+# a scenario
+name = "fig7"            # trailing comment
+seed = 42
+frac = 0.25
+deep = true
+title = 'literal # not a comment'
+
+[checkpoint]
+interval = 10
+selector = "priority"
+
+[nested.inner]
+x = 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("name").as_str(), Some("fig7"));
+        assert_eq!(v.get("seed").as_usize(), Some(42));
+        assert_eq!(v.get("frac").as_f64(), Some(0.25));
+        assert_eq!(v.get("deep").as_bool(), Some(true));
+        assert_eq!(v.get("title").as_str(), Some("literal # not a comment"));
+        assert_eq!(v.get("checkpoint").get("interval").as_usize(), Some(10));
+        assert_eq!(v.get("nested").get("inner").get("x").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn parses_arrays_and_array_of_tables() {
+        let v = parse(
+            r#"
+panels = ["a", "b", "c"]
+range = [-2.0, 0.0]
+
+[[cell]]
+label = "one"
+frac = 0.25
+
+[[cell]]
+label = "two"
+plan = { kind = "cascade", gap = 5 }
+"#,
+        )
+        .unwrap();
+        let panels = v.get("panels").as_arr().unwrap();
+        assert_eq!(panels.len(), 3);
+        assert_eq!(panels[1].as_str(), Some("b"));
+        assert_eq!(v.get("range").idx(0).as_f64(), Some(-2.0));
+        let cells = v.get("cell").as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].get("label").as_str(), Some("one"));
+        assert_eq!(cells[1].get("plan").get("gap").as_usize(), Some(5));
+    }
+
+    #[test]
+    fn dotted_keys_and_quoted_keys() {
+        let v = parse("a.b = 1\n\"odd key\" = 2\n").unwrap();
+        assert_eq!(v.get("a").get("b").as_usize(), Some(1));
+        assert_eq!(v.get("odd key").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "line\nnext\t\"q\"""#).unwrap();
+        assert_eq!(v.get("s").as_str(), Some("line\nnext\t\"q\""));
+    }
+
+    #[test]
+    fn underscored_and_signed_numbers() {
+        let v = parse("big = 1_000_000\nneg = -3\nexp = 1e3\n").unwrap();
+        assert_eq!(v.get("big").as_usize(), Some(1_000_000));
+        assert_eq!(v.get("neg").as_f64(), Some(-3.0));
+        assert_eq!(v.get("exp").as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse("x = \"unterminated\n").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+        let e = parse("dup = 1\ndup = 2\n").unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+        let e = parse("[t\nx = 1\n").unwrap_err();
+        assert!(e.contains("unterminated"), "{e}");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_after_value() {
+        let e = parse("x = 1 2\n").unwrap_err();
+        assert!(e.contains("trailing"), "{e}");
+    }
+}

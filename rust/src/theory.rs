@@ -1,24 +1,42 @@
-//! Theory layer: the iteration-cost bounds of §3.
+//! Theory layer: the iteration-cost bounds of §3, function-by-function
+//! against the paper.
 //!
-//! * [`estimate_rate`] fits the linear contraction rate `c` of assumption
-//!   (3) from an observed error curve ‖x⁽ᵏ⁾ − x*‖ ("the value of c is
-//!   determined empirically", Fig 3/5 captions).
-//! * [`iteration_cost_bound`] is Theorem 3.2 / eq. (6):
-//!   ι ≤ log(1 + Δ_T / ‖x⁽⁰⁾ − x*‖) / log(1/c),
-//!   Δ_T = Σ_{ℓ=0}^{T} c^{−ℓ} E‖δ_ℓ‖.
-//! * [`infinite_horizon_bound`] is eq. (14) (App. B.1) for per-iteration
-//!   perturbations of size ≤ Δ, with the irreducible error (c/(1−c))Δ.
+//! | paper | here |
+//! |---|---|
+//! | assumption (3): ‖x⁽ᵏ⁺¹⁾ − x*‖ ≤ c‖x⁽ᵏ⁾ − x*‖ | `c` fit by [`estimate_rate`] / [`estimate_rate_conservative`] |
+//! | ι(δ, ε) = κ(y, ε) − κ(x, ε) (Def. 3.1) | measured by [`crate::harness::run_trial`]; bounded here |
+//! | Theorem 3.2 / eq. (6) | [`iteration_cost_bound`] |
+//! | Δ_T = Σ_{ℓ=0}^{T} c^{−ℓ} E‖δ_ℓ‖ (eq. 6) | [`delta_t`] |
+//! | κ(x, ε) for a linear sequence | [`kappa_unperturbed`] |
+//! | eq. (14), App. B.1 (per-iteration perturbations) | [`infinite_horizon_bound`] |
+//! | Example 3.3's error floor (c/(1−c))Δ | [`irreducible_error`] |
+//!
+//! The "value of c is determined empirically" (Fig 3/5 captions); the
+//! estimators below are the empirical side of that contract.
 
-/// A perturbation event: iteration index and expected norm E‖δ_ℓ‖.
+/// A perturbation event: iteration index ℓ and expected norm E‖δ_ℓ‖.
+///
+/// The iteration index matters because eq. (6) discounts by c^{−ℓ}:
+/// *later* perturbations are discounted **less**, i.e. cost more — a
+/// failure just before convergence hurts more than one at the start.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Perturbation {
     pub iter: usize,
     pub norm: f64,
 }
 
-/// Fit `c` by least squares on log(error): log e_k ≈ log e_0 + k log c.
-/// Points with error below `floor` are dropped (converged plateau /
-/// numerical noise would bias the slope).
+/// Fit the contraction rate `c` of assumption (3) by least squares on
+/// log(error): log e_k ≈ log e_0 + k log c. Points with error below
+/// `floor` are dropped (converged plateau / numerical noise would bias
+/// the slope).
+///
+/// ```
+/// use scar::theory::estimate_rate;
+/// // An exactly geometric error curve e_k = 10 · 0.93^k recovers c.
+/// let errors: Vec<f64> = (0..100).map(|k| 10.0 * 0.93f64.powi(k)).collect();
+/// let c = estimate_rate(&errors, 1e-12);
+/// assert!((c - 0.93).abs() < 1e-6);
+/// ```
 pub fn estimate_rate(errors: &[f64], floor: f64) -> f64 {
     let pts: Vec<(f64, f64)> = errors
         .iter()
@@ -108,7 +126,22 @@ pub fn estimate_slow_mode(errors: &[f64], floor: f64) -> (f64, f64) {
     (intercept.exp(), slope.exp().clamp(1e-6, 0.99999))
 }
 
-/// Δ_T = Σ c^{−ℓ} E‖δ_ℓ‖ (the time-discounted aggregate of eq. 6).
+/// Δ_T = Σ c^{−ℓ} E‖δ_ℓ‖ — the time-discounted perturbation aggregate of
+/// eq. (6). The c^{−ℓ} factor grows with ℓ: perturbations near
+/// convergence dominate the bound.
+///
+/// ```
+/// use scar::theory::{delta_t, Perturbation};
+/// // c = 0.5, one unit perturbation at l = 2: Delta_T = 0.5^-2 = 4.
+/// let dt = delta_t(0.5, &[Perturbation { iter: 2, norm: 1.0 }]);
+/// assert!((dt - 4.0).abs() < 1e-12);
+/// // Aggregation is additive across events (linearity of expectation).
+/// let two = delta_t(0.5, &[
+///     Perturbation { iter: 2, norm: 1.0 },
+///     Perturbation { iter: 3, norm: 1.0 },
+/// ]);
+/// assert!((two - 12.0).abs() < 1e-12);
+/// ```
 pub fn delta_t(c: f64, perturbations: &[Perturbation]) -> f64 {
     perturbations
         .iter()
@@ -116,7 +149,28 @@ pub fn delta_t(c: f64, perturbations: &[Perturbation]) -> f64 {
         .sum()
 }
 
-/// Theorem 3.2, eq. (6). `x0_dist` is ‖x⁽⁰⁾ − x*‖.
+/// Theorem 3.2, eq. (6): the expected iteration cost of perturbations
+/// δ_0..δ_T under assumption (3) is bounded by
+///
+/// ```text
+/// E[ι] ≤ log(1 + Δ_T / ‖x⁽⁰⁾ − x*‖) / log(1/c)
+/// ```
+///
+/// `x0_dist` is ‖x⁽⁰⁾ − x*‖ (or the slow-mode amplitude from
+/// [`estimate_slow_mode`] for multi-mode systems — see that function's
+/// docs for why). This is the curve every `fig5`/`fig6` sweep compares
+/// measured costs against, and what [`crate::advisor`] evaluates over
+/// candidate checkpoint policies.
+///
+/// ```
+/// use scar::theory::{iteration_cost_bound, Perturbation};
+/// // Hand computation: c = 0.5, ‖x0−x*‖ = 4, one unit delta at l = 2:
+/// // Delta_T = 4, bound = log(1 + 4/4) / log 2 = 1 extra iteration.
+/// let b = iteration_cost_bound(0.5, 4.0, &[Perturbation { iter: 2, norm: 1.0 }]);
+/// assert!((b - 1.0).abs() < 1e-12);
+/// // No perturbations, no cost.
+/// assert_eq!(iteration_cost_bound(0.9, 10.0, &[]), 0.0);
+/// ```
 pub fn iteration_cost_bound(c: f64, x0_dist: f64, perturbations: &[Perturbation]) -> f64 {
     assert!(c > 0.0 && c < 1.0, "need 0 < c < 1, got {c}");
     assert!(x0_dist > 0.0);
@@ -124,15 +178,32 @@ pub fn iteration_cost_bound(c: f64, x0_dist: f64, perturbations: &[Perturbation]
     (1.0 + dt / x0_dist).ln() / (1.0 / c).ln()
 }
 
-/// κ(x, ε) for the unperturbed linear sequence: iterations to ε-optimality
-/// = log(‖x⁽⁰⁾ − x*‖ / ε) / log(1/c).
+/// κ(x, ε) for the unperturbed linear sequence (Def. 3.1's
+/// iterations-to-ε-optimality): log(‖x⁽⁰⁾ − x*‖ / ε) / log(1/c).
+///
+/// ```
+/// use scar::theory::kappa_unperturbed;
+/// // Halving error each step from 8 to 1 takes 3 iterations.
+/// let k = kappa_unperturbed(0.5, 8.0, 1.0);
+/// assert!((k - 3.0).abs() < 1e-12);
+/// ```
 pub fn kappa_unperturbed(c: f64, x0_dist: f64, eps: f64) -> f64 {
     (x0_dist / eps).ln() / (1.0 / c).ln()
 }
 
-/// Eq. (14): iteration-cost bound under perturbations of size ≤ Δ in
-/// *every* iteration. Returns `None` when the bound is uninformative,
-/// i.e. ε or ‖x⁽⁰⁾ − x*‖ is not above the irreducible error (c/(1−c))Δ.
+/// Eq. (14) (App. B.1): iteration-cost bound under perturbations of size
+/// ≤ Δ in *every* iteration. Returns `None` when the bound is
+/// uninformative, i.e. ε or ‖x⁽⁰⁾ − x*‖ is not above the irreducible
+/// error (c/(1−c))Δ of Example 3.3 — the sequence can never converge
+/// below that floor.
+///
+/// ```
+/// use scar::theory::infinite_horizon_bound;
+/// // Informative region: small per-iteration noise, target above floor.
+/// assert!(infinite_horizon_bound(0.9, 10.0, 1.0, 0.01).is_some());
+/// // eps below the irreducible error (0.9/0.1 * 0.01 = 0.09): no bound.
+/// assert!(infinite_horizon_bound(0.9, 10.0, 0.05, 0.01).is_none());
+/// ```
 pub fn infinite_horizon_bound(c: f64, x0_dist: f64, eps: f64, delta: f64) -> Option<f64> {
     assert!(c > 0.0 && c < 1.0);
     let irreducible = c / (1.0 - c) * delta;
@@ -144,7 +215,14 @@ pub fn infinite_horizon_bound(c: f64, x0_dist: f64, eps: f64, delta: f64) -> Opt
     Some((num / den).ln() / (1.0 / c).ln())
 }
 
-/// The irreducible error floor (c/(1−c))Δ of Example 3.3.
+/// The irreducible error floor (c/(1−c))Δ of Example 3.3: under
+/// per-iteration perturbations of size Δ, no amount of training pushes
+/// the error below this value.
+///
+/// ```
+/// use scar::theory::irreducible_error;
+/// assert!((irreducible_error(0.9, 0.01) - 0.09).abs() < 1e-12);
+/// ```
 pub fn irreducible_error(c: f64, delta: f64) -> f64 {
     c / (1.0 - c) * delta
 }

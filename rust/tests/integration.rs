@@ -219,7 +219,7 @@ fn cluster_training_with_lda_detects_and_recovers() {
         40,
         CheckpointPolicy::partial(4, 4, Selector::Priority),
         &mut store,
-        Some((5, 1)),
+        &[(5, 1)],
         11,
         std::time::Duration::from_millis(2),
     )

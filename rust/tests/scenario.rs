@@ -1,0 +1,175 @@
+//! Scenario engine integration: bundled files parse, TOML/JSON round-trip
+//! holds, and parallel sweeps are byte-identical to serial ones.
+
+use scar::scenario::{self, Scenario};
+
+/// The parallel-vs-serial reference scenario: pure-Rust synthetic model
+/// so it runs fast and without PJRT artifacts, with one cell of every
+/// action family.
+const EQUIV: &str = r#"
+name = "equiv"
+model = "synthetic:dim=32,c=0.85,xseed=11"
+seed = 7
+trials = 6
+target_iters = 40
+max_iters = 80
+
+[checkpoint]
+interval = 8
+k = 2
+selector = "priority"
+
+[[cell]]
+label = "single p=0.5 partial"
+fail = "single"
+fraction = 0.5
+
+[[cell]]
+label = "single p=0.5 full"
+fail = "single"
+fraction = 0.5
+mode = "full"
+
+[[cell]]
+label = "cascade"
+fail = "cascade"
+fraction = 0.25
+extra = 2
+gap = 4
+
+[[cell]]
+label = "flaky"
+fail = "flaky"
+fraction = 0.25
+period = 5
+prob = 0.5
+max_events = 3
+
+[[cell]]
+label = "random perturb"
+perturb = "random"
+norm_log10 = [-2.0, 0.0]
+
+[[cell]]
+label = "reset half"
+perturb = "reset"
+fraction = 0.5
+"#;
+
+#[test]
+fn parallel_sweep_matches_serial_byte_for_byte() {
+    let mut scn = Scenario::from_toml_str(EQUIV).unwrap();
+
+    scn.workers = 1;
+    let serial = scenario::run_scenario(&scn, None).unwrap();
+
+    scn.workers = 4;
+    let parallel = scenario::run_scenario(&scn, None).unwrap();
+
+    assert_eq!(serial.render(), parallel.render());
+    assert_eq!(serial.to_csv(), parallel.to_csv());
+}
+
+#[test]
+fn sweep_results_are_sane() {
+    let mut scn = Scenario::from_toml_str(EQUIV).unwrap();
+    scn.workers = 4;
+    let report = scenario::run_scenario(&scn, None).unwrap();
+    assert_eq!(report.panels.len(), 1);
+    let panel = &report.panels[0];
+    assert_eq!(panel.converged_iters, 40);
+    // Synthetic model contracts at exactly c = 0.85; the conservative
+    // estimator must land close (and never below).
+    assert!((panel.c - 0.85).abs() < 0.02, "c = {}", panel.c);
+    assert_eq!(panel.cells.len(), 6);
+    for cell in &panel.cells {
+        assert_eq!(cell.costs.len(), 6);
+        assert_eq!(cell.deltas.len(), 6);
+        assert!(cell.summary.mean.is_finite());
+        // δ = 0 is possible (failure exactly on a checkpoint barrier),
+        // but never negative or non-finite.
+        assert!(
+            cell.deltas.iter().all(|d| d.is_finite() && *d >= 0.0),
+            "{}: {:?}",
+            cell.label,
+            cell.deltas
+        );
+    }
+    // Direct perturbations always displace the state.
+    for cell in &panel.cells[4..6] {
+        assert!(cell.deltas.iter().all(|d| *d > 0.0), "{}: {:?}", cell.label, cell.deltas);
+    }
+    // (Pairwise partial-vs-full Thm 4.1 comparisons with *shared* losses
+    // live in tests/integration.rs; cells here draw independent events.)
+    let partial = &panel.cells[0];
+    // Perturbation cells get Thm 3.2 bounds; the exactly-c-contracting
+    // synthetic model must respect them.
+    let rand = &panel.cells[4];
+    assert!(rand.bounds.iter().all(|b| b.is_finite()));
+    assert_eq!(rand.within_bound(), Some(rand.costs.len()));
+    // Failure cells carry no bound.
+    assert!(partial.bounds.iter().all(|b| b.is_nan()));
+    // CSV shape: header + cells x trials rows.
+    let csv = report.to_csv();
+    assert_eq!(csv.lines().count(), 1 + 6 * 6);
+    assert!(csv.starts_with("scenario,panel,cell,trial,cost,delta,bound,censored\n"));
+}
+
+#[test]
+fn bundled_scenario_files_parse_and_describe() {
+    for name in ["fig5.toml", "fig6.toml", "fig7.toml", "failure_models.toml"] {
+        let path = scenario::find_bundled(&format!("scenarios/{name}"));
+        assert!(path.exists(), "bundled scenario {name} not found at {}", path.display());
+        let scn = Scenario::from_file(&path)
+            .unwrap_or_else(|e| panic!("parsing {name}: {e:?}"));
+        assert!(!scn.cells.is_empty());
+        assert!(!scn.describe().is_empty());
+        // Round-trip through JSON preserves the spec.
+        let again = Scenario::from_json_str(&scn.to_json().to_string()).unwrap();
+        assert_eq!(scn, again);
+    }
+}
+
+#[test]
+fn fig7_scenario_structure_matches_paper_grid() {
+    let scn = Scenario::from_file(&scenario::find_bundled("scenarios/fig7.toml")).unwrap();
+    assert_eq!(scn.panels.len(), 8, "eight paper panels");
+    assert_eq!(scn.cells.len(), 6, "3 fractions x (full, partial)");
+    // Cells alternate full/partial per fraction (the wrapper's reduction
+    // summary relies on this pairing).
+    use scar::recovery::RecoveryMode;
+    for pair in scn.cells.chunks(2) {
+        assert_eq!(pair[0].mode, Some(RecoveryMode::Full));
+        assert_eq!(pair[1].mode, Some(RecoveryMode::Partial));
+    }
+}
+
+#[test]
+fn lda_panel_runs_without_engine() {
+    // The failure_models scenario targets the pure-Rust LDA substrate;
+    // a trimmed-down version must run end-to-end with no PJRT engine.
+    let scn = Scenario::from_toml_str(
+        r#"
+name = "lda_mini"
+model = "lda_20news"
+seed = 3
+trials = 2
+target_iters = 12
+max_iters = 18
+
+[[cell]]
+label = "correlated 2/4"
+fail = "correlated"
+nodes = 2
+of_nodes = 4
+"#,
+    )
+    .unwrap();
+    let report = scenario::run_scenario(&scn, None).unwrap();
+    let cell = &report.panels[0].cells[0];
+    assert_eq!(cell.costs.len(), 2);
+    // δ = 0 is legitimate when the failure lands exactly on a checkpoint
+    // iteration, so only require finite, non-negative perturbations.
+    assert!(cell.deltas.iter().all(|d| d.is_finite() && *d >= 0.0));
+    assert!(cell.costs.iter().all(|c| c.is_finite()));
+}

@@ -1,0 +1,235 @@
+//! Offline subset of the `anyhow` error-handling crate.
+//!
+//! The build image has no crates.io access, so this vendored crate
+//! reimplements the slice of anyhow's API that the `scar` crate uses:
+//!
+//! * [`Error`] — an opaque error value carrying a context chain;
+//! * [`Result<T>`] — alias with `Error` as the default error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction macros;
+//! * a blanket `From<E: std::error::Error>` so `?` converts any standard
+//!   error.
+//!
+//! Unlike upstream anyhow it does not capture backtraces or support
+//! downcasting: the error is flattened to a chain of display strings at
+//! construction time, which is all the surrounding code relies on.
+
+use std::fmt::{self, Display};
+
+/// Alias matching `anyhow::Result`: one type parameter, `Error` default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a chain of human-readable context frames. `chain[0]` is
+/// the outermost (most recently attached) context; the last entry is the
+/// root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (`anyhow::Error::msg`).
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach a new outermost context frame.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (root cause last).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or("unknown error"))?;
+        if f.alternate() {
+            for cause in &self.chain[1..] {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or("unknown error"))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any standard error. `Error` itself deliberately
+// does NOT implement `std::error::Error`, exactly like upstream anyhow —
+// that is what keeps this blanket impl coherent alongside
+// `impl From<Error> for Error` (the std identity impl).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+mod ext {
+    use super::*;
+
+    /// Private glue so `Context` works both for `Result<T, E>` with a
+    /// standard error E and for `Result<T, anyhow::Error>` — mirrors
+    /// upstream anyhow's `ext::StdError`.
+    pub trait StdError {
+        fn ext_context<C: Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            Error::from(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert_eq!(format!("{e}"), "opening file");
+        assert!(format!("{e:?}").contains("missing thing"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("want {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "want 7");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root {}", "cause");
+        }
+        let e = inner().context("outer").unwrap_err();
+        let frames: Vec<&str> = e.chain().collect();
+        assert_eq!(frames, vec!["outer", "root cause"]);
+        assert_eq!(e.root_cause(), "root cause");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+    }
+}

@@ -1,0 +1,79 @@
+//! Offline subset of the `crc32fast` crate: the standard IEEE CRC-32
+//! (reflected, polynomial 0xEDB88320) behind the same `hash` entry point.
+//! Table-driven single-byte implementation — plenty for checkpoint record
+//! integrity checks; swap back to the SIMD crate when the registry is
+//! available.
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// CRC-32 (IEEE) of a byte slice — same value as `crc32fast::hash`.
+pub fn hash(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// Incremental hasher with the upstream crate's shape.
+#[derive(Debug, Clone, Default)]
+pub struct Hasher {
+    state: u32,
+    started: bool,
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { state: 0xFFFF_FFFF, started: true }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        if !self.started {
+            self.state = 0xFFFF_FFFF;
+            self.started = true;
+        }
+        for &b in bytes {
+            self.state = (self.state >> 8) ^ TABLE[((self.state ^ b as u32) & 0xFF) as usize];
+        }
+    }
+
+    pub fn finalize(self) -> u32 {
+        !self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard test vector for CRC-32/IEEE.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+    }
+
+    #[test]
+    fn hasher_matches_oneshot() {
+        let mut h = Hasher::new();
+        h.update(b"1234");
+        h.update(b"56789");
+        assert_eq!(h.finalize(), hash(b"123456789"));
+    }
+}

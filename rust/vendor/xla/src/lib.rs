@@ -1,0 +1,333 @@
+//! Offline stand-in for the `xla` (PJRT bindings) crate.
+//!
+//! The build image carries no PJRT shared library, so this vendored crate
+//! implements the *host-side* surface the `scar` runtime uses for real —
+//! [`Literal`] construction/readback and [`PjRtBuffer`] round-trips are
+//! fully functional pure-Rust code — while the device-side entry points
+//! ([`PjRtClient::compile`], [`PjRtLoadedExecutable::execute_b`]) return a
+//! descriptive [`Error`]. Everything that does not execute compiled HLO
+//! (the LDA substrate, the synthetic trainer, the whole checkpoint/
+//! recovery/scenario stack, every literal helper) works unchanged.
+//!
+//! When the real PJRT toolchain is linked in, point the `xla` path
+//! dependency in `rust/Cargo.toml` back at the full bindings; the API
+//! below is signature-compatible with the subset `scar` calls.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type matching the bindings' shape: a message string.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes used by the scar artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_width(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+        }
+    }
+}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Host element types uploadable to device buffers.
+pub trait NativeType: Copy + private::Sealed {
+    const ELEMENT_TYPE: ElementType;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+}
+
+/// A host-side literal: dense typed bytes with a shape, or a tuple.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Dense literal from untyped host bytes (native byte order).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let want = shape.iter().product::<usize>().max(1) * ty.byte_width();
+        if want != bytes.len() {
+            return Err(Error::new(format!(
+                "literal shape {shape:?} wants {want} bytes, got {}",
+                bytes.len()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), bytes: bytes.to_vec(), tuple: None })
+    }
+
+    /// Tuple literal from element literals.
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, shape: Vec::new(), bytes: Vec::new(), tuple: Some(elements) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.tuple {
+            Some(t) => t.iter().map(Literal::element_count).sum(),
+            None => self.bytes.len() / self.ty.byte_width(),
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.tuple {
+            Some(t) => Ok(t),
+            None => Err(Error::new("to_tuple on a non-tuple literal")),
+        }
+    }
+
+    /// Read back as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error::new("to_vec on a tuple literal"));
+        }
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error::new(format!(
+                "to_vec element type mismatch: literal is {:?}",
+                self.ty
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        let n = self.bytes.len() / size;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            // Native byte order, possibly unaligned source.
+            let v = unsafe {
+                std::ptr::read_unaligned(self.bytes.as_ptr().add(i * size) as *const T)
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Copy into an existing host slice without allocating.
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        if self.tuple.is_some() {
+            return Err(Error::new("copy_raw_to on a tuple literal"));
+        }
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error::new(format!(
+                "copy_raw_to element type mismatch: literal is {:?}",
+                self.ty
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        if dst.len() * size != self.bytes.len() {
+            return Err(Error::new(format!(
+                "copy_raw_to length mismatch: literal {} bytes, dst {} bytes",
+                self.bytes.len(),
+                dst.len() * size
+            )));
+        }
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.bytes.as_ptr(),
+                dst.as_mut_ptr() as *mut u8,
+                self.bytes.len(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Parsed HLO module text. The stub only records the source path; parsing
+/// happens inside the real PJRT compiler.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error::new(format!("HLO text file not found: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// A computation handle wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// A device buffer. In the stub a buffer is its host literal.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Compiled executable handle. Only obtainable from the real bindings;
+/// the stub's [`PjRtClient::compile`] never produces one.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(
+            "PJRT execution unavailable in the offline xla stub (link the real bindings)",
+        ))
+    }
+}
+
+/// The PJRT client. Host-side operations work; compilation is gated.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu-stub" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(format!(
+            "cannot compile '{}': PJRT unavailable in the offline xla stub (link the real bindings and run `make artifacts`)",
+            comp.path
+        )))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        let literal = Literal::create_from_shape_and_untyped_data(T::ELEMENT_TYPE, dims, bytes)?;
+        Ok(PjRtBuffer { literal })
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: literal.clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data.to_vec());
+        let mut out = [0.0f32; 3];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn buffer_roundtrip_through_client() {
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client.buffer_from_host_buffer(&[7i32, 8, 9], &[3], None).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn type_and_shape_mismatches_rejected() {
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 8])
+            .unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 8])
+            .is_err());
+        let mut small = [0.0f32; 1];
+        assert!(lit.copy_raw_to(&mut small).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0u8; 4])
+            .unwrap();
+        let t = Literal::tuple(vec![a.clone(), a]);
+        assert_eq!(t.element_count(), 2);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn compile_is_gated_with_clear_error() {
+        let client = PjRtClient::cpu().unwrap();
+        std::fs::write("/tmp/xla-stub-test.hlo.txt", "HloModule m").unwrap();
+        let proto = HloModuleProto::from_text_file("/tmp/xla-stub-test.hlo.txt").unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("offline xla stub"));
+    }
+}
