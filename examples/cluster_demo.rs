@@ -6,14 +6,16 @@
 //!   cargo run --release --example cluster_demo -- \
 //!       [--model mlr_covtype] [--nodes 4] [--iters 120] [--kill-iter 30]
 
+use std::str::FromStr;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use scar::checkpoint::{CheckpointPolicy, Selector};
+use scar::checkpoint::{CheckpointMode, CheckpointPolicy, Selector};
 use scar::cluster::{run_cluster_training, ClusterEvent};
 use scar::models::{build_trainer, default_engine, BuildOpts};
-use scar::storage::DiskStore;
+use scar::storage::ShardedStore;
 use scar::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -24,20 +26,29 @@ fn main() -> Result<()> {
     let kill_iter = args.usize_or("kill-iter", 30);
     let kill_node = args.usize_or("kill-node", 1);
     let seed = args.u64_or("seed", 42);
+    let mode = CheckpointMode::from_str(&args.str_or("checkpoint-mode", "async"))
+        .map_err(anyhow::Error::msg)?;
 
     let engine = default_engine()?;
     let mut trainer = build_trainer(engine, &model, &BuildOpts::default())?;
     let dir = std::env::temp_dir().join(format!("scar-cluster-demo-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let mut store = DiskStore::open(&dir)?;
+    // One on-disk shard per PS node: each node streams its slice of the
+    // running checkpoint to its own segment log.
+    let store = Arc::new(ShardedStore::open_disk(&dir, nodes)?);
 
-    println!("cluster demo: {model} on {nodes} PS nodes; killing node {kill_node} at iter {kill_iter}");
+    println!(
+        "cluster demo: {model} on {nodes} PS nodes ({nodes} shards, {mode} checkpoints); \
+         killing node {kill_node} at iter {kill_iter}"
+    );
     let report = run_cluster_training(
         &mut trainer,
         nodes,
         iters,
         CheckpointPolicy::partial(8, 4, Selector::Priority),
-        &mut store,
+        store,
+        mode,
+        nodes,
         &[(kill_iter, kill_node)],
         seed,
         Duration::from_millis(5),

@@ -10,14 +10,22 @@
 //! seconds (CephFS-class latency model; the paper's 243 s/iteration
 //! cluster numbers do not transfer to a single machine — see DESIGN.md).
 //!
+//! Checkpoints flow through the sharded store (`--shards`, default 4) in
+//! both write modes, so the summary also prices the in-loop barrier
+//! stall of synchronous vs pipelined (async) checkpointing under the
+//! per-shard latency model: sync pays the slowest shard's dump on the
+//! training path at every barrier; async pays only selection + snapshot.
+//!
 //!   cargo run --release --example fig9_e2e_lda -- [--preset lda_clueweb]
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use scar::checkpoint::{CheckpointCoordinator, CheckpointPolicy, Selector};
+use scar::checkpoint::{AsyncCheckpointer, CheckpointMode, CheckpointPolicy, Selector};
 use scar::models::presets::{build_preset, preset};
 use scar::recovery::{recover, RecoveryMode};
-use scar::storage::{CheckpointStore, DiskStore, LatencyModel};
+use scar::storage::{LatencyModel, ShardedStore};
 use scar::trainer::Trainer;
 use scar::util::cli::Args;
 use scar::util::rng::Rng;
@@ -26,7 +34,9 @@ struct RunOutcome {
     losses: Vec<f64>,
     iters_to_target: Option<usize>,
     blocking_secs: f64,
+    barriers: usize,
     bytes: u64,
+    per_shard_io: Vec<(u64, u64)>,
     step_secs: f64,
 }
 
@@ -36,6 +46,8 @@ fn run(
     preset_name: &str,
     policy: CheckpointPolicy,
     mode: RecoveryMode,
+    ckpt_mode: CheckpointMode,
+    shards: usize,
     fail_iter: usize,
     iters: usize,
     target: f64,
@@ -47,8 +59,18 @@ fn run(
     trainer.init(seed)?;
     let layout = trainer.layout().clone();
     let _ = std::fs::remove_dir_all(ckpt_dir);
-    let mut store = DiskStore::open(ckpt_dir)?;
-    let mut coord = CheckpointCoordinator::new(policy, trainer.state(), &layout, &mut store)?;
+    let store = Arc::new(ShardedStore::open_disk(ckpt_dir, shards)?);
+    let mut ck = AsyncCheckpointer::new(
+        policy,
+        trainer.state(),
+        &layout,
+        store.clone(),
+        ckpt_mode,
+        shards,
+    )?;
+    // Baseline after the x(0) startup dump, so per-barrier stall modeling
+    // only prices in-loop barriers.
+    let init_io = store.per_shard_io();
     let mut rng = Rng::new(seed ^ 0xF19);
 
     // Failure: lose 1/2 of atoms, chosen uniformly.
@@ -58,11 +80,14 @@ fn run(
 
     let mut losses = Vec::new();
     let mut blocking = 0.0f64;
+    let mut barriers = 0usize;
     let mut iters_to_target = None;
     let t0 = std::time::Instant::now();
     for iter in 0..iters {
         if iter == fail_iter {
-            let rep = recover(mode, trainer.state_mut(), &layout, &lost, &store)?;
+            // Epoch fence: recovery reads only fully-committed state.
+            ck.flush()?;
+            let rep = recover(mode, trainer.state_mut(), &layout, &lost, store.as_ref())?;
             eprintln!(
                 "[{label}] iter {iter}: failure lost {} atoms; {:?} recovery ‖δ‖={:.1}",
                 lost.len(),
@@ -75,18 +100,25 @@ fn run(
         if loss <= target && iters_to_target.is_none() {
             iters_to_target = Some(iter + 1);
         }
-        if let Some(stats) =
-            coord.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut store, &mut rng)?
-        {
+        if let Some(stats) = ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng)? {
             blocking += stats.blocking_secs;
+            barriers += 1;
         }
     }
-    store.write_manifest()?;
+    ck.finish()?;
+    let per_shard_io: Vec<(u64, u64)> = store
+        .per_shard_io()
+        .iter()
+        .zip(&init_io)
+        .map(|(&(b, r), &(b0, r0))| (b - b0, r - r0))
+        .collect();
     Ok(RunOutcome {
         losses,
         iters_to_target,
         blocking_secs: blocking,
-        bytes: store.bytes_written(),
+        barriers,
+        bytes: store.total_bytes(),
+        per_shard_io,
         step_secs: t0.elapsed().as_secs_f64() / iters as f64,
     })
 }
@@ -96,6 +128,7 @@ fn main() -> Result<()> {
     let preset_name = args.str_or("preset", "lda_clueweb");
     let iters = args.usize_or("iters", 30);
     let fail_iter = args.usize_or("fail-iter", 7);
+    let shards = args.usize_or("shards", 4);
     let seed = args.u64_or("seed", 42);
 
     // Fix the likelihood target from a short unperturbed run.
@@ -115,6 +148,8 @@ fn main() -> Result<()> {
         &preset_name,
         CheckpointPolicy::partial(4, 4, Selector::Priority),
         RecoveryMode::Partial,
+        CheckpointMode::Async,
+        shards,
         fail_iter,
         iters,
         target,
@@ -126,6 +161,8 @@ fn main() -> Result<()> {
         &preset_name,
         CheckpointPolicy::full(4),
         RecoveryMode::Full,
+        CheckpointMode::Sync,
+        shards,
         fail_iter,
         iters,
         target,
@@ -145,15 +182,34 @@ fn main() -> Result<()> {
     std::fs::write("results/fig9.csv", rows.join("\n"))?;
 
     let model = LatencyModel::default();
-    println!("== Fig 9: {} with failure of 1/2 params at iter {} ==", preset_name, fail_iter);
-    for (name, r) in [("SCAR (1/4 every iter, partial)", &scar_run), ("traditional (full every 4, full)", &trad)] {
+    println!(
+        "== Fig 9: {} with failure of 1/2 params at iter {} ({} shards) ==",
+        preset_name, fail_iter, shards
+    );
+    for (name, async_mode, r) in [
+        ("SCAR (1/4 every iter, partial, async)", true, &scar_run),
+        ("traditional (full every 4, full, sync)", false, &trad),
+    ] {
+        // In-loop stall per barrier: sync pays the slowest shard's share
+        // of one barrier's dump; async pays nothing on the training path.
+        let per_barrier: Vec<(u64, u64)> = r
+            .per_shard_io
+            .iter()
+            .map(|&(b, ops)| {
+                let n = r.barriers.max(1) as u64;
+                (b / n, (ops / n).max(1))
+            })
+            .collect();
+        let stall = model.barrier_stall_seconds(&per_barrier, async_mode) * r.barriers as f64;
         println!(
-            "{name}\n  iters to target: {}  step time: {:.2}s  ckpt blocking: {:.3}s  bytes: {}  modeled dump: {:.2}s",
+            "{name}\n  iters to target: {}  step time: {:.2}s  ckpt blocking: {:.3}s  \
+             bytes: {}  modeled dump: {:.2}s  modeled in-loop stall: {:.2}s",
             r.iters_to_target.map(|v| v.to_string()).unwrap_or("censored".into()),
             r.step_secs,
             r.blocking_secs,
             scar::util::fmt_bytes(r.bytes),
-            model.dump_seconds(r.bytes, 1 + r.bytes / (1 << 20)),
+            model.sharded_dump_seconds(&r.per_shard_io),
+            stall,
         );
     }
     if let (Some(a), Some(b)) = (scar_run.iters_to_target, trad.iters_to_target) {

@@ -14,10 +14,21 @@
 //! mix of atoms saved at different iterations.
 //!
 //! Each PS node keeps an in-memory cache of the running checkpoint for
-//! distance computation (§4.3); in this single-store coordinator the cache
-//! is one `ParamStore` and the distance pass is the hot path measured in
+//! distance computation (§4.3); in this coordinator the cache is one
+//! `ParamStore` and the distance pass is the hot path measured in
 //! `benches/priority_selection.rs`.
+//!
+//! Two write paths share the selection/cache logic:
+//!
+//! * [`CheckpointCoordinator`] — synchronous: the barrier persists atoms
+//!   inline into any [`CheckpointStore`].
+//! * [`AsyncCheckpointer`] (in [`pipeline`]) — pipelined: the barrier
+//!   snapshots the selected atoms copy-on-write and hands them to a
+//!   background writer pool over a sharded store; training resumes
+//!   immediately and a `flush` fence makes the state durable before any
+//!   recovery read.
 
+pub mod pipeline;
 pub mod select;
 
 use anyhow::Result;
@@ -26,7 +37,40 @@ use crate::params::{AtomLayout, ParamStore};
 use crate::storage::CheckpointStore;
 use crate::util::rng::Rng;
 
+pub use pipeline::AsyncCheckpointer;
 pub use select::Selector;
+
+/// Whether checkpoint barriers block on persistent storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CheckpointMode {
+    /// The barrier writes to storage inline (traditional).
+    #[default]
+    Sync,
+    /// The barrier snapshots atoms and returns; a writer pool persists
+    /// them in the background (§4.3 step 4, made explicit).
+    Async,
+}
+
+impl std::str::FromStr for CheckpointMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sync" => Ok(CheckpointMode::Sync),
+            "async" => Ok(CheckpointMode::Async),
+            other => Err(format!("unknown checkpoint mode '{other}' (sync|async)")),
+        }
+    }
+}
+
+impl std::fmt::Display for CheckpointMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CheckpointMode::Sync => "sync",
+            CheckpointMode::Async => "async",
+        })
+    }
+}
 
 /// Checkpoint policy: the paper's (r, rC) scheme. `fraction = 1.0` with
 /// `interval = C` is the traditional full-checkpoint baseline.
@@ -44,12 +88,22 @@ impl CheckpointPolicy {
         CheckpointPolicy { fraction: 1.0, interval, selector: Selector::Priority }
     }
 
-    /// SCAR policy with data-volume parity against `full(base_interval)`:
-    /// fraction 1/k every base_interval/k iterations.
+    /// SCAR policy with data-volume parity against `full(base_interval)`.
+    ///
+    /// When `k` divides `base_interval` this is exactly the paper's
+    /// parametrization: fraction `1/k` every `base_interval/k` iterations.
+    /// When it does not, the interval is rounded to the nearest integer
+    /// and the fraction recomputed as `interval / base_interval`, so
+    /// bytes-per-`base_interval` parity holds *by construction* (the old
+    /// behavior silently over- or under-wrote by up to ~2× for, e.g.,
+    /// `base_interval = 10, k = 3`).
     pub fn partial(base_interval: usize, k: usize, selector: Selector) -> Self {
-        assert!(k >= 1);
-        let interval = (base_interval / k).max(1);
-        CheckpointPolicy { fraction: 1.0 / k as f64, interval, selector }
+        assert!(k >= 1, "k must be >= 1");
+        assert!(base_interval >= 1, "base_interval must be >= 1");
+        let interval = ((base_interval as f64 / k as f64).round() as usize)
+            .clamp(1, base_interval);
+        let fraction = interval as f64 / base_interval as f64;
+        CheckpointPolicy { fraction, interval, selector }
     }
 
     pub fn atoms_per_checkpoint(&self, n_atoms: usize) -> usize {
@@ -89,16 +143,27 @@ impl CheckpointCoordinator {
         layout: &AtomLayout,
         store: &mut dyn CheckpointStore,
     ) -> Result<CheckpointCoordinator> {
-        let mut coord = CheckpointCoordinator {
+        let mut coord = CheckpointCoordinator::new_unpersisted(policy, init, layout);
+        // Persist x(0) as the initial running checkpoint.
+        coord.persist_atoms(0, &(0..layout.n_atoms()).collect::<Vec<_>>(), init, layout, store)?;
+        store.mark_committed(0);
+        Ok(coord)
+    }
+
+    /// Build the coordinator state without touching storage (the async
+    /// pipeline persists x⁽⁰⁾ through its own path).
+    pub(crate) fn new_unpersisted(
+        policy: CheckpointPolicy,
+        init: &ParamStore,
+        layout: &AtomLayout,
+    ) -> CheckpointCoordinator {
+        CheckpointCoordinator {
             policy,
             cache: init.clone(),
             saved_iter: vec![0; layout.n_atoms()],
             rr_cursor: 0,
             scratch: Vec::new(),
-        };
-        // Persist x(0) as the initial running checkpoint.
-        coord.persist_atoms(0, &(0..layout.n_atoms()).collect::<Vec<_>>(), init, layout, store)?;
-        Ok(coord)
+        }
     }
 
     pub fn cache(&self) -> &ParamStore {
@@ -107,6 +172,34 @@ impl CheckpointCoordinator {
 
     pub fn saved_iter(&self, atom: usize) -> usize {
         self.saved_iter[atom]
+    }
+
+    /// Select the barrier's atoms and fold them into the in-memory cache
+    /// — the blocking part of every barrier, shared by the sync and async
+    /// write paths. Returns the chosen atom ids.
+    pub(crate) fn select_and_update_cache(
+        &mut self,
+        iter: usize,
+        current: &ParamStore,
+        layout: &AtomLayout,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let k = self.policy.atoms_per_checkpoint(layout.n_atoms());
+        let chosen = select::select_atoms(
+            self.policy.selector,
+            k,
+            current,
+            &self.cache,
+            layout,
+            &mut self.rr_cursor,
+            rng,
+        );
+        for &a in &chosen {
+            current.read_atom(layout, a, &mut self.scratch);
+            self.cache.write_atom(layout, a, &self.scratch);
+            self.saved_iter[a] = iter;
+        }
+        chosen
     }
 
     /// Run a checkpoint barrier if the policy schedules one at `iter`.
@@ -133,27 +226,14 @@ impl CheckpointCoordinator {
         store: &mut dyn CheckpointStore,
         rng: &mut Rng,
     ) -> Result<CheckpointStats> {
-        let k = self.policy.atoms_per_checkpoint(layout.n_atoms());
         let t0 = std::time::Instant::now();
-        let chosen = select::select_atoms(
-            self.policy.selector,
-            k,
-            current,
-            &self.cache,
-            layout,
-            &mut self.rr_cursor,
-            rng,
-        );
-        // Update the in-memory cache — after this the training loop can
-        // resume; the persistent write is accounted separately.
-        for &a in &chosen {
-            current.read_atom(layout, a, &mut self.scratch);
-            self.cache.write_atom(layout, a, &self.scratch);
-            self.saved_iter[a] = iter;
-        }
+        let chosen = self.select_and_update_cache(iter, current, layout, rng);
+        // After the cache update the training loop could resume; the
+        // persistent write is accounted separately.
         let blocking_secs = t0.elapsed().as_secs_f64();
         let bytes_before = store.bytes_written();
         self.persist_atoms(iter, &chosen, current, layout, store)?;
+        store.mark_committed(iter);
         Ok(CheckpointStats {
             iter,
             atoms_saved: chosen.len(),
@@ -170,17 +250,28 @@ impl CheckpointCoordinator {
         layout: &AtomLayout,
         store: &mut dyn CheckpointStore,
     ) -> Result<()> {
-        // Collect owned buffers first (atoms may have multi-segment values).
-        let mut payloads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(atoms.len());
-        for &a in atoms {
-            let mut buf = Vec::new();
-            from.read_atom(layout, a, &mut buf);
-            payloads.push((a, buf));
-        }
+        let payloads = collect_payloads(atoms, from, layout);
         let refs: Vec<(usize, &[f32])> =
             payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
         store.put_atoms(iter, &refs)
     }
+}
+
+/// Copy the given atoms' values out of `from` into owned buffers — the
+/// copy-on-write snapshot a barrier hands to the writer pool (atoms may
+/// have multi-segment values, so each payload is flattened).
+pub(crate) fn collect_payloads(
+    atoms: &[usize],
+    from: &ParamStore,
+    layout: &AtomLayout,
+) -> Vec<(usize, Vec<f32>)> {
+    let mut payloads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(atoms.len());
+    for &a in atoms {
+        let mut buf = Vec::new();
+        from.read_atom(layout, a, &mut buf);
+        payloads.push((a, buf));
+    }
+    payloads
 }
 
 #[cfg(test)]
@@ -267,6 +358,43 @@ mod tests {
     }
 
     #[test]
+    fn parity_holds_when_k_does_not_divide_interval() {
+        // base_interval = 10, k = 3: the old `(10 / 3).max(1) = 3` with
+        // fraction 1/3 wrote 10/9 of the full-policy volume. The fixed
+        // policy saves fraction 3/10 every 3 iterations — exact parity
+        // over any common multiple of the intervals.
+        let policy = CheckpointPolicy::partial(10, 3, Selector::RoundRobin);
+        assert_eq!(policy.interval, 3);
+        assert!((policy.fraction - 0.3).abs() < 1e-12);
+
+        let (ps, layout) = setup(30);
+        let mut rng = Rng::new(0);
+        let mut bytes_for = |policy: CheckpointPolicy| -> u64 {
+            let mut store = MemStore::new();
+            let mut coord =
+                CheckpointCoordinator::new(policy, &ps, &layout, &mut store).unwrap();
+            let base = store.bytes_written();
+            for iter in 1..=30 {
+                coord.maybe_checkpoint(iter, &ps, &layout, &mut store, &mut rng).unwrap();
+            }
+            store.bytes_written() - base
+        };
+        let full = bytes_for(CheckpointPolicy::full(10));
+        let partial = bytes_for(policy);
+        assert_eq!(full, partial, "bytes-written parity must hold exactly");
+    }
+
+    #[test]
+    fn partial_keeps_exact_form_when_k_divides() {
+        let p = CheckpointPolicy::partial(8, 4, Selector::Priority);
+        assert_eq!(p.interval, 2);
+        assert!((p.fraction - 0.25).abs() < 1e-12);
+        let p1 = CheckpointPolicy::partial(8, 1, Selector::Priority);
+        assert_eq!(p1.interval, 8);
+        assert!((p1.fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn round_robin_cycles_all_atoms() {
         let (ps, layout) = setup(6);
         let mut store = MemStore::new();
@@ -280,5 +408,13 @@ mod tests {
         for a in 0..6 {
             assert!(coord.saved_iter(a) >= 1, "atom {a} never saved");
         }
+    }
+
+    #[test]
+    fn checkpoint_mode_parses() {
+        assert_eq!("sync".parse::<CheckpointMode>().unwrap(), CheckpointMode::Sync);
+        assert_eq!("async".parse::<CheckpointMode>().unwrap(), CheckpointMode::Async);
+        assert!("background".parse::<CheckpointMode>().is_err());
+        assert_eq!(CheckpointMode::Async.to_string(), "async");
     }
 }

@@ -1,0 +1,392 @@
+//! Pipelined checkpoint writes: non-blocking barriers over a sharded
+//! store (the ROADMAP's "async" leg of the storage refactor).
+//!
+//! A traditional barrier stalls the training loop for the full storage
+//! dump. SCAR's observation (§4.3 step 4) is that only atom *selection*
+//! and the in-memory cache update must happen at the barrier; the
+//! persistent write can proceed concurrently with training. The
+//! [`AsyncCheckpointer`] makes that explicit:
+//!
+//! 1. At the barrier it runs the shared selection/cache logic of
+//!    [`CheckpointCoordinator`], then snapshots the chosen atoms
+//!    copy-on-write into owned buffers.
+//! 2. In [`CheckpointMode::Async`] the snapshot is handed to a writer
+//!    pool (one thread per shard group) and the barrier returns
+//!    immediately; in [`CheckpointMode::Sync`] it is written inline —
+//!    both modes share one code path so experiments can price them
+//!    against each other.
+//! 3. [`flush`](AsyncCheckpointer::flush) is the epoch fence: it drains
+//!    the pool, syncs every shard (disk manifests), and advances the
+//!    store's commit watermark. Recovery must fence first — the watermark
+//!    makes a forgotten fence a loud error instead of a silent
+//!    nondeterminism (see [`crate::recovery::recover`]).
+//!
+//! Determinism: the payload handed to the pool is snapshotted *at the
+//! barrier*, each shard's jobs flow through exactly one writer's FIFO, and
+//! records supersede by iteration — so after a fence, async and sync runs
+//! of the same seed hold byte-identical running checkpoints
+//! (`rust/tests/async_checkpoint.rs` pins this).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::params::{AtomLayout, ParamStore};
+use crate::storage::ShardedStore;
+use crate::util::rng::Rng;
+
+use super::{
+    collect_payloads, CheckpointCoordinator, CheckpointMode, CheckpointPolicy, CheckpointStats,
+};
+
+/// One barrier's snapshot for one writer: atoms routed to that writer's
+/// shards, copied at barrier time.
+struct WriteJob {
+    iter: usize,
+    atoms: Vec<(usize, Vec<f32>)>,
+}
+
+struct PendingState {
+    in_flight: usize,
+    error: Option<String>,
+}
+
+struct PoolShared {
+    pending: Mutex<PendingState>,
+    drained: Condvar,
+}
+
+struct Writer {
+    tx: Option<Sender<WriteJob>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Checkpoint front-end over a [`ShardedStore`] with sync and pipelined
+/// (async) write modes. See the module docs for the protocol.
+pub struct AsyncCheckpointer {
+    coord: CheckpointCoordinator,
+    store: Arc<ShardedStore>,
+    mode: CheckpointMode,
+    writers: Vec<Writer>,
+    shared: Arc<PoolShared>,
+    last_barrier_iter: usize,
+}
+
+impl AsyncCheckpointer {
+    /// Initialize the running checkpoint with x⁽⁰⁾ (persisted inline and
+    /// committed — startup is not the hot path) and, in async mode, spawn
+    /// `writers` background threads (clamped to `[1, n_shards]`; each
+    /// shard's writes always flow through exactly one writer so per-shard
+    /// order is barrier order).
+    pub fn new(
+        policy: CheckpointPolicy,
+        init: &ParamStore,
+        layout: &AtomLayout,
+        store: Arc<ShardedStore>,
+        mode: CheckpointMode,
+        writers: usize,
+    ) -> Result<AsyncCheckpointer> {
+        let coord = CheckpointCoordinator::new_unpersisted(policy, init, layout);
+        let all: Vec<usize> = (0..layout.n_atoms()).collect();
+        let payloads = collect_payloads(&all, init, layout);
+        let refs: Vec<(usize, &[f32])> =
+            payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+        store.put_atoms_at(0, &refs)?;
+        store.sync_all()?;
+        store.mark_committed_at(0);
+
+        let shared = Arc::new(PoolShared {
+            pending: Mutex::new(PendingState { in_flight: 0, error: None }),
+            drained: Condvar::new(),
+        });
+        let n_writers = match mode {
+            CheckpointMode::Sync => 0,
+            CheckpointMode::Async => writers.clamp(1, store.n_shards()),
+        };
+        let mut pool = Vec::with_capacity(n_writers);
+        for w in 0..n_writers {
+            let (tx, rx): (Sender<WriteJob>, Receiver<WriteJob>) = channel();
+            let store = store.clone();
+            let shared = shared.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("ckpt-writer-{w}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        let refs: Vec<(usize, &[f32])> =
+                            job.atoms.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+                        let res = store.put_atoms_at(job.iter, &refs);
+                        let mut p = shared.pending.lock().unwrap();
+                        if let Err(e) = res {
+                            if p.error.is_none() {
+                                p.error = Some(format!("{e:?}"));
+                            }
+                        }
+                        p.in_flight -= 1;
+                        shared.drained.notify_all();
+                    }
+                })
+                .expect("spawning checkpoint writer thread");
+            pool.push(Writer { tx: Some(tx), join: Some(join) });
+        }
+        Ok(AsyncCheckpointer {
+            coord,
+            store,
+            mode,
+            writers: pool,
+            shared,
+            last_barrier_iter: 0,
+        })
+    }
+
+    pub fn mode(&self) -> CheckpointMode {
+        self.mode
+    }
+
+    pub fn policy(&self) -> CheckpointPolicy {
+        self.coord.policy
+    }
+
+    pub fn store(&self) -> &Arc<ShardedStore> {
+        &self.store
+    }
+
+    /// In-memory running-checkpoint cache (see [`CheckpointCoordinator::cache`]).
+    pub fn cache(&self) -> &ParamStore {
+        self.coord.cache()
+    }
+
+    pub fn saved_iter(&self, atom: usize) -> usize {
+        self.coord.saved_iter(atom)
+    }
+
+    /// Run a checkpoint barrier if the policy schedules one at `iter`.
+    pub fn maybe_checkpoint(
+        &mut self,
+        iter: usize,
+        current: &ParamStore,
+        layout: &AtomLayout,
+        rng: &mut Rng,
+    ) -> Result<Option<CheckpointStats>> {
+        if iter == 0 || iter % self.coord.policy.interval != 0 {
+            return Ok(None);
+        }
+        Ok(Some(self.checkpoint_now(iter, current, layout, rng)?))
+    }
+
+    /// Force a checkpoint barrier at `iter`: select, update the cache,
+    /// snapshot copy-on-write, then write inline (sync) or enqueue
+    /// (async). `blocking_secs` covers exactly the part the training loop
+    /// waits on in async mode.
+    pub fn checkpoint_now(
+        &mut self,
+        iter: usize,
+        current: &ParamStore,
+        layout: &AtomLayout,
+        rng: &mut Rng,
+    ) -> Result<CheckpointStats> {
+        let t0 = std::time::Instant::now();
+        let chosen = self.coord.select_and_update_cache(iter, current, layout, rng);
+        let payloads = collect_payloads(&chosen, current, layout);
+        let bytes: u64 = payloads.iter().map(|(_, v)| (v.len() * 4) as u64).sum();
+        let blocking_secs = t0.elapsed().as_secs_f64();
+        let atoms_saved = chosen.len();
+
+        match self.mode {
+            CheckpointMode::Sync => {
+                let refs: Vec<(usize, &[f32])> =
+                    payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+                self.store.put_atoms_at(iter, &refs)?;
+                self.store.mark_committed_at(iter);
+            }
+            CheckpointMode::Async => {
+                // Route each atom to the writer that owns its shard so a
+                // shard's records always arrive in barrier order. The
+                // route is resolved for the whole batch under one lock.
+                let n_writers = self.writers.len();
+                let ids: Vec<usize> = payloads.iter().map(|(a, _)| *a).collect();
+                let shards = self.store.shard_map(&ids);
+                let mut per_writer: Vec<Vec<(usize, Vec<f32>)>> =
+                    (0..n_writers).map(|_| Vec::new()).collect();
+                for ((atom, vals), shard) in payloads.into_iter().zip(shards) {
+                    per_writer[shard % n_writers].push((atom, vals));
+                }
+                for (w, atoms) in per_writer.into_iter().enumerate() {
+                    if atoms.is_empty() {
+                        continue;
+                    }
+                    {
+                        let mut p = self.shared.pending.lock().unwrap();
+                        p.in_flight += 1;
+                    }
+                    let tx = self.writers[w].tx.as_ref().expect("writer pool running");
+                    if tx.send(WriteJob { iter, atoms }).is_err() {
+                        // Undo the reservation so a later flush can still
+                        // drain instead of waiting forever.
+                        self.shared.pending.lock().unwrap().in_flight -= 1;
+                        bail!("checkpoint writer {w} died; state lost before flush");
+                    }
+                }
+            }
+        }
+        self.last_barrier_iter = iter;
+        Ok(CheckpointStats { iter, atoms_saved, bytes, blocking_secs })
+    }
+
+    /// Epoch fence: drain all in-flight writes, surface any writer error,
+    /// sync every shard, and advance the commit watermark. Recovery MUST
+    /// call this before reading the store (the watermark turns a missing
+    /// fence into an error instead of silent nondeterminism).
+    pub fn flush(&mut self) -> Result<()> {
+        if self.mode == CheckpointMode::Async {
+            let mut p = self.shared.pending.lock().unwrap();
+            while p.in_flight > 0 {
+                // Bounded waits so a writer that died abnormally (panic in
+                // a backend, poisoned shard lock) turns into an error
+                // instead of an unbounded hang: a finished thread can no
+                // longer drain its queue.
+                let (guard, _timeout) = self
+                    .shared
+                    .drained
+                    .wait_timeout(p, std::time::Duration::from_millis(200))
+                    .unwrap();
+                p = guard;
+                if p.in_flight > 0
+                    && self
+                        .writers
+                        .iter()
+                        .any(|w| w.join.as_ref().map(|j| j.is_finished()).unwrap_or(true))
+                {
+                    bail!(
+                        "checkpoint writer thread exited with {} write(s) still pending",
+                        p.in_flight
+                    );
+                }
+            }
+            if let Some(e) = p.error.take() {
+                bail!("checkpoint writer failed: {e}");
+            }
+        }
+        self.store.sync_all()?;
+        self.store.mark_committed_at(self.last_barrier_iter);
+        Ok(())
+    }
+
+    /// Final fence, then hand the store back (the checkpointer's writer
+    /// threads are joined on drop).
+    pub fn finish(mut self) -> Result<Arc<ShardedStore>> {
+        self.flush()?;
+        Ok(self.store.clone())
+    }
+}
+
+impl Drop for AsyncCheckpointer {
+    fn drop(&mut self) {
+        for w in self.writers.iter_mut() {
+            w.tx = None; // close the channel so the thread's recv() ends
+        }
+        for w in self.writers.iter_mut() {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Selector;
+    use crate::params::{AtomLayout, ParamStore, Tensor};
+
+    fn setup(n: usize) -> (ParamStore, AtomLayout) {
+        let store = ParamStore::new(vec![Tensor::zeros("w", &[n, 2])]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&store, "w"));
+        (store, layout)
+    }
+
+    /// Drive `iters` barriers of drifting state through a checkpointer
+    /// and return the flushed store.
+    fn drive(mode: CheckpointMode, shards: usize, writers: usize) -> Arc<ShardedStore> {
+        let (mut ps, layout) = setup(12);
+        let store = Arc::new(ShardedStore::new_mem(shards));
+        let policy = CheckpointPolicy::partial(4, 2, Selector::Priority);
+        let mut ck =
+            AsyncCheckpointer::new(policy, &ps, &layout, store, mode, writers).unwrap();
+        let mut rng = Rng::new(42);
+        for iter in 1..=12usize {
+            for (i, v) in ps.get_mut("w").data.iter_mut().enumerate() {
+                *v += (iter * (i + 1)) as f32 * 0.01;
+            }
+            ck.maybe_checkpoint(iter, &ps, &layout, &mut rng).unwrap();
+        }
+        ck.finish().unwrap()
+    }
+
+    #[test]
+    fn async_store_matches_sync_store_after_flush() {
+        let sync = drive(CheckpointMode::Sync, 3, 1);
+        let single = drive(CheckpointMode::Sync, 1, 1);
+        let parallel = drive(CheckpointMode::Async, 3, 2);
+        assert_eq!(sync.total_bytes(), parallel.total_bytes());
+        assert_eq!(sync.total_records(), parallel.total_records());
+        assert_eq!(sync.committed(), parallel.committed());
+        for atom in 0..12 {
+            let a = sync.get_atom_any(atom).unwrap().unwrap();
+            let b = parallel.get_atom_any(atom).unwrap().unwrap();
+            let c = single.get_atom_any(atom).unwrap().unwrap();
+            assert_eq!(a, b, "atom {atom}: async differs from sync");
+            assert_eq!(a, c, "atom {atom}: sharded differs from single-shard");
+        }
+    }
+
+    #[test]
+    fn flush_advances_watermark() {
+        let (ps, layout) = setup(6);
+        let store = Arc::new(ShardedStore::new_mem(2));
+        let mut ck = AsyncCheckpointer::new(
+            CheckpointPolicy::full(2),
+            &ps,
+            &layout,
+            store.clone(),
+            CheckpointMode::Async,
+            2,
+        )
+        .unwrap();
+        assert_eq!(store.committed(), Some(0));
+        let mut rng = Rng::new(1);
+        ck.checkpoint_now(2, &ps, &layout, &mut rng).unwrap();
+        ck.checkpoint_now(4, &ps, &layout, &mut rng).unwrap();
+        ck.flush().unwrap();
+        assert_eq!(store.committed(), Some(4));
+        // Every record is now visible and none is beyond the watermark.
+        for atom in 0..6 {
+            let saved = store.get_atom_any(atom).unwrap().unwrap();
+            assert!(saved.iter <= 4);
+        }
+    }
+
+    #[test]
+    fn stats_are_deterministic_across_modes() {
+        let (ps, layout) = setup(8);
+        let mut stats = Vec::new();
+        for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
+            let store = Arc::new(ShardedStore::new_mem(2));
+            let mut ck = AsyncCheckpointer::new(
+                CheckpointPolicy::partial(4, 4, Selector::RoundRobin),
+                &ps,
+                &layout,
+                store,
+                mode,
+                2,
+            )
+            .unwrap();
+            let mut rng = Rng::new(5);
+            let s = ck.checkpoint_now(1, &ps, &layout, &mut rng).unwrap();
+            ck.flush().unwrap();
+            stats.push((s.iter, s.atoms_saved, s.bytes));
+        }
+        assert_eq!(stats[0], stats[1]);
+    }
+}

@@ -74,8 +74,22 @@ pub fn select_atoms(
     }
 }
 
+/// Work thresholds below which the distance pass stays serial: thread
+/// spawn costs more than it saves for small models, and the models used
+/// inside already-parallel scenario sweeps stay under these, so sweeps
+/// don't oversubscribe the machine (workers × selection threads).
+const PARALLEL_MIN_ATOMS: usize = 1024;
+const PARALLEL_MIN_ELEMS: usize = 200_000;
+
 /// Top-k atom ids by distance, O(n) average via quickselect then a sort of
 /// only the selected prefix (stable output order for determinism).
+///
+/// The per-atom distance pass — the documented hot path of
+/// `benches/priority_selection.rs` — fans out over scoped worker threads
+/// for large models, using the same fixed-slot pattern as the scenario
+/// runner's sweep pool (`scenario/runner.rs`): each worker fills a
+/// disjoint chunk of the score vector, so the result is byte-identical to
+/// the serial pass regardless of scheduling.
 fn top_k_by_distance(
     k: usize,
     current: &ParamStore,
@@ -83,9 +97,30 @@ fn top_k_by_distance(
     layout: &AtomLayout,
 ) -> Vec<usize> {
     let n = layout.n_atoms();
-    let mut scored: Vec<(f64, usize)> = (0..n)
-        .map(|a| (current.atom_distance(cache, layout, a), a))
-        .collect();
+    let workers = std::thread::available_parallelism()
+        .map(|w| w.get())
+        .unwrap_or(1)
+        .min(8);
+    let mut scored: Vec<(f64, usize)>;
+    if n >= PARALLEL_MIN_ATOMS && layout.total_len() >= PARALLEL_MIN_ELEMS && workers > 1 {
+        scored = vec![(0.0, 0); n];
+        let chunk = (n + workers - 1) / workers;
+        std::thread::scope(|s| {
+            for (ci, slots) in scored.chunks_mut(chunk).enumerate() {
+                let base = ci * chunk;
+                s.spawn(move || {
+                    for (i, slot) in slots.iter_mut().enumerate() {
+                        let a = base + i;
+                        *slot = (current.atom_distance(cache, layout, a), a);
+                    }
+                });
+            }
+        });
+    } else {
+        scored = (0..n)
+            .map(|a| (current.atom_distance(cache, layout, a), a))
+            .collect();
+    }
     // Partition so the k largest are in the front (descending by score).
     scored.select_nth_unstable_by(k.saturating_sub(1).min(n - 1), |a, b| {
         b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal)
@@ -151,6 +186,34 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), 8);
+    }
+
+    #[test]
+    fn parallel_distance_pass_matches_serial_reference() {
+        // Atom and element counts above both parallel thresholds so the
+        // scoped-worker path runs.
+        let n = 6000usize;
+        let len = 40usize;
+        let mut cur = ParamStore::new(vec![Tensor::zeros("w", &[n, len])]);
+        let cache = cur.clone();
+        let layout = AtomLayout::new(AtomLayout::rows_of(&cur, "w"));
+        // Distinct, non-monotonic drift per atom (i -> i*c mod n is a
+        // bijection for gcd(c, n) = 1), so top-k has no score ties.
+        for a in 0..n {
+            cur.get_mut("w").data[a * len] = ((a * 2_654_435_761) % n) as f32 + 1.0;
+        }
+        let k = 37;
+        let mut cursor = 0;
+        let mut rng = Rng::new(0);
+        let got =
+            select_atoms(Selector::Priority, k, &cur, &cache, &layout, &mut cursor, &mut rng);
+        // Serial reference: full sort by distance, take k, order by id.
+        let mut scored: Vec<(f64, usize)> =
+            (0..n).map(|a| (cur.atom_distance(&cache, &layout, a), a)).collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut expect: Vec<usize> = scored[..k].iter().map(|&(_, a)| a).collect();
+        expect.sort_unstable();
+        assert_eq!(got, expect);
     }
 
     #[test]

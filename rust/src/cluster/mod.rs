@@ -12,16 +12,17 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::checkpoint::{CheckpointCoordinator, CheckpointPolicy};
+use crate::checkpoint::{AsyncCheckpointer, CheckpointMode, CheckpointPolicy};
 use crate::failure::{HeartbeatDetector, Liveness};
 use crate::params::{AtomLayout, ParamStore};
 use crate::partition::Partition;
-use crate::storage::CheckpointStore;
+use crate::storage::{CheckpointStore, ShardedStore};
 use crate::trainer::Trainer;
 use crate::util::rng::Rng;
 
@@ -238,11 +239,13 @@ impl Cluster {
             bail!("all PS nodes failed; cannot recover in place");
         }
         // Reload lost atoms from persistent storage into their new owners.
+        let watermark = store.committed_iter();
         let mut per_node: HashMap<usize, Vec<(usize, Vec<f32>)>> = HashMap::new();
         for &a in &moved {
             let saved = store
                 .get_atom(a)?
                 .with_context(|| format!("atom {a} missing from checkpoint store"))?;
+            crate::recovery::check_watermark(a, saved.iter, watermark)?;
             per_node
                 .entry(self.partition.owner[a])
                 .or_default()
@@ -289,6 +292,14 @@ pub struct ClusterRunReport {
 /// scatter, with checkpointing, a schedule of node kills, and
 /// heartbeat-triggered partial recovery.
 ///
+/// Checkpoint records are routed to the *owner node's shard* of the
+/// sharded store (and re-routed after every re-partition), so each PS
+/// node streams its slice of the running checkpoint to its own backend —
+/// the Fig 4 layout. In [`CheckpointMode::Async`] the barriers hand
+/// snapshots to the writer pool and training proceeds; every recovery is
+/// preceded by a `flush` epoch fence so it only reads fully-committed
+/// state.
+///
 /// `kills` is a list of `(iteration, node)` pairs: several entries at the
 /// same iteration model a *correlated* multi-node failure (rack loss);
 /// entries at increasing iterations model a *cascade*. Nodes are not
@@ -300,7 +311,9 @@ pub fn run_cluster_training(
     n_nodes: usize,
     iters: usize,
     policy: CheckpointPolicy,
-    store: &mut dyn CheckpointStore,
+    store: Arc<ShardedStore>,
+    ckpt_mode: CheckpointMode,
+    ckpt_writers: usize,
     kills: &[(usize, usize)], // (iteration, node)
     seed: u64,
     heartbeat_timeout: Duration,
@@ -319,7 +332,16 @@ pub fn run_cluster_training(
     let layout = trainer.layout().clone();
     let mut rng = Rng::new(seed ^ 0xC1A5);
     let mut cluster = Cluster::start(n_nodes, trainer.state(), &layout, heartbeat_timeout, &mut rng)?;
-    let mut coord = CheckpointCoordinator::new(policy, trainer.state(), &layout, store)?;
+    // Each PS node writes to its own shard (node id mod shard count).
+    store.set_route_partition(&cluster.partition);
+    let mut ck = AsyncCheckpointer::new(
+        policy,
+        trainer.state(),
+        &layout,
+        store.clone(),
+        ckpt_mode,
+        ckpt_writers,
+    )?;
 
     let mut losses = Vec::with_capacity(iters);
     for iter in 0..iters {
@@ -331,7 +353,11 @@ pub fn run_cluster_training(
         // Give the detector a chance to notice silence before the gather.
         let dead = cluster.poll_failures(iter);
         if !dead.is_empty() {
-            cluster.recover_nodes(&dead, &layout, store, iter)?;
+            // Epoch fence: recovery only reads fully-committed state.
+            ck.flush()?;
+            cluster.recover_nodes(&dead, &layout, store.as_ref(), iter)?;
+            // New records follow the atoms' new owners.
+            store.set_route_partition(&cluster.partition);
         }
 
         // Worker: pull params, compute the step via the AOT artifact,
@@ -344,16 +370,15 @@ pub fn run_cluster_training(
         let atoms: Vec<usize> = (0..layout.n_atoms()).collect();
         cluster.scatter(trainer.state(), &layout, &atoms)?;
 
-        if let Some(stats) =
-            coord.maybe_checkpoint(iter + 1, trainer.state(), &layout, store, &mut rng)?
-        {
+        if let Some(stats) = ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng)? {
             cluster
                 .events
                 .push(ClusterEvent::Checkpoint { iter: iter + 1, atoms: stats.atoms_saved });
         }
     }
+    ck.finish()?;
     let events = cluster.events.clone();
-    let bytes = store.bytes_written();
+    let bytes = store.total_bytes();
     cluster.shutdown();
     Ok(ClusterRunReport { losses, events, checkpoint_bytes: bytes })
 }
@@ -424,7 +449,7 @@ mod tests {
         // schedule-driven training loop must detect and recover both.
         use crate::models::synthetic::SyntheticTrainer;
         let mut trainer = SyntheticTrainer::new(24, 0.8, 5);
-        let mut store = crate::storage::MemStore::new();
+        let store = Arc::new(ShardedStore::new_mem(4));
         // Plenty of post-kill iterations: synthetic steps are ~µs, and the
         // detector needs 2× the heartbeat timeout of wall-clock silence.
         let report = run_cluster_training(
@@ -432,7 +457,9 @@ mod tests {
             4,
             400,
             CheckpointPolicy::full(4),
-            &mut store,
+            store,
+            CheckpointMode::Sync,
+            1,
             &[(6, 1), (6, 2)],
             9,
             Duration::from_millis(2),
@@ -457,5 +484,36 @@ mod tests {
             .sum();
         assert_eq!(recovered, 2, "events: {:?}", report.events);
         assert!(report.losses.last().unwrap() < &report.losses[0]);
+    }
+
+    #[test]
+    fn async_checkpointing_survives_node_failure() {
+        // Pipelined barriers + a kill: the pre-recovery flush fence must
+        // leave the store fully committed so partial recovery works.
+        use crate::models::synthetic::SyntheticTrainer;
+        let mut trainer = SyntheticTrainer::new(16, 0.8, 7);
+        let store = Arc::new(ShardedStore::new_mem(3));
+        let report = run_cluster_training(
+            &mut trainer,
+            3,
+            300,
+            CheckpointPolicy::partial(4, 2, crate::checkpoint::Selector::Priority),
+            store.clone(),
+            CheckpointMode::Async,
+            2,
+            &[(5, 0)],
+            13,
+            Duration::from_millis(2),
+        )
+        .unwrap();
+        assert!(
+            report.events.iter().any(|e| matches!(e, ClusterEvent::Recovered { .. })),
+            "events: {:?}",
+            report.events
+        );
+        assert!(report.losses.last().unwrap() < &report.losses[0]);
+        // The final fence committed everything the pool wrote.
+        assert!(store.committed().is_some());
+        assert_eq!(report.checkpoint_bytes, store.total_bytes());
     }
 }

@@ -10,7 +10,7 @@ use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
-use crate::checkpoint::{CheckpointPolicy, Selector};
+use crate::checkpoint::{CheckpointMode, CheckpointPolicy, Selector};
 use crate::failure::FailurePlan;
 use crate::recovery::RecoveryMode;
 use crate::util::json::Json;
@@ -30,6 +30,14 @@ pub struct RunConfig {
     pub checkpoint_interval: usize,
     /// Partial-checkpoint divisor k: fraction 1/k every C/k iterations.
     pub checkpoint_k: usize,
+    /// Barrier write mode: `sync` blocks on storage; `async` hands the
+    /// barrier snapshot to the background writer pool.
+    pub checkpoint_mode: CheckpointMode,
+    /// Shards the checkpoint store stripes atoms over.
+    pub storage_shards: usize,
+    /// Writer threads serving the shards in async mode (0 = one per
+    /// shard).
+    pub storage_writers: usize,
     pub selector: Selector,
     pub recovery: RecoveryMode,
     /// Inject a failure? (fraction of atoms lost; 0 disables)
@@ -67,6 +75,9 @@ impl Default for RunConfig {
             workers: 1,
             checkpoint_interval: 8,
             checkpoint_k: 1,
+            checkpoint_mode: CheckpointMode::Sync,
+            storage_shards: 1,
+            storage_writers: 0,
             selector: Selector::Priority,
             recovery: RecoveryMode::Partial,
             fail_fraction: 0.0,
@@ -113,6 +124,16 @@ impl RunConfig {
                 self.checkpoint_interval = value.parse().context("checkpoint_interval")?
             }
             "checkpoint_k" => self.checkpoint_k = value.parse().context("checkpoint_k")?,
+            "checkpoint_mode" => {
+                self.checkpoint_mode =
+                    CheckpointMode::from_str(value).map_err(anyhow::Error::msg)?
+            }
+            "storage_shards" => {
+                self.storage_shards = value.parse().context("storage_shards")?
+            }
+            "storage_writers" => {
+                self.storage_writers = value.parse().context("storage_writers")?
+            }
             "selector" => {
                 self.selector = Selector::from_str(value).map_err(anyhow::Error::msg)?
             }
@@ -155,6 +176,9 @@ impl RunConfig {
                 self.checkpoint_interval
             );
         }
+        if self.storage_shards == 0 {
+            bail!("storage_shards must be >= 1");
+        }
         if !(0.0..=1.0).contains(&self.fail_fraction) {
             bail!("fail_fraction must be in [0, 1]");
         }
@@ -171,6 +195,15 @@ impl RunConfig {
             plan.validate().map_err(anyhow::Error::msg)?;
         }
         Ok(())
+    }
+
+    /// Writer-pool size after resolving the `0 = one per shard` default.
+    pub fn effective_writers(&self) -> usize {
+        if self.storage_writers == 0 {
+            self.storage_shards
+        } else {
+            self.storage_writers
+        }
     }
 
     /// The configured failure model, or `None` when failure injection is
@@ -234,6 +267,20 @@ mod tests {
         assert!(cfg.apply("checkpoint_k", "0").is_err());
         assert!(cfg.apply("nonsense", "1").is_err());
         assert!(cfg.apply("fail_fraction", "1.5").is_err());
+    }
+
+    #[test]
+    fn storage_and_mode_keys_apply() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.checkpoint_mode, CheckpointMode::Sync);
+        cfg.apply("checkpoint_mode", "async").unwrap();
+        cfg.apply("storage_shards", "4").unwrap();
+        assert_eq!(cfg.checkpoint_mode, CheckpointMode::Async);
+        assert_eq!(cfg.effective_writers(), 4, "writers default to one per shard");
+        cfg.apply("storage_writers", "2").unwrap();
+        assert_eq!(cfg.effective_writers(), 2);
+        assert!(cfg.apply("storage_shards", "0").is_err());
+        assert!(cfg.apply("checkpoint_mode", "never").is_err());
     }
 
     #[test]

@@ -12,14 +12,17 @@
 //! this is what makes 100-trial sweeps tractable on the CPU PJRT backend.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::checkpoint::{CheckpointCoordinator, CheckpointPolicy};
+use crate::checkpoint::{
+    AsyncCheckpointer, CheckpointCoordinator, CheckpointMode, CheckpointPolicy,
+};
 use crate::failure::FailureEvent;
 use crate::params::ParamStore;
 use crate::recovery::{recover, RecoveryMode, RecoveryReport};
-use crate::storage::MemStore;
+use crate::storage::{MemStore, ShardedStore};
 use crate::trainer::Trainer;
 use crate::util::rng::Rng;
 use crate::util::stats::{summarize, Summary};
@@ -122,6 +125,28 @@ pub fn replay_checkpoints(
     Ok((coord, store))
 }
 
+/// Full checkpoint-subsystem configuration for a trial: the (r, rC)
+/// policy plus the write mode and storage topology the scenario engine
+/// wires through (`checkpoint.mode`, `storage.shards`,
+/// `storage.writers`). Async and sync setups on the same seed produce
+/// byte-identical results — the flush fence before every recovery
+/// guarantees it (pinned by `rust/tests/async_checkpoint.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointSetup {
+    pub policy: CheckpointPolicy,
+    pub mode: CheckpointMode,
+    pub shards: usize,
+    pub writers: usize,
+}
+
+impl CheckpointSetup {
+    /// Synchronous single-shard setup — the classic configuration the
+    /// legacy entry points default to.
+    pub fn sync(policy: CheckpointPolicy) -> CheckpointSetup {
+        CheckpointSetup { policy, mode: CheckpointMode::Sync, shards: 1, writers: 1 }
+    }
+}
+
 /// One failure-recovery trial (Fig 7/8 semantics).
 #[derive(Debug, Clone)]
 pub struct TrialSpec {
@@ -198,16 +223,47 @@ pub fn run_plan_trial(
     events: &[FailureEvent],
     trial_seed: u64,
 ) -> Result<TrialResult> {
+    run_plan_trial_with(trainer, traj, CheckpointSetup::sync(policy), mode, events, trial_seed)
+}
+
+/// [`run_plan_trial`] with an explicit [`CheckpointSetup`]: the trial's
+/// running checkpoint lives in a sharded store driven sync or async by an
+/// [`AsyncCheckpointer`], and every recovery is preceded by the `flush`
+/// epoch fence — so the result is a pure function of (scenario inputs,
+/// seed) whatever the mode, shard count, or writer count.
+pub fn run_plan_trial_with(
+    trainer: &mut dyn Trainer,
+    traj: &Trajectory,
+    setup: CheckpointSetup,
+    mode: RecoveryMode,
+    events: &[FailureEvent],
+    trial_seed: u64,
+) -> Result<TrialResult> {
     assert!(!events.is_empty(), "run_plan_trial needs at least one event");
     let mut events = events.to_vec();
     events.sort_by_key(|e| e.iter);
     let first_iter = events[0].iter.max(1).min(traj.max_iters());
 
-    let (mut coord, mut store) =
-        replay_checkpoints(traj, trainer, policy, first_iter, trial_seed)?;
     let layout = trainer.layout().clone();
+    let store = Arc::new(ShardedStore::new_mem(setup.shards));
+    let mut ck = AsyncCheckpointer::new(
+        setup.policy,
+        traj.state_at(0),
+        &layout,
+        store.clone(),
+        setup.mode,
+        setup.writers,
+    )?;
+    // Replay barriers along the cached trajectory up to the failure
+    // (same RNG stream as replay_checkpoints).
+    let mut replay_rng = Rng::new(trial_seed);
+    for iter in 1..=first_iter {
+        ck.maybe_checkpoint(iter, traj.state_at(iter), &layout, &mut replay_rng)?;
+    }
+
     let mut state = traj.state_at(first_iter).clone();
-    let mut report = recover(mode, &mut state, &layout, &events[0].lost_atoms, &store)
+    ck.flush()?;
+    let mut report = recover(mode, &mut state, &layout, &events[0].lost_atoms, store.as_ref())
         .context("recovery failed")?;
     let mut delta_sq = report.delta_norm * report.delta_norm;
 
@@ -219,12 +275,13 @@ pub fn run_plan_trial(
     let mut total = None;
     for iter in first_iter..cap {
         while next_event < events.len() && events[next_event].iter <= iter {
+            ck.flush()?;
             let r = recover(
                 mode,
                 trainer.state_mut(),
                 &layout,
                 &events[next_event].lost_atoms,
-                &store,
+                store.as_ref(),
             )
             .context("recovery failed")?;
             report.atoms_restored += r.atoms_restored;
@@ -234,12 +291,13 @@ pub fn run_plan_trial(
             next_event += 1;
         }
         let loss = trainer.step(iter)?;
-        coord.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut store, &mut ckpt_rng)?;
+        ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut ckpt_rng)?;
         if loss <= traj.threshold {
             total = Some(iter + 1);
             break;
         }
     }
+    ck.finish()?;
     report.delta_norm = delta_sq.sqrt();
     let (total, censored) = match total {
         Some(t) => (t, false),
@@ -596,6 +654,47 @@ mod tests {
         // A cascade can only slow convergence down relative to one event.
         assert!(three.iteration_cost >= one.iteration_cost);
         assert!(three.recovery.delta_norm >= one.recovery.delta_norm);
+    }
+
+    #[test]
+    fn plan_trial_async_matches_sync_byte_for_byte() {
+        let mut t = Decay::new(8, 0.85);
+        let traj = run_trajectory(&mut t, 0, 60, 25).unwrap();
+        let mk = |iter: usize| crate::failure::FailureEvent {
+            iter,
+            lost_atoms: vec![0, 3, 5],
+            failed_nodes: vec![],
+        };
+        let events = [mk(9), mk(14)];
+        let policy = CheckpointPolicy::partial(6, 3, Selector::Priority);
+        let sync = run_plan_trial_with(
+            &mut t,
+            &traj,
+            CheckpointSetup::sync(policy),
+            RecoveryMode::Partial,
+            &events,
+            5,
+        )
+        .unwrap();
+        let pipelined = CheckpointSetup {
+            policy,
+            mode: CheckpointMode::Async,
+            shards: 3,
+            writers: 2,
+        };
+        let asynced = run_plan_trial_with(
+            &mut t,
+            &traj,
+            pipelined,
+            RecoveryMode::Partial,
+            &events,
+            5,
+        )
+        .unwrap();
+        assert_eq!(sync.iteration_cost, asynced.iteration_cost);
+        assert_eq!(sync.censored, asynced.censored);
+        assert_eq!(sync.recovery.atoms_restored, asynced.recovery.atoms_restored);
+        assert_eq!(sync.recovery.delta_norm, asynced.recovery.delta_norm);
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! * **L3 (this crate)** — the parameter-server coordinator: random atom
 //!   partitioning, the fault-tolerance controller (checkpoint coordinator
 //!   with priority/round/random partial checkpoints, recovery coordinator
-//!   with partial/full recovery), failure injection/detection, shared
-//!   persistent storage, the Theorem 3.2 iteration-cost bound, and the
-//!   experiment harness that regenerates every figure in the paper.
+//!   with partial/full recovery), failure injection/detection, sharded
+//!   persistent storage with a pipelined writer pool and commit-watermark
+//!   recovery ([`storage::ShardedStore`] +
+//!   [`checkpoint::AsyncCheckpointer`]), the Theorem 3.2 iteration-cost
+//!   bound, and the experiment harness that regenerates every figure in
+//!   the paper.
 //! * **L2** — JAX step functions (QP, MLR, MF-ALS, CNN, Transformer)
 //!   AOT-lowered once to HLO text (`python/compile/`).
 //! * **L1** — Pallas kernels for the dense hot-spots (fused MLR gradient,

@@ -9,11 +9,12 @@
 //!   bound   --model V          estimate c / ‖x0−x*‖ and print Theorem 3.2
 //!                              bounds for a range of perturbation sizes
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use scar::checkpoint::CheckpointCoordinator;
+use scar::checkpoint::{AsyncCheckpointer, CheckpointCoordinator};
 use scar::config::RunConfig;
 use scar::failure::{FailureEvent, FailureInjector};
 use scar::harness;
@@ -21,7 +22,7 @@ use scar::models::{build_trainer, default_engine, BuildOpts};
 use scar::recovery;
 use scar::runtime::artifact;
 use scar::scenario::{self, Scenario};
-use scar::storage::{CheckpointStore, DiskStore, MemStore};
+use scar::storage::{MemStore, ShardedStore};
 use scar::theory;
 use scar::trainer::Trainer;
 use scar::util::cli::Args;
@@ -66,8 +67,9 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor> [flags]
           [--fail-rate p]         recommend a checkpoint policy (§7)
 
 Config keys (for --set): model seed iters target_iters ps_nodes workers
-  checkpoint_interval checkpoint_k selector recovery fail_fraction
-  fail_geom_p fail_plan fail_nodes fail_cascade_extra fail_cascade_gap
+  checkpoint_interval checkpoint_k checkpoint_mode(sync|async) selector
+  recovery storage_shards storage_writers fail_fraction fail_geom_p
+  fail_plan fail_nodes fail_cascade_extra fail_cascade_gap
   fail_flaky_period fail_flaky_prob fail_flaky_max checkpoint_dir
 
 Bundled scenarios: scenarios/fig5.toml, fig6.toml, fig7.toml (paper
@@ -104,10 +106,11 @@ fn parse_config(args: &Args) -> Result<RunConfig> {
     // last one per key, so also accept direct --key value for every key.
     for key in [
         "model", "seed", "iters", "target_iters", "ps_nodes", "workers",
-        "checkpoint_interval", "checkpoint_k", "selector", "recovery",
-        "fail_fraction", "fail_geom_p", "fail_plan", "fail_nodes",
-        "fail_cascade_extra", "fail_cascade_gap", "fail_flaky_period",
-        "fail_flaky_prob", "fail_flaky_max", "checkpoint_dir",
+        "checkpoint_interval", "checkpoint_k", "checkpoint_mode", "selector",
+        "recovery", "storage_shards", "storage_writers", "fail_fraction",
+        "fail_geom_p", "fail_plan", "fail_nodes", "fail_cascade_extra",
+        "fail_cascade_gap", "fail_flaky_period", "fail_flaky_prob",
+        "fail_flaky_max", "checkpoint_dir",
     ] {
         if let Some(v) = args.str_opt(key) {
             cfg.apply(key, v)?;
@@ -142,25 +145,32 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-fn make_store(cfg: &RunConfig) -> Result<Box<dyn CheckpointStore>> {
-    if cfg.checkpoint_dir.is_empty() {
-        Ok(Box::new(MemStore::new()))
+fn make_store(cfg: &RunConfig) -> Result<Arc<ShardedStore>> {
+    let store = if cfg.checkpoint_dir.is_empty() {
+        ShardedStore::new_mem(cfg.storage_shards)
     } else {
-        Ok(Box::new(DiskStore::open(std::path::Path::new(&cfg.checkpoint_dir))?))
-    }
+        ShardedStore::open_disk(std::path::Path::new(&cfg.checkpoint_dir), cfg.storage_shards)?
+    };
+    Ok(Arc::new(store))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = parse_config(args)?;
     let engine = default_engine()?;
     let mut trainer = build_trainer(engine, &cfg.model, &BuildOpts::default())?;
-    let mut store = make_store(&cfg)?;
+    let store = make_store(&cfg)?;
     let mut rng = Rng::new(cfg.seed ^ 0xF00D);
 
     trainer.init(cfg.seed)?;
     let layout = trainer.layout().clone();
-    let mut coord =
-        CheckpointCoordinator::new(cfg.policy(), trainer.state(), &layout, store.as_mut())?;
+    let mut ck = AsyncCheckpointer::new(
+        cfg.policy(),
+        trainer.state(),
+        &layout,
+        store.clone(),
+        cfg.checkpoint_mode,
+        cfg.effective_writers(),
+    )?;
 
     // Optional failure schedule: the configured plan expands to one or
     // more events (cascades and flaky nodes produce several).
@@ -194,13 +204,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     println!(
-        "training {} for {} iters (policy: r={:.3} every {} iters, {} selector; recovery: {:?})",
+        "training {} for {} iters (policy: r={:.3} every {} iters, {} selector, {} writes, \
+         {} shard(s); recovery: {:?})",
         cfg.model, cfg.iters, cfg.policy().fraction, cfg.policy().interval,
-        cfg.selector, cfg.recovery,
+        cfg.selector, cfg.checkpoint_mode, cfg.storage_shards, cfg.recovery,
     );
     let t0 = std::time::Instant::now();
     for iter in 0..cfg.iters {
         for f in events.iter().filter(|f| f.iter == iter) {
+            // Epoch fence: recovery only reads fully-committed state.
+            ck.flush()?;
             let report = recovery::recover(
                 cfg.recovery,
                 trainer.state_mut(),
@@ -216,20 +229,21 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
         let loss = trainer.step(iter)?;
-        let ck = coord.maybe_checkpoint(iter + 1, trainer.state(), &layout, store.as_mut(), &mut rng)?;
+        let stats = ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng)?;
         if iter % 10 == 0 || iter + 1 == cfg.iters {
             println!(
                 "iter {:>4}  loss {:>12.5}  {}",
                 iter,
                 loss,
-                ck.map(|c| format!("[ckpt {} atoms]", c.atoms_saved)).unwrap_or_default()
+                stats.map(|c| format!("[ckpt {} atoms]", c.atoms_saved)).unwrap_or_default()
             );
         }
     }
+    ck.finish()?;
     println!(
         "done in {:.1}s; checkpoint bytes written: {}",
         t0.elapsed().as_secs_f64(),
-        scar::util::fmt_bytes(store.bytes_written())
+        scar::util::fmt_bytes(store.total_bytes())
     );
     Ok(())
 }
@@ -238,7 +252,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let cfg = parse_config(args)?;
     let engine = default_engine()?;
     let mut trainer = build_trainer(engine, &cfg.model, &BuildOpts::default())?;
-    let mut store = make_store(&cfg)?;
+    let store = make_store(&cfg)?;
     // Kill schedule: --kills "iter:node,iter:node" (correlated kills share
     // an iteration); falls back to the single --kill-iter/--kill-node.
     let kills: Vec<(usize, usize)> = match args.str_opt("kills") {
@@ -261,13 +275,18 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             args.usize_or("kill-node", 0),
         )],
     };
-    println!("cluster run: {} nodes, kill schedule {:?}", cfg.ps_nodes, kills);
+    println!(
+        "cluster run: {} nodes, {} storage shard(s), {} checkpoints, kill schedule {:?}",
+        cfg.ps_nodes, cfg.storage_shards, cfg.checkpoint_mode, kills
+    );
     let report = scar::cluster::run_cluster_training(
         &mut trainer,
         cfg.ps_nodes,
         cfg.iters,
         cfg.policy(),
-        store.as_mut(),
+        store,
+        cfg.checkpoint_mode,
+        cfg.effective_writers(),
         &kills,
         cfg.seed,
         Duration::from_millis(20),

@@ -24,6 +24,26 @@ pub enum RecoveryMode {
     Partial,
 }
 
+/// The commit-watermark read rule, shared by every recovery path
+/// (coordinator [`recover`] and the cluster's `recover_nodes`): a record
+/// newer than the store's watermark belongs to an in-flight async barrier
+/// and must not be read — the caller forgot the `flush` epoch fence.
+pub(crate) fn check_watermark(
+    atom: usize,
+    saved_iter: usize,
+    watermark: Option<usize>,
+) -> Result<()> {
+    if let Some(w) = watermark {
+        if saved_iter > w {
+            anyhow::bail!(
+                "atom {atom} record from iteration {saved_iter} is beyond the commit \
+                 watermark {w}; flush the checkpoint pipeline before recovery"
+            );
+        }
+    }
+    Ok(())
+}
+
 impl std::str::FromStr for RecoveryMode {
     type Err = String;
 
@@ -57,6 +77,15 @@ pub struct RecoveryReport {
 /// Atoms never checkpointed fall back to their value in the coordinator's
 /// initial snapshot — impossible here because the coordinator persists
 /// x⁽⁰⁾ at startup, so a missing record is an error.
+///
+/// **Commit-watermark rule:** when the store tracks a watermark (the
+/// sharded/pipelined store does), recovery only ever reads
+/// fully-committed running-checkpoint state — a record newer than the
+/// watermark means an async barrier is still in flight and the caller
+/// forgot the `flush` epoch fence
+/// ([`AsyncCheckpointer::flush`](crate::checkpoint::AsyncCheckpointer::flush)).
+/// That is a hard error: recovering from a half-committed barrier would
+/// make async and sync runs diverge silently.
 pub fn recover(
     mode: RecoveryMode,
     state: &mut ParamStore,
@@ -74,12 +103,14 @@ pub fn recover(
             &all_atoms
         }
     };
+    let watermark = store.committed_iter();
     let mut elems = 0usize;
     for &a in atoms {
         let saved = store
             .get_atom(a)
             .with_context(|| format!("reading atom {a} from checkpoint store"))?
             .with_context(|| format!("atom {a} missing from running checkpoint"))?;
+        check_watermark(a, saved.iter, watermark)?;
         elems += saved.values.len();
         state.write_atom(layout, a, &saved.values);
     }
@@ -158,6 +189,31 @@ mod tests {
         )
         .unwrap();
         assert!(part.delta_norm <= full.delta_norm + 1e-12);
+    }
+
+    #[test]
+    fn recovery_refuses_records_beyond_watermark() {
+        use crate::storage::ShardedStore;
+        let ps0 = ParamStore::new(vec![Tensor::zeros("w", &[3, 2])]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&ps0, "w"));
+        let store = ShardedStore::new_mem(2);
+        store
+            .put_atoms_at(
+                0,
+                &[(0, &[0.0, 0.0][..]), (1, &[0.0, 0.0][..]), (2, &[0.0, 0.0][..])],
+            )
+            .unwrap();
+        store.mark_committed_at(4);
+        // An in-flight async barrier's record lands beyond the watermark.
+        store.put_atoms_at(8, &[(1, &[9.0, 9.0][..])]).unwrap();
+        let mut state = ps0.clone();
+        let err =
+            recover(RecoveryMode::Partial, &mut state, &layout, &[1], &store).unwrap_err();
+        assert!(format!("{err:?}").contains("watermark"), "{err:?}");
+        // Once the barrier commits (the flush fence), the read succeeds.
+        store.mark_committed_at(8);
+        recover(RecoveryMode::Partial, &mut state, &layout, &[1], &store).unwrap();
+        assert_eq!(&state.get("w").data[2..4], &[9.0, 9.0][..]);
     }
 
     #[test]

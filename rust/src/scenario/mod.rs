@@ -37,4 +37,6 @@ pub use runner::{
     apply_cli_overrides, find_bundled, run_scenario, run_with_default_engine, write_output,
     CellReport, PanelReport, ScenarioReport,
 };
-pub use spec::{CellAction, CellSpec, CheckpointSpec, NormSpec, PerturbSpec, Scenario};
+pub use spec::{
+    CellAction, CellSpec, CheckpointSpec, NormSpec, PerturbSpec, Scenario, StorageSpec,
+};

@@ -28,9 +28,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::advisor::OnlineRateEstimator;
-use crate::checkpoint::CheckpointPolicy;
 use crate::failure::{FailureEvent, FailureInjector};
-use crate::harness::{self, Perturb, Trajectory};
+use crate::harness::{self, CheckpointSetup, Perturb, Trajectory};
 use crate::models::presets::{build_preset, try_preset, PresetKind};
 use crate::models::synthetic::SyntheticTrainer;
 use crate::recovery::RecoveryMode;
@@ -339,7 +338,7 @@ fn panel_theory(traj: &Trajectory) -> (f64, f64) {
 #[derive(Debug, Clone)]
 enum JobKind {
     Perturb { kind: Perturb, at_iter: usize },
-    Plan { policy: CheckpointPolicy, mode: RecoveryMode, events: Vec<FailureEvent> },
+    Plan { setup: CheckpointSetup, mode: RecoveryMode, events: Vec<FailureEvent> },
 }
 
 #[derive(Debug, Clone)]
@@ -403,8 +402,14 @@ fn build_jobs(scn: &Scenario, traj: &Trajectory, n_atoms: usize, x0: f64) -> Vec
                 }
                 CellAction::Fail(plan) => {
                     let events = plan.sample_events(&inj, n_atoms, &mut rng);
+                    let ckpt = cell.checkpoint.unwrap_or(scn.checkpoint);
                     JobKind::Plan {
-                        policy: cell.checkpoint.unwrap_or(scn.checkpoint).policy(),
+                        setup: CheckpointSetup {
+                            policy: ckpt.policy(),
+                            mode: ckpt.mode,
+                            shards: scn.storage.shards,
+                            writers: scn.storage.writers,
+                        },
                         mode: cell.mode.unwrap_or(scn.recovery),
                         events,
                     }
@@ -423,8 +428,8 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
                 harness::run_perturbation_trial(trainer, traj, *at_iter, *kind, job.seed)?;
             Ok(Outcome { cost, delta, censored })
         }
-        JobKind::Plan { policy, mode, events } => {
-            let r = harness::run_plan_trial(trainer, traj, *policy, *mode, events, job.seed)?;
+        JobKind::Plan { setup, mode, events } => {
+            let r = harness::run_plan_trial_with(trainer, traj, *setup, *mode, events, job.seed)?;
             Ok(Outcome {
                 cost: r.iteration_cost,
                 delta: r.recovery.delta_norm,

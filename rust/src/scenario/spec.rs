@@ -19,23 +19,33 @@ use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
-use crate::checkpoint::{CheckpointPolicy, Selector};
+use crate::checkpoint::{CheckpointMode, CheckpointPolicy, Selector};
 use crate::failure::FailurePlan;
 use crate::recovery::RecoveryMode;
 use crate::util::json::Json;
 
 /// Checkpoint policy in (base interval, divisor k, selector) form — the
-/// paper's parametrization (fraction 1/k every interval/k iterations).
+/// paper's parametrization (fraction 1/k every interval/k iterations;
+/// when k does not divide the interval, [`CheckpointPolicy::partial`]
+/// adjusts the fraction so bytes-written parity holds) — plus the write
+/// `mode` (`"sync"` barriers block on storage; `"async"` hands snapshots
+/// to the writer pool).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CheckpointSpec {
     pub interval: usize,
     pub k: usize,
     pub selector: Selector,
+    pub mode: CheckpointMode,
 }
 
 impl Default for CheckpointSpec {
     fn default() -> Self {
-        CheckpointSpec { interval: 10, k: 1, selector: Selector::Priority }
+        CheckpointSpec {
+            interval: 10,
+            k: 1,
+            selector: Selector::Priority,
+            mode: CheckpointMode::Sync,
+        }
     }
 }
 
@@ -50,6 +60,34 @@ impl CheckpointSpec {
         }
         if self.k == 0 || self.k > self.interval {
             bail!("{ctx}: checkpoint k must be in [1, interval={}]", self.interval);
+        }
+        Ok(())
+    }
+}
+
+/// Storage topology for the running checkpoint: how many shards the
+/// sharded store stripes atoms over, and how many background writer
+/// threads serve them in async mode (clamped to `[1, shards]` at
+/// runtime).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StorageSpec {
+    pub shards: usize,
+    pub writers: usize,
+}
+
+impl Default for StorageSpec {
+    fn default() -> Self {
+        StorageSpec { shards: 1, writers: 1 }
+    }
+}
+
+impl StorageSpec {
+    fn validate(&self, ctx: &str) -> Result<()> {
+        if self.shards == 0 {
+            bail!("{ctx}: storage shards must be >= 1");
+        }
+        if self.writers == 0 {
+            bail!("{ctx}: storage writers must be >= 1");
         }
         Ok(())
     }
@@ -112,6 +150,7 @@ pub struct Scenario {
     /// Geometric parameter for failure iterations (§5.3).
     pub fail_geom_p: f64,
     pub checkpoint: CheckpointSpec,
+    pub storage: StorageSpec,
     pub recovery: RecoveryMode,
     /// CSV output path (written by `scar run-scenario` and the fig
     /// wrappers; in-process callers read the report instead).
@@ -158,8 +197,8 @@ impl Scenario {
         let obj = v.as_obj().context("scenario: top level must be a table/object")?;
         const TOP_KEYS: &[&str] = &[
             "name", "model", "panels", "seed", "trials", "workers", "target_iters",
-            "max_iters", "perturb_iter", "fail_geom_p", "checkpoint", "recovery",
-            "output", "cell", "cells",
+            "max_iters", "perturb_iter", "fail_geom_p", "checkpoint", "storage",
+            "recovery", "output", "cell", "cells",
         ];
         for key in obj.keys() {
             if !TOP_KEYS.contains(&key.as_str()) {
@@ -195,6 +234,11 @@ impl Scenario {
             Some(c) => parse_checkpoint(c, &CheckpointSpec::default(), &ctx)?,
         };
 
+        let storage = match obj.get("storage") {
+            None => StorageSpec::default(),
+            Some(s) => parse_storage(s, &ctx)?,
+        };
+
         let recovery = match opt_str(obj, "recovery", &ctx)? {
             None => RecoveryMode::Partial,
             Some(s) => RecoveryMode::from_str(&s)
@@ -225,6 +269,7 @@ impl Scenario {
             perturb_iter: opt_usize(obj, "perturb_iter", &ctx)?,
             fail_geom_p: opt_f64(obj, "fail_geom_p", &ctx)?.unwrap_or(0.05),
             checkpoint,
+            storage,
             recovery,
             output: opt_str(obj, "output", &ctx)?,
             cells,
@@ -242,6 +287,7 @@ impl Scenario {
             bail!("{ctx}: fail_geom_p must be in (0, 1], got {}", self.fail_geom_p);
         }
         self.checkpoint.validate(&ctx)?;
+        self.storage.validate(&ctx)?;
         if let (Some(t), Some(m)) = (self.target_iters, self.max_iters) {
             if t == 0 || t > m {
                 bail!("{ctx}: need 1 <= target_iters <= max_iters, got {t} > {m}");
@@ -285,6 +331,7 @@ impl Scenario {
         }
         obj.insert("fail_geom_p".into(), Json::Num(self.fail_geom_p));
         obj.insert("checkpoint".into(), checkpoint_json(&self.checkpoint));
+        obj.insert("storage".into(), storage_json(&self.storage));
         obj.insert("recovery".into(), Json::from(mode_str(self.recovery)));
         if let Some(o) = &self.output {
             obj.insert("output".into(), Json::from(o.as_str()));
@@ -308,12 +355,17 @@ impl Scenario {
             self.seed
         ));
         out.push_str(&format!(
-            "  checkpoint: 1/{} every {} iters ({}); recovery: {}; geom p = {}\n",
+            "  checkpoint: 1/{} every {} iters ({}, {} writes); recovery: {}; geom p = {}\n",
             self.checkpoint.k,
             self.checkpoint.policy().interval,
             self.checkpoint.selector,
+            self.checkpoint.mode,
             mode_str(self.recovery),
             self.fail_geom_p
+        ));
+        out.push_str(&format!(
+            "  storage: {} shard(s), {} writer(s)\n",
+            self.storage.shards, self.storage.writers
         ));
         for p in &self.panels {
             out.push_str(&format!("  panel: {p}\n"));
@@ -335,6 +387,14 @@ fn checkpoint_json(c: &CheckpointSpec) -> Json {
     m.insert("interval".into(), Json::from(c.interval));
     m.insert("k".into(), Json::from(c.k));
     m.insert("selector".into(), Json::from(c.selector.to_string()));
+    m.insert("mode".into(), Json::from(c.mode.to_string()));
+    Json::Obj(m)
+}
+
+fn storage_json(s: &StorageSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("shards".into(), Json::from(s.shards));
+    m.insert("writers".into(), Json::from(s.writers));
     Json::Obj(m)
 }
 
@@ -455,8 +515,8 @@ fn parse_checkpoint(v: &Json, base: &CheckpointSpec, ctx: &str) -> Result<Checkp
         .as_obj()
         .with_context(|| format!("{ctx}: 'checkpoint' must be a table"))?;
     for key in obj.keys() {
-        if !["interval", "k", "selector"].contains(&key.as_str()) {
-            bail!("{ctx}: checkpoint: unknown key '{key}' (interval|k|selector)");
+        if !["interval", "k", "selector", "mode"].contains(&key.as_str()) {
+            bail!("{ctx}: checkpoint: unknown key '{key}' (interval|k|selector|mode)");
         }
     }
     let selector = match opt_str(obj, "selector", ctx)? {
@@ -465,10 +525,34 @@ fn parse_checkpoint(v: &Json, base: &CheckpointSpec, ctx: &str) -> Result<Checkp
             Selector::from_str(&s).map_err(|e| anyhow::anyhow!("{ctx}: selector: {e}"))?
         }
     };
+    let mode = match opt_str(obj, "mode", ctx)? {
+        None => base.mode,
+        Some(s) => CheckpointMode::from_str(&s)
+            .map_err(|e| anyhow::anyhow!("{ctx}: checkpoint mode: {e}"))?,
+    };
     Ok(CheckpointSpec {
         interval: opt_usize(obj, "interval", ctx)?.unwrap_or(base.interval),
         k: opt_usize(obj, "k", ctx)?.unwrap_or(base.k),
         selector,
+        mode,
+    })
+}
+
+fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
+    let obj = v
+        .as_obj()
+        .with_context(|| format!("{ctx}: 'storage' must be a table"))?;
+    for key in obj.keys() {
+        if !["shards", "writers"].contains(&key.as_str()) {
+            bail!("{ctx}: storage: unknown key '{key}' (shards|writers)");
+        }
+    }
+    let base = StorageSpec::default();
+    let shards = opt_usize(obj, "shards", ctx)?.unwrap_or(base.shards);
+    Ok(StorageSpec {
+        shards,
+        // Default the pool to one writer per shard.
+        writers: opt_usize(obj, "writers", ctx)?.unwrap_or(shards),
     })
 }
 
@@ -753,6 +837,31 @@ norm_log10 = [-2.0, 0.0]
         )
         .unwrap_err();
         assert!(format!("{e:?}").contains("period"), "{e:?}");
+    }
+
+    #[test]
+    fn checkpoint_mode_and_storage_parse_and_roundtrip() {
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[checkpoint]\nmode=\"async\"\n[storage]\nshards=4\n[[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.checkpoint.mode, CheckpointMode::Async);
+        assert_eq!(s.storage.shards, 4);
+        assert_eq!(s.storage.writers, 4, "writers default to one per shard");
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=0\n[[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("shards"), "{e:?}");
+
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[checkpoint]\nmode=\"background\"\n[[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("background"), "{e:?}");
     }
 
     #[test]

@@ -1,20 +1,32 @@
 //! Shared persistent storage for checkpoints (paper §4.3).
 //!
 //! The paper writes checkpoints to NFS/CephFS/Cassandra; here the same
-//! role is played by a [`CheckpointStore`] trait with two backends:
+//! role is played by a two-level trait split:
 //!
-//! * [`MemStore`] — in-memory map; used by the experiment harness where
-//!   thousands of simulated failures make disk I/O pointless.
-//! * [`DiskStore`] — an append-only segment log + JSON manifest on a local
-//!   directory standing in for the shared filesystem. Atom records are
-//!   CRC-checked; the manifest maps each atom to its latest record, which
-//!   implements the paper's *running checkpoint* (a mix of atoms saved at
-//!   different iterations, §4.2).
+//! * [`ShardBackend`] — the primitive write/read surface one storage
+//!   shard must implement. Two backends:
+//!   - [`MemStore`] — in-memory map; used by the experiment harness where
+//!     thousands of simulated failures make disk I/O pointless.
+//!   - [`DiskStore`] — an append-only segment log + JSON manifest on a
+//!     local directory standing in for the shared filesystem. Atom
+//!     records are CRC-checked; the manifest maps each atom to its latest
+//!     record (and the one before it, for crash fallback), which
+//!     implements the paper's *running checkpoint* (a mix of atoms saved
+//!     at different iterations, §4.2).
+//! * [`CheckpointStore`] — what the checkpoint coordinator, recovery
+//!   coordinator, and cluster consume: the backend surface plus the
+//!   *commit watermark* bookkeeping that the async write pipeline needs
+//!   (see [`shard::ShardedStore`] and
+//!   [`crate::checkpoint::AsyncCheckpointer`]). Both backends also
+//!   implement `CheckpointStore` directly (delegation macro below), so a
+//!   one-shard store is the degenerate router.
 //!
-//! Both backends account bytes written so the harness can verify the
+//! All backends account bytes written so the harness can verify the
 //! §4.2 data-volume parity claim (fraction r every rC iterations == full
 //! every C), and expose a latency model for the Fig 9 wall-clock
 //! simulation without actually sleeping.
+
+pub mod shard;
 
 use std::collections::HashMap;
 use std::fs;
@@ -25,6 +37,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+pub use shard::ShardedStore;
+
 /// A saved atom: which iteration it was captured at, and its values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SavedAtom {
@@ -32,8 +46,8 @@ pub struct SavedAtom {
     pub values: Vec<f32>,
 }
 
-/// Write/read interface to the shared persistent checkpoint storage.
-pub trait CheckpointStore: Send {
+/// The primitive write/read surface of one storage shard.
+pub trait ShardBackend: Send {
     /// Persist atom values captured at iteration `iter`. Overwrites any
     /// previous record for the same atoms (running-checkpoint semantics).
     fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()>;
@@ -46,7 +60,84 @@ pub trait CheckpointStore: Send {
 
     /// Number of put operations (individual atom records).
     fn records_written(&self) -> u64;
+
+    /// Durability fence: flush any buffered metadata (e.g. the disk
+    /// manifest). No-op for backends whose puts are immediately durable.
+    fn sync(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
+
+/// Write/read interface to the shared persistent checkpoint storage, as
+/// consumed by the checkpoint/recovery coordinators: the shard surface
+/// plus commit-watermark bookkeeping.
+///
+/// The watermark answers "which barriers are fully durable?". A plain
+/// backend is synchronous — every put is durable on return — so its
+/// watermark is `None` ("not tracked; everything committed"). The
+/// sharded/pipelined [`ShardedStore`] tracks a real watermark that the
+/// async writer pool advances at each flush fence; recovery refuses to
+/// read records beyond it (see [`crate::recovery::recover`]).
+pub trait CheckpointStore: Send {
+    fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()>;
+
+    fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>>;
+
+    fn bytes_written(&self) -> u64;
+
+    fn records_written(&self) -> u64;
+
+    /// Highest iteration whose checkpoint barrier is fully committed, or
+    /// `None` when the store is synchronous (no watermark tracked).
+    fn committed_iter(&self) -> Option<usize> {
+        None
+    }
+
+    /// Advance the commit watermark (monotonic; no-op on synchronous
+    /// backends).
+    fn mark_committed(&mut self, _iter: usize) {}
+
+    /// Durability fence (manifest writes etc.).
+    fn sync(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Implement [`CheckpointStore`] for a backend type by delegating to its
+/// [`ShardBackend`] impl: a plain backend is a synchronous store (puts
+/// durable on return, no watermark tracked). A macro rather than a
+/// blanket impl so [`shard::ShardedStore`] can implement
+/// `CheckpointStore` directly with a real watermark (a blanket
+/// `impl<T: ShardBackend> CheckpointStore for T` would conflict with it
+/// under coherence).
+macro_rules! checkpoint_store_via_backend {
+    ($ty:ty) => {
+        impl CheckpointStore for $ty {
+            fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
+                ShardBackend::put_atoms(self, iter, atoms)
+            }
+
+            fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
+                ShardBackend::get_atom(self, atom)
+            }
+
+            fn bytes_written(&self) -> u64 {
+                ShardBackend::bytes_written(self)
+            }
+
+            fn records_written(&self) -> u64 {
+                ShardBackend::records_written(self)
+            }
+
+            fn sync(&mut self) -> Result<()> {
+                ShardBackend::sync(self)
+            }
+        }
+    };
+}
+
+checkpoint_store_via_backend!(MemStore);
+checkpoint_store_via_backend!(DiskStore);
 
 // ---------------------------------------------------------------------------
 // In-memory store
@@ -65,7 +156,7 @@ impl MemStore {
     }
 }
 
-impl CheckpointStore for MemStore {
+impl ShardBackend for MemStore {
     fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
         for (id, vals) in atoms {
             self.map.insert(*id, SavedAtom { iter, values: vals.to_vec() });
@@ -108,9 +199,19 @@ struct RecordLoc {
     iter: usize,
 }
 
+/// Per-atom index entry: the latest record plus the one before it. The
+/// previous record is the crash-recovery fallback — if the latest record
+/// is truncated (crash mid-append) or fails its CRC, reads transparently
+/// fall back instead of poisoning the whole store.
+#[derive(Debug, Clone, Copy)]
+struct AtomIndex {
+    latest: RecordLoc,
+    prev: Option<RecordLoc>,
+}
+
 pub struct DiskStore {
     dir: PathBuf,
-    index: HashMap<usize, RecordLoc>,
+    index: HashMap<usize, AtomIndex>,
     current_segment: u64,
     current_file: Option<fs::File>,
     current_len: u64,
@@ -155,14 +256,20 @@ impl DiskStore {
         if let Some(entries) = v.get("atoms").as_arr() {
             for e in entries {
                 let atom = e.get("atom").as_usize().context("manifest atom id")?;
-                self.index.insert(
-                    atom,
-                    RecordLoc {
-                        segment: e.get("seg").as_usize().unwrap_or(0) as u64,
-                        offset: e.get("off").as_usize().unwrap_or(0) as u64,
-                        iter: e.get("iter").as_usize().unwrap_or(0),
-                    },
-                );
+                let latest = RecordLoc {
+                    segment: e.get("seg").as_usize().unwrap_or(0) as u64,
+                    offset: e.get("off").as_usize().unwrap_or(0) as u64,
+                    iter: e.get("iter").as_usize().unwrap_or(0),
+                };
+                let prev = match e.get("pseg").as_usize() {
+                    Some(pseg) => Some(RecordLoc {
+                        segment: pseg as u64,
+                        offset: e.get("poff").as_usize().unwrap_or(0) as u64,
+                        iter: e.get("piter").as_usize().unwrap_or(0),
+                    }),
+                    None => None,
+                };
+                self.index.insert(atom, AtomIndex { latest, prev });
             }
         }
         Ok(())
@@ -172,13 +279,20 @@ impl DiskStore {
     /// checkpoint barrier (cheap: proportional to atom count).
     pub fn write_manifest(&self) -> Result<()> {
         let mut atoms = Vec::with_capacity(self.index.len());
-        for (atom, loc) in &self.index {
-            atoms.push(crate::util::json::obj([
+        for (atom, idx) in &self.index {
+            let loc = &idx.latest;
+            let mut fields = vec![
                 ("atom", Json::from(*atom)),
                 ("seg", Json::from(loc.segment as usize)),
                 ("off", Json::from(loc.offset as usize)),
                 ("iter", Json::from(loc.iter)),
-            ]));
+            ];
+            if let Some(p) = &idx.prev {
+                fields.push(("pseg", Json::from(p.segment as usize)));
+                fields.push(("poff", Json::from(p.offset as usize)));
+                fields.push(("piter", Json::from(p.iter)));
+            }
+            atoms.push(crate::util::json::obj(fields));
         }
         let v = crate::util::json::obj([
             ("next_segment", Json::from(self.current_segment as usize)),
@@ -209,9 +323,65 @@ impl DiskStore {
         self.current_file = Some(file);
         Ok(())
     }
+
+    /// Read and validate one record. Any structural failure — short read
+    /// (truncated final record after a crash), bad magic, atom mismatch,
+    /// implausible length, CRC mismatch — is an error the caller may fall
+    /// back from.
+    fn read_record(&self, atom: usize, loc: &RecordLoc) -> Result<SavedAtom> {
+        let mut file = fs::File::open(self.segment_path(loc.segment))?;
+        let file_len = file.metadata()?.len();
+        use std::io::Seek;
+        file.seek(std::io::SeekFrom::Start(loc.offset))?;
+        let mut head = [0u8; 28];
+        file.read_exact(&mut head)
+            .with_context(|| format!("record for atom {atom} truncated (header)"))?;
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        if magic != RECORD_MAGIC {
+            bail!("corrupt record for atom {atom}: bad magic");
+        }
+        let rec_atom = u64::from_le_bytes(head[4..12].try_into().unwrap()) as usize;
+        let rec_iter = u64::from_le_bytes(head[12..20].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(head[20..28].try_into().unwrap()) as usize;
+        if rec_atom != atom {
+            bail!("corrupt index: record holds atom {rec_atom}, wanted {atom}");
+        }
+        // Validate the length against the segment before allocating: a
+        // corrupted len field must stay a recoverable record error (the
+        // prev-record fallback), never a multi-GiB allocation.
+        let payload = (len as u64)
+            .checked_mul(4)
+            .and_then(|v| v.checked_add(4))
+            .filter(|&v| {
+                loc.offset
+                    .checked_add(28)
+                    .and_then(|o| o.checked_add(v))
+                    .map(|end| end <= file_len)
+                    .unwrap_or(false)
+            })
+            .with_context(|| {
+                format!("corrupt record for atom {atom}: implausible length {len}")
+            })?;
+        let mut data = vec![0u8; payload as usize];
+        file.read_exact(&mut data)
+            .with_context(|| format!("record for atom {atom} truncated (payload)"))?;
+        let crc_stored = u32::from_le_bytes(data[len * 4..].try_into().unwrap());
+        let mut crc_input = Vec::with_capacity(24 + len * 4);
+        crc_input.extend_from_slice(&head[4..]);
+        crc_input.extend_from_slice(&data[..len * 4]);
+        let crc = crc32fast::hash(&crc_input);
+        if crc != crc_stored {
+            bail!("corrupt record for atom {atom}: crc mismatch");
+        }
+        let values = data[..len * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(SavedAtom { iter: rec_iter, values })
+    }
 }
 
-impl CheckpointStore for DiskStore {
+impl ShardBackend for DiskStore {
     fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
         for (id, vals) in atoms {
             self.ensure_segment()?;
@@ -230,10 +400,9 @@ impl CheckpointStore for DiskStore {
             let file = self.current_file.as_mut().unwrap();
             file.write_all(&buf)?;
             self.current_len += buf.len() as u64;
-            self.index.insert(
-                *id,
-                RecordLoc { segment: self.current_segment, offset, iter },
-            );
+            let loc = RecordLoc { segment: self.current_segment, offset, iter };
+            let prev = self.index.get(id).map(|e| e.latest);
+            self.index.insert(*id, AtomIndex { latest: loc, prev });
             self.bytes += (vals.len() * 4) as u64;
             self.records += 1;
         }
@@ -241,39 +410,27 @@ impl CheckpointStore for DiskStore {
     }
 
     fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
-        let Some(loc) = self.index.get(&atom) else {
+        let Some(entry) = self.index.get(&atom) else {
             return Ok(None);
         };
-        let mut file = fs::File::open(self.segment_path(loc.segment))?;
-        use std::io::Seek;
-        file.seek(std::io::SeekFrom::Start(loc.offset))?;
-        let mut head = [0u8; 28];
-        file.read_exact(&mut head)?;
-        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
-        if magic != RECORD_MAGIC {
-            bail!("corrupt record for atom {atom}: bad magic");
+        match self.read_record(atom, &entry.latest) {
+            Ok(saved) => Ok(Some(saved)),
+            Err(latest_err) => match &entry.prev {
+                // Crash fallback: a torn/corrupt latest record falls back
+                // to the previous good record for the atom instead of
+                // poisoning the whole store.
+                Some(prev) => {
+                    let saved = self.read_record(atom, prev).with_context(|| {
+                        format!(
+                            "atom {atom}: latest record unreadable ({latest_err:#}) \
+                             and fallback record also unreadable"
+                        )
+                    })?;
+                    Ok(Some(saved))
+                }
+                None => Err(latest_err),
+            },
         }
-        let rec_atom = u64::from_le_bytes(head[4..12].try_into().unwrap()) as usize;
-        let rec_iter = u64::from_le_bytes(head[12..20].try_into().unwrap()) as usize;
-        let len = u64::from_le_bytes(head[20..28].try_into().unwrap()) as usize;
-        if rec_atom != atom {
-            bail!("corrupt index: record holds atom {rec_atom}, wanted {atom}");
-        }
-        let mut data = vec![0u8; len * 4 + 4];
-        file.read_exact(&mut data)?;
-        let crc_stored = u32::from_le_bytes(data[len * 4..].try_into().unwrap());
-        let mut crc_input = Vec::with_capacity(24 + len * 4);
-        crc_input.extend_from_slice(&head[4..]);
-        crc_input.extend_from_slice(&data[..len * 4]);
-        let crc = crc32fast::hash(&crc_input);
-        if crc != crc_stored {
-            bail!("corrupt record for atom {atom}: crc mismatch");
-        }
-        let values = data[..len * 4]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        Ok(Some(SavedAtom { iter: rec_iter, values }))
     }
 
     fn bytes_written(&self) -> u64 {
@@ -282,6 +439,10 @@ impl CheckpointStore for DiskStore {
 
     fn records_written(&self) -> u64 {
         self.records
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.write_manifest()
     }
 }
 
@@ -304,11 +465,37 @@ impl LatencyModel {
     pub fn dump_seconds(&self, bytes: u64, ops: u64) -> f64 {
         self.per_op_s * ops as f64 + self.per_byte_s * bytes as f64
     }
+
+    /// Wall-clock for a barrier striped across shards that commit in
+    /// parallel (each `(bytes, ops)` entry is one shard's share): the
+    /// slowest shard gates the barrier. With one shard this degenerates
+    /// to [`dump_seconds`](LatencyModel::dump_seconds).
+    pub fn sharded_dump_seconds(&self, per_shard: &[(u64, u64)]) -> f64 {
+        per_shard
+            .iter()
+            .map(|&(bytes, ops)| self.dump_seconds(bytes, ops))
+            .fold(0.0, f64::max)
+    }
+
+    /// In-loop stall a training iteration pays for one checkpoint barrier
+    /// under this model: synchronous mode pays the full (sharded) dump on
+    /// the training path; async mode pays nothing here — the dump runs on
+    /// the writer pool and only shows up if it outlasts the checkpoint
+    /// interval (back-pressure, which the caller prices separately).
+    pub fn barrier_stall_seconds(&self, per_shard: &[(u64, u64)], async_mode: bool) -> f64 {
+        if async_mode {
+            0.0
+        } else {
+            self.sharded_dump_seconds(per_shard)
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    // Import ShardBackend (not CheckpointStore) so concrete-type method
+    // calls resolve unambiguously.
+    use super::{fs, DiskStore, LatencyModel, MemStore, PathBuf, ShardBackend};
 
     fn tmpdir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!("scar-store-test-{tag}-{}", std::process::id()));
@@ -358,7 +545,7 @@ mod tests {
         let dir = tmpdir("corrupt");
         let mut s = DiskStore::open(&dir).unwrap();
         s.put_atoms(1, &[(0, &[1.0, 2.0][..])]).unwrap();
-        // Flip a payload byte on disk.
+        // Flip a payload byte on disk; the only record has no fallback.
         let seg = dir.join("seg-000000.bin");
         let mut bytes = fs::read(&seg).unwrap();
         bytes[30] ^= 0xFF;
@@ -368,9 +555,86 @@ mod tests {
     }
 
     #[test]
+    fn diskstore_crc_mismatch_falls_back_to_previous_record() {
+        let dir = tmpdir("crc-fallback");
+        let mut s = DiskStore::open(&dir).unwrap();
+        s.put_atoms(1, &[(0, &[1.0, 2.0][..])]).unwrap();
+        s.put_atoms(5, &[(0, &[8.0, 9.0][..])]).unwrap();
+        // Corrupt a payload byte of the *second* record. Record size is
+        // 28 (header) + 8 (payload) + 4 (crc) = 40 bytes.
+        let seg = dir.join("seg-000000.bin");
+        let mut bytes = fs::read(&seg).unwrap();
+        bytes[40 + 30] ^= 0xFF;
+        fs::write(&seg, &bytes).unwrap();
+        let got = s.get_atom(0).unwrap().unwrap();
+        assert_eq!(got.iter, 1, "must fall back to the first record");
+        assert_eq!(got.values, vec![1.0, 2.0]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn diskstore_corrupt_length_field_falls_back_without_allocating() {
+        let dir = tmpdir("len-fallback");
+        let mut s = DiskStore::open(&dir).unwrap();
+        s.put_atoms(1, &[(0, &[1.0, 2.0][..])]).unwrap();
+        s.put_atoms(5, &[(0, &[8.0, 9.0][..])]).unwrap();
+        // Blow up the second record's len field (record bytes 20..28).
+        let seg = dir.join("seg-000000.bin");
+        let mut bytes = fs::read(&seg).unwrap();
+        bytes[40 + 20..40 + 28].copy_from_slice(&u64::MAX.to_le_bytes());
+        fs::write(&seg, &bytes).unwrap();
+        let got = s.get_atom(0).unwrap().unwrap();
+        assert_eq!(got.iter, 1, "must fall back, not attempt a huge allocation");
+        assert_eq!(got.values, vec![1.0, 2.0]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn diskstore_truncated_final_record_falls_back_after_reopen() {
+        let dir = tmpdir("truncate-fallback");
+        {
+            let mut s = DiskStore::open(&dir).unwrap();
+            s.put_atoms(1, &[(0, &[1.0, 2.0][..])]).unwrap();
+            s.put_atoms(6, &[(0, &[7.0, 7.5][..])]).unwrap();
+            s.write_manifest().unwrap();
+        }
+        // Simulate a crash mid-append: cut the final record short.
+        let seg = dir.join("seg-000000.bin");
+        let bytes = fs::read(&seg).unwrap();
+        assert_eq!(bytes.len(), 80);
+        fs::write(&seg, &bytes[..52]).unwrap(); // second record torn
+        let s = DiskStore::open(&dir).unwrap();
+        let got = s.get_atom(0).unwrap().unwrap();
+        assert_eq!(got.iter, 1, "manifest must fall back to the previous record");
+        assert_eq!(got.values, vec![1.0, 2.0]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn diskstore_corruption_with_no_fallback_still_fails_loudly() {
+        let dir = tmpdir("no-fallback");
+        {
+            let mut s = DiskStore::open(&dir).unwrap();
+            s.put_atoms(1, &[(0, &[1.0][..])]).unwrap();
+            s.write_manifest().unwrap();
+        }
+        let seg = dir.join("seg-000000.bin");
+        let bytes = fs::read(&seg).unwrap();
+        fs::write(&seg, &bytes[..10]).unwrap();
+        let s = DiskStore::open(&dir).unwrap();
+        assert!(s.get_atom(0).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn latency_model() {
         let m = LatencyModel::default();
         let t = m.dump_seconds(1_000_000_000, 2);
         assert!((t - 1.001).abs() < 1e-9);
+        // Sharded: the slowest shard gates the barrier.
+        let sharded = m.sharded_dump_seconds(&[(1_000_000_000, 2), (500, 1)]);
+        assert!((sharded - t).abs() < 1e-12);
+        assert_eq!(m.barrier_stall_seconds(&[(1000, 1)], true), 0.0);
+        assert!(m.barrier_stall_seconds(&[(1000, 1)], false) > 0.0);
     }
 }

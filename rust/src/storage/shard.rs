@@ -1,0 +1,334 @@
+//! Sharded checkpoint storage: N independent [`ShardBackend`] instances
+//! behind one router, plus the commit watermark the async write pipeline
+//! needs.
+//!
+//! Atom records are routed by atom id — either `atom % n_shards` (the
+//! default) or through an explicit per-atom map derived from the PS
+//! [`Partition`](crate::partition::Partition), so each PS node's atoms
+//! land in that node's shard (the paper's Fig 4 layout, where every node
+//! streams its own slice of the running checkpoint to shared storage).
+//!
+//! Reads scan every shard and return the freshest record. That makes the
+//! router correct across re-partitions: after a failure moves atoms to a
+//! surviving node (and therefore to a different shard), older records in
+//! the original shard are still found and superseded by iteration number,
+//! never by routing accidents.
+//!
+//! The **commit watermark** is the recovery rule for pipelined writes:
+//! `committed()` is the highest iteration whose barrier the writer pool
+//! has fully flushed. Recovery refuses to read a record newer than the
+//! watermark (see [`crate::recovery::recover`]); the
+//! [`AsyncCheckpointer`](crate::checkpoint::AsyncCheckpointer)'s `flush`
+//! fence drains the pool and advances it, which is what makes async and
+//! sync checkpointing byte-identical at recovery time.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::{DiskStore, LatencyModel, MemStore, SavedAtom, ShardBackend};
+use crate::partition::Partition;
+
+pub struct ShardedStore {
+    shards: Vec<Mutex<Box<dyn ShardBackend>>>,
+    /// Explicit per-atom shard map (empty = route by `atom % n_shards`).
+    route: Mutex<Vec<usize>>,
+    /// Commit watermark; `None` until the first `mark_committed`.
+    committed: Mutex<Option<usize>>,
+    latency: LatencyModel,
+}
+
+impl ShardedStore {
+    /// `n_shards` in-memory shards (the harness configuration).
+    pub fn new_mem(n_shards: usize) -> ShardedStore {
+        assert!(n_shards >= 1, "need at least one shard");
+        let shards = (0..n_shards)
+            .map(|_| Mutex::new(Box::new(MemStore::new()) as Box<dyn ShardBackend>))
+            .collect();
+        ShardedStore {
+            shards,
+            route: Mutex::new(Vec::new()),
+            committed: Mutex::new(None),
+            latency: LatencyModel::default(),
+        }
+    }
+
+    /// `n_shards` on-disk shards under `dir/shard-NNN/`.
+    pub fn open_disk(dir: &Path, n_shards: usize) -> Result<ShardedStore> {
+        assert!(n_shards >= 1, "need at least one shard");
+        let mut shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let sub = dir.join(format!("shard-{s:03}"));
+            let store = DiskStore::open(&sub)
+                .with_context(|| format!("opening shard {s} at {}", sub.display()))?;
+            shards.push(Mutex::new(Box::new(store) as Box<dyn ShardBackend>));
+        }
+        Ok(ShardedStore {
+            shards,
+            route: Mutex::new(Vec::new()),
+            committed: Mutex::new(None),
+            latency: LatencyModel::default(),
+        })
+    }
+
+    /// Build from caller-provided backends (tests, custom backends).
+    pub fn from_backends(backends: Vec<Box<dyn ShardBackend>>) -> ShardedStore {
+        assert!(!backends.is_empty(), "need at least one shard");
+        ShardedStore {
+            shards: backends.into_iter().map(Mutex::new).collect(),
+            route: Mutex::new(Vec::new()),
+            committed: Mutex::new(None),
+            latency: LatencyModel::default(),
+        }
+    }
+
+    pub fn with_latency(mut self, latency: LatencyModel) -> ShardedStore {
+        self.latency = latency;
+        self
+    }
+
+    pub fn latency_model(&self) -> LatencyModel {
+        self.latency
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard an atom's new records are written to.
+    pub fn shard_of(&self, atom: usize) -> usize {
+        let route = self.route.lock().unwrap();
+        match route.get(atom) {
+            Some(&s) => s,
+            None => atom % self.shards.len(),
+        }
+    }
+
+    /// Routed shard for each atom, resolved under a single route lock
+    /// (the batch form of [`shard_of`](ShardedStore::shard_of)).
+    pub fn shard_map(&self, atoms: &[usize]) -> Vec<usize> {
+        let n = self.shards.len();
+        let route = self.route.lock().unwrap();
+        atoms
+            .iter()
+            .map(|&a| route.get(a).copied().unwrap_or(a % n))
+            .collect()
+    }
+
+    /// Route each atom to its owning PS node's shard (node id modulo the
+    /// shard count). Called at cluster start and again after every
+    /// re-partition so new records follow the atom's new owner.
+    pub fn set_route_partition(&self, partition: &Partition) {
+        let n = self.shards.len();
+        let mut route = self.route.lock().unwrap();
+        route.clear();
+        route.extend(partition.owner.iter().map(|&node| node % n));
+    }
+
+    /// Drop any explicit routing (back to `atom % n_shards`).
+    pub fn clear_route(&self) {
+        self.route.lock().unwrap().clear();
+    }
+
+    /// Write records through the router. Shared-reference version used by
+    /// the writer pool; grouped so each shard is locked once per call.
+    pub fn put_atoms_at(&self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
+        let n = self.shards.len();
+        let mut per_shard: Vec<Vec<(usize, &[f32])>> = vec![Vec::new(); n];
+        {
+            let route = self.route.lock().unwrap();
+            for &(atom, vals) in atoms {
+                let s = route.get(atom).copied().unwrap_or(atom % n);
+                per_shard[s].push((atom, vals));
+            }
+        }
+        for (s, batch) in per_shard.iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[s].lock().unwrap();
+            shard
+                .put_atoms(iter, batch)
+                .with_context(|| format!("writing {} atoms to shard {s}", batch.len()))?;
+        }
+        Ok(())
+    }
+
+    /// Freshest record for an atom across all shards (highest iteration;
+    /// ties broken by lowest shard index for determinism). Scanning keeps
+    /// reads correct after re-partitions move an atom between shards.
+    pub fn get_atom_any(&self, atom: usize) -> Result<Option<SavedAtom>> {
+        let mut best: Option<SavedAtom> = None;
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap();
+            if let Some(saved) = guard.get_atom(atom)? {
+                let newer = match &best {
+                    Some(b) => saved.iter > b.iter,
+                    None => true,
+                };
+                if newer {
+                    best = Some(saved);
+                }
+            }
+        }
+        Ok(best)
+    }
+
+    /// Per-shard `(bytes, records)` written so far, for the latency model
+    /// (the slowest shard gates a parallel barrier).
+    pub fn per_shard_io(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let guard = s.lock().unwrap();
+                (guard.bytes_written(), guard.records_written())
+            })
+            .collect()
+    }
+
+    /// Durability fence across every shard (disk manifests etc.).
+    pub fn sync_all(&self) -> Result<()> {
+        for (s, shard) in self.shards.iter().enumerate() {
+            let mut guard = shard.lock().unwrap();
+            guard.sync().with_context(|| format!("syncing shard {s}"))?;
+        }
+        Ok(())
+    }
+
+    /// Advance the commit watermark (monotonic).
+    pub fn mark_committed_at(&self, iter: usize) {
+        let mut committed = self.committed.lock().unwrap();
+        *committed = Some(match *committed {
+            Some(old) => old.max(iter),
+            None => iter,
+        });
+    }
+
+    pub fn committed(&self) -> Option<usize> {
+        *self.committed.lock().unwrap()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes_written()).sum()
+    }
+
+    pub fn total_records(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().records_written()).sum()
+    }
+}
+
+impl super::CheckpointStore for ShardedStore {
+    fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
+        self.put_atoms_at(iter, atoms)
+    }
+
+    fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
+        self.get_atom_any(atom)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.total_bytes()
+    }
+
+    fn records_written(&self) -> u64 {
+        self.total_records()
+    }
+
+    fn committed_iter(&self) -> Option<usize> {
+        self.committed()
+    }
+
+    fn mark_committed(&mut self, iter: usize) {
+        self.mark_committed_at(iter);
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        self.sync_all()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ShardedStore;
+    use crate::partition::Partition;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn routes_by_modulo_and_reads_back() {
+        let s = ShardedStore::new_mem(3);
+        s.put_atoms_at(2, &[(0, &[1.0][..]), (1, &[2.0][..]), (5, &[3.0][..])]).unwrap();
+        assert_eq!(s.shard_of(5), 2);
+        assert_eq!(s.get_atom_any(5).unwrap().unwrap().values, vec![3.0]);
+        assert!(s.get_atom_any(7).unwrap().is_none());
+        assert_eq!(s.total_records(), 3);
+        assert_eq!(s.total_bytes(), 12);
+        // Exactly one shard holds each atom.
+        let io = s.per_shard_io();
+        assert_eq!(io.len(), 3);
+        assert_eq!(io.iter().map(|&(_, r)| r).sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn partition_routing_follows_owners() {
+        let mut rng = Rng::new(9);
+        let partition = Partition::random(12, 4, &mut rng);
+        let s = ShardedStore::new_mem(4);
+        s.set_route_partition(&partition);
+        for atom in 0..12 {
+            assert_eq!(s.shard_of(atom), partition.owner[atom] % 4);
+        }
+    }
+
+    #[test]
+    fn reads_survive_rerouting() {
+        // Write under one routing, re-route, write a newer record, and
+        // confirm the freshest record wins regardless of which shard
+        // holds it — including after routing an atom *back* to a shard
+        // that still holds one of its stale records.
+        let mut rng = Rng::new(10);
+        let mut partition = Partition::random(8, 4, &mut rng);
+        let s = ShardedStore::new_mem(2);
+        s.set_route_partition(&partition);
+        let atoms: Vec<(usize, &[f32])> = (0..8).map(|a| (a, &[1.0f32][..])).collect();
+        s.put_atoms_at(1, &atoms).unwrap();
+
+        partition.repartition(&[0, 1]);
+        s.set_route_partition(&partition);
+        let newer: Vec<(usize, &[f32])> = (0..8).map(|a| (a, &[2.0f32][..])).collect();
+        s.put_atoms_at(5, &newer).unwrap();
+
+        for a in 0..8 {
+            let got = s.get_atom_any(a).unwrap().unwrap();
+            assert_eq!(got.iter, 5, "atom {a}");
+            assert_eq!(got.values, vec![2.0]);
+        }
+    }
+
+    #[test]
+    fn watermark_is_monotonic() {
+        let s = ShardedStore::new_mem(1);
+        assert_eq!(s.committed(), None);
+        s.mark_committed_at(4);
+        s.mark_committed_at(2);
+        assert_eq!(s.committed(), Some(4));
+        s.mark_committed_at(9);
+        assert_eq!(s.committed(), Some(9));
+    }
+
+    #[test]
+    fn disk_shards_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("scar-sharded-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let s = ShardedStore::open_disk(&dir, 2).unwrap();
+            s.put_atoms_at(3, &[(0, &[1.0][..]), (1, &[2.0, 3.0][..])]).unwrap();
+            s.sync_all().unwrap();
+        }
+        let s = ShardedStore::open_disk(&dir, 2).unwrap();
+        assert_eq!(s.get_atom_any(1).unwrap().unwrap().values, vec![2.0, 3.0]);
+        assert_eq!(s.total_bytes(), 12);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

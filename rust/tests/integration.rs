@@ -212,13 +212,16 @@ fn reset_fraction_perturbation_is_monotone_in_fraction() {
 fn cluster_training_with_lda_detects_and_recovers() {
     let corpus = Corpus::lda_generative(120, 200, 5, 30, 0.5, 0.1, 3);
     let mut trainer = LdaTrainer::new("lda_it", corpus, 5, 1.0, 1.0);
-    let mut store = scar::storage::MemStore::new();
+    // PS nodes write to their own shard of the sharded store.
+    let store = std::sync::Arc::new(scar::storage::ShardedStore::new_mem(3));
     let report = scar::cluster::run_cluster_training(
         &mut trainer,
         3,
         40,
         CheckpointPolicy::partial(4, 4, Selector::Priority),
-        &mut store,
+        store,
+        scar::checkpoint::CheckpointMode::Sync,
+        1,
         &[(5, 1)],
         11,
         std::time::Duration::from_millis(2),
