@@ -13,7 +13,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use scar::checkpoint::{CheckpointMode, CheckpointPolicy, Selector};
-use scar::cluster::{run_cluster_training, ClusterEvent};
+use scar::cluster::{run_cluster_training, ClusterEvent, ClusterJob, Detect};
 use scar::models::{build_trainer, default_engine, BuildOpts};
 use scar::storage::ShardedStore;
 use scar::util::cli::Args;
@@ -41,18 +41,14 @@ fn main() -> Result<()> {
         "cluster demo: {model} on {nodes} PS nodes ({nodes} shards, {mode} checkpoints); \
          killing node {kill_node} at iter {kill_iter}"
     );
-    let report = run_cluster_training(
-        &mut trainer,
-        nodes,
-        iters,
-        CheckpointPolicy::partial(8, 4, Selector::Priority),
-        store,
-        mode,
-        nodes,
-        &[(kill_iter, kill_node)],
-        seed,
-        Duration::from_millis(5),
-    )?;
+    let job = ClusterJob {
+        ckpt_mode: mode,
+        ckpt_writers: nodes,
+        kills: vec![(kill_iter, kill_node)],
+        detect: Detect::Heartbeat(Duration::from_millis(5)),
+        ..ClusterJob::new(nodes, iters, CheckpointPolicy::partial(8, 4, Selector::Priority), seed)
+    };
+    let report = run_cluster_training(&mut trainer, store, &job)?;
 
     let mut detected_at = None;
     let mut recovered_atoms = 0usize;

@@ -16,7 +16,12 @@
 //! per-shard latency model: sync pays the slowest shard's dump on the
 //! training path at every barrier; async pays only selection + snapshot.
 //!
-//!   cargo run --release --example fig9_e2e_lda -- [--preset lda_clueweb]
+//! `--max-pending n` bounds the async writer queue (0 = unbounded): a
+//! barrier that finds more than n write jobs pending blocks until the
+//! pool drains, and each such stall is priced as one queued dump in the
+//! modeled in-loop stall.
+//!
+//!   cargo run --release --example fig9_e2e_lda -- [--preset lda_clueweb] [--max-pending 4]
 
 use std::sync::Arc;
 
@@ -38,6 +43,8 @@ struct RunOutcome {
     bytes: u64,
     per_shard_io: Vec<(u64, u64)>,
     step_secs: f64,
+    /// Barriers that hit the bounded-queue back-pressure limit.
+    stalled_barriers: u64,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -48,6 +55,7 @@ fn run(
     mode: RecoveryMode,
     ckpt_mode: CheckpointMode,
     shards: usize,
+    max_pending: usize,
     fail_iter: usize,
     iters: usize,
     target: f64,
@@ -67,7 +75,8 @@ fn run(
         store.clone(),
         ckpt_mode,
         shards,
-    )?;
+    )?
+    .with_max_pending(max_pending);
     // Baseline after the x(0) startup dump, so per-barrier stall modeling
     // only prices in-loop barriers.
     let init_io = store.per_shard_io();
@@ -105,6 +114,7 @@ fn run(
             barriers += 1;
         }
     }
+    let stalled_barriers = ck.backpressure_stalls();
     ck.finish()?;
     let per_shard_io: Vec<(u64, u64)> = store
         .per_shard_io()
@@ -120,6 +130,7 @@ fn run(
         bytes: store.total_bytes(),
         per_shard_io,
         step_secs: t0.elapsed().as_secs_f64() / iters as f64,
+        stalled_barriers,
     })
 }
 
@@ -129,6 +140,7 @@ fn main() -> Result<()> {
     let iters = args.usize_or("iters", 30);
     let fail_iter = args.usize_or("fail-iter", 7);
     let shards = args.usize_or("shards", 4);
+    let max_pending = args.usize_or("max-pending", 0);
     let seed = args.u64_or("seed", 42);
 
     // Fix the likelihood target from a short unperturbed run.
@@ -150,6 +162,7 @@ fn main() -> Result<()> {
         RecoveryMode::Partial,
         CheckpointMode::Async,
         shards,
+        max_pending,
         fail_iter,
         iters,
         target,
@@ -163,6 +176,7 @@ fn main() -> Result<()> {
         RecoveryMode::Full,
         CheckpointMode::Sync,
         shards,
+        max_pending,
         fail_iter,
         iters,
         target,
@@ -200,16 +214,22 @@ fn main() -> Result<()> {
                 (b / n, (ops / n).max(1))
             })
             .collect();
-        let stall = model.barrier_stall_seconds(&per_barrier, async_mode) * r.barriers as f64;
+        // Sync pays the slowest shard's dump at every barrier; async pays
+        // only when the bounded queue back-pressures (each stalled
+        // barrier waits roughly one queued dump out).
+        let stall = model.barrier_stall_seconds(&per_barrier, async_mode) * r.barriers as f64
+            + model.backpressure_stall_seconds(&per_barrier, r.stalled_barriers);
         println!(
             "{name}\n  iters to target: {}  step time: {:.2}s  ckpt blocking: {:.3}s  \
-             bytes: {}  modeled dump: {:.2}s  modeled in-loop stall: {:.2}s",
+             bytes: {}  modeled dump: {:.2}s  modeled in-loop stall: {:.2}s  \
+             backpressure stalls: {}",
             r.iters_to_target.map(|v| v.to_string()).unwrap_or("censored".into()),
             r.step_secs,
             r.blocking_secs,
             scar::util::fmt_bytes(r.bytes),
             model.sharded_dump_seconds(&r.per_shard_io),
             stall,
+            r.stalled_barriers,
         );
     }
     if let (Some(a), Some(b)) = (scar_run.iters_to_target, trad.iters_to_target) {

@@ -1,0 +1,478 @@
+//! Chaos: deterministic storage-fault injection for the sharded
+//! checkpoint store.
+//!
+//! The scenario engine can kill PS *nodes*, but until this subsystem the
+//! storage layer itself was never the failure domain — every shard of the
+//! running checkpoint was assumed perfectly available and perfectly
+//! durable. Storage faults behave qualitatively differently from clean
+//! worker kills (a dead shard takes *history* with it, a slow shard
+//! back-pressures the write pipeline, a torn record silently loses the
+//! freshest save), so they get a first-class, reproducible model here:
+//!
+//! * [`FaultPlan`] — a declarative, epoch-keyed schedule of per-shard
+//!   faults. No wall-clock anywhere: every fault is keyed to a training
+//!   iteration, so the same plan on the same seed produces byte-identical
+//!   runs whatever the thread scheduling.
+//! * [`ChaosBackend`] — wraps any [`ShardBackend`] and applies the plan:
+//!   - **kill** — the shard refuses reads and writes from epoch `at`
+//!     until it heals (never, by default). Routing reacts in
+//!     [`ShardedStore`](crate::storage::ShardedStore): writes re-route to
+//!     the first surviving shard, reads skip the dead shard, and the
+//!     checkpoint coordinator re-persists the running checkpoint from its
+//!     in-memory cache (§4.3 keeps one precisely so the persistent copy
+//!     is re-derivable) — see
+//!     [`AsyncCheckpointer`](crate::checkpoint::AsyncCheckpointer).
+//!   - **slow** — puts inside the window sleep `delay_us` wall-clock
+//!     microseconds, so an async writer pool genuinely falls behind and
+//!     the bounded queue (`storage.max_pending`) exerts back-pressure.
+//!     Results stay byte-identical; only wall-clock changes.
+//!   - **torn write** — the first put at/after epoch `at` is torn
+//!     mid-batch: the leading half of its records land, the tail is
+//!     discarded (a one-record batch loses its record), exactly what
+//!     `DiskStore`'s CRC check does to a record cut short by a crash.
+//!     Readers transparently see the previous record for the torn atoms.
+//!
+//! The epoch clock is advanced by the checkpoint front-end once per
+//! training iteration (`ShardedStore::advance_epoch`), so faults take
+//! effect at deterministic points of the run. Writes carry their barrier
+//! iteration and are judged by it — an in-flight async write enqueued
+//! before a kill still lands (it was in flight before the crash), which
+//! keeps async and sync runs equivalent.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::storage::{MemStore, SavedAtom, ShardBackend, ShardedStore};
+
+/// What goes wrong with one shard (see the module docs for semantics).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Shard unavailable from `at` until `heal_at` (`None` = forever).
+    Kill { heal_at: Option<usize> },
+    /// Puts inside `[at, until)` sleep `delay_us` microseconds each
+    /// (`until = None` = for the rest of the run).
+    Slow { until: Option<usize>, delay_us: u64 },
+    /// The first put at/after `at` is torn mid-batch (fires once).
+    TornWrite,
+}
+
+/// One scheduled fault: which shard, from which epoch, what kind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardFault {
+    pub shard: usize,
+    /// Training iteration the fault takes effect at (>= 1; epoch 0 is the
+    /// x⁽⁰⁾ startup dump, which is assumed healthy).
+    pub at: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic storage-fault schedule. Empty by default (no chaos).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<ShardFault>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Validate against a shard count: every fault must target an
+    /// existing shard at epoch >= 1, and no epoch may leave every shard
+    /// down at once (degraded routing needs a survivor at all times —
+    /// overlapping heal windows are checked, not just forever-kills).
+    pub fn validate(&self, n_shards: usize) -> Result<()> {
+        for f in &self.faults {
+            if f.shard >= n_shards {
+                bail!(
+                    "chaos fault targets shard {}, but the store has {n_shards} shard(s)",
+                    f.shard
+                );
+            }
+            if f.at == 0 {
+                bail!("chaos fault on shard {} has at = 0; epochs start at 1", f.shard);
+            }
+            if let FaultKind::Kill { heal_at: Some(h) } = f.kind {
+                if h <= f.at {
+                    bail!(
+                        "chaos kill on shard {}: heal_at {h} must be > at {}",
+                        f.shard,
+                        f.at
+                    );
+                }
+            }
+        }
+        // An "all shards down" interval can only begin at some kill's
+        // `at` epoch, so checking each of those epochs is exhaustive.
+        let kills: Vec<(usize, usize, Option<usize>)> = self
+            .faults
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::Kill { heal_at } => Some((f.shard, f.at, heal_at)),
+                _ => None,
+            })
+            .collect();
+        for &(_, e, _) in &kills {
+            let mut down = vec![false; n_shards];
+            for &(s, at, heal) in &kills {
+                let covers = at <= e
+                    && match heal {
+                        Some(h) => e < h,
+                        None => true,
+                    };
+                if covers {
+                    down[s] = true;
+                }
+            }
+            if down.iter().all(|&d| d) {
+                bail!(
+                    "chaos plan takes every shard down at iteration {e}; at least one \
+                     shard must be serving"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Faults scheduled for one shard.
+    fn for_shard(&self, shard: usize) -> Vec<ShardFault> {
+        self.faults.iter().copied().filter(|f| f.shard == shard).collect()
+    }
+
+    /// Wrap each backend in a [`ChaosBackend`] applying this plan.
+    pub fn wrap(&self, backends: Vec<Box<dyn ShardBackend>>) -> Vec<Box<dyn ShardBackend>> {
+        backends
+            .into_iter()
+            .enumerate()
+            .map(|(s, inner)| {
+                Box::new(ChaosBackend::new(inner, s, self.for_shard(s))) as Box<dyn ShardBackend>
+            })
+            .collect()
+    }
+
+    /// `n_shards` in-memory shards behind this plan — the store every
+    /// chaos trial uses.
+    pub fn mem_store(&self, n_shards: usize) -> ShardedStore {
+        let backends = (0..n_shards)
+            .map(|_| Box::new(MemStore::new()) as Box<dyn ShardBackend>)
+            .collect();
+        ShardedStore::from_backends(self.wrap(backends))
+    }
+
+    /// Serialize to the scenario value model (`{kill: [...], slow: [...],
+    /// torn: [...]}`), the inverse of the scenario `[chaos]` parser.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut kills = Vec::new();
+        let mut slows = Vec::new();
+        let mut torns = Vec::new();
+        for f in &self.faults {
+            let mut m = BTreeMap::new();
+            m.insert("shard".to_string(), Json::from(f.shard));
+            m.insert("at".to_string(), Json::from(f.at));
+            match f.kind {
+                FaultKind::Kill { heal_at } => {
+                    if let Some(h) = heal_at {
+                        m.insert("heal_at".to_string(), Json::from(h));
+                    }
+                    kills.push(Json::Obj(m));
+                }
+                FaultKind::Slow { until, delay_us } => {
+                    if let Some(u) = until {
+                        m.insert("until".to_string(), Json::from(u));
+                    }
+                    m.insert("delay_us".to_string(), Json::from(delay_us as usize));
+                    slows.push(Json::Obj(m));
+                }
+                FaultKind::TornWrite => torns.push(Json::Obj(m)),
+            }
+        }
+        let mut obj = BTreeMap::new();
+        if !kills.is_empty() {
+            obj.insert("kill".to_string(), Json::Arr(kills));
+        }
+        if !slows.is_empty() {
+            obj.insert("slow".to_string(), Json::Arr(slows));
+        }
+        if !torns.is_empty() {
+            obj.insert("torn".to_string(), Json::Arr(torns));
+        }
+        crate::util::json::Json::Obj(obj)
+    }
+}
+
+/// Fault-injecting wrapper around one storage shard.
+pub struct ChaosBackend {
+    inner: Box<dyn ShardBackend>,
+    shard: usize,
+    faults: Vec<ShardFault>,
+    /// Fired flags for one-shot faults (parallel to `faults`).
+    fired: Vec<bool>,
+    /// Current epoch (highest iteration seen by the clock or a put).
+    epoch: usize,
+    /// Records dropped by torn writes (accounting/debugging).
+    torn_records: u64,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Box<dyn ShardBackend>, shard: usize, faults: Vec<ShardFault>) -> Self {
+        let fired = vec![false; faults.len()];
+        ChaosBackend { inner, shard, faults, fired, epoch: 0, torn_records: 0 }
+    }
+
+    pub fn torn_records(&self) -> u64 {
+        self.torn_records
+    }
+
+    /// Is the shard inside a kill window at `epoch`?
+    fn down_at(&self, epoch: usize) -> bool {
+        self.faults.iter().any(|f| match f.kind {
+            FaultKind::Kill { heal_at } => {
+                f.at <= epoch
+                    && match heal_at {
+                        Some(h) => epoch < h,
+                        None => true,
+                    }
+            }
+            _ => false,
+        })
+    }
+
+    /// Injected write delay at `epoch`, if inside a slow window.
+    fn slow_at(&self, epoch: usize) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f.kind {
+            FaultKind::Slow { until, delay_us } => {
+                let inside = f.at <= epoch
+                    && match until {
+                        Some(u) => epoch < u,
+                        None => true,
+                    };
+                if inside {
+                    Some(delay_us)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        })
+    }
+}
+
+impl ShardBackend for ChaosBackend {
+    fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
+        // A write is refused only when the shard is down *now* (the
+        // clock) for a put issued at/after the kill (its barrier iter).
+        // Two deliberate acceptances keep async and sync runs equivalent:
+        // a put with a pre-kill iter lands while the shard is down (it
+        // was in flight before the crash), and a put whose iter falls
+        // inside a kill window the shard has since healed from lands too
+        // (the write was merely delayed past the outage).
+        if iter > self.epoch {
+            self.epoch = iter;
+        }
+        if self.down_at(self.epoch) && self.down_at(iter) {
+            bail!("shard {} is down (injected kill)", self.shard);
+        }
+        if let Some(delay_us) = self.slow_at(iter) {
+            if delay_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(delay_us));
+            }
+        }
+        for i in 0..self.faults.len() {
+            if self.fired[i] || !matches!(self.faults[i].kind, FaultKind::TornWrite) {
+                continue;
+            }
+            if iter >= self.faults[i].at {
+                self.fired[i] = true;
+                // Tear mid-batch: the leading half lands, the tail is the
+                // in-flight record a crash cut short (DiskStore's CRC
+                // check would discard it on read; here it never lands).
+                // Floor division so a one-record batch loses its record —
+                // a torn write always tears *something*.
+                let keep = atoms.len() / 2;
+                self.torn_records += (atoms.len() - keep) as u64;
+                return self.inner.put_atoms(iter, &atoms[..keep]);
+            }
+        }
+        self.inner.put_atoms(iter, atoms)
+    }
+
+    fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
+        if self.down_at(self.epoch) {
+            bail!("shard {} is down (injected kill)", self.shard);
+        }
+        self.inner.get_atom(atom)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn records_written(&self) -> u64 {
+        self.inner.records_written()
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        if self.down_at(self.epoch) {
+            bail!("shard {} is down (injected kill)", self.shard);
+        }
+        self.inner.sync()
+    }
+
+    fn advance_epoch(&mut self, iter: usize) {
+        if iter > self.epoch {
+            self.epoch = iter;
+        }
+        self.inner.advance_epoch(iter);
+    }
+
+    fn is_down(&self) -> bool {
+        self.down_at(self.epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn put1(store: &mut dyn ShardBackend, iter: usize, atom: usize, val: f32) {
+        store.put_atoms(iter, &[(atom, &[val][..])]).unwrap();
+    }
+
+    #[test]
+    fn kill_window_blocks_and_heals() {
+        let plan = FaultPlan {
+            faults: vec![ShardFault {
+                shard: 0,
+                at: 5,
+                kind: FaultKind::Kill { heal_at: Some(9) },
+            }],
+        };
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, plan.for_shard(0));
+        put1(&mut b, 2, 0, 1.0);
+        assert!(!b.is_down());
+        b.advance_epoch(5);
+        assert!(b.is_down());
+        assert!(b.get_atom(0).is_err());
+        assert!(b.put_atoms(6, &[(0, &[2.0][..])]).is_err());
+        // In-flight write from before the kill still lands.
+        put1(&mut b, 4, 1, 3.0);
+        b.advance_epoch(9);
+        assert!(!b.is_down());
+        assert_eq!(b.get_atom(0).unwrap().unwrap().values, vec![1.0]);
+        assert_eq!(b.get_atom(1).unwrap().unwrap().values, vec![3.0]);
+    }
+
+    #[test]
+    fn torn_write_drops_the_tail_once() {
+        let plan = FaultPlan {
+            faults: vec![ShardFault { shard: 0, at: 3, kind: FaultKind::TornWrite }],
+        };
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, plan.for_shard(0));
+        b.put_atoms(1, &[(0, &[1.0][..]), (1, &[1.0][..])]).unwrap();
+        // Torn put: atom 0 lands (prefix), atom 1's record is lost.
+        b.put_atoms(4, &[(0, &[9.0][..]), (1, &[9.0][..])]).unwrap();
+        assert_eq!(b.torn_records(), 1);
+        assert_eq!(b.get_atom(0).unwrap().unwrap().iter, 4);
+        assert_eq!(b.get_atom(1).unwrap().unwrap().iter, 1, "tail keeps the old record");
+        // Fires once; the next put is whole.
+        b.put_atoms(6, &[(0, &[5.0][..]), (1, &[5.0][..])]).unwrap();
+        assert_eq!(b.get_atom(1).unwrap().unwrap().iter, 6);
+    }
+
+    #[test]
+    fn torn_write_tears_a_single_record_batch_entirely() {
+        let plan = FaultPlan {
+            faults: vec![ShardFault { shard: 0, at: 2, kind: FaultKind::TornWrite }],
+        };
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, plan.for_shard(0));
+        put1(&mut b, 1, 0, 1.0);
+        // A one-record put still tears: the record is lost, not kept.
+        put1(&mut b, 3, 0, 9.0);
+        assert_eq!(b.torn_records(), 1);
+        assert_eq!(b.get_atom(0).unwrap().unwrap().iter, 1);
+    }
+
+    #[test]
+    fn slow_window_only_delays() {
+        let plan = FaultPlan {
+            faults: vec![ShardFault {
+                shard: 0,
+                at: 1,
+                kind: FaultKind::Slow { until: Some(3), delay_us: 1 },
+            }],
+        };
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, plan.for_shard(0));
+        put1(&mut b, 1, 0, 1.0);
+        put1(&mut b, 5, 0, 2.0);
+        assert_eq!(b.get_atom(0).unwrap().unwrap().values, vec![2.0]);
+        assert!(!b.is_down());
+    }
+
+    #[test]
+    fn plan_validation() {
+        let ok = FaultPlan {
+            faults: vec![ShardFault { shard: 1, at: 4, kind: FaultKind::Kill { heal_at: None } }],
+        };
+        ok.validate(2).unwrap();
+        assert!(ok.validate(1).is_err(), "shard out of range");
+        let zero = FaultPlan {
+            faults: vec![ShardFault { shard: 0, at: 0, kind: FaultKind::TornWrite }],
+        };
+        assert!(zero.validate(1).is_err(), "epoch 0 rejected");
+        let all_dead = FaultPlan {
+            faults: vec![
+                ShardFault { shard: 0, at: 2, kind: FaultKind::Kill { heal_at: None } },
+                ShardFault { shard: 1, at: 3, kind: FaultKind::Kill { heal_at: None } },
+            ],
+        };
+        assert!(all_dead.validate(2).is_err(), "needs a survivor");
+        let bad_heal = FaultPlan {
+            faults: vec![ShardFault {
+                shard: 0,
+                at: 5,
+                kind: FaultKind::Kill { heal_at: Some(5) },
+            }],
+        };
+        assert!(bad_heal.validate(2).is_err(), "heal_at must be after at");
+        // Overlapping *temporary* kill windows that leave no survivor are
+        // rejected too, not just forever-kills.
+        let overlap = FaultPlan {
+            faults: vec![
+                ShardFault { shard: 0, at: 2, kind: FaultKind::Kill { heal_at: Some(20) } },
+                ShardFault { shard: 1, at: 3, kind: FaultKind::Kill { heal_at: Some(10) } },
+            ],
+        };
+        assert!(overlap.validate(2).is_err(), "iterations 3..10 have no serving shard");
+        // Disjoint windows are fine: some shard serves at every epoch.
+        let disjoint = FaultPlan {
+            faults: vec![
+                ShardFault { shard: 0, at: 2, kind: FaultKind::Kill { heal_at: Some(5) } },
+                ShardFault { shard: 1, at: 6, kind: FaultKind::Kill { heal_at: Some(9) } },
+            ],
+        };
+        disjoint.validate(2).unwrap();
+    }
+
+    #[test]
+    fn mem_store_routes_around_a_dead_shard() {
+        let plan = FaultPlan {
+            faults: vec![ShardFault { shard: 1, at: 3, kind: FaultKind::Kill { heal_at: None } }],
+        };
+        let store = plan.mem_store(2);
+        // Atom 1 homes on shard 1; before the kill it lands there.
+        store.put_atoms_at(1, &[(0, &[1.0][..]), (1, &[1.0][..])]).unwrap();
+        let newly = store.advance_epoch(3);
+        assert_eq!(newly, vec![1]);
+        assert_eq!(store.down_shards(), vec![1]);
+        // Degraded write: atom 1 re-routes to the survivor.
+        store.put_atoms_at(4, &[(1, &[4.0][..])]).unwrap();
+        assert_eq!(store.degraded_records(), 1);
+        // Degraded read: the dead shard is skipped, the survivor's record
+        // is found.
+        assert_eq!(store.get_atom_any(1).unwrap().unwrap().values, vec![4.0]);
+        // Atom 0 never depended on shard 1.
+        assert_eq!(store.get_atom_any(0).unwrap().unwrap().values, vec![1.0]);
+    }
+}

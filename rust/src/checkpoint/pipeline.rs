@@ -26,7 +26,19 @@
 //! records supersede by iteration — so after a fence, async and sync runs
 //! of the same seed hold byte-identical running checkpoints
 //! (`rust/tests/async_checkpoint.rs` pins this).
+//!
+//! Two failure-domain extensions ride on the same front-end:
+//!
+//! * **Back-pressure** ([`with_max_pending`](AsyncCheckpointer::with_max_pending)):
+//!   a bounded job queue makes a barrier block once the pool falls more
+//!   than `max_pending` jobs behind, so a slow shard throttles barrier
+//!   frequency instead of growing snapshot memory without bound.
+//! * **Storage chaos**: every `maybe_checkpoint` call advances the
+//!   store's injected-fault clock ([`crate::chaos`]); when a shard dies,
+//!   the running checkpoint is re-persisted from the in-memory cache so
+//!   recovery can always read every atom through the survivors.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -72,6 +84,14 @@ pub struct AsyncCheckpointer {
     writers: Vec<Writer>,
     shared: Arc<PoolShared>,
     last_barrier_iter: usize,
+    /// Async back-pressure bound: a barrier blocks once more than this
+    /// many write jobs are pending (0 = unbounded, the default).
+    max_pending: usize,
+    /// Barriers that hit the back-pressure bound and had to wait.
+    stalled_barriers: u64,
+    /// Last iteration the fault clock advanced to (dedupes the
+    /// maybe_checkpoint → checkpoint_now double tick).
+    last_tick_iter: usize,
 }
 
 impl AsyncCheckpointer {
@@ -137,7 +157,26 @@ impl AsyncCheckpointer {
             writers: pool,
             shared,
             last_barrier_iter: 0,
+            max_pending: 0,
+            stalled_barriers: 0,
+            last_tick_iter: usize::MAX,
         })
+    }
+
+    /// Bound the async writer queue: barriers block once more than
+    /// `max_pending` write jobs are pending (one job per writer per
+    /// barrier), so a slow shard throttles barrier frequency instead of
+    /// growing memory without bound. `0` = unbounded (the default).
+    pub fn with_max_pending(mut self, max_pending: usize) -> AsyncCheckpointer {
+        self.max_pending = max_pending;
+        self
+    }
+
+    /// Barriers that hit the back-pressure bound and waited for the pool
+    /// to drain (price them with
+    /// [`LatencyModel::backpressure_stall_seconds`](crate::storage::LatencyModel::backpressure_stall_seconds)).
+    pub fn backpressure_stalls(&self) -> u64 {
+        self.stalled_barriers
     }
 
     pub fn mode(&self) -> CheckpointMode {
@@ -162,6 +201,10 @@ impl AsyncCheckpointer {
     }
 
     /// Run a checkpoint barrier if the policy schedules one at `iter`.
+    ///
+    /// Also the storage fault clock: every call (barrier or not) advances
+    /// the injected-fault epoch, so chaos kills/slow windows take effect
+    /// at deterministic iterations — call it once per training iteration.
     pub fn maybe_checkpoint(
         &mut self,
         iter: usize,
@@ -169,10 +212,40 @@ impl AsyncCheckpointer {
         layout: &AtomLayout,
         rng: &mut Rng,
     ) -> Result<Option<CheckpointStats>> {
+        self.tick(iter, layout)?;
         if iter == 0 || iter % self.coord.policy.interval != 0 {
             return Ok(None);
         }
         Ok(Some(self.checkpoint_now(iter, current, layout, rng)?))
+    }
+
+    /// Advance the store's injected-fault clock to `iter`. If a shard
+    /// just went down, re-persist the full running checkpoint from the
+    /// in-memory cache (the §4.3 cache exists precisely so the persistent
+    /// copy is re-derivable): the dead shard's records are unreachable,
+    /// and the re-written copies land on survivors through the degraded
+    /// router. Records keep their original saved iterations, so the
+    /// commit-watermark rule is unchanged.
+    fn tick(&mut self, iter: usize, layout: &AtomLayout) -> Result<()> {
+        if iter == self.last_tick_iter {
+            return Ok(());
+        }
+        self.last_tick_iter = iter;
+        let newly_down = self.store.advance_epoch(iter);
+        if newly_down.is_empty() {
+            return Ok(());
+        }
+        let mut by_iter: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for a in 0..layout.n_atoms() {
+            by_iter.entry(self.coord.saved_iter(a)).or_default().push(a);
+        }
+        for (saved, atoms) in by_iter {
+            let payloads = collect_payloads(&atoms, self.coord.cache(), layout);
+            let refs: Vec<(usize, &[f32])> =
+                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+            self.store.put_atoms_at(saved, &refs)?;
+        }
+        Ok(())
     }
 
     /// Force a checkpoint barrier at `iter`: select, update the cache,
@@ -186,6 +259,10 @@ impl AsyncCheckpointer {
         layout: &AtomLayout,
         rng: &mut Rng,
     ) -> Result<CheckpointStats> {
+        // Fault clock first: any job enqueued with this iteration must be
+        // preceded by the epoch advance, so the degraded router (not the
+        // backend's own kill check) is what sees a dead shard.
+        self.tick(iter, layout)?;
         let t0 = std::time::Instant::now();
         let chosen = self.coord.select_and_update_cache(iter, current, layout, rng);
         let payloads = collect_payloads(&chosen, current, layout);
@@ -228,10 +305,56 @@ impl AsyncCheckpointer {
                         bail!("checkpoint writer {w} died; state lost before flush");
                     }
                 }
+                // Back-pressure: a bounded queue turns a slow shard into
+                // throttled barriers instead of unbounded snapshot memory.
+                if self.max_pending > 0 {
+                    self.wait_for_queue_room()?;
+                }
             }
         }
         self.last_barrier_iter = iter;
         Ok(CheckpointStats { iter, atoms_saved, bytes, blocking_secs })
+    }
+
+    /// Block until at most `bound` write jobs are pending; returns
+    /// whether any waiting happened. Bounded waits so a writer that died
+    /// abnormally (panic in a backend, poisoned shard lock) turns into an
+    /// error instead of an unbounded hang: a finished thread can no
+    /// longer drain its queue.
+    fn wait_pending_at_most(&mut self, bound: usize) -> Result<bool> {
+        let mut waited = false;
+        let mut p = self.shared.pending.lock().unwrap();
+        while p.in_flight > bound {
+            waited = true;
+            let (guard, _timeout) = self
+                .shared
+                .drained
+                .wait_timeout(p, std::time::Duration::from_millis(200))
+                .unwrap();
+            p = guard;
+            if p.in_flight > bound
+                && self
+                    .writers
+                    .iter()
+                    .any(|w| w.join.as_ref().map(|j| j.is_finished()).unwrap_or(true))
+            {
+                bail!(
+                    "checkpoint writer thread exited with {} write(s) still pending",
+                    p.in_flight
+                );
+            }
+        }
+        Ok(waited)
+    }
+
+    /// Back-pressure point of a bounded queue: wait for room, counting
+    /// the barrier as stalled if it had to wait. Writer errors surface at
+    /// the next `flush` (the fence every recovery goes through).
+    fn wait_for_queue_room(&mut self) -> Result<()> {
+        if self.wait_pending_at_most(self.max_pending)? {
+            self.stalled_barriers += 1;
+        }
+        Ok(())
     }
 
     /// Epoch fence: drain all in-flight writes, surface any writer error,
@@ -240,31 +363,8 @@ impl AsyncCheckpointer {
     /// fence into an error instead of silent nondeterminism).
     pub fn flush(&mut self) -> Result<()> {
         if self.mode == CheckpointMode::Async {
-            let mut p = self.shared.pending.lock().unwrap();
-            while p.in_flight > 0 {
-                // Bounded waits so a writer that died abnormally (panic in
-                // a backend, poisoned shard lock) turns into an error
-                // instead of an unbounded hang: a finished thread can no
-                // longer drain its queue.
-                let (guard, _timeout) = self
-                    .shared
-                    .drained
-                    .wait_timeout(p, std::time::Duration::from_millis(200))
-                    .unwrap();
-                p = guard;
-                if p.in_flight > 0
-                    && self
-                        .writers
-                        .iter()
-                        .any(|w| w.join.as_ref().map(|j| j.is_finished()).unwrap_or(true))
-                {
-                    bail!(
-                        "checkpoint writer thread exited with {} write(s) still pending",
-                        p.in_flight
-                    );
-                }
-            }
-            if let Some(e) = p.error.take() {
+            self.wait_pending_at_most(0)?;
+            if let Some(e) = self.shared.pending.lock().unwrap().error.take() {
                 bail!("checkpoint writer failed: {e}");
             }
         }

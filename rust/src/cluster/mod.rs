@@ -221,6 +221,18 @@ impl Cluster {
         dead
     }
 
+    /// Deterministic detection: declare a scheduled kill dead at its kill
+    /// iteration instead of waiting for heartbeat silence (what scenario
+    /// sweeps need for byte-reproducible reports). Returns false if the
+    /// node was already declared.
+    pub fn declare_failed(&mut self, node: usize, iter: usize) -> bool {
+        if !self.detector.declare_dead(node) {
+            return false;
+        }
+        self.events.push(ClusterEvent::NodeDeclaredDead { node, iter });
+        true
+    }
+
     /// Recovery coordinator (§4.3): re-partition the dead nodes' atoms
     /// onto survivors and reload their values from the running checkpoint
     /// in shared storage. Returns the recovered atom ids.
@@ -286,11 +298,66 @@ pub struct ClusterRunReport {
     pub losses: Vec<f64>,
     pub events: Vec<ClusterEvent>,
     pub checkpoint_bytes: u64,
+    /// Checkpoint records written through degraded routing (a storage
+    /// shard was down and its batches re-homed to survivors).
+    pub degraded_records: u64,
+}
+
+/// How scheduled node kills are *detected*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Detect {
+    /// Realistic mode: a node is dead after 2× this heartbeat timeout of
+    /// silence. Wall-clock — the declaration iteration varies run to run.
+    Heartbeat(Duration),
+    /// Deterministic mode: a scheduled kill is declared dead at its kill
+    /// iteration (what scenario sweeps need for byte-identical reports).
+    Immediate,
+}
+
+/// Full configuration of one threaded-PS training job (the declarative
+/// form `run_cluster_training` consumes; scenario cluster sweeps build
+/// one per trial).
+#[derive(Debug, Clone)]
+pub struct ClusterJob {
+    pub n_nodes: usize,
+    pub iters: usize,
+    pub policy: CheckpointPolicy,
+    pub ckpt_mode: CheckpointMode,
+    pub ckpt_writers: usize,
+    /// Async back-pressure bound (0 = unbounded queue).
+    pub max_pending: usize,
+    /// `(iteration, node)` kill schedule: same-iteration entries model a
+    /// correlated rack loss, increasing iterations a cascade. Nodes are
+    /// not revived.
+    pub kills: Vec<(usize, usize)>,
+    pub seed: u64,
+    pub detect: Detect,
+    /// Stop as soon as the loss reaches this threshold (scenario
+    /// iteration-cost measurement); `None` runs all `iters`.
+    pub stop_at_loss: Option<f64>,
+}
+
+impl ClusterJob {
+    /// A plain job: heartbeat detection, unbounded queue, full run.
+    pub fn new(n_nodes: usize, iters: usize, policy: CheckpointPolicy, seed: u64) -> ClusterJob {
+        ClusterJob {
+            n_nodes,
+            iters,
+            policy,
+            ckpt_mode: CheckpointMode::Sync,
+            ckpt_writers: 1,
+            max_pending: 0,
+            kills: Vec::new(),
+            seed,
+            detect: Detect::Heartbeat(Duration::from_millis(20)),
+            stop_at_loss: None,
+        }
+    }
 }
 
 /// Drive a full training job on a threaded cluster: gather → step →
 /// scatter, with checkpointing, a schedule of node kills, and
-/// heartbeat-triggered partial recovery.
+/// detector-triggered partial recovery.
 ///
 /// Checkpoint records are routed to the *owner node's shard* of the
 /// sharded store (and re-routed after every re-partition), so each PS
@@ -300,58 +367,80 @@ pub struct ClusterRunReport {
 /// preceded by a `flush` epoch fence so it only reads fully-committed
 /// state.
 ///
-/// `kills` is a list of `(iteration, node)` pairs: several entries at the
-/// same iteration model a *correlated* multi-node failure (rack loss);
-/// entries at increasing iterations model a *cascade*. Nodes are not
-/// revived, so a flaky node is expressed as repeated kills of different
-/// nodes carrying the same re-homed atoms.
-#[allow(clippy::too_many_arguments)]
+/// The store may be chaos-wrapped ([`crate::chaos`]): shard kills, slow
+/// windows, and torn writes fire at deterministic iterations via the
+/// fault clock the checkpoint front-end advances every iteration, with
+/// degraded routing and cache rebuild keeping recovery able to read every
+/// atom through the survivors.
 pub fn run_cluster_training(
     trainer: &mut dyn Trainer,
-    n_nodes: usize,
-    iters: usize,
-    policy: CheckpointPolicy,
     store: Arc<ShardedStore>,
-    ckpt_mode: CheckpointMode,
-    ckpt_writers: usize,
-    kills: &[(usize, usize)], // (iteration, node)
-    seed: u64,
-    heartbeat_timeout: Duration,
+    job: &ClusterJob,
 ) -> Result<ClusterRunReport> {
     // Reject unusable schedules up front — a silently-dropped kill would
     // report a failure-free run as a successful recovery experiment.
-    for &(kill_iter, node) in kills {
-        if node >= n_nodes {
-            bail!("kill schedule targets node {node}, but the cluster has {n_nodes} nodes");
+    for &(kill_iter, node) in &job.kills {
+        if node >= job.n_nodes {
+            bail!(
+                "kill schedule targets node {node}, but the cluster has {} nodes",
+                job.n_nodes
+            );
         }
-        if kill_iter >= iters {
-            bail!("kill schedule entry at iter {kill_iter} is past the run length {iters}");
+        if kill_iter >= job.iters {
+            bail!(
+                "kill schedule entry at iter {kill_iter} is past the run length {}",
+                job.iters
+            );
         }
     }
-    trainer.init(seed)?;
+    let heartbeat_timeout = match job.detect {
+        Detect::Heartbeat(t) => t,
+        // Immediate mode keeps the detector around but effectively muted:
+        // scheduled kills are declared by the controller, not by silence.
+        Detect::Immediate => Duration::from_secs(3600),
+    };
+    trainer.init(job.seed)?;
     let layout = trainer.layout().clone();
-    let mut rng = Rng::new(seed ^ 0xC1A5);
-    let mut cluster = Cluster::start(n_nodes, trainer.state(), &layout, heartbeat_timeout, &mut rng)?;
+    let mut rng = Rng::new(job.seed ^ 0xC1A5);
+    let mut cluster = Cluster::start(
+        job.n_nodes,
+        trainer.state(),
+        &layout,
+        heartbeat_timeout,
+        &mut rng,
+    )?;
     // Each PS node writes to its own shard (node id mod shard count).
     store.set_route_partition(&cluster.partition);
     let mut ck = AsyncCheckpointer::new(
-        policy,
+        job.policy,
         trainer.state(),
         &layout,
         store.clone(),
-        ckpt_mode,
-        ckpt_writers,
-    )?;
+        job.ckpt_mode,
+        job.ckpt_writers,
+    )?
+    .with_max_pending(job.max_pending);
 
-    let mut losses = Vec::with_capacity(iters);
-    for iter in 0..iters {
-        for &(kill_iter, node) in kills {
+    let mut losses = Vec::with_capacity(job.iters);
+    for iter in 0..job.iters {
+        let mut killed_now = Vec::new();
+        for &(kill_iter, node) in &job.kills {
             if iter == kill_iter {
                 cluster.kill_node(node, iter);
+                killed_now.push(node);
             }
         }
         // Give the detector a chance to notice silence before the gather.
-        let dead = cluster.poll_failures(iter);
+        let mut dead = cluster.poll_failures(iter);
+        if job.detect == Detect::Immediate {
+            for node in killed_now {
+                if cluster.declare_failed(node, iter) {
+                    dead.push(node);
+                }
+            }
+            dead.sort_unstable();
+            dead.dedup();
+        }
         if !dead.is_empty() {
             // Epoch fence: recovery only reads fully-committed state.
             ck.flush()?;
@@ -375,12 +464,21 @@ pub fn run_cluster_training(
                 .events
                 .push(ClusterEvent::Checkpoint { iter: iter + 1, atoms: stats.atoms_saved });
         }
+        if matches!(job.stop_at_loss, Some(t) if loss <= t) {
+            break;
+        }
     }
     ck.finish()?;
     let events = cluster.events.clone();
     let bytes = store.total_bytes();
+    let degraded = store.degraded_records();
     cluster.shutdown();
-    Ok(ClusterRunReport { losses, events, checkpoint_bytes: bytes })
+    Ok(ClusterRunReport {
+        losses,
+        events,
+        checkpoint_bytes: bytes,
+        degraded_records: degraded,
+    })
 }
 
 #[cfg(test)]
@@ -452,19 +550,12 @@ mod tests {
         let store = Arc::new(ShardedStore::new_mem(4));
         // Plenty of post-kill iterations: synthetic steps are ~µs, and the
         // detector needs 2× the heartbeat timeout of wall-clock silence.
-        let report = run_cluster_training(
-            &mut trainer,
-            4,
-            400,
-            CheckpointPolicy::full(4),
-            store,
-            CheckpointMode::Sync,
-            1,
-            &[(6, 1), (6, 2)],
-            9,
-            Duration::from_millis(2),
-        )
-        .unwrap();
+        let job = ClusterJob {
+            kills: vec![(6, 1), (6, 2)],
+            detect: Detect::Heartbeat(Duration::from_millis(2)),
+            ..ClusterJob::new(4, 400, CheckpointPolicy::full(4), 9)
+        };
+        let report = run_cluster_training(&mut trainer, store, &job).unwrap();
         let killed: Vec<usize> = report
             .events
             .iter()
@@ -493,19 +584,15 @@ mod tests {
         use crate::models::synthetic::SyntheticTrainer;
         let mut trainer = SyntheticTrainer::new(16, 0.8, 7);
         let store = Arc::new(ShardedStore::new_mem(3));
-        let report = run_cluster_training(
-            &mut trainer,
-            3,
-            300,
-            CheckpointPolicy::partial(4, 2, crate::checkpoint::Selector::Priority),
-            store.clone(),
-            CheckpointMode::Async,
-            2,
-            &[(5, 0)],
-            13,
-            Duration::from_millis(2),
-        )
-        .unwrap();
+        let policy = CheckpointPolicy::partial(4, 2, crate::checkpoint::Selector::Priority);
+        let job = ClusterJob {
+            ckpt_mode: CheckpointMode::Async,
+            ckpt_writers: 2,
+            kills: vec![(5, 0)],
+            detect: Detect::Heartbeat(Duration::from_millis(2)),
+            ..ClusterJob::new(3, 300, policy, 13)
+        };
+        let report = run_cluster_training(&mut trainer, store.clone(), &job).unwrap();
         assert!(
             report.events.iter().any(|e| matches!(e, ClusterEvent::Recovered { .. })),
             "events: {:?}",
@@ -515,5 +602,50 @@ mod tests {
         // The final fence committed everything the pool wrote.
         assert!(store.committed().is_some());
         assert_eq!(report.checkpoint_bytes, store.total_bytes());
+    }
+
+    #[test]
+    fn immediate_detection_with_chaos_shard_kill_is_deterministic() {
+        // Deterministic detection + an injected storage-shard kill: the
+        // node kill is declared at its schedule iteration (no wall-clock
+        // heartbeats) and recovery reads through the surviving shards, so
+        // two runs on the same seed produce identical losses and events.
+        use crate::chaos::{FaultKind, FaultPlan, ShardFault};
+        use crate::models::synthetic::SyntheticTrainer;
+
+        let run = || {
+            let mut trainer = SyntheticTrainer::new(18, 0.8, 4);
+            let plan = FaultPlan {
+                faults: vec![ShardFault {
+                    shard: 1,
+                    at: 4,
+                    kind: FaultKind::Kill { heal_at: None },
+                }],
+            };
+            let store = Arc::new(plan.mem_store(3));
+            let job = ClusterJob {
+                ckpt_mode: CheckpointMode::Async,
+                ckpt_writers: 2,
+                kills: vec![(7, 2)],
+                detect: Detect::Immediate,
+                ..ClusterJob::new(3, 60, CheckpointPolicy::full(4), 21)
+            };
+            let report = run_cluster_training(&mut trainer, store.clone(), &job).unwrap();
+            assert_eq!(store.down_shards(), vec![1]);
+            assert!(store.degraded_records() > 0, "writes re-homed off the dead shard");
+            (report.losses, report.events)
+        };
+        let (losses_a, events_a) = run();
+        let (losses_b, events_b) = run();
+        assert_eq!(losses_a, losses_b, "losses must be byte-identical");
+        assert_eq!(events_a, events_b, "events must be identical");
+        // The scheduled node kill was declared at its kill iteration and
+        // recovered in the same loop pass.
+        assert!(events_a
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::NodeDeclaredDead { node: 2, iter: 7 })));
+        assert!(events_a
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::Recovered { iter: 7, .. })));
     }
 }

@@ -38,6 +38,9 @@ pub struct RunConfig {
     /// Writer threads serving the shards in async mode (0 = one per
     /// shard).
     pub storage_writers: usize,
+    /// Async back-pressure bound: a barrier blocks once more than this
+    /// many write jobs are pending (0 = unbounded).
+    pub storage_max_pending: usize,
     pub selector: Selector,
     pub recovery: RecoveryMode,
     /// Inject a failure? (fraction of atoms lost; 0 disables)
@@ -78,6 +81,7 @@ impl Default for RunConfig {
             checkpoint_mode: CheckpointMode::Sync,
             storage_shards: 1,
             storage_writers: 0,
+            storage_max_pending: 0,
             selector: Selector::Priority,
             recovery: RecoveryMode::Partial,
             fail_fraction: 0.0,
@@ -133,6 +137,9 @@ impl RunConfig {
             }
             "storage_writers" => {
                 self.storage_writers = value.parse().context("storage_writers")?
+            }
+            "storage_max_pending" => {
+                self.storage_max_pending = value.parse().context("storage_max_pending")?
             }
             "selector" => {
                 self.selector = Selector::from_str(value).map_err(anyhow::Error::msg)?
@@ -279,6 +286,8 @@ mod tests {
         assert_eq!(cfg.effective_writers(), 4, "writers default to one per shard");
         cfg.apply("storage_writers", "2").unwrap();
         assert_eq!(cfg.effective_writers(), 2);
+        cfg.apply("storage_max_pending", "3").unwrap();
+        assert_eq!(cfg.storage_max_pending, 3);
         assert!(cfg.apply("storage_shards", "0").is_err());
         assert!(cfg.apply("checkpoint_mode", "never").is_err());
     }

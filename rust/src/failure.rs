@@ -292,6 +292,20 @@ impl HeartbeatDetector {
         self.declared_dead.remove(&node);
     }
 
+    /// Controller-side declaration: mark `node` dead *now*, without
+    /// waiting for heartbeat silence. Used by deterministic failure
+    /// detection (scenario cluster sweeps), where a scheduled kill is
+    /// declared at its kill iteration instead of after 2× the timeout.
+    /// Returns false if the node was unknown or already declared.
+    pub fn declare_dead(&mut self, node: usize) -> bool {
+        if self.declared_dead.get(&node) == Some(&false) {
+            self.declared_dead.insert(node, true);
+            true
+        } else {
+            false
+        }
+    }
+
     pub fn liveness(&self, node: usize) -> Liveness {
         if self.declared_dead.get(&node) == Some(&true) {
             return Liveness::Dead;
@@ -397,6 +411,20 @@ mod tests {
         // Beats after death are ignored.
         det.beat(0);
         assert_eq!(det.liveness(0), Liveness::Dead);
+    }
+
+    #[test]
+    fn declare_dead_is_immediate_and_idempotent() {
+        let mut det = HeartbeatDetector::new(Duration::from_secs(3600));
+        det.register(0);
+        det.register(1);
+        assert!(det.declare_dead(0));
+        assert!(!det.declare_dead(0), "second declaration is a no-op");
+        assert!(!det.declare_dead(9), "unknown node");
+        assert_eq!(det.liveness(0), Liveness::Dead);
+        assert_eq!(det.liveness(1), Liveness::Alive);
+        // check() does not re-report a declared node.
+        assert!(det.check().is_empty());
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::chaos::FaultPlan;
 use crate::checkpoint::{
     AsyncCheckpointer, CheckpointCoordinator, CheckpointMode, CheckpointPolicy,
 };
@@ -126,24 +127,58 @@ pub fn replay_checkpoints(
 }
 
 /// Full checkpoint-subsystem configuration for a trial: the (r, rC)
-/// policy plus the write mode and storage topology the scenario engine
-/// wires through (`checkpoint.mode`, `storage.shards`,
-/// `storage.writers`). Async and sync setups on the same seed produce
-/// byte-identical results — the flush fence before every recovery
-/// guarantees it (pinned by `rust/tests/async_checkpoint.rs`).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// policy plus the write mode, storage topology, back-pressure bound and
+/// storage-fault schedule the scenario engine wires through
+/// (`checkpoint.mode`, `storage.shards`, `storage.writers`,
+/// `storage.max_pending`, `[chaos]`). Async and sync setups on the same
+/// seed produce byte-identical results — the flush fence before every
+/// recovery guarantees it (pinned by `rust/tests/async_checkpoint.rs`
+/// and, with storage faults, `rust/tests/chaos.rs`).
+#[derive(Debug, Clone, PartialEq)]
 pub struct CheckpointSetup {
     pub policy: CheckpointPolicy,
     pub mode: CheckpointMode,
     pub shards: usize,
     pub writers: usize,
+    /// Async back-pressure bound (0 = unbounded queue).
+    pub max_pending: usize,
+    /// Injected storage faults (empty = no chaos).
+    pub chaos: FaultPlan,
 }
 
 impl CheckpointSetup {
     /// Synchronous single-shard setup — the classic configuration the
     /// legacy entry points default to.
     pub fn sync(policy: CheckpointPolicy) -> CheckpointSetup {
-        CheckpointSetup { policy, mode: CheckpointMode::Sync, shards: 1, writers: 1 }
+        CheckpointSetup::new(policy, CheckpointMode::Sync, 1, 1)
+    }
+
+    /// A fault-free setup with the given topology.
+    pub fn new(
+        policy: CheckpointPolicy,
+        mode: CheckpointMode,
+        shards: usize,
+        writers: usize,
+    ) -> CheckpointSetup {
+        CheckpointSetup {
+            policy,
+            mode,
+            shards,
+            writers,
+            max_pending: 0,
+            chaos: FaultPlan::default(),
+        }
+    }
+
+    /// The trial's sharded in-memory store, chaos-wrapped when the setup
+    /// carries a fault schedule.
+    pub fn build_store(&self) -> Result<ShardedStore> {
+        if self.chaos.is_empty() {
+            Ok(ShardedStore::new_mem(self.shards))
+        } else {
+            self.chaos.validate(self.shards)?;
+            Ok(self.chaos.mem_store(self.shards))
+        }
     }
 }
 
@@ -223,18 +258,19 @@ pub fn run_plan_trial(
     events: &[FailureEvent],
     trial_seed: u64,
 ) -> Result<TrialResult> {
-    run_plan_trial_with(trainer, traj, CheckpointSetup::sync(policy), mode, events, trial_seed)
+    run_plan_trial_with(trainer, traj, &CheckpointSetup::sync(policy), mode, events, trial_seed)
 }
 
 /// [`run_plan_trial`] with an explicit [`CheckpointSetup`]: the trial's
 /// running checkpoint lives in a sharded store driven sync or async by an
 /// [`AsyncCheckpointer`], and every recovery is preceded by the `flush`
 /// epoch fence — so the result is a pure function of (scenario inputs,
-/// seed) whatever the mode, shard count, or writer count.
+/// seed) whatever the mode, shard count, writer count, or injected
+/// storage-fault schedule.
 pub fn run_plan_trial_with(
     trainer: &mut dyn Trainer,
     traj: &Trajectory,
-    setup: CheckpointSetup,
+    setup: &CheckpointSetup,
     mode: RecoveryMode,
     events: &[FailureEvent],
     trial_seed: u64,
@@ -245,7 +281,7 @@ pub fn run_plan_trial_with(
     let first_iter = events[0].iter.max(1).min(traj.max_iters());
 
     let layout = trainer.layout().clone();
-    let store = Arc::new(ShardedStore::new_mem(setup.shards));
+    let store = Arc::new(setup.build_store()?);
     let mut ck = AsyncCheckpointer::new(
         setup.policy,
         traj.state_at(0),
@@ -253,7 +289,8 @@ pub fn run_plan_trial_with(
         store.clone(),
         setup.mode,
         setup.writers,
-    )?;
+    )?
+    .with_max_pending(setup.max_pending);
     // Replay barriers along the cached trajectory up to the failure
     // (same RNG stream as replay_checkpoints).
     let mut replay_rng = Rng::new(trial_seed);
@@ -670,22 +707,17 @@ mod tests {
         let sync = run_plan_trial_with(
             &mut t,
             &traj,
-            CheckpointSetup::sync(policy),
+            &CheckpointSetup::sync(policy),
             RecoveryMode::Partial,
             &events,
             5,
         )
         .unwrap();
-        let pipelined = CheckpointSetup {
-            policy,
-            mode: CheckpointMode::Async,
-            shards: 3,
-            writers: 2,
-        };
+        let pipelined = CheckpointSetup::new(policy, CheckpointMode::Async, 3, 2);
         let asynced = run_plan_trial_with(
             &mut t,
             &traj,
-            pipelined,
+            &pipelined,
             RecoveryMode::Partial,
             &events,
             5,

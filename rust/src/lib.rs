@@ -10,9 +10,10 @@
 //!   with partial/full recovery), failure injection/detection, sharded
 //!   persistent storage with a pipelined writer pool and commit-watermark
 //!   recovery ([`storage::ShardedStore`] +
-//!   [`checkpoint::AsyncCheckpointer`]), the Theorem 3.2 iteration-cost
-//!   bound, and the experiment harness that regenerates every figure in
-//!   the paper.
+//!   [`checkpoint::AsyncCheckpointer`]), deterministic storage-fault
+//!   injection with degraded-mode routing and recovery ([`chaos`]), the
+//!   Theorem 3.2 iteration-cost bound, and the experiment harness that
+//!   regenerates every figure in the paper.
 //! * **L2** — JAX step functions (QP, MLR, MF-ALS, CNN, Transformer)
 //!   AOT-lowered once to HLO text (`python/compile/`).
 //! * **L1** — Pallas kernels for the dense hot-spots (fused MLR gradient,
@@ -30,6 +31,7 @@
 //! parallel trial sweeps via `scar run-scenario`.
 
 pub mod advisor;
+pub mod chaos;
 pub mod checkpoint;
 pub mod cluster;
 pub mod config;

@@ -68,12 +68,18 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor> [flags]
 
 Config keys (for --set): model seed iters target_iters ps_nodes workers
   checkpoint_interval checkpoint_k checkpoint_mode(sync|async) selector
-  recovery storage_shards storage_writers fail_fraction fail_geom_p
-  fail_plan fail_nodes fail_cascade_extra fail_cascade_gap
-  fail_flaky_period fail_flaky_prob fail_flaky_max checkpoint_dir
+  recovery storage_shards storage_writers storage_max_pending
+  fail_fraction fail_geom_p fail_plan fail_nodes fail_cascade_extra
+  fail_cascade_gap fail_flaky_period fail_flaky_prob fail_flaky_max
+  checkpoint_dir
+
+Scenario files additionally take [chaos] (per-shard kill/slow/torn-write
+schedules), deploy = \"harness\"|\"cluster\", and ps_nodes.
 
 Bundled scenarios: scenarios/fig5.toml, fig6.toml, fig7.toml (paper
-figure sweeps), scenarios/failure_models.toml (correlated/cascade/flaky)."
+figure sweeps), scenarios/failure_models.toml (correlated/cascade/flaky),
+scenarios/shard_failures.toml + shard_failures_cluster.toml (storage
+chaos)."
     );
 }
 
@@ -107,10 +113,10 @@ fn parse_config(args: &Args) -> Result<RunConfig> {
     for key in [
         "model", "seed", "iters", "target_iters", "ps_nodes", "workers",
         "checkpoint_interval", "checkpoint_k", "checkpoint_mode", "selector",
-        "recovery", "storage_shards", "storage_writers", "fail_fraction",
-        "fail_geom_p", "fail_plan", "fail_nodes", "fail_cascade_extra",
-        "fail_cascade_gap", "fail_flaky_period", "fail_flaky_prob",
-        "fail_flaky_max", "checkpoint_dir",
+        "recovery", "storage_shards", "storage_writers", "storage_max_pending",
+        "fail_fraction", "fail_geom_p", "fail_plan", "fail_nodes",
+        "fail_cascade_extra", "fail_cascade_gap", "fail_flaky_period",
+        "fail_flaky_prob", "fail_flaky_max", "checkpoint_dir",
     ] {
         if let Some(v) = args.str_opt(key) {
             cfg.apply(key, v)?;
@@ -170,7 +176,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         store.clone(),
         cfg.checkpoint_mode,
         cfg.effective_writers(),
-    )?;
+    )?
+    .with_max_pending(cfg.storage_max_pending);
 
     // Optional failure schedule: the configured plan expands to one or
     // more events (cascades and flaky nodes produce several).
@@ -279,20 +286,23 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "cluster run: {} nodes, {} storage shard(s), {} checkpoints, kill schedule {:?}",
         cfg.ps_nodes, cfg.storage_shards, cfg.checkpoint_mode, kills
     );
-    let report = scar::cluster::run_cluster_training(
-        &mut trainer,
-        cfg.ps_nodes,
-        cfg.iters,
-        cfg.policy(),
-        store,
-        cfg.checkpoint_mode,
-        cfg.effective_writers(),
-        &kills,
-        cfg.seed,
-        Duration::from_millis(20),
-    )?;
+    let job = scar::cluster::ClusterJob {
+        ckpt_mode: cfg.checkpoint_mode,
+        ckpt_writers: cfg.effective_writers(),
+        max_pending: cfg.storage_max_pending,
+        kills,
+        detect: scar::cluster::Detect::Heartbeat(Duration::from_millis(20)),
+        ..scar::cluster::ClusterJob::new(cfg.ps_nodes, cfg.iters, cfg.policy(), cfg.seed)
+    };
+    let report = scar::cluster::run_cluster_training(&mut trainer, store, &job)?;
     for e in &report.events {
         println!("event: {e:?}");
+    }
+    if report.degraded_records > 0 {
+        println!(
+            "degraded storage writes (re-homed off a dead shard): {}",
+            report.degraded_records
+        );
     }
     println!(
         "final loss: {:.5}; checkpoint bytes: {}",

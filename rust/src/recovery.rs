@@ -86,6 +86,16 @@ pub struct RecoveryReport {
 /// ([`AsyncCheckpointer::flush`](crate::checkpoint::AsyncCheckpointer::flush)).
 /// That is a hard error: recovering from a half-committed barrier would
 /// make async and sync runs diverge silently.
+///
+/// **Degraded mode:** when a storage shard is down (an injected fault
+/// from [`crate::chaos`], or any backend reporting
+/// [`is_down`](crate::storage::ShardBackend::is_down)), the sharded
+/// store's read scan skips it and recovery proceeds through the
+/// *surviving* shards' records, still under the watermark. The checkpoint
+/// front-end re-persists the dead shard's slice from its in-memory cache
+/// the moment the shard dies, so every atom keeps a readable record and a
+/// shard loss degrades placement, never recoverability
+/// (`rust/tests/chaos.rs` pins recovered bytes across shard kills).
 pub fn recover(
     mode: RecoveryMode,
     state: &mut ParamStore,

@@ -38,5 +38,6 @@ pub use runner::{
     CellReport, PanelReport, ScenarioReport,
 };
 pub use spec::{
-    CellAction, CellSpec, CheckpointSpec, NormSpec, PerturbSpec, Scenario, StorageSpec,
+    CellAction, CellSpec, CheckpointSpec, DeployMode, NormSpec, PerturbSpec, Scenario,
+    StorageSpec,
 };

@@ -28,7 +28,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::advisor::OnlineRateEstimator;
-use crate::failure::{FailureEvent, FailureInjector};
+use crate::cluster::{run_cluster_training, ClusterJob, Detect};
+use crate::failure::{FailureEvent, FailureInjector, FailurePlan};
 use crate::harness::{self, CheckpointSetup, Perturb, Trajectory};
 use crate::models::presets::{build_preset, try_preset, PresetKind};
 use crate::models::synthetic::SyntheticTrainer;
@@ -40,7 +41,7 @@ use crate::util::cli::Args;
 use crate::util::rng::Rng;
 use crate::util::stats::{summarize, Summary};
 
-use super::spec::{CellAction, NormSpec, PerturbSpec, Scenario};
+use super::spec::{CellAction, DeployMode, NormSpec, PerturbSpec, Scenario};
 
 /// Dataset seed shared with the `examples/fig*.rs` drivers.
 const DATA_SEED: u64 = 1234;
@@ -339,6 +340,9 @@ fn panel_theory(traj: &Trajectory) -> (f64, f64) {
 enum JobKind {
     Perturb { kind: Perturb, at_iter: usize },
     Plan { setup: CheckpointSetup, mode: RecoveryMode, events: Vec<FailureEvent> },
+    /// `deploy = "cluster"`: a live threaded-PS run with a node-kill
+    /// schedule (and the setup's storage faults, if any).
+    Cluster { setup: CheckpointSetup, n_nodes: usize, kills: Vec<(usize, usize)> },
 }
 
 #[derive(Debug, Clone)]
@@ -401,17 +405,30 @@ fn build_jobs(scn: &Scenario, traj: &Trajectory, n_atoms: usize, x0: f64) -> Vec
                     JobKind::Perturb { kind, at_iter: pert_iter }
                 }
                 CellAction::Fail(plan) => {
-                    let events = plan.sample_events(&inj, n_atoms, &mut rng);
                     let ckpt = cell.checkpoint.unwrap_or(scn.checkpoint);
-                    JobKind::Plan {
-                        setup: CheckpointSetup {
-                            policy: ckpt.policy(),
-                            mode: ckpt.mode,
-                            shards: scn.storage.shards,
-                            writers: scn.storage.writers,
-                        },
-                        mode: cell.mode.unwrap_or(scn.recovery),
-                        events,
+                    let setup = CheckpointSetup {
+                        policy: ckpt.policy(),
+                        mode: ckpt.mode,
+                        shards: scn.storage.shards,
+                        writers: scn.storage.writers,
+                        max_pending: scn.storage.max_pending,
+                        chaos: scn.chaos.clone(),
+                    };
+                    match scn.deploy {
+                        DeployMode::Harness => {
+                            let events = plan.sample_events(&inj, n_atoms, &mut rng);
+                            JobKind::Plan {
+                                setup,
+                                mode: cell.mode.unwrap_or(scn.recovery),
+                                events,
+                            }
+                        }
+                        DeployMode::Cluster => {
+                            let cap = harness::default_cap(traj);
+                            let kills =
+                                sample_cluster_kills(plan, scn.ps_nodes, &inj, &mut rng, cap);
+                            JobKind::Cluster { setup, n_nodes: scn.ps_nodes, kills }
+                        }
                     }
                 }
             };
@@ -419,6 +436,113 @@ fn build_jobs(scn: &Scenario, traj: &Trajectory, n_atoms: usize, x0: f64) -> Vec
         }
     }
     jobs
+}
+
+/// Map a failure plan onto a deterministic node-kill schedule for the
+/// threaded-PS path. The lost *fraction* becomes a node count (clamped to
+/// keep a survivor); cascades kill one further not-yet-dead node per
+/// step, with follow-ups past the trial cap dropped. All randomness comes
+/// from the caller's per-trial stream, so the schedule is a pure function
+/// of (seed, cell, trial).
+fn sample_cluster_kills(
+    plan: &FailurePlan,
+    n_nodes: usize,
+    inj: &FailureInjector,
+    rng: &mut Rng,
+    cap: usize,
+) -> Vec<(usize, usize)> {
+    let node_count = |fraction: f64| -> usize {
+        ((n_nodes as f64 * fraction).round() as usize).clamp(1, n_nodes.saturating_sub(1))
+    };
+    match plan {
+        FailurePlan::Single { fraction } => {
+            let iter = inj.sample_iter(rng);
+            let mut nodes = rng.sample_indices(n_nodes, node_count(*fraction));
+            nodes.sort_unstable();
+            nodes.into_iter().map(|nd| (iter, nd)).collect()
+        }
+        FailurePlan::Correlated { nodes, .. } => {
+            // `of_nodes` is a harness-path concept (it sizes a synthetic
+            // partition); on the cluster the real `ps_nodes` governs.
+            let iter = inj.sample_iter(rng);
+            let k = (*nodes).clamp(1, n_nodes.saturating_sub(1));
+            let mut picked = rng.sample_indices(n_nodes, k);
+            picked.sort_unstable();
+            picked.into_iter().map(|nd| (iter, nd)).collect()
+        }
+        FailurePlan::Cascade { fraction, extra, gap } => {
+            let first_iter = inj.sample_iter(rng);
+            let mut nodes = rng.sample_indices(n_nodes, node_count(*fraction));
+            nodes.sort_unstable();
+            let mut killed = vec![false; n_nodes];
+            for &nd in &nodes {
+                killed[nd] = true;
+            }
+            let mut kills: Vec<(usize, usize)> =
+                nodes.into_iter().map(|nd| (first_iter, nd)).collect();
+            for i in 1..=*extra {
+                let alive: Vec<usize> = (0..n_nodes).filter(|&nd| !killed[nd]).collect();
+                if alive.len() <= 1 {
+                    break; // always leave a survivor
+                }
+                let pick = alive[rng.sample_indices(alive.len(), 1)[0]];
+                killed[pick] = true;
+                let iter = first_iter + i * gap;
+                if iter < cap {
+                    kills.push((iter, pick));
+                }
+            }
+            kills
+        }
+        // Rejected by Scenario::validate — PS nodes are never revived.
+        FailurePlan::Flaky { .. } => {
+            unreachable!("flaky plans are rejected for deploy = \"cluster\"")
+        }
+    }
+}
+
+/// Run one `deploy = "cluster"` trial: a live threaded-PS training run
+/// from the trajectory's seed, with deterministic (immediate) failure
+/// detection and the trial's chaos-wrapped store. The iteration cost is
+/// measured against the same ε as the harness path.
+fn run_cluster_job(
+    trainer: &mut dyn Trainer,
+    traj: &Trajectory,
+    setup: &CheckpointSetup,
+    n_nodes: usize,
+    kills: &[(usize, usize)],
+) -> Result<Outcome> {
+    let store = Arc::new(setup.build_store()?);
+    let cap = harness::default_cap(traj);
+    let job = ClusterJob {
+        n_nodes,
+        iters: cap,
+        policy: setup.policy,
+        ckpt_mode: setup.mode,
+        ckpt_writers: setup.writers,
+        max_pending: setup.max_pending,
+        kills: kills.to_vec(),
+        seed: traj.seed,
+        detect: Detect::Immediate,
+        stop_at_loss: Some(traj.threshold),
+    };
+    let report = run_cluster_training(trainer, store, &job)?;
+    let total = report
+        .losses
+        .iter()
+        .position(|&l| l <= traj.threshold)
+        .map(|i| i + 1);
+    let (total, censored) = match total {
+        Some(t) => (t, false),
+        None => (cap, true),
+    };
+    Ok(Outcome {
+        cost: total as f64 - traj.converged_iters as f64,
+        // Recovery on the cluster path reloads atoms inside the PS nodes;
+        // there is no local pre/post state pair to measure ‖δ‖ against.
+        delta: f64::NAN,
+        censored,
+    })
 }
 
 fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Outcome> {
@@ -429,12 +553,15 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
             Ok(Outcome { cost, delta, censored })
         }
         JobKind::Plan { setup, mode, events } => {
-            let r = harness::run_plan_trial_with(trainer, traj, *setup, *mode, events, job.seed)?;
+            let r = harness::run_plan_trial_with(trainer, traj, setup, *mode, events, job.seed)?;
             Ok(Outcome {
                 cost: r.iteration_cost,
                 delta: r.recovery.delta_norm,
                 censored: r.censored,
             })
+        }
+        JobKind::Cluster { setup, n_nodes, kills } => {
+            run_cluster_job(trainer, traj, setup, *n_nodes, kills)
         }
     }
 }

@@ -19,6 +19,7 @@ use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
+use crate::chaos::{FaultKind, FaultPlan, ShardFault};
 use crate::checkpoint::{CheckpointMode, CheckpointPolicy, Selector};
 use crate::failure::FailurePlan;
 use crate::recovery::RecoveryMode;
@@ -66,18 +67,20 @@ impl CheckpointSpec {
 }
 
 /// Storage topology for the running checkpoint: how many shards the
-/// sharded store stripes atoms over, and how many background writer
-/// threads serve them in async mode (clamped to `[1, shards]` at
-/// runtime).
+/// sharded store stripes atoms over, how many background writer threads
+/// serve them in async mode (clamped to `[1, shards]` at runtime), and
+/// the async back-pressure bound (`max_pending` pending write jobs; 0 =
+/// unbounded).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StorageSpec {
     pub shards: usize,
     pub writers: usize,
+    pub max_pending: usize,
 }
 
 impl Default for StorageSpec {
     fn default() -> Self {
-        StorageSpec { shards: 1, writers: 1 }
+        StorageSpec { shards: 1, writers: 1, max_pending: 0 }
     }
 }
 
@@ -90,6 +93,40 @@ impl StorageSpec {
             bail!("{ctx}: storage writers must be >= 1");
         }
         Ok(())
+    }
+}
+
+/// Which execution substrate a scenario's failure cells run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeployMode {
+    /// The experiment harness: cached-trajectory replay per trial (fast,
+    /// the default).
+    #[default]
+    Harness,
+    /// The threaded parameter-server cluster: every trial is a live
+    /// gather/step/scatter run with `ps_nodes` node threads, scheduled
+    /// kills declared deterministically at their kill iteration.
+    Cluster,
+}
+
+impl FromStr for DeployMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "harness" => Ok(DeployMode::Harness),
+            "cluster" => Ok(DeployMode::Cluster),
+            other => Err(format!("unknown deploy mode '{other}' (harness|cluster)")),
+        }
+    }
+}
+
+impl std::fmt::Display for DeployMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DeployMode::Harness => "harness",
+            DeployMode::Cluster => "cluster",
+        })
     }
 }
 
@@ -151,6 +188,13 @@ pub struct Scenario {
     pub fail_geom_p: f64,
     pub checkpoint: CheckpointSpec,
     pub storage: StorageSpec,
+    /// Injected storage faults, applied to every trial's store
+    /// (`[chaos]` — per-shard kill/slow/torn-write schedules).
+    pub chaos: FaultPlan,
+    /// Execution substrate for failure cells.
+    pub deploy: DeployMode,
+    /// PS node threads per trial when `deploy = "cluster"`.
+    pub ps_nodes: usize,
     pub recovery: RecoveryMode,
     /// CSV output path (written by `scar run-scenario` and the fig
     /// wrappers; in-process callers read the report instead).
@@ -198,7 +242,7 @@ impl Scenario {
         const TOP_KEYS: &[&str] = &[
             "name", "model", "panels", "seed", "trials", "workers", "target_iters",
             "max_iters", "perturb_iter", "fail_geom_p", "checkpoint", "storage",
-            "recovery", "output", "cell", "cells",
+            "chaos", "deploy", "ps_nodes", "recovery", "output", "cell", "cells",
         ];
         for key in obj.keys() {
             if !TOP_KEYS.contains(&key.as_str()) {
@@ -239,6 +283,17 @@ impl Scenario {
             Some(s) => parse_storage(s, &ctx)?,
         };
 
+        let chaos = match obj.get("chaos") {
+            None => FaultPlan::default(),
+            Some(c) => parse_chaos(c, &ctx)?,
+        };
+
+        let deploy = match opt_str(obj, "deploy", &ctx)? {
+            None => DeployMode::Harness,
+            Some(s) => DeployMode::from_str(&s)
+                .map_err(|e| anyhow::anyhow!("{ctx}: deploy: {e}"))?,
+        };
+
         let recovery = match opt_str(obj, "recovery", &ctx)? {
             None => RecoveryMode::Partial,
             Some(s) => RecoveryMode::from_str(&s)
@@ -270,6 +325,9 @@ impl Scenario {
             fail_geom_p: opt_f64(obj, "fail_geom_p", &ctx)?.unwrap_or(0.05),
             checkpoint,
             storage,
+            chaos,
+            deploy,
+            ps_nodes: opt_usize(obj, "ps_nodes", &ctx)?.unwrap_or(4),
             recovery,
             output: opt_str(obj, "output", &ctx)?,
             cells,
@@ -288,6 +346,22 @@ impl Scenario {
         }
         self.checkpoint.validate(&ctx)?;
         self.storage.validate(&ctx)?;
+        self.chaos
+            .validate(self.storage.shards)
+            .map_err(|e| anyhow::anyhow!("{ctx}: {e}"))?;
+        if self.deploy == DeployMode::Cluster && self.ps_nodes < 2 {
+            bail!(
+                "{ctx}: deploy = \"cluster\" needs ps_nodes >= 2 (a kill must leave a \
+                 survivor), got {}",
+                self.ps_nodes
+            );
+        }
+        if self.deploy == DeployMode::Cluster && self.recovery == RecoveryMode::Full {
+            bail!(
+                "{ctx}: deploy = \"cluster\" implements partial recovery only (lost atoms \
+                 are re-homed and reloaded); use recovery = \"partial\""
+            );
+        }
         if let (Some(t), Some(m)) = (self.target_iters, self.max_iters) {
             if t == 0 || t > m {
                 bail!("{ctx}: need 1 <= target_iters <= max_iters, got {t} > {m}");
@@ -303,9 +377,33 @@ impl Scenario {
             }
             match &cell.action {
                 CellAction::Fail(plan) => {
-                    plan.validate().map_err(|e| anyhow::anyhow!("{cctx}: {e}"))?
+                    plan.validate().map_err(|e| anyhow::anyhow!("{cctx}: {e}"))?;
+                    if self.deploy == DeployMode::Cluster
+                        && matches!(plan, FailurePlan::Flaky { .. })
+                    {
+                        bail!(
+                            "{cctx}: fail = \"flaky\" is not supported with deploy = \
+                             \"cluster\" (PS nodes are not revived)"
+                        );
+                    }
+                    if self.deploy == DeployMode::Cluster
+                        && cell.mode == Some(RecoveryMode::Full)
+                    {
+                        bail!(
+                            "{cctx}: deploy = \"cluster\" implements partial recovery only; \
+                             remove mode = \"full\""
+                        );
+                    }
                 }
-                CellAction::Perturb(p) => validate_perturb(p, &cctx)?,
+                CellAction::Perturb(p) => {
+                    validate_perturb(p, &cctx)?;
+                    if self.deploy == DeployMode::Cluster {
+                        bail!(
+                            "{cctx}: perturb cells are not supported with deploy = \
+                             \"cluster\" (only failure plans map to node kills)"
+                        );
+                    }
+                }
             }
         }
         Ok(())
@@ -332,6 +430,11 @@ impl Scenario {
         obj.insert("fail_geom_p".into(), Json::Num(self.fail_geom_p));
         obj.insert("checkpoint".into(), checkpoint_json(&self.checkpoint));
         obj.insert("storage".into(), storage_json(&self.storage));
+        if !self.chaos.is_empty() {
+            obj.insert("chaos".into(), self.chaos.to_json());
+        }
+        obj.insert("deploy".into(), Json::from(self.deploy.to_string()));
+        obj.insert("ps_nodes".into(), Json::from(self.ps_nodes));
         obj.insert("recovery".into(), Json::from(mode_str(self.recovery)));
         if let Some(o) = &self.output {
             obj.insert("output".into(), Json::from(o.as_str()));
@@ -364,9 +467,24 @@ impl Scenario {
             self.fail_geom_p
         ));
         out.push_str(&format!(
-            "  storage: {} shard(s), {} writer(s)\n",
-            self.storage.shards, self.storage.writers
+            "  storage: {} shard(s), {} writer(s), max_pending {}; deploy: {}\n",
+            self.storage.shards,
+            self.storage.writers,
+            self.storage.max_pending,
+            match self.deploy {
+                DeployMode::Harness => "harness".to_string(),
+                DeployMode::Cluster => format!("cluster ({} PS nodes)", self.ps_nodes),
+            }
         ));
+        if !self.chaos.is_empty() {
+            out.push_str(&format!("  chaos: {} storage fault(s)\n", self.chaos.faults.len()));
+            for f in &self.chaos.faults {
+                out.push_str(&format!(
+                    "    shard {} at iter {}: {:?}\n",
+                    f.shard, f.at, f.kind
+                ));
+            }
+        }
         for p in &self.panels {
             out.push_str(&format!("  panel: {p}\n"));
         }
@@ -395,6 +513,7 @@ fn storage_json(s: &StorageSpec) -> Json {
     let mut m = BTreeMap::new();
     m.insert("shards".into(), Json::from(s.shards));
     m.insert("writers".into(), Json::from(s.writers));
+    m.insert("max_pending".into(), Json::from(s.max_pending));
     Json::Obj(m)
 }
 
@@ -408,6 +527,7 @@ fn cell_json(c: &CellSpec) -> Json {
         m.insert("interval".into(), Json::from(ck.interval));
         m.insert("k".into(), Json::from(ck.k));
         m.insert("selector".into(), Json::from(ck.selector.to_string()));
+        m.insert("checkpoint_mode".into(), Json::from(ck.mode.to_string()));
     }
     match &c.action {
         CellAction::Perturb(PerturbSpec::Random { norm }) => {
@@ -543,8 +663,8 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
         .as_obj()
         .with_context(|| format!("{ctx}: 'storage' must be a table"))?;
     for key in obj.keys() {
-        if !["shards", "writers"].contains(&key.as_str()) {
-            bail!("{ctx}: storage: unknown key '{key}' (shards|writers)");
+        if !["shards", "writers", "max_pending"].contains(&key.as_str()) {
+            bail!("{ctx}: storage: unknown key '{key}' (shards|writers|max_pending)");
         }
     }
     let base = StorageSpec::default();
@@ -553,7 +673,86 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
         shards,
         // Default the pool to one writer per shard.
         writers: opt_usize(obj, "writers", ctx)?.unwrap_or(shards),
+        max_pending: opt_usize(obj, "max_pending", ctx)?.unwrap_or(base.max_pending),
     })
+}
+
+/// Parse the `[chaos]` table: per-shard fault schedules under the keys
+/// `kill`, `slow`, and `torn`, each an array of tables.
+fn parse_chaos(v: &Json, ctx: &str) -> Result<FaultPlan> {
+    let obj = v
+        .as_obj()
+        .with_context(|| format!("{ctx}: 'chaos' must be a table"))?;
+    for key in obj.keys() {
+        if !["kill", "slow", "torn"].contains(&key.as_str()) {
+            bail!("{ctx}: chaos: unknown key '{key}' (kill|slow|torn)");
+        }
+    }
+    /// The `chaos.<key>` array as a list of tables (empty when absent).
+    fn entries<'a>(
+        obj: &'a BTreeMap<String, Json>,
+        key: &str,
+        ctx: &str,
+    ) -> Result<Vec<&'a BTreeMap<String, Json>>> {
+        match obj.get(key) {
+            None => Ok(Vec::new()),
+            Some(arr) => {
+                let arr = arr.as_arr().with_context(|| {
+                    format!("{ctx}: chaos.{key} must be an array of tables ([[chaos.{key}]])")
+                })?;
+                arr.iter()
+                    .enumerate()
+                    .map(|(i, e)| {
+                        e.as_obj().with_context(|| {
+                            format!("{ctx}: chaos.{key}[{i}] must be a table")
+                        })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn shard_at(e: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<(usize, usize)> {
+        let ectx = format!("{ctx}: chaos.{key}");
+        let shard = opt_usize(e, "shard", &ectx)?
+            .with_context(|| format!("{ectx}: needs 'shard'"))?;
+        let at = opt_usize(e, "at", &ectx)?
+            .with_context(|| format!("{ectx}: needs 'at'"))?;
+        Ok((shard, at))
+    }
+
+    let mut faults = Vec::new();
+    for e in entries(obj, "kill", ctx)? {
+        for key in e.keys() {
+            if !["shard", "at", "heal_at"].contains(&key.as_str()) {
+                bail!("{ctx}: chaos.kill: unknown key '{key}' (shard|at|heal_at)");
+            }
+        }
+        let (shard, at) = shard_at(e, "kill", ctx)?;
+        let heal_at = opt_usize(e, "heal_at", ctx)?;
+        faults.push(ShardFault { shard, at, kind: FaultKind::Kill { heal_at } });
+    }
+    for e in entries(obj, "slow", ctx)? {
+        for key in e.keys() {
+            if !["shard", "at", "until", "delay_us"].contains(&key.as_str()) {
+                bail!("{ctx}: chaos.slow: unknown key '{key}' (shard|at|until|delay_us)");
+            }
+        }
+        let (shard, at) = shard_at(e, "slow", ctx)?;
+        let until = opt_usize(e, "until", ctx)?;
+        let delay_us = opt_usize(e, "delay_us", ctx)?.unwrap_or(0) as u64;
+        faults.push(ShardFault { shard, at, kind: FaultKind::Slow { until, delay_us } });
+    }
+    for e in entries(obj, "torn", ctx)? {
+        for key in e.keys() {
+            if !["shard", "at"].contains(&key.as_str()) {
+                bail!("{ctx}: chaos.torn: unknown key '{key}' (shard|at)");
+            }
+        }
+        let (shard, at) = shard_at(e, "torn", ctx)?;
+        faults.push(ShardFault { shard, at, kind: FaultKind::TornWrite });
+    }
+    Ok(FaultPlan { faults })
 }
 
 fn parse_norm(obj: &BTreeMap<String, Json>, ctx: &str) -> Result<NormSpec> {
@@ -624,7 +823,9 @@ fn parse_cell(
     // silently ignored, because it usually means the kind itself is a
     // typo or the user expects an effect the sweep won't have.
     const PERTURB_COMMON: &[&str] = &["label", "perturb", "fail"];
-    const FAIL_COMMON: &[&str] = &["label", "perturb", "fail", "mode", "interval", "k", "selector"];
+    const FAIL_COMMON: &[&str] = &[
+        "label", "perturb", "fail", "mode", "interval", "k", "selector", "checkpoint_mode",
+    ];
     let check_keys = |common: &[&str], allowed: &[&str], kind: &str| -> Result<()> {
         for key in obj.keys() {
             if !common.contains(&key.as_str()) && !allowed.contains(&key.as_str()) {
@@ -716,20 +917,23 @@ fn parse_cell(
     };
 
     // Per-cell checkpoint override: missing components inherit the
-    // scenario-level spec.
-    let has_ck_override =
-        obj.contains_key("interval") || obj.contains_key("k") || obj.contains_key("selector");
+    // scenario-level spec. `checkpoint_mode` is the cell-level spelling
+    // of `[checkpoint] mode` ('mode' on a cell is the recovery mode), so
+    // one sweep can compare sync and async barriers side by side.
+    let has_ck_override = obj.contains_key("interval")
+        || obj.contains_key("k")
+        || obj.contains_key("selector")
+        || obj.contains_key("checkpoint_mode");
     let checkpoint = if has_ck_override {
-        Some(parse_checkpoint(
-            &Json::Obj(
-                obj.iter()
-                    .filter(|(k, _)| ["interval", "k", "selector"].contains(&k.as_str()))
-                    .map(|(k, v)| (k.clone(), v.clone()))
-                    .collect(),
-            ),
-            base_ck,
-            &ctx,
-        )?)
+        let mut sub: BTreeMap<String, Json> = obj
+            .iter()
+            .filter(|(k, _)| ["interval", "k", "selector"].contains(&k.as_str()))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        if let Some(m) = obj.get("checkpoint_mode") {
+            sub.insert("mode".to_string(), m.clone());
+        }
+        Some(parse_checkpoint(&Json::Obj(sub), base_ck, &ctx)?)
     } else {
         None
     };
@@ -873,6 +1077,101 @@ norm_log10 = [-2.0, 0.0]
         let ck = s.cells[0].checkpoint.unwrap();
         assert_eq!((ck.interval, ck.k), (4, 4));
         assert_eq!(ck.policy().fraction, 0.25);
+        // Un-overridden components inherit the scenario default.
+        assert_eq!(ck.mode, CheckpointMode::Sync);
+    }
+
+    #[test]
+    fn cell_checkpoint_mode_override() {
+        // One sweep comparing sync vs async barriers side by side: the
+        // cell-level `checkpoint_mode` key overrides `[checkpoint] mode`.
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[checkpoint]\nmode=\"sync\"\n\
+             [[cell]]\nlabel=\"sync\"\nfail=\"single\"\nfraction=0.5\n\
+             [[cell]]\nlabel=\"async\"\nfail=\"single\"\nfraction=0.5\ncheckpoint_mode=\"async\"\n",
+        )
+        .unwrap();
+        assert!(s.cells[0].checkpoint.is_none());
+        let ck = s.cells[1].checkpoint.unwrap();
+        assert_eq!(ck.mode, CheckpointMode::Async);
+        // Other components inherit the scenario spec.
+        assert_eq!(ck.interval, s.checkpoint.interval);
+        // And it round-trips through the value model.
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+        // A perturbation cell never checkpoints, so the key is rejected.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[cell]]\nlabel=\"x\"\nperturb=\"reset\"\nfraction=0.5\ncheckpoint_mode=\"async\"\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("checkpoint_mode"), "{e:?}");
+    }
+
+    #[test]
+    fn chaos_and_deploy_keys_parse_and_roundtrip() {
+        use crate::chaos::FaultKind;
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\ndeploy=\"cluster\"\nps_nodes=3\n\
+             [storage]\nshards=4\nmax_pending=2\n\
+             [[chaos.kill]]\nshard=1\nat=6\n\
+             [[chaos.slow]]\nshard=0\nat=4\nuntil=9\ndelay_us=50\n\
+             [[chaos.torn]]\nshard=2\nat=8\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.deploy, DeployMode::Cluster);
+        assert_eq!(s.ps_nodes, 3);
+        assert_eq!(s.storage.max_pending, 2);
+        assert_eq!(s.chaos.faults.len(), 3);
+        assert_eq!(s.chaos.faults[0].shard, 1);
+        assert_eq!(s.chaos.faults[0].kind, FaultKind::Kill { heal_at: None });
+        assert_eq!(
+            s.chaos.faults[1].kind,
+            FaultKind::Slow { until: Some(9), delay_us: 50 }
+        );
+        assert_eq!(s.chaos.faults[2].kind, FaultKind::TornWrite);
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+    }
+
+    #[test]
+    fn chaos_and_deploy_validation_errors() {
+        // Fault targeting a shard the store doesn't have.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=2\n\
+             [[chaos.kill]]\nshard=5\nat=3\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("shard 5"), "{e:?}");
+        // Unknown chaos key.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[chaos.explode]]\nshard=0\nat=3\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("explode"), "{e:?}");
+        // Flaky plans need node revival; the cluster path has none.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\ndeploy=\"cluster\"\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"flaky\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("flaky"), "{e:?}");
+        // Perturb cells never run on the cluster path.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\ndeploy=\"cluster\"\n\
+             [[cell]]\nlabel=\"x\"\nperturb=\"reset\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("perturb"), "{e:?}");
+        // Bad deploy value names the options.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\ndeploy=\"cloud\"\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("cloud"), "{e:?}");
     }
 
     #[test]

@@ -66,6 +66,19 @@ pub trait ShardBackend: Send {
     fn sync(&mut self) -> Result<()> {
         Ok(())
     }
+
+    /// Advance the injected-fault epoch clock to training iteration
+    /// `iter`. Real backends have no fault schedule, so this is a no-op;
+    /// [`ChaosBackend`](crate::chaos::ChaosBackend) uses it to trigger
+    /// kill/slow/torn-write windows at deterministic iterations.
+    fn advance_epoch(&mut self, _iter: usize) {}
+
+    /// Whether the shard is currently refusing service (an injected
+    /// fault). Healthy backends always serve; the router uses this to
+    /// re-route writes and skip reads in degraded mode.
+    fn is_down(&self) -> bool {
+        false
+    }
 }
 
 /// Write/read interface to the shared persistent checkpoint storage, as
@@ -489,6 +502,18 @@ impl LatencyModel {
             self.sharded_dump_seconds(per_shard)
         }
     }
+
+    /// In-loop stall of async back-pressure under a bounded writer queue
+    /// (`storage.max_pending`): each stalled barrier waits for roughly
+    /// one queued barrier's dump to drain, gated by the slowest shard.
+    /// `per_barrier` is one barrier's `(bytes, ops)` share per shard.
+    pub fn backpressure_stall_seconds(
+        &self,
+        per_barrier: &[(u64, u64)],
+        stalled_barriers: u64,
+    ) -> f64 {
+        self.sharded_dump_seconds(per_barrier) * stalled_barriers as f64
+    }
 }
 
 #[cfg(test)]
@@ -636,5 +661,9 @@ mod tests {
         assert!((sharded - t).abs() < 1e-12);
         assert_eq!(m.barrier_stall_seconds(&[(1000, 1)], true), 0.0);
         assert!(m.barrier_stall_seconds(&[(1000, 1)], false) > 0.0);
+        // Back-pressure: stalled barriers pay one queued dump each.
+        let one = m.sharded_dump_seconds(&[(1000, 1)]);
+        assert_eq!(m.backpressure_stall_seconds(&[(1000, 1)], 0), 0.0);
+        assert!((m.backpressure_stall_seconds(&[(1000, 1)], 3) - 3.0 * one).abs() < 1e-12);
     }
 }

@@ -14,6 +14,14 @@
 //! the original shard are still found and superseded by iteration number,
 //! never by routing accidents.
 //!
+//! **Degraded mode** (chaos subsystem): a shard reporting
+//! [`is_down`](crate::storage::ShardBackend::is_down) — an injected fault
+//! from [`crate::chaos`] — is routed around: its batches re-route to the
+//! first surviving shard, reads skip it, and `sync_all` ignores it. The
+//! freshest-record read scan makes the re-homing invisible to callers,
+//! and the checkpoint front-end re-persists the dead shard's records from
+//! its in-memory cache so no atom is left without a readable record.
+//!
 //! The **commit watermark** is the recovery rule for pipelined writes:
 //! `committed()` is the highest iteration whose barrier the writer pool
 //! has fully flushed. Recovery refuses to read a record newer than the
@@ -23,9 +31,10 @@
 //! sync checkpointing byte-identical at recovery time.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::{DiskStore, LatencyModel, MemStore, SavedAtom, ShardBackend};
 use crate::partition::Partition;
@@ -36,6 +45,13 @@ pub struct ShardedStore {
     route: Mutex<Vec<usize>>,
     /// Commit watermark; `None` until the first `mark_committed`.
     committed: Mutex<Option<usize>>,
+    /// Last-observed per-shard health, updated by
+    /// [`advance_epoch`](ShardedStore::advance_epoch) so a kill is
+    /// reported newly-down exactly once.
+    down: Mutex<Vec<bool>>,
+    /// Records written through degraded routing (home shard down,
+    /// re-routed to a survivor).
+    degraded: AtomicU64,
     latency: LatencyModel,
 }
 
@@ -50,6 +66,8 @@ impl ShardedStore {
             shards,
             route: Mutex::new(Vec::new()),
             committed: Mutex::new(None),
+            down: Mutex::new(vec![false; n_shards]),
+            degraded: AtomicU64::new(0),
             latency: LatencyModel::default(),
         }
     }
@@ -68,6 +86,8 @@ impl ShardedStore {
             shards,
             route: Mutex::new(Vec::new()),
             committed: Mutex::new(None),
+            down: Mutex::new(vec![false; n_shards]),
+            degraded: AtomicU64::new(0),
             latency: LatencyModel::default(),
         })
     }
@@ -75,10 +95,13 @@ impl ShardedStore {
     /// Build from caller-provided backends (tests, custom backends).
     pub fn from_backends(backends: Vec<Box<dyn ShardBackend>>) -> ShardedStore {
         assert!(!backends.is_empty(), "need at least one shard");
+        let n = backends.len();
         ShardedStore {
             shards: backends.into_iter().map(Mutex::new).collect(),
             route: Mutex::new(Vec::new()),
             committed: Mutex::new(None),
+            down: Mutex::new(vec![false; n]),
+            degraded: AtomicU64::new(0),
             latency: LatencyModel::default(),
         }
     }
@@ -133,6 +156,11 @@ impl ShardedStore {
 
     /// Write records through the router. Shared-reference version used by
     /// the writer pool; grouped so each shard is locked once per call.
+    ///
+    /// **Degraded mode:** a batch whose home shard is down (injected
+    /// fault) re-routes to the first surviving shard after it — the
+    /// freshest-record read scan makes placement irrelevant to
+    /// correctness, so a dead shard degrades throughput, never data.
     pub fn put_atoms_at(&self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
         let n = self.shards.len();
         let mut per_shard: Vec<Vec<(usize, &[f32])>> = vec![Vec::new(); n];
@@ -147,21 +175,83 @@ impl ShardedStore {
             if batch.is_empty() {
                 continue;
             }
-            let mut shard = self.shards[s].lock().unwrap();
+            let target = self.live_target(s)?;
+            if target != s {
+                self.degraded.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            }
+            let mut shard = self.shards[target].lock().unwrap();
             shard
                 .put_atoms(iter, batch)
-                .with_context(|| format!("writing {} atoms to shard {s}", batch.len()))?;
+                .with_context(|| format!("writing {} atoms to shard {target}", batch.len()))?;
         }
         Ok(())
     }
 
+    /// First serving shard at or after `s` (wrapping), for degraded
+    /// writes. Errors only when every shard is down.
+    fn live_target(&self, s: usize) -> Result<usize> {
+        let n = self.shards.len();
+        for off in 0..n {
+            let t = (s + off) % n;
+            if !self.shards[t].lock().unwrap().is_down() {
+                return Ok(t);
+            }
+        }
+        bail!("all {n} storage shard(s) are down (injected faults)");
+    }
+
+    /// Advance every shard's injected-fault clock to training iteration
+    /// `iter`; returns the shards that went down since the last call (the
+    /// checkpoint front-end rebuilds their records from its in-memory
+    /// cache — see [`crate::checkpoint::AsyncCheckpointer`]).
+    pub fn advance_epoch(&self, iter: usize) -> Vec<usize> {
+        let mut newly = Vec::new();
+        let mut down = self.down.lock().unwrap();
+        for (s, shard) in self.shards.iter().enumerate() {
+            let mut guard = shard.lock().unwrap();
+            guard.advance_epoch(iter);
+            let d = guard.is_down();
+            if d && !down[s] {
+                newly.push(s);
+            }
+            down[s] = d;
+        }
+        newly
+    }
+
+    /// Shards currently refusing service.
+    pub fn down_shards(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.lock().unwrap().is_down())
+            .map(|(s, _)| s)
+            .collect()
+    }
+
+    /// Records written through degraded (re-routed) paths so far.
+    ///
+    /// Observability only, not part of the determinism contract: with
+    /// async writers, whether a pre-kill in-flight job re-routes depends
+    /// on when the pool dequeues it relative to the fault clock, so the
+    /// exact count can vary run to run (the *content* of the store never
+    /// does — identical records land either way).
+    pub fn degraded_records(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
     /// Freshest record for an atom across all shards (highest iteration;
     /// ties broken by lowest shard index for determinism). Scanning keeps
-    /// reads correct after re-partitions move an atom between shards.
+    /// reads correct after re-partitions move an atom between shards, and
+    /// shards that are down (injected faults) are skipped — the degraded
+    /// read path recovery depends on.
     pub fn get_atom_any(&self, atom: usize) -> Result<Option<SavedAtom>> {
         let mut best: Option<SavedAtom> = None;
         for shard in &self.shards {
             let guard = shard.lock().unwrap();
+            if guard.is_down() {
+                continue;
+            }
             if let Some(saved) = guard.get_atom(atom)? {
                 let newer = match &best {
                     Some(b) => saved.iter > b.iter,
@@ -187,10 +277,16 @@ impl ShardedStore {
             .collect()
     }
 
-    /// Durability fence across every shard (disk manifests etc.).
+    /// Durability fence across every shard (disk manifests etc.). Down
+    /// shards are skipped — their records are unreachable until they
+    /// heal, and the rebuilt copies on the survivors are what recovery
+    /// reads.
     pub fn sync_all(&self) -> Result<()> {
         for (s, shard) in self.shards.iter().enumerate() {
             let mut guard = shard.lock().unwrap();
+            if guard.is_down() {
+                continue;
+            }
             guard.sync().with_context(|| format!("syncing shard {s}"))?;
         }
         Ok(())

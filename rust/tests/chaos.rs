@@ -1,0 +1,306 @@
+//! Determinism and degraded-mode contracts of the chaos subsystem:
+//! storage-shard kills, torn writes, and slow shards are injected on a
+//! deterministic epoch clock, recovery completes through the surviving
+//! shards under the commit watermark, and same-seed runs are
+//! byte-identical — including across shard counts and checkpoint modes,
+//! because the coordinator rebuilds a dead shard's records from its
+//! in-memory cache.
+
+use std::sync::Arc;
+
+use scar::chaos::{FaultKind, FaultPlan, ShardFault};
+use scar::checkpoint::{AsyncCheckpointer, CheckpointMode, CheckpointPolicy, Selector};
+use scar::models::synthetic::SyntheticTrainer;
+use scar::recovery::{recover, RecoveryMode};
+use scar::scenario::{self, Scenario};
+use scar::trainer::Trainer;
+use scar::util::rng::Rng;
+
+fn kill(shard: usize, at: usize) -> FaultPlan {
+    FaultPlan {
+        faults: vec![ShardFault { shard, at, kind: FaultKind::Kill { heal_at: None } }],
+    }
+}
+
+/// Train a synthetic model with checkpoint barriers, fail half the atoms
+/// at iter 9, recover through the flush fence, and return the final
+/// parameter bytes — same harness as `tests/async_checkpoint.rs`, plus an
+/// injected storage-fault plan.
+fn train_fail_recover(mode: CheckpointMode, shards: usize, plan: &FaultPlan) -> Vec<u8> {
+    let mut trainer = SyntheticTrainer::new(32, 0.85, 3);
+    trainer.init(7).unwrap();
+    let layout = trainer.layout().clone();
+    let store = Arc::new(plan.mem_store(shards));
+    let policy = CheckpointPolicy::partial(6, 3, Selector::Priority);
+    let mut ck = AsyncCheckpointer::new(
+        policy,
+        trainer.state(),
+        &layout,
+        store.clone(),
+        mode,
+        shards,
+    )
+    .unwrap();
+    let mut rng = Rng::new(11);
+    let mut fail_rng = Rng::new(13);
+    let lost = fail_rng.sample_indices(layout.n_atoms(), layout.n_atoms() / 2);
+    for iter in 0..30usize {
+        if iter == 9 {
+            ck.flush().unwrap();
+            recover(
+                RecoveryMode::Partial,
+                trainer.state_mut(),
+                &layout,
+                &lost,
+                store.as_ref(),
+            )
+            .unwrap();
+        }
+        trainer.step(iter).unwrap();
+        ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng).unwrap();
+    }
+    ck.finish().unwrap();
+    let mut bytes = Vec::new();
+    for t in &trainer.state().tensors {
+        for v in &t.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    bytes
+}
+
+#[test]
+fn recovered_params_byte_identical_across_shard_kills_and_modes() {
+    // Killing any one shard must not change the recovered model at all:
+    // the coordinator re-persists the dead shard's records from its cache
+    // and recovery reads them through the survivors, so every
+    // configuration below matches the fault-free single-shard reference
+    // byte for byte.
+    let reference = train_fail_recover(CheckpointMode::Sync, 1, &FaultPlan::default());
+    for shards in [2usize, 4] {
+        for victim in 0..shards {
+            for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
+                let got = train_fail_recover(mode, shards, &kill(victim, 6));
+                assert_eq!(
+                    reference, got,
+                    "{mode} x {shards} shards with shard {victim} killed at iter 6 \
+                     diverged from the fault-free reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn torn_and_slow_runs_are_reproducible() {
+    let plan = FaultPlan {
+        faults: vec![
+            ShardFault { shard: 0, at: 4, kind: FaultKind::TornWrite },
+            ShardFault {
+                shard: 1,
+                at: 2,
+                kind: FaultKind::Slow { until: Some(10), delay_us: 50 },
+            },
+        ],
+    };
+    for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
+        let a = train_fail_recover(mode, 3, &plan);
+        let b = train_fail_recover(mode, 3, &plan);
+        assert_eq!(a, b, "{mode}: same seed + same fault plan must be byte-identical");
+    }
+}
+
+#[test]
+fn degraded_recovery_reads_survivors_under_the_watermark() {
+    use scar::params::{AtomLayout, ParamStore, Tensor};
+    let ps0 = ParamStore::new(vec![Tensor::zeros("w", &[4, 2])]);
+    let layout = AtomLayout::new(AtomLayout::rows_of(&ps0, "w"));
+    let store = kill(0, 5).mem_store(2);
+    // x(0) for every atom, then a fresher record for atom 1 on shard 1.
+    store
+        .put_atoms_at(
+            0,
+            &[
+                (0, &[0.0, 0.0][..]),
+                (1, &[0.0, 0.0][..]),
+                (2, &[0.0, 0.0][..]),
+                (3, &[0.0, 0.0][..]),
+            ],
+        )
+        .unwrap();
+    store.put_atoms_at(3, &[(1, &[3.0, 3.0][..])]).unwrap();
+    store.mark_committed_at(3);
+    // The shard dies; degraded writes re-route, degraded reads skip it.
+    assert_eq!(store.advance_epoch(5), vec![0]);
+    store.put_atoms_at(6, &[(0, &[6.0, 6.0][..]), (2, &[6.0, 6.0][..])]).unwrap();
+    assert!(store.degraded_records() > 0);
+
+    // Recovery through the survivors: atom 1's record is on shard 1 and
+    // readable; the re-routed records are beyond the watermark until the
+    // caller fences — exactly the async-pipeline rule.
+    let mut state = ps0.clone();
+    let err = recover(RecoveryMode::Partial, &mut state, &layout, &[0, 1], &store)
+        .unwrap_err();
+    assert!(format!("{err:?}").contains("watermark"), "{err:?}");
+    store.mark_committed_at(6);
+    let rep = recover(RecoveryMode::Partial, &mut state, &layout, &[0, 1], &store).unwrap();
+    assert_eq!(rep.atoms_restored, 2);
+    assert_eq!(&state.get("w").data[0..2], &[6.0, 6.0][..]);
+    assert_eq!(&state.get("w").data[2..4], &[3.0, 3.0][..]);
+}
+
+#[test]
+fn bounded_queue_backpressure_stalls_without_changing_results() {
+    // Two slow shards force the async pool to fall behind; a bounded
+    // queue must block the barrier (counted as a stall) and change
+    // nothing about the stored bytes. The 20 ms injected delay dwarfs any
+    // plausible scheduling jitter between enqueue and the bound check.
+    let slow = |shard: usize| ShardFault {
+        shard,
+        at: 1,
+        kind: FaultKind::Slow { until: None, delay_us: 20_000 },
+    };
+    let plan = FaultPlan { faults: vec![slow(0), slow(1)] };
+    let drive = |max_pending: usize| {
+        let mut trainer = SyntheticTrainer::new(16, 0.85, 5);
+        trainer.init(3).unwrap();
+        let layout = trainer.layout().clone();
+        let store = Arc::new(plan.mem_store(2));
+        let mut ck = AsyncCheckpointer::new(
+            CheckpointPolicy::full(1),
+            trainer.state(),
+            &layout,
+            store.clone(),
+            CheckpointMode::Async,
+            2,
+        )
+        .unwrap()
+        .with_max_pending(max_pending);
+        let mut rng = Rng::new(9);
+        for iter in 0..4usize {
+            trainer.step(iter).unwrap();
+            ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng).unwrap();
+        }
+        let stalls = ck.backpressure_stalls();
+        let store = ck.finish().unwrap();
+        (store, stalls)
+    };
+    let (bounded_store, bounded_stalls) = drive(1);
+    let (unbounded_store, unbounded_stalls) = drive(0);
+    assert!(bounded_stalls >= 1, "the bounded queue never back-pressured");
+    assert_eq!(unbounded_stalls, 0, "an unbounded queue must never stall");
+    for atom in 0..16 {
+        assert_eq!(
+            bounded_store.get_atom_any(atom).unwrap(),
+            unbounded_store.get_atom_any(atom).unwrap(),
+            "atom {atom}: back-pressure changed stored bytes"
+        );
+    }
+}
+
+const CHAOS_SWEEP_HEAD: &str = r#"
+name = "chaos-sweep"
+model = "synthetic:dim=32,c=0.85,xseed=11"
+seed = 7
+trials = 4
+target_iters = 40
+max_iters = 80
+
+[checkpoint]
+interval = 8
+k = 2
+selector = "priority"
+mode = "async"
+"#;
+
+const CHAOS_SWEEP_CELLS: &str = r#"
+[[cell]]
+label = "single p=0.5"
+fail = "single"
+fraction = 0.5
+
+[[cell]]
+label = "cascade sync barriers"
+fail = "cascade"
+fraction = 0.25
+extra = 2
+gap = 4
+checkpoint_mode = "sync"
+"#;
+
+fn sweep_with(storage_and_chaos: &str) -> String {
+    let toml = format!("{CHAOS_SWEEP_HEAD}{storage_and_chaos}{CHAOS_SWEEP_CELLS}");
+    let scn = Scenario::from_toml_str(&toml).unwrap();
+    let report = scenario::run_scenario(&scn, None).unwrap();
+    format!("{}\n{}", report.render(), report.to_csv())
+}
+
+#[test]
+fn chaos_scenario_reports_byte_identical_across_shard_counts_and_modes() {
+    // The acceptance pin: a [chaos]-driven sweep that kills a storage
+    // shard mid-run produces the same report as a fault-free single-shard
+    // sweep, whatever the shard count or checkpoint mode, and repeated
+    // runs are byte-identical. (The second cell also exercises the
+    // cell-level checkpoint_mode override inside a chaos sweep.)
+    let kill_shard_1 = "[[chaos.kill]]\nshard = 1\nat = 6\n";
+    let reference = sweep_with("[storage]\nshards = 1\n");
+    let two = sweep_with(&format!("[storage]\nshards = 2\nwriters = 2\n{kill_shard_1}"));
+    let four = sweep_with(&format!(
+        "[storage]\nshards = 4\nwriters = 2\nmax_pending = 4\n{kill_shard_1}"
+    ));
+    assert_eq!(reference, two, "2-shard kill sweep diverged from the reference");
+    assert_eq!(reference, four, "4-shard kill sweep diverged from the reference");
+    // And repeatability on the exact same spec.
+    let again = sweep_with(&format!("[storage]\nshards = 2\nwriters = 2\n{kill_shard_1}"));
+    assert_eq!(two, again, "same-seed chaos sweep must be byte-identical");
+}
+
+#[test]
+fn cluster_deploy_chaos_scenario_is_deterministic_and_recovers() {
+    let toml = r#"
+name = "chaos-cluster"
+model = "synthetic:dim=24,c=0.85,xseed=5"
+seed = 13
+trials = 3
+workers = 2
+target_iters = 30
+max_iters = 60
+deploy = "cluster"
+ps_nodes = 3
+
+[checkpoint]
+interval = 6
+k = 2
+mode = "async"
+
+[storage]
+shards = 3
+writers = 2
+
+[[chaos.kill]]
+shard = 1
+at = 5
+
+[[cell]]
+label = "one node down"
+fail = "single"
+fraction = 0.34
+
+[[cell]]
+label = "rack loss 2/3"
+fail = "correlated"
+nodes = 2
+of_nodes = 3
+"#;
+    let scn = Scenario::from_toml_str(toml).unwrap();
+    let a = scenario::run_scenario(&scn, None).unwrap();
+    let b = scenario::run_scenario(&scn, None).unwrap();
+    assert_eq!(a.render(), b.render(), "cluster chaos sweep must be deterministic");
+    assert_eq!(a.to_csv(), b.to_csv());
+    // Recovery completed in every trial: costs are finite and the sweep
+    // ran both cells to completion.
+    for cell in &a.panels[0].cells {
+        assert_eq!(cell.costs.len(), 3);
+        assert!(cell.costs.iter().all(|c| c.is_finite()), "{:?}", cell.costs);
+    }
+}

@@ -214,19 +214,17 @@ fn cluster_training_with_lda_detects_and_recovers() {
     let mut trainer = LdaTrainer::new("lda_it", corpus, 5, 1.0, 1.0);
     // PS nodes write to their own shard of the sharded store.
     let store = std::sync::Arc::new(scar::storage::ShardedStore::new_mem(3));
-    let report = scar::cluster::run_cluster_training(
-        &mut trainer,
-        3,
-        40,
-        CheckpointPolicy::partial(4, 4, Selector::Priority),
-        store,
-        scar::checkpoint::CheckpointMode::Sync,
-        1,
-        &[(5, 1)],
-        11,
-        std::time::Duration::from_millis(2),
-    )
-    .unwrap();
+    let job = scar::cluster::ClusterJob {
+        kills: vec![(5, 1)],
+        detect: scar::cluster::Detect::Heartbeat(std::time::Duration::from_millis(2)),
+        ..scar::cluster::ClusterJob::new(
+            3,
+            40,
+            CheckpointPolicy::partial(4, 4, Selector::Priority),
+            11,
+        )
+    };
+    let report = scar::cluster::run_cluster_training(&mut trainer, store, &job).unwrap();
     use scar::cluster::ClusterEvent as E;
     let killed = report.events.iter().any(|e| matches!(e, E::NodeKilled { node: 1, .. }));
     let dead = report.events.iter().any(|e| matches!(e, E::NodeDeclaredDead { node: 1, .. }));

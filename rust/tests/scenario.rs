@@ -117,7 +117,14 @@ fn sweep_results_are_sane() {
 
 #[test]
 fn bundled_scenario_files_parse_and_describe() {
-    for name in ["fig5.toml", "fig6.toml", "fig7.toml", "failure_models.toml"] {
+    for name in [
+        "fig5.toml",
+        "fig6.toml",
+        "fig7.toml",
+        "failure_models.toml",
+        "shard_failures.toml",
+        "shard_failures_cluster.toml",
+    ] {
         let path = scenario::find_bundled(&format!("scenarios/{name}"));
         assert!(path.exists(), "bundled scenario {name} not found at {}", path.display());
         let scn = Scenario::from_file(&path)
