@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: build test check fmt clippy doc artifacts figures figures-pjrt clean
+.PHONY: build test check fmt clippy doc smoke artifacts figures figures-pjrt clean
 
 build:
 	cd $(CARGO_DIR) && cargo build --release
@@ -22,6 +22,18 @@ doc:
 
 # The full gate: formatting, lints, tests, docs.
 check: fmt clippy test doc
+
+# Local mirror of CI's backend-matrix smoke job: the chaos scenario
+# family at 2 trials per cell over both storage backends (disk_chaos runs
+# disk-backed as written, then again forced onto memory shards into a
+# separate CSV, and the two reports are diffed — byte-identity is the
+# contract).
+smoke: build
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/shard_failures.toml --trials 2
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/shard_failures_cluster.toml --trials 2
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/disk_chaos.toml --trials 2
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/disk_chaos.toml --trials 2 --backend mem --output results/disk_chaos-mem.csv
+	diff results/disk_chaos.csv results/disk_chaos-mem.csv
 
 # AOT-lower every model variant to HLO text + metadata (L2 -> artifacts/).
 artifacts:

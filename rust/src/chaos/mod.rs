@@ -40,10 +40,11 @@
 //! keeps async and sync runs equivalent.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use crate::storage::{MemStore, SavedAtom, ShardBackend, ShardedStore};
+use crate::storage::{CompactionStats, MemStore, SavedAtom, ShardBackend, ShardedStore};
 
 /// What goes wrong with one shard (see the module docs for semantics).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -152,12 +153,23 @@ impl FaultPlan {
     }
 
     /// `n_shards` in-memory shards behind this plan — the store every
-    /// chaos trial uses.
+    /// harness-backed chaos trial uses.
     pub fn mem_store(&self, n_shards: usize) -> ShardedStore {
         let backends = (0..n_shards)
             .map(|_| Box::new(MemStore::new()) as Box<dyn ShardBackend>)
             .collect();
         ShardedStore::from_backends(self.wrap(backends))
+    }
+
+    /// `n_shards` on-disk shards under `dir/shard-NNN/` behind this plan
+    /// — chaos over the durable tier. Kill/slow windows behave exactly as
+    /// on memory shards; torn writes leave a *physically truncated*
+    /// record in the segment log, so reads drive `DiskStore`'s real
+    /// CRC/manifest fallback end to end (`rust/tests/chaos.rs` pins that
+    /// results stay byte-identical to the same plan on memory shards).
+    pub fn disk_store(&self, dir: &Path, n_shards: usize) -> Result<ShardedStore> {
+        let backends = ShardedStore::disk_backends(dir, n_shards)?;
+        Ok(ShardedStore::from_backends(self.wrap(backends)))
     }
 
     /// Serialize to the scenario value model (`{kill: [...], slow: [...],
@@ -286,13 +298,15 @@ impl ShardBackend for ChaosBackend {
             if iter >= self.faults[i].at {
                 self.fired[i] = true;
                 // Tear mid-batch: the leading half lands, the tail is the
-                // in-flight record a crash cut short (DiskStore's CRC
-                // check would discard it on read; here it never lands).
-                // Floor division so a one-record batch loses its record —
-                // a torn write always tears *something*.
+                // in-flight record a crash cut short. Floor division so a
+                // one-record batch loses its record — a torn write always
+                // tears *something*. The backend decides what a tear
+                // physically is: memory backends drop the tail outright,
+                // DiskStore appends a truncated record so reads exercise
+                // its real CRC/manifest fallback.
                 let keep = atoms.len() / 2;
                 self.torn_records += (atoms.len() - keep) as u64;
-                return self.inner.put_atoms(iter, &atoms[..keep]);
+                return self.inner.put_torn(iter, atoms, keep);
             }
         }
         self.inner.put_atoms(iter, atoms)
@@ -329,6 +343,25 @@ impl ShardBackend for ChaosBackend {
 
     fn is_down(&self) -> bool {
         self.down_at(self.epoch)
+    }
+
+    fn put_torn(&mut self, iter: usize, atoms: &[(usize, &[f32])], keep: usize) -> Result<()> {
+        self.inner.put_torn(iter, atoms, keep)
+    }
+
+    fn garbage_ratio(&self) -> f64 {
+        self.inner.garbage_ratio()
+    }
+
+    fn on_disk_bytes(&self) -> u64 {
+        self.inner.on_disk_bytes()
+    }
+
+    fn compact(&mut self) -> Result<Option<CompactionStats>> {
+        if self.down_at(self.epoch) {
+            bail!("shard {} is down (injected kill)", self.shard);
+        }
+        self.inner.compact()
     }
 }
 
@@ -453,6 +486,29 @@ mod tests {
             ],
         };
         disjoint.validate(2).unwrap();
+    }
+
+    #[test]
+    fn disk_store_torn_write_drives_the_real_crc_fallback() {
+        let dir = std::env::temp_dir().join(format!("scar-chaos-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let plan = FaultPlan {
+            faults: vec![ShardFault { shard: 0, at: 2, kind: FaultKind::TornWrite }],
+        };
+        let store = plan.disk_store(&dir, 1).unwrap();
+        store.put_atoms_at(1, &[(0, &[1.0, 2.0][..])]).unwrap();
+        // Torn: the record lands physically truncated in the segment log.
+        store.put_atoms_at(3, &[(0, &[9.0, 9.0][..])]).unwrap();
+        let got = store.get_atom_any(0).unwrap().unwrap();
+        assert_eq!((got.iter, got.values), (1, vec![1.0, 2.0]));
+        store.sync_all().unwrap();
+        drop(store);
+        // The manifest-tracked fallback survives a reopen of the raw
+        // (unwrapped) disk shards.
+        let store = ShardedStore::open_disk(&dir, 1).unwrap();
+        let got = store.get_atom_any(0).unwrap().unwrap();
+        assert_eq!((got.iter, got.values), (1, vec![1.0, 2.0]));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

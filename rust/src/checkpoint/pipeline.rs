@@ -37,6 +37,16 @@
 //!   store's injected-fault clock ([`crate::chaos`]); when a shard dies,
 //!   the running checkpoint is re-persisted from the in-memory cache so
 //!   recovery can always read every atom through the survivors.
+//! * **Segment compaction**
+//!   ([`with_compaction`](AsyncCheckpointer::with_compaction)): disk
+//!   shards accumulate superseded records; at every `flush` fence — the
+//!   one point where the writer pool is drained and the store state is
+//!   settled, so the garbage ratios are a deterministic function of the
+//!   run — shards past the configured garbage-ratio threshold are folded
+//!   into fresh segments. Scheduling compaction off the drained fence
+//!   (rather than inside the writer threads) is what keeps the
+//!   `compaction_*` counters identical run to run and across sync/async
+//!   modes; the pass changes the on-disk footprint, never a read result.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -92,6 +102,11 @@ pub struct AsyncCheckpointer {
     /// Last iteration the fault clock advanced to (dedupes the
     /// maybe_checkpoint → checkpoint_now double tick).
     last_tick_iter: usize,
+    /// Garbage-ratio threshold that triggers shard compaction at flush
+    /// fences (0 = never compact, the default).
+    compact_threshold: f64,
+    /// Minimum on-disk shard size before compaction is worthwhile.
+    compact_min_bytes: u64,
 }
 
 impl AsyncCheckpointer {
@@ -160,6 +175,8 @@ impl AsyncCheckpointer {
             max_pending: 0,
             stalled_barriers: 0,
             last_tick_iter: usize::MAX,
+            compact_threshold: 0.0,
+            compact_min_bytes: 0,
         })
     }
 
@@ -177,6 +194,17 @@ impl AsyncCheckpointer {
     /// [`LatencyModel::backpressure_stall_seconds`](crate::storage::LatencyModel::backpressure_stall_seconds)).
     pub fn backpressure_stalls(&self) -> u64 {
         self.stalled_barriers
+    }
+
+    /// Enable background segment compaction: at every `flush` fence, any
+    /// live shard whose garbage ratio has reached `threshold` (and whose
+    /// on-disk size is at least `min_bytes`) is folded into fresh
+    /// segments. `threshold = 0` disables (the default); memory shards
+    /// never report garbage, so this is a no-op for them either way.
+    pub fn with_compaction(mut self, threshold: f64, min_bytes: u64) -> AsyncCheckpointer {
+        self.compact_threshold = threshold;
+        self.compact_min_bytes = min_bytes;
+        self
     }
 
     pub fn mode(&self) -> CheckpointMode {
@@ -360,7 +388,10 @@ impl AsyncCheckpointer {
     /// Epoch fence: drain all in-flight writes, surface any writer error,
     /// sync every shard, and advance the commit watermark. Recovery MUST
     /// call this before reading the store (the watermark turns a missing
-    /// fence into an error instead of silent nondeterminism).
+    /// fence into an error instead of silent nondeterminism). With
+    /// compaction enabled, the drained fence is also where garbage-heavy
+    /// disk shards are folded into fresh segments — the store is settled
+    /// here, so the trigger fires at the same points in every run.
     pub fn flush(&mut self) -> Result<()> {
         if self.mode == CheckpointMode::Async {
             self.wait_pending_at_most(0)?;
@@ -370,6 +401,9 @@ impl AsyncCheckpointer {
         }
         self.store.sync_all()?;
         self.store.mark_committed_at(self.last_barrier_iter);
+        if self.compact_threshold > 0.0 {
+            self.store.compact_if_needed(self.compact_threshold, self.compact_min_bytes)?;
+        }
         Ok(())
     }
 

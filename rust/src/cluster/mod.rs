@@ -235,16 +235,22 @@ impl Cluster {
 
     /// Recovery coordinator (§4.3): re-partition the dead nodes' atoms
     /// onto survivors and reload their values from the running checkpoint
-    /// in shared storage. Returns the recovered atom ids.
+    /// in shared storage. `reference` is the controller's current view of
+    /// the full parameter state (the last scattered values) — the
+    /// recovery perturbation ‖δ‖ is the L2 distance between it and the
+    /// reloaded checkpoint values over the moved atoms, the cluster
+    /// analogue of the harness's pre/post-recovery distance (Thm 3.2's
+    /// δ). Returns the recovered atom ids and that ‖δ‖.
     pub fn recover_nodes(
         &mut self,
         dead: &[usize],
-        _layout: &AtomLayout,
+        layout: &AtomLayout,
         store: &dyn CheckpointStore,
         iter: usize,
-    ) -> Result<Vec<usize>> {
+        reference: &ParamStore,
+    ) -> Result<(Vec<usize>, f64)> {
         if dead.is_empty() {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), 0.0));
         }
         let moved = self.partition.repartition(dead);
         if moved.is_empty() && self.partition.n_atoms() > 0 {
@@ -253,11 +259,17 @@ impl Cluster {
         // Reload lost atoms from persistent storage into their new owners.
         let watermark = store.committed_iter();
         let mut per_node: HashMap<usize, Vec<(usize, Vec<f32>)>> = HashMap::new();
+        let mut delta_sq = 0.0f64;
         for &a in &moved {
             let saved = store
                 .get_atom(a)?
                 .with_context(|| format!("atom {a} missing from checkpoint store"))?;
             crate::recovery::check_watermark(a, saved.iter, watermark)?;
+            reference.read_atom(layout, a, &mut self.scratch);
+            for (new, old) in saved.values.iter().zip(self.scratch.iter()) {
+                let d = (*new - *old) as f64;
+                delta_sq += d * d;
+            }
             per_node
                 .entry(self.partition.owner[a])
                 .or_default()
@@ -271,7 +283,7 @@ impl Cluster {
             atoms: moved.len(),
             iter,
         });
-        Ok(moved)
+        Ok((moved, delta_sq.sqrt()))
     }
 
     pub fn alive_nodes(&self) -> Vec<usize> {
@@ -301,6 +313,14 @@ pub struct ClusterRunReport {
     /// Checkpoint records written through degraded routing (a storage
     /// shard was down and its batches re-homed to survivors).
     pub degraded_records: u64,
+    /// Aggregate recovery perturbation sqrt(Σ‖δᵢ‖²) over every recovery
+    /// event — the same convention as the harness path, so cluster
+    /// trials feed the Thm 3.2 bound's ‖δ‖ instead of NaN.
+    pub recovery_delta_norm: f64,
+    /// Segment-compaction passes run on the store during this job.
+    pub compaction_runs: u64,
+    /// Segment bytes those passes reclaimed.
+    pub compaction_reclaimed_bytes: u64,
 }
 
 /// How scheduled node kills are *detected*.
@@ -326,6 +346,11 @@ pub struct ClusterJob {
     pub ckpt_writers: usize,
     /// Async back-pressure bound (0 = unbounded queue).
     pub max_pending: usize,
+    /// Garbage-ratio threshold for segment compaction at flush fences
+    /// (0 = never compact; only disk shards accumulate garbage).
+    pub compact_threshold: f64,
+    /// Minimum on-disk shard size before compaction runs.
+    pub compact_min_bytes: u64,
     /// `(iteration, node)` kill schedule: same-iteration entries model a
     /// correlated rack loss, increasing iterations a cascade. Nodes are
     /// not revived.
@@ -347,6 +372,8 @@ impl ClusterJob {
             ckpt_mode: CheckpointMode::Sync,
             ckpt_writers: 1,
             max_pending: 0,
+            compact_threshold: 0.0,
+            compact_min_bytes: 0,
             kills: Vec::new(),
             seed,
             detect: Detect::Heartbeat(Duration::from_millis(20)),
@@ -419,9 +446,11 @@ pub fn run_cluster_training(
         job.ckpt_mode,
         job.ckpt_writers,
     )?
-    .with_max_pending(job.max_pending);
+    .with_max_pending(job.max_pending)
+    .with_compaction(job.compact_threshold, job.compact_min_bytes);
 
     let mut losses = Vec::with_capacity(job.iters);
+    let mut recovery_delta_sq = 0.0f64;
     for iter in 0..job.iters {
         let mut killed_now = Vec::new();
         for &(kill_iter, node) in &job.kills {
@@ -444,7 +473,12 @@ pub fn run_cluster_training(
         if !dead.is_empty() {
             // Epoch fence: recovery only reads fully-committed state.
             ck.flush()?;
-            cluster.recover_nodes(&dead, &layout, store.as_ref(), iter)?;
+            // ‖δ‖ is measured against the controller's current full view
+            // (the last scattered state still holds the dead nodes' lost
+            // values), so cluster cells report a real perturbation size.
+            let (_, delta) =
+                cluster.recover_nodes(&dead, &layout, store.as_ref(), iter, trainer.state())?;
+            recovery_delta_sq += delta * delta;
             // New records follow the atoms' new owners.
             store.set_route_partition(&cluster.partition);
         }
@@ -472,12 +506,17 @@ pub fn run_cluster_training(
     let events = cluster.events.clone();
     let bytes = store.total_bytes();
     let degraded = store.degraded_records();
+    let compaction_runs = store.compaction_runs();
+    let compaction_reclaimed_bytes = store.compaction_reclaimed_bytes();
     cluster.shutdown();
     Ok(ClusterRunReport {
         losses,
         events,
         checkpoint_bytes: bytes,
         degraded_records: degraded,
+        recovery_delta_norm: recovery_delta_sq.sqrt(),
+        compaction_runs,
+        compaction_reclaimed_bytes,
     })
 }
 
@@ -531,8 +570,11 @@ mod tests {
         std::thread::sleep(Duration::from_millis(40));
         let dead = cluster.poll_failures(1);
         assert_eq!(dead, vec![1]);
-        let moved = cluster.recover_nodes(&dead, &layout, &store, 1).unwrap();
+        let (moved, delta) = cluster.recover_nodes(&dead, &layout, &store, 1, &state).unwrap();
         assert!(!moved.is_empty());
+        // Recovery reloads exactly the values the reference holds
+        // (x(0) everywhere), so the measured perturbation is zero.
+        assert_eq!(delta, 0.0);
         assert!(cluster.partition.atoms_of[1].is_empty());
         assert!(cluster.partition.is_consistent());
         // All atoms still gatherable.

@@ -41,6 +41,11 @@ pub struct RunConfig {
     /// Async back-pressure bound: a barrier blocks once more than this
     /// many write jobs are pending (0 = unbounded).
     pub storage_max_pending: usize,
+    /// Garbage-ratio threshold for disk-shard segment compaction at
+    /// flush fences (0 = never compact).
+    pub storage_compact_threshold: f64,
+    /// Minimum on-disk shard bytes before compaction runs.
+    pub storage_compact_min_bytes: usize,
     pub selector: Selector,
     pub recovery: RecoveryMode,
     /// Inject a failure? (fraction of atoms lost; 0 disables)
@@ -82,6 +87,8 @@ impl Default for RunConfig {
             storage_shards: 1,
             storage_writers: 0,
             storage_max_pending: 0,
+            storage_compact_threshold: 0.0,
+            storage_compact_min_bytes: 0,
             selector: Selector::Priority,
             recovery: RecoveryMode::Partial,
             fail_fraction: 0.0,
@@ -141,6 +148,14 @@ impl RunConfig {
             "storage_max_pending" => {
                 self.storage_max_pending = value.parse().context("storage_max_pending")?
             }
+            "storage_compact_threshold" => {
+                self.storage_compact_threshold =
+                    value.parse().context("storage_compact_threshold")?
+            }
+            "storage_compact_min_bytes" => {
+                self.storage_compact_min_bytes =
+                    value.parse().context("storage_compact_min_bytes")?
+            }
             "selector" => {
                 self.selector = Selector::from_str(value).map_err(anyhow::Error::msg)?
             }
@@ -185,6 +200,12 @@ impl RunConfig {
         }
         if self.storage_shards == 0 {
             bail!("storage_shards must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.storage_compact_threshold) {
+            bail!(
+                "storage_compact_threshold must be in [0, 1), got {}",
+                self.storage_compact_threshold
+            );
         }
         if !(0.0..=1.0).contains(&self.fail_fraction) {
             bail!("fail_fraction must be in [0, 1]");
@@ -288,8 +309,13 @@ mod tests {
         assert_eq!(cfg.effective_writers(), 2);
         cfg.apply("storage_max_pending", "3").unwrap();
         assert_eq!(cfg.storage_max_pending, 3);
+        cfg.apply("storage_compact_threshold", "0.4").unwrap();
+        cfg.apply("storage_compact_min_bytes", "1024").unwrap();
+        assert!((cfg.storage_compact_threshold - 0.4).abs() < 1e-12);
+        assert_eq!(cfg.storage_compact_min_bytes, 1024);
         assert!(cfg.apply("storage_shards", "0").is_err());
         assert!(cfg.apply("checkpoint_mode", "never").is_err());
+        assert!(cfg.apply("storage_compact_threshold", "1.5").is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! this is what makes 100-trial sweeps tractable on the CPU PJRT backend.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -144,6 +145,16 @@ pub struct CheckpointSetup {
     pub max_pending: usize,
     /// Injected storage faults (empty = no chaos).
     pub chaos: FaultPlan,
+    /// Disk-backed trial: root directory for this trial's shards
+    /// (`None` = in-memory shards, the default). The directory is wiped
+    /// at store build time — stale records from an earlier run would
+    /// otherwise win the freshest-record read scan and change results.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Garbage-ratio threshold triggering segment compaction at flush
+    /// fences (0 = never compact; meaningless on memory shards).
+    pub compact_threshold: f64,
+    /// Minimum on-disk shard size before compaction runs.
+    pub compact_min_bytes: u64,
 }
 
 impl CheckpointSetup {
@@ -153,7 +164,7 @@ impl CheckpointSetup {
         CheckpointSetup::new(policy, CheckpointMode::Sync, 1, 1)
     }
 
-    /// A fault-free setup with the given topology.
+    /// A fault-free in-memory setup with the given topology.
     pub fn new(
         policy: CheckpointPolicy,
         mode: CheckpointMode,
@@ -167,17 +178,36 @@ impl CheckpointSetup {
             writers,
             max_pending: 0,
             chaos: FaultPlan::default(),
+            checkpoint_dir: None,
+            compact_threshold: 0.0,
+            compact_min_bytes: 0,
         }
     }
 
-    /// The trial's sharded in-memory store, chaos-wrapped when the setup
-    /// carries a fault schedule.
+    /// The trial's sharded store — in-memory by default, on-disk segment
+    /// logs under `checkpoint_dir` when set — chaos-wrapped when the
+    /// setup carries a fault schedule. Both backends behind the same
+    /// plan produce byte-identical trial results
+    /// (`rust/tests/chaos.rs`).
     pub fn build_store(&self) -> Result<ShardedStore> {
-        if self.chaos.is_empty() {
-            Ok(ShardedStore::new_mem(self.shards))
-        } else {
-            self.chaos.validate(self.shards)?;
-            Ok(self.chaos.mem_store(self.shards))
+        match &self.checkpoint_dir {
+            None => {
+                if self.chaos.is_empty() {
+                    Ok(ShardedStore::new_mem(self.shards))
+                } else {
+                    self.chaos.validate(self.shards)?;
+                    Ok(self.chaos.mem_store(self.shards))
+                }
+            }
+            Some(dir) => {
+                if dir.exists() {
+                    std::fs::remove_dir_all(dir).with_context(|| {
+                        format!("clearing trial checkpoint dir {}", dir.display())
+                    })?;
+                }
+                self.chaos.validate(self.shards)?;
+                self.chaos.disk_store(dir, self.shards)
+            }
         }
     }
 }
@@ -290,7 +320,8 @@ pub fn run_plan_trial_with(
         setup.mode,
         setup.writers,
     )?
-    .with_max_pending(setup.max_pending);
+    .with_max_pending(setup.max_pending)
+    .with_compaction(setup.compact_threshold, setup.compact_min_bytes);
     // Replay barriers along the cached trajectory up to the failure
     // (same RNG stream as replay_checkpoints).
     let mut replay_rng = Rng::new(trial_seed);

@@ -38,6 +38,7 @@ fn main() -> Result<()> {
         "run-scenario" => cmd_run_scenario(&args),
         "bound" => cmd_bound(&args),
         "advisor" => cmd_advisor(&args),
+        "compact" => cmd_compact(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -53,7 +54,7 @@ fn print_help() {
     eprintln!(
         "scar — self-correcting checkpoint-based fault tolerance for ML training
 
-USAGE: scar <info|train|cluster|run-scenario|bound|advisor> [flags]
+USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact> [flags]
 
   info                          list AOT artifacts
   train   --set k=v ...         local training loop with SCAR checkpointing
@@ -62,24 +63,33 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor> [flags]
           [--kills i:n,i:n]       schedule of node kills
   run-scenario <file.toml|json> declarative scenario sweep on a worker pool
           [--workers n] [--trials n] [--seed s] [--output f.csv] [--dry-run]
+          [--backend mem|disk] [--checkpoint-dir d]
   bound   --model <variant>     Theorem 3.2 iteration-cost bounds
   advisor --model <variant>     run a probe, estimate c on-the-fly, and
           [--fail-rate p]         recommend a checkpoint policy (§7)
+  compact --dir <checkpoint_dir> fold superseded records of every disk
+          [--shards n]            shard into fresh segments ([--threshold r]
+                                  only compacts shards at/above that
+                                  garbage ratio; default compacts any)
 
 Config keys (for --set): model seed iters target_iters ps_nodes workers
   checkpoint_interval checkpoint_k checkpoint_mode(sync|async) selector
   recovery storage_shards storage_writers storage_max_pending
+  storage_compact_threshold storage_compact_min_bytes
   fail_fraction fail_geom_p fail_plan fail_nodes fail_cascade_extra
   fail_cascade_gap fail_flaky_period fail_flaky_prob fail_flaky_max
   checkpoint_dir
 
 Scenario files additionally take [chaos] (per-shard kill/slow/torn-write
-schedules), deploy = \"harness\"|\"cluster\", and ps_nodes.
+schedules), checkpoint_dir (disk-backed trials),
+[storage] compact_threshold/compact_min_bytes, deploy =
+\"harness\"|\"cluster\", and ps_nodes.
 
 Bundled scenarios: scenarios/fig5.toml, fig6.toml, fig7.toml (paper
 figure sweeps), scenarios/failure_models.toml (correlated/cascade/flaky),
 scenarios/shard_failures.toml + shard_failures_cluster.toml (storage
-chaos)."
+chaos), scenarios/disk_chaos.toml (the same chaos family over real
+on-disk shards, with compaction)."
     );
 }
 
@@ -114,6 +124,7 @@ fn parse_config(args: &Args) -> Result<RunConfig> {
         "model", "seed", "iters", "target_iters", "ps_nodes", "workers",
         "checkpoint_interval", "checkpoint_k", "checkpoint_mode", "selector",
         "recovery", "storage_shards", "storage_writers", "storage_max_pending",
+        "storage_compact_threshold", "storage_compact_min_bytes",
         "fail_fraction", "fail_geom_p", "fail_plan", "fail_nodes",
         "fail_cascade_extra", "fail_cascade_gap", "fail_flaky_period",
         "fail_flaky_prob", "fail_flaky_max", "checkpoint_dir",
@@ -177,7 +188,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.checkpoint_mode,
         cfg.effective_writers(),
     )?
-    .with_max_pending(cfg.storage_max_pending);
+    .with_max_pending(cfg.storage_max_pending)
+    .with_compaction(cfg.storage_compact_threshold, cfg.storage_compact_min_bytes as u64);
 
     // Optional failure schedule: the configured plan expands to one or
     // more events (cascades and flaky nodes produce several).
@@ -252,6 +264,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         t0.elapsed().as_secs_f64(),
         scar::util::fmt_bytes(store.total_bytes())
     );
+    if store.compaction_runs() > 0 {
+        println!(
+            "compaction: {} pass(es), {} reclaimed; on disk now: {}",
+            store.compaction_runs(),
+            scar::util::fmt_bytes(store.compaction_reclaimed_bytes()),
+            scar::util::fmt_bytes(store.total_on_disk_bytes())
+        );
+    }
     Ok(())
 }
 
@@ -290,6 +310,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         ckpt_mode: cfg.checkpoint_mode,
         ckpt_writers: cfg.effective_writers(),
         max_pending: cfg.storage_max_pending,
+        compact_threshold: cfg.storage_compact_threshold,
+        compact_min_bytes: cfg.storage_compact_min_bytes as u64,
         kills,
         detect: scar::cluster::Detect::Heartbeat(Duration::from_millis(20)),
         ..scar::cluster::ClusterJob::new(cfg.ps_nodes, cfg.iters, cfg.policy(), cfg.seed)
@@ -304,12 +326,87 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             report.degraded_records
         );
     }
+    if report.compaction_runs > 0 {
+        println!(
+            "compaction: {} pass(es), {} reclaimed",
+            report.compaction_runs,
+            scar::util::fmt_bytes(report.compaction_reclaimed_bytes)
+        );
+    }
     println!(
-        "final loss: {:.5}; checkpoint bytes: {}",
+        "final loss: {:.5}; recovery ‖δ‖: {:.4}; checkpoint bytes: {}",
         report.losses.last().copied().unwrap_or(f64::NAN),
+        report.recovery_delta_norm,
         scar::util::fmt_bytes(report.checkpoint_bytes)
     );
     Ok(())
+}
+
+/// `scar compact`: fold superseded records of an on-disk sharded
+/// checkpoint store into fresh segments, in place.
+fn cmd_compact(args: &Args) -> Result<()> {
+    let dir = args
+        .str_opt("dir")
+        .context("usage: scar compact --dir <checkpoint_dir> [--shards n] [--threshold r]")?;
+    let dir = std::path::Path::new(dir);
+    let shards = match args.str_opt("shards") {
+        Some(s) => s.parse().context("--shards expects an integer")?,
+        None => detect_shards(dir)?,
+    };
+    let threshold = args.f64_or("threshold", 0.0);
+    let min_bytes = args.u64_or("min-bytes", 0);
+    let store = ShardedStore::open_disk(dir, shards)?;
+    let before = store.total_on_disk_bytes();
+    let ratios = store.garbage_ratios();
+    let runs = store.compact_if_needed(threshold, min_bytes)?;
+    for (s, stats) in &runs {
+        println!(
+            "shard {s}: garbage {:.1}% -> {} live record(s), {} dead dropped, {} reclaimed, \
+             {} segment file(s) removed",
+            ratios[*s] * 100.0,
+            stats.live_records,
+            stats.dead_records,
+            scar::util::fmt_bytes(stats.reclaimed_bytes),
+            stats.segments_removed
+        );
+    }
+    println!(
+        "{} of {} shard(s) compacted; on disk {} -> {}",
+        runs.len(),
+        shards,
+        scar::util::fmt_bytes(before),
+        scar::util::fmt_bytes(store.total_on_disk_bytes())
+    );
+    Ok(())
+}
+
+/// Count the `shard-NNN` subdirectories of a checkpoint dir (the layout
+/// `ShardedStore::open_disk` writes). Only real directories with an
+/// all-digit suffix count — a stray `shard-000.bak` file must not
+/// inflate the shard count and make `open_disk` invent an empty shard.
+fn detect_shards(dir: &std::path::Path) -> Result<usize> {
+    let mut n = 0;
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("reading checkpoint dir {}", dir.display()))?
+    {
+        let entry = entry?;
+        if !entry.file_type()?.is_dir() {
+            continue;
+        }
+        let name = entry.file_name();
+        let is_shard = name
+            .to_string_lossy()
+            .strip_prefix("shard-")
+            .map(|s| !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit()))
+            .unwrap_or(false);
+        if is_shard {
+            n += 1;
+        }
+    }
+    if n == 0 {
+        bail!("no shard-NNN directories under {}", dir.display());
+    }
+    Ok(n)
 }
 
 fn cmd_bound(args: &Args) -> Result<()> {

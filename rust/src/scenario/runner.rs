@@ -171,8 +171,9 @@ fn csv_field(s: &str) -> String {
 }
 
 /// Apply the standard scenario CLI overrides (`--trials`, `--seed`,
-/// `--workers`, `--output`, `--panels`) and re-validate — shared by
-/// `scar run-scenario` and the fig example wrappers.
+/// `--workers`, `--output`, `--panels`, `--checkpoint-dir`, `--backend`)
+/// and re-validate — shared by `scar run-scenario` and the fig example
+/// wrappers.
 pub fn apply_cli_overrides(scn: &mut Scenario, args: &Args) -> Result<()> {
     if let Some(t) = args.str_opt("trials") {
         scn.trials = t.parse().context("--trials expects an integer")?;
@@ -188,6 +189,23 @@ pub fn apply_cli_overrides(scn: &mut Scenario, args: &Args) -> Result<()> {
     }
     if let Some(csv) = args.str_opt("panels") {
         scn.panels = csv.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(dir) = args.str_opt("checkpoint-dir") {
+        scn.checkpoint_dir = Some(dir.to_string());
+    }
+    // `--backend mem|disk` flips the storage tier of any scenario — the
+    // CI backend matrix runs one scenario file both ways and diffs the
+    // (byte-identical) reports.
+    if let Some(backend) = args.str_opt("backend") {
+        match backend {
+            "mem" => scn.checkpoint_dir = None,
+            "disk" => {
+                if scn.checkpoint_dir.is_none() {
+                    scn.checkpoint_dir = Some(format!("results/{}-ckpt", scn.name));
+                }
+            }
+            other => bail!("--backend expects mem|disk, got '{other}'"),
+        }
     }
     scn.validate()
 }
@@ -247,9 +265,9 @@ pub fn run_scenario(
 ) -> Result<ScenarioReport> {
     scn.validate()?;
     let mut panels = Vec::with_capacity(scn.panels.len());
-    for panel in &scn.panels {
+    for (pi, panel) in scn.panels.iter().enumerate() {
         panels.push(
-            run_panel(scn, panel, engine.as_ref())
+            run_panel(scn, pi, panel, engine.as_ref())
                 .with_context(|| format!("scenario '{}', panel '{panel}'", scn.name))?,
         );
     }
@@ -369,8 +387,16 @@ fn job_seed(scn_seed: u64, cell: usize, trial: usize) -> u64 {
 }
 
 /// Expand cells × trials into jobs, drawing all per-trial randomness in
-/// the caller's (deterministic, serial) context.
-fn build_jobs(scn: &Scenario, traj: &Trajectory, n_atoms: usize, x0: f64) -> Vec<Job> {
+/// the caller's (deterministic, serial) context. `panel_idx` keys each
+/// disk-backed trial's private shard directory under the scenario's
+/// `checkpoint_dir`.
+fn build_jobs(
+    scn: &Scenario,
+    panel_idx: usize,
+    traj: &Trajectory,
+    n_atoms: usize,
+    x0: f64,
+) -> Vec<Job> {
     let default_pert_iter = scn
         .perturb_iter
         .unwrap_or_else(|| 50.min(traj.converged_iters.saturating_sub(5)).max(1));
@@ -413,6 +439,13 @@ fn build_jobs(scn: &Scenario, traj: &Trajectory, n_atoms: usize, x0: f64) -> Vec
                         writers: scn.storage.writers,
                         max_pending: scn.storage.max_pending,
                         chaos: scn.chaos.clone(),
+                        // Disk-backed sweeps: trials run in parallel, so
+                        // each gets its own shard directory.
+                        checkpoint_dir: scn.checkpoint_dir.as_ref().map(|d| {
+                            Path::new(d).join(format!("p{panel_idx}-c{ci}-t{trial}"))
+                        }),
+                        compact_threshold: scn.storage.compact_threshold,
+                        compact_min_bytes: scn.storage.compact_min_bytes as u64,
                     };
                     match scn.deploy {
                         DeployMode::Harness => {
@@ -521,6 +554,8 @@ fn run_cluster_job(
         ckpt_mode: setup.mode,
         ckpt_writers: setup.writers,
         max_pending: setup.max_pending,
+        compact_threshold: setup.compact_threshold,
+        compact_min_bytes: setup.compact_min_bytes,
         kills: kills.to_vec(),
         seed: traj.seed,
         detect: Detect::Immediate,
@@ -538,9 +573,11 @@ fn run_cluster_job(
     };
     Ok(Outcome {
         cost: total as f64 - traj.converged_iters as f64,
-        // Recovery on the cluster path reloads atoms inside the PS nodes;
-        // there is no local pre/post state pair to measure ‖δ‖ against.
-        delta: f64::NAN,
+        // ‖δ‖ is measured inside the cluster's recovery coordinator:
+        // checkpoint values vs the controller's pre-recovery view of the
+        // lost atoms — the cluster analogue of the harness's pre/post
+        // recovery distance, feeding the same report column.
+        delta: report.recovery_delta_norm,
         censored,
     })
 }
@@ -568,6 +605,7 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
 
 fn run_panel(
     scn: &Scenario,
+    panel_idx: usize,
     panel: &str,
     engine: Option<&Arc<Mutex<Engine>>>,
 ) -> Result<PanelReport> {
@@ -576,7 +614,7 @@ fn run_panel(
     let traj = harness::run_trajectory(trainer.as_mut(), scn.seed, max, target)?;
     let (c, x0) = panel_theory(&traj);
     let n_atoms = trainer.layout().n_atoms();
-    let jobs = build_jobs(scn, &traj, n_atoms, x0);
+    let jobs = build_jobs(scn, panel_idx, &traj, n_atoms, x0);
 
     let workers = if scn.workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)

@@ -68,19 +68,30 @@ impl CheckpointSpec {
 
 /// Storage topology for the running checkpoint: how many shards the
 /// sharded store stripes atoms over, how many background writer threads
-/// serve them in async mode (clamped to `[1, shards]` at runtime), and
-/// the async back-pressure bound (`max_pending` pending write jobs; 0 =
-/// unbounded).
+/// serve them in async mode (clamped to `[1, shards]` at runtime), the
+/// async back-pressure bound (`max_pending` pending write jobs; 0 =
+/// unbounded), and the disk-tier compaction trigger (`compact_threshold`
+/// garbage ratio at flush fences, 0 = never; `compact_min_bytes` floors
+/// the shard size worth compacting). Compaction keys only matter when the
+/// scenario sets `checkpoint_dir` — memory shards never report garbage.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StorageSpec {
     pub shards: usize,
     pub writers: usize,
     pub max_pending: usize,
+    pub compact_threshold: f64,
+    pub compact_min_bytes: usize,
 }
 
 impl Default for StorageSpec {
     fn default() -> Self {
-        StorageSpec { shards: 1, writers: 1, max_pending: 0 }
+        StorageSpec {
+            shards: 1,
+            writers: 1,
+            max_pending: 0,
+            compact_threshold: 0.0,
+            compact_min_bytes: 0,
+        }
     }
 }
 
@@ -91,6 +102,12 @@ impl StorageSpec {
         }
         if self.writers == 0 {
             bail!("{ctx}: storage writers must be >= 1");
+        }
+        if !(0.0..1.0).contains(&self.compact_threshold) {
+            bail!(
+                "{ctx}: storage compact_threshold must be in [0, 1), got {}",
+                self.compact_threshold
+            );
         }
         Ok(())
     }
@@ -188,6 +205,11 @@ pub struct Scenario {
     pub fail_geom_p: f64,
     pub checkpoint: CheckpointSpec,
     pub storage: StorageSpec,
+    /// Root directory for disk-backed trials: every trial gets its own
+    /// on-disk sharded store under it (`None` = in-memory shards). A
+    /// disk-backed sweep produces reports byte-identical to the same
+    /// sweep on memory shards.
+    pub checkpoint_dir: Option<String>,
     /// Injected storage faults, applied to every trial's store
     /// (`[chaos]` — per-shard kill/slow/torn-write schedules).
     pub chaos: FaultPlan,
@@ -242,7 +264,8 @@ impl Scenario {
         const TOP_KEYS: &[&str] = &[
             "name", "model", "panels", "seed", "trials", "workers", "target_iters",
             "max_iters", "perturb_iter", "fail_geom_p", "checkpoint", "storage",
-            "chaos", "deploy", "ps_nodes", "recovery", "output", "cell", "cells",
+            "checkpoint_dir", "chaos", "deploy", "ps_nodes", "recovery", "output",
+            "cell", "cells",
         ];
         for key in obj.keys() {
             if !TOP_KEYS.contains(&key.as_str()) {
@@ -325,6 +348,7 @@ impl Scenario {
             fail_geom_p: opt_f64(obj, "fail_geom_p", &ctx)?.unwrap_or(0.05),
             checkpoint,
             storage,
+            checkpoint_dir: opt_str(obj, "checkpoint_dir", &ctx)?,
             chaos,
             deploy,
             ps_nodes: opt_usize(obj, "ps_nodes", &ctx)?.unwrap_or(4),
@@ -430,6 +454,9 @@ impl Scenario {
         obj.insert("fail_geom_p".into(), Json::Num(self.fail_geom_p));
         obj.insert("checkpoint".into(), checkpoint_json(&self.checkpoint));
         obj.insert("storage".into(), storage_json(&self.storage));
+        if let Some(d) = &self.checkpoint_dir {
+            obj.insert("checkpoint_dir".into(), Json::from(d.as_str()));
+        }
         if !self.chaos.is_empty() {
             obj.insert("chaos".into(), self.chaos.to_json());
         }
@@ -467,15 +494,25 @@ impl Scenario {
             self.fail_geom_p
         ));
         out.push_str(&format!(
-            "  storage: {} shard(s), {} writer(s), max_pending {}; deploy: {}\n",
+            "  storage: {} shard(s), {} writer(s), max_pending {}, backend {}; deploy: {}\n",
             self.storage.shards,
             self.storage.writers,
             self.storage.max_pending,
+            match &self.checkpoint_dir {
+                None => "mem".to_string(),
+                Some(d) => format!("disk ({d})"),
+            },
             match self.deploy {
                 DeployMode::Harness => "harness".to_string(),
                 DeployMode::Cluster => format!("cluster ({} PS nodes)", self.ps_nodes),
             }
         ));
+        if self.storage.compact_threshold > 0.0 {
+            out.push_str(&format!(
+                "  compaction: garbage ratio >= {:.2} at flush fences (min {} bytes)\n",
+                self.storage.compact_threshold, self.storage.compact_min_bytes
+            ));
+        }
         if !self.chaos.is_empty() {
             out.push_str(&format!("  chaos: {} storage fault(s)\n", self.chaos.faults.len()));
             for f in &self.chaos.faults {
@@ -514,6 +551,8 @@ fn storage_json(s: &StorageSpec) -> Json {
     m.insert("shards".into(), Json::from(s.shards));
     m.insert("writers".into(), Json::from(s.writers));
     m.insert("max_pending".into(), Json::from(s.max_pending));
+    m.insert("compact_threshold".into(), Json::Num(s.compact_threshold));
+    m.insert("compact_min_bytes".into(), Json::from(s.compact_min_bytes));
     Json::Obj(m)
 }
 
@@ -662,9 +701,11 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
     let obj = v
         .as_obj()
         .with_context(|| format!("{ctx}: 'storage' must be a table"))?;
+    const STORAGE_KEYS: &[&str] =
+        &["shards", "writers", "max_pending", "compact_threshold", "compact_min_bytes"];
     for key in obj.keys() {
-        if !["shards", "writers", "max_pending"].contains(&key.as_str()) {
-            bail!("{ctx}: storage: unknown key '{key}' (shards|writers|max_pending)");
+        if !STORAGE_KEYS.contains(&key.as_str()) {
+            bail!("{ctx}: storage: unknown key '{key}' (expected one of {STORAGE_KEYS:?})");
         }
     }
     let base = StorageSpec::default();
@@ -674,6 +715,10 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
         // Default the pool to one writer per shard.
         writers: opt_usize(obj, "writers", ctx)?.unwrap_or(shards),
         max_pending: opt_usize(obj, "max_pending", ctx)?.unwrap_or(base.max_pending),
+        compact_threshold: opt_f64(obj, "compact_threshold", ctx)?
+            .unwrap_or(base.compact_threshold),
+        compact_min_bytes: opt_usize(obj, "compact_min_bytes", ctx)?
+            .unwrap_or(base.compact_min_bytes),
     })
 }
 
@@ -1066,6 +1111,40 @@ norm_log10 = [-2.0, 0.0]
         )
         .unwrap_err();
         assert!(format!("{e:?}").contains("background"), "{e:?}");
+    }
+
+    #[test]
+    fn checkpoint_dir_and_compaction_keys_parse_and_roundtrip() {
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\ncheckpoint_dir=\"results/s-ckpt\"\n\
+             [storage]\nshards=2\ncompact_threshold=0.4\ncompact_min_bytes=4096\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.checkpoint_dir.as_deref(), Some("results/s-ckpt"));
+        assert!((s.storage.compact_threshold - 0.4).abs() < 1e-12);
+        assert_eq!(s.storage.compact_min_bytes, 4096);
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+        // The dry-run description names the backend and the trigger.
+        let desc = s.describe();
+        assert!(desc.contains("disk (results/s-ckpt)"), "{desc}");
+        assert!(desc.contains("compaction"), "{desc}");
+
+        // Threshold outside [0, 1) is rejected with a named key.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\ncompact_threshold=1.5\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("compact_threshold"), "{e:?}");
+        // Unknown storage keys still fail loudly.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\ncompactify=1\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("compactify"), "{e:?}");
     }
 
     #[test]

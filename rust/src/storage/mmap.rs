@@ -1,0 +1,143 @@
+//! Read-only segment maps: the zero-copy read path for sealed
+//! [`DiskStore`](super::DiskStore) segments.
+//!
+//! A sealed segment (one the store no longer appends to) is mapped once
+//! and every record read is served straight out of the mapping — no
+//! `seek`/`read` syscalls, no intermediate record buffer; the only copy
+//! left is the little-endian `f32` decode into the caller's `SavedAtom`.
+//!
+//! The mapping uses raw `mmap`/`munmap` declarations: on unix targets std
+//! already links the platform C library, so no external crate is needed
+//! and the vendored build stays offline. The `mmap` cargo feature
+//! (default-on) gates the whole path; with the feature off — or on a
+//! non-unix or 32-bit target (where the declared `off_t` width would not
+//! match the C ABI) — [`SegmentMap::map`] returns `None` and `DiskStore`
+//! falls back to its plain pread-style file reads, byte-for-byte
+//! equivalent, just slower.
+
+// 64-bit unix only: the raw declaration below types `offset` as i64,
+// which matches off_t on LP64 targets; 32-bit targets (off_t = 32-bit
+// long without large-file support) would have a mismatched ABI, so they
+// take the pread fallback instead.
+#[cfg(all(unix, target_pointer_width = "64", feature = "mmap"))]
+mod imp {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    // Shared across Linux and the BSD family (incl. macOS).
+    const PROT_READ: i32 = 0x1;
+    const MAP_SHARED: i32 = 0x1;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    /// One read-only mapping of a whole segment file.
+    pub struct SegmentMap {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    // The mapping is plain read-only memory owned by this struct; moving
+    // it between threads is safe (DiskStore itself is only `Send`, and
+    // every access goes through `&self` under the shard lock).
+    unsafe impl Send for SegmentMap {}
+
+    impl SegmentMap {
+        /// Map `file` read-only at its current length. Returns `None`
+        /// when mapping is impossible (empty file, exotic filesystem) so
+        /// the caller can fall back to file reads.
+        pub fn map(file: &File) -> Option<SegmentMap> {
+            let len = file.metadata().ok()?.len() as usize;
+            if len == 0 {
+                return None;
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                return None;
+            }
+            Some(SegmentMap { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for SegmentMap {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64", feature = "mmap")))]
+mod imp {
+    /// Fallback stub: no mapping is ever produced, so `DiskStore` serves
+    /// every read through the pread-style file path.
+    pub struct SegmentMap(());
+
+    #[allow(dead_code)]
+    impl SegmentMap {
+        pub fn map(_file: &std::fs::File) -> Option<SegmentMap> {
+            None
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            &[]
+        }
+    }
+}
+
+pub(crate) use imp::SegmentMap;
+
+#[cfg(test)]
+mod tests {
+    use super::SegmentMap;
+    use std::io::Write;
+
+    #[test]
+    fn maps_reflect_file_contents() {
+        let dir = std::env::temp_dir().join(format!("scar-mmap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg.bin");
+        {
+            let mut f = std::fs::File::create(&path).unwrap();
+            f.write_all(b"hello segment").unwrap();
+        }
+        let f = std::fs::File::open(&path).unwrap();
+        match SegmentMap::map(&f) {
+            Some(m) => assert_eq!(m.bytes(), b"hello segment"),
+            // Non-unix, 32-bit, or feature-off builds return None.
+            None => {
+                assert!(cfg!(not(all(unix, target_pointer_width = "64", feature = "mmap"))))
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_file_is_not_mapped() {
+        let dir = std::env::temp_dir().join(format!("scar-mmap-empty-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg.bin");
+        std::fs::File::create(&path).unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        assert!(SegmentMap::map(&f).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -12,7 +12,10 @@
 //!     records are CRC-checked; the manifest maps each atom to its latest
 //!     record (and the one before it, for crash fallback), which
 //!     implements the paper's *running checkpoint* (a mix of atoms saved
-//!     at different iterations, §4.2).
+//!     at different iterations, §4.2). Sealed segments are mmap'd once
+//!     and served zero-copy (the `mmap` module, feature-gated with a
+//!     pread fallback); superseded records are reclaimed by
+//!     [`DiskStore::compact`] (fresh segments + atomic manifest swap).
 //! * [`CheckpointStore`] — what the checkpoint coordinator, recovery
 //!   coordinator, and cluster consume: the backend surface plus the
 //!   *commit watermark* bookkeeping that the async write pipeline needs
@@ -26,8 +29,10 @@
 //! every C), and expose a latency model for the Fig 9 wall-clock
 //! simulation without actually sleeping.
 
+mod mmap;
 pub mod shard;
 
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::fs;
 use std::io::{Read, Write};
@@ -35,6 +40,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use self::mmap::SegmentMap;
 use crate::util::json::Json;
 
 pub use shard::ShardedStore;
@@ -78,6 +84,35 @@ pub trait ShardBackend: Send {
     /// re-route writes and skip reads in degraded mode.
     fn is_down(&self) -> bool {
         false
+    }
+
+    /// Tear a put mid-batch (the chaos torn-write injection): records
+    /// `atoms[..keep]` land whole, the first tail record is the
+    /// in-flight record a crash cut short. The default — memory
+    /// semantics — simply never writes the tail; [`DiskStore`] overrides
+    /// it to append a *physically truncated* record, so reads exercise
+    /// the real truncation/CRC fallback end to end.
+    fn put_torn(&mut self, iter: usize, atoms: &[(usize, &[f32])], keep: usize) -> Result<()> {
+        self.put_atoms(iter, &atoms[..keep])
+    }
+
+    /// Fraction of the backend's on-disk bytes a compaction pass would
+    /// reclaim (superseded records, fallback redundancy, torn garbage).
+    /// Backends with no log to compact report 0.
+    fn garbage_ratio(&self) -> f64 {
+        0.0
+    }
+
+    /// Bytes the backend currently occupies on disk. Unlike the
+    /// cumulative `bytes_written` accounting, compaction shrinks this.
+    fn on_disk_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Fold superseded records into fresh segments, if the backend has a
+    /// segment log to compact; `None` when there is nothing to do.
+    fn compact(&mut self) -> Result<Option<CompactionStats>> {
+        Ok(None)
     }
 }
 
@@ -205,11 +240,47 @@ impl ShardBackend for MemStore {
 ///   crc32  u32                  (over atom..data bytes)
 const RECORD_MAGIC: u32 = 0x5343_4152;
 
+/// Fixed record header size (magic + atom + iter + len).
+const RECORD_HEADER: usize = 28;
+
 #[derive(Debug, Clone, Copy)]
 struct RecordLoc {
     segment: u64,
     offset: u64,
     iter: usize,
+    /// Total on-disk record bytes (header + payload + CRC) — the unit of
+    /// the live/garbage accounting that drives compaction.
+    len: u64,
+    /// Known-unreadable record (a chaos torn write left it physically
+    /// truncated). A torn record may sit in `latest` — reads fall back
+    /// from it — but must never be carried into a `prev` slot: the
+    /// fallback chain only ever holds readable records.
+    torn: bool,
+}
+
+/// Outcome of one segment-log compaction pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CompactionStats {
+    /// Live records carried into the fresh segments.
+    pub live_records: u64,
+    /// Superseded (tombstoned) records dropped since the last pass.
+    pub dead_records: u64,
+    /// Segment-file bytes reclaimed by the pass.
+    pub reclaimed_bytes: u64,
+    /// Old segment files deleted.
+    pub segments_removed: usize,
+}
+
+/// Everything phase one of a compaction produced, before the manifest
+/// swap makes it visible. Dropping a plan without committing it models a
+/// mid-compaction crash: the old manifest still governs every read, and
+/// the orphaned fresh segments are removed on the next
+/// [`DiskStore::open`] (`rust/tests/proptests.rs` pins that recovery
+/// after such a crash returns the pre-compaction parameters).
+pub struct CompactionPlan {
+    entries: Vec<(usize, RecordLoc)>,
+    new_segments: Vec<u64>,
+    new_bytes: u64,
 }
 
 /// Per-atom index entry: the latest record plus the one before it. The
@@ -231,11 +302,33 @@ pub struct DiskStore {
     segment_limit: u64,
     bytes: u64,
     records: u64,
+    /// Lazily-built read-only maps of sealed segments (the `mmap` read
+    /// path). Interior mutability because reads take `&self`; the store
+    /// is only ever used behind a shard lock.
+    maps: RefCell<HashMap<u64, SegmentMap>>,
+    /// Reads served from a mapped segment (observability/tests).
+    mapped_reads: Cell<u64>,
+    /// Total record bytes appended to segment files, including
+    /// superseded records and torn garbage — the garbage-ratio
+    /// denominator. Compaction resets it to the live size.
+    disk_bytes: u64,
+    /// On-disk bytes of each atom's latest record — the live numerator.
+    live_bytes: u64,
+    /// Records tombstoned (superseded) since open or last compaction.
+    dead_records: u64,
+    /// Compaction passes run by this handle.
+    compactions: u64,
+    /// Cumulative bytes reclaimed by this handle's compactions.
+    reclaimed_bytes: u64,
 }
 
 impl DiskStore {
     /// Open (or create) a store rooted at `dir`. Replays the manifest if
     /// one exists, so a coordinator restart sees the running checkpoint.
+    /// Segment files the manifest does not know about (a crash after a
+    /// segment roll-over, or mid-compaction before the manifest swap)
+    /// are removed: their records were never durable by the manifest's
+    /// account, and leaving them would collide with future appends.
     pub fn open(dir: &Path) -> Result<DiskStore> {
         fs::create_dir_all(dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
@@ -248,16 +341,70 @@ impl DiskStore {
             segment_limit: 64 << 20, // 64 MiB segments
             bytes: 0,
             records: 0,
+            maps: RefCell::new(HashMap::new()),
+            mapped_reads: Cell::new(0),
+            disk_bytes: 0,
+            live_bytes: 0,
+            dead_records: 0,
+            compactions: 0,
+            reclaimed_bytes: 0,
         };
         let manifest = dir.join("manifest.json");
         if manifest.exists() {
             store.load_manifest(&manifest)?;
+        }
+        for seg in store.segment_numbers()? {
+            if seg > store.current_segment {
+                let _ = fs::remove_file(store.segment_path(seg));
+            } else if let Ok(meta) = fs::metadata(store.segment_path(seg)) {
+                store.disk_bytes += meta.len();
+            }
+        }
+        // Manifests written before record sizes were tracked load every
+        // entry with rlen = 0 (a real record is never smaller than its
+        // header). Unknown live size must read as "fully live", not
+        // "fully garbage" — otherwise the first flush fence would rewrite
+        // a legacy store's entire log for nothing. The first genuine
+        // compaction rebuilds exact accounting.
+        if store.index.values().any(|e| e.latest.len == 0) {
+            store.live_bytes = store.disk_bytes;
         }
         Ok(store)
     }
 
     fn segment_path(&self, seg: u64) -> PathBuf {
         self.dir.join(format!("seg-{seg:06}.bin"))
+    }
+
+    /// Existing segment numbers under the store directory, ascending.
+    fn segment_numbers(&self) -> Result<Vec<u64>> {
+        let mut segs = Vec::new();
+        for entry in fs::read_dir(&self.dir)
+            .with_context(|| format!("listing checkpoint dir {}", self.dir.display()))?
+        {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name.strip_prefix("seg-").and_then(|s| s.strip_suffix(".bin")) {
+                if let Ok(n) = num.parse::<u64>() {
+                    segs.push(n);
+                }
+            }
+        }
+        segs.sort_unstable();
+        Ok(segs)
+    }
+
+    /// Cap segment files at `bytes` before rolling to a fresh one
+    /// (default 64 MiB). Small limits let tests exercise sealed-segment
+    /// (mmap) reads and multi-segment compaction with tiny data.
+    pub fn set_segment_limit(&mut self, bytes: u64) {
+        self.segment_limit = bytes.max(1);
+    }
+
+    /// Reads served from an mmap'd sealed segment so far (0 when the
+    /// `mmap` feature is off or the platform has no mmap).
+    pub fn mapped_reads(&self) -> u64 {
+        self.mapped_reads.get()
     }
 
     fn load_manifest(&mut self, path: &Path) -> Result<()> {
@@ -273,15 +420,20 @@ impl DiskStore {
                     segment: e.get("seg").as_usize().unwrap_or(0) as u64,
                     offset: e.get("off").as_usize().unwrap_or(0) as u64,
                     iter: e.get("iter").as_usize().unwrap_or(0),
+                    len: e.get("rlen").as_usize().unwrap_or(0) as u64,
+                    torn: e.get("torn").as_usize().unwrap_or(0) != 0,
                 };
                 let prev = match e.get("pseg").as_usize() {
                     Some(pseg) => Some(RecordLoc {
                         segment: pseg as u64,
                         offset: e.get("poff").as_usize().unwrap_or(0) as u64,
                         iter: e.get("piter").as_usize().unwrap_or(0),
+                        len: e.get("prlen").as_usize().unwrap_or(0) as u64,
+                        torn: false, // prev slots only ever hold readable records
                     }),
                     None => None,
                 };
+                self.live_bytes += latest.len;
                 self.index.insert(atom, AtomIndex { latest, prev });
             }
         }
@@ -299,11 +451,16 @@ impl DiskStore {
                 ("seg", Json::from(loc.segment as usize)),
                 ("off", Json::from(loc.offset as usize)),
                 ("iter", Json::from(loc.iter)),
+                ("rlen", Json::from(loc.len as usize)),
             ];
+            if loc.torn {
+                fields.push(("torn", Json::from(1usize)));
+            }
             if let Some(p) = &idx.prev {
                 fields.push(("pseg", Json::from(p.segment as usize)));
                 fields.push(("poff", Json::from(p.offset as usize)));
                 fields.push(("piter", Json::from(p.iter)));
+                fields.push(("prlen", Json::from(p.len as usize)));
             }
             atoms.push(crate::util::json::obj(fields));
         }
@@ -340,34 +497,62 @@ impl DiskStore {
     /// Read and validate one record. Any structural failure — short read
     /// (truncated final record after a crash), bad magic, atom mismatch,
     /// implausible length, CRC mismatch — is an error the caller may fall
-    /// back from.
+    /// back from. Records in sealed segments (everything before the
+    /// active one) are served from an mmap when available; the active
+    /// segment, and platforms without mmap, use pread-style file reads.
     fn read_record(&self, atom: usize, loc: &RecordLoc) -> Result<SavedAtom> {
+        if loc.segment < self.current_segment {
+            if let Some(saved) = self.read_record_mapped(atom, loc)? {
+                return Ok(saved);
+            }
+        }
+        self.read_record_file(atom, loc)
+    }
+
+    /// Zero-copy read path: serve the record straight out of the sealed
+    /// segment's mapping. `Ok(None)` means "no mapping available, use the
+    /// file path"; `Err` is a structural record failure (fallback to the
+    /// previous record applies exactly as on the file path).
+    fn read_record_mapped(&self, atom: usize, loc: &RecordLoc) -> Result<Option<SavedAtom>> {
+        use std::collections::hash_map::Entry;
+        let mut maps = self.maps.borrow_mut();
+        let map = match maps.entry(loc.segment) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(slot) => {
+                let Ok(file) = fs::File::open(self.segment_path(loc.segment)) else {
+                    return Ok(None);
+                };
+                match SegmentMap::map(&file) {
+                    Some(m) => slot.insert(m),
+                    None => return Ok(None),
+                }
+            }
+        };
+        let saved = decode_record(atom, map.bytes(), loc.offset as usize)?;
+        self.mapped_reads.set(self.mapped_reads.get() + 1);
+        Ok(Some(saved))
+    }
+
+    /// Plain file read path (the active segment, and the feature-gated
+    /// fallback when mmap is unavailable).
+    fn read_record_file(&self, atom: usize, loc: &RecordLoc) -> Result<SavedAtom> {
         let mut file = fs::File::open(self.segment_path(loc.segment))?;
         let file_len = file.metadata()?.len();
         use std::io::Seek;
         file.seek(std::io::SeekFrom::Start(loc.offset))?;
-        let mut head = [0u8; 28];
+        let mut head = [0u8; RECORD_HEADER];
         file.read_exact(&mut head)
             .with_context(|| format!("record for atom {atom} truncated (header)"))?;
-        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
-        if magic != RECORD_MAGIC {
-            bail!("corrupt record for atom {atom}: bad magic");
-        }
-        let rec_atom = u64::from_le_bytes(head[4..12].try_into().unwrap()) as usize;
-        let rec_iter = u64::from_le_bytes(head[12..20].try_into().unwrap()) as usize;
-        let len = u64::from_le_bytes(head[20..28].try_into().unwrap()) as usize;
-        if rec_atom != atom {
-            bail!("corrupt index: record holds atom {rec_atom}, wanted {atom}");
-        }
+        let len = u64::from_le_bytes(head[20..28].try_into().unwrap());
         // Validate the length against the segment before allocating: a
         // corrupted len field must stay a recoverable record error (the
         // prev-record fallback), never a multi-GiB allocation.
-        let payload = (len as u64)
+        let tail = len
             .checked_mul(4)
             .and_then(|v| v.checked_add(4))
             .filter(|&v| {
                 loc.offset
-                    .checked_add(28)
+                    .checked_add(RECORD_HEADER as u64)
                     .and_then(|o| o.checked_add(v))
                     .map(|end| end <= file_len)
                     .unwrap_or(false)
@@ -375,49 +560,153 @@ impl DiskStore {
             .with_context(|| {
                 format!("corrupt record for atom {atom}: implausible length {len}")
             })?;
-        let mut data = vec![0u8; payload as usize];
-        file.read_exact(&mut data)
+        let mut rec = head.to_vec();
+        rec.resize(RECORD_HEADER + tail as usize, 0);
+        file.read_exact(&mut rec[RECORD_HEADER..])
             .with_context(|| format!("record for atom {atom} truncated (payload)"))?;
-        let crc_stored = u32::from_le_bytes(data[len * 4..].try_into().unwrap());
-        let mut crc_input = Vec::with_capacity(24 + len * 4);
-        crc_input.extend_from_slice(&head[4..]);
-        crc_input.extend_from_slice(&data[..len * 4]);
-        let crc = crc32fast::hash(&crc_input);
-        if crc != crc_stored {
-            bail!("corrupt record for atom {atom}: crc mismatch");
-        }
-        let values = data[..len * 4]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        Ok(SavedAtom { iter: rec_iter, values })
+        decode_record(atom, &rec, 0)
     }
+}
+
+/// Serialize one record in the on-disk layout (header + payload + CRC) —
+/// shared by the append path and the compactor.
+fn encode_record(atom: usize, iter: usize, vals: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(RECORD_HEADER + vals.len() * 4 + 4);
+    buf.extend_from_slice(&RECORD_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&(atom as u64).to_le_bytes());
+    buf.extend_from_slice(&(iter as u64).to_le_bytes());
+    buf.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    let crc = crc32fast::hash(&buf[4..]);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Decode and validate the record at `offset` within `seg` (a whole
+/// mapped segment, or a single record read from the file). Every
+/// structural failure — truncation, bad magic, atom mismatch, implausible
+/// length, CRC mismatch — is an error the caller may fall back from.
+fn decode_record(atom: usize, seg: &[u8], offset: usize) -> Result<SavedAtom> {
+    let head_end = offset
+        .checked_add(RECORD_HEADER)
+        .filter(|&e| e <= seg.len())
+        .with_context(|| format!("record for atom {atom} truncated (header)"))?;
+    let head = &seg[offset..head_end];
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != RECORD_MAGIC {
+        bail!("corrupt record for atom {atom}: bad magic");
+    }
+    let rec_atom = u64::from_le_bytes(head[4..12].try_into().unwrap()) as usize;
+    let rec_iter = u64::from_le_bytes(head[12..20].try_into().unwrap()) as usize;
+    let len = u64::from_le_bytes(head[20..28].try_into().unwrap()) as usize;
+    if rec_atom != atom {
+        bail!("corrupt index: record holds atom {rec_atom}, wanted {atom}");
+    }
+    // Bound the claimed length against the available bytes before
+    // touching the payload (a corrupted len field must stay a recoverable
+    // record error, never an out-of-bounds access or huge allocation).
+    let payload_end = len
+        .checked_mul(4)
+        .and_then(|p| head_end.checked_add(p))
+        .filter(|&e| e.checked_add(4).map(|e4| e4 <= seg.len()).unwrap_or(false))
+        .with_context(|| format!("corrupt record for atom {atom}: implausible length {len}"))?;
+    let payload = &seg[head_end..payload_end];
+    let crc_stored = u32::from_le_bytes(seg[payload_end..payload_end + 4].try_into().unwrap());
+    let mut hasher = crc32fast::Hasher::new();
+    hasher.update(&head[4..]);
+    hasher.update(payload);
+    if hasher.finalize() != crc_stored {
+        bail!("corrupt record for atom {atom}: crc mismatch");
+    }
+    let values = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(SavedAtom { iter: rec_iter, values })
 }
 
 impl ShardBackend for DiskStore {
     fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
         for (id, vals) in atoms {
             self.ensure_segment()?;
-            let mut buf = Vec::with_capacity(28 + vals.len() * 4);
-            buf.extend_from_slice(&RECORD_MAGIC.to_le_bytes());
-            buf.extend_from_slice(&(*id as u64).to_le_bytes());
-            buf.extend_from_slice(&(iter as u64).to_le_bytes());
-            buf.extend_from_slice(&(vals.len() as u64).to_le_bytes());
-            for v in *vals {
-                buf.extend_from_slice(&v.to_le_bytes());
-            }
-            let crc = crc32fast::hash(&buf[4..]);
-            buf.extend_from_slice(&crc.to_le_bytes());
-
+            let buf = encode_record(*id, iter, vals);
             let offset = self.current_len;
             let file = self.current_file.as_mut().unwrap();
             file.write_all(&buf)?;
             self.current_len += buf.len() as u64;
-            let loc = RecordLoc { segment: self.current_segment, offset, iter };
-            let prev = self.index.get(id).map(|e| e.latest);
+            let rec_len = buf.len() as u64;
+            let loc = RecordLoc {
+                segment: self.current_segment,
+                offset,
+                iter,
+                len: rec_len,
+                torn: false,
+            };
+            // The fallback slot must stay readable: superseding a torn
+            // latest carries the previous *good* record forward instead
+            // of the known-unreadable torn bytes.
+            let prev = self.index.get(id).and_then(|e| {
+                if e.latest.torn {
+                    e.prev
+                } else {
+                    Some(e.latest)
+                }
+            });
+            if let Some(old) = self.index.get(id) {
+                // The superseded record is a tombstone from here on.
+                self.live_bytes = self.live_bytes.saturating_sub(old.latest.len);
+                self.dead_records += 1;
+            }
             self.index.insert(*id, AtomIndex { latest: loc, prev });
+            self.disk_bytes += rec_len;
+            self.live_bytes += rec_len;
             self.bytes += (vals.len() * 4) as u64;
             self.records += 1;
+        }
+        Ok(())
+    }
+
+    /// Disk torn write: the kept prefix lands whole, then the first tail
+    /// record is appended *physically truncated* (header + half the
+    /// payload, no CRC) — exactly the bytes a crash mid-append leaves.
+    /// The index keeps the previous good record as the fallback, so the
+    /// next read of the torn atom drives the real truncation/CRC fallback
+    /// (and the manifest-tracked fallback after a reopen).
+    fn put_torn(&mut self, iter: usize, atoms: &[(usize, &[f32])], keep: usize) -> Result<()> {
+        ShardBackend::put_atoms(self, iter, &atoms[..keep])?;
+        let Some(&(atom, vals)) = atoms.get(keep) else {
+            return Ok(());
+        };
+        let buf = encode_record(atom, iter, vals);
+        let torn_len = RECORD_HEADER + (vals.len() * 4) / 2;
+        self.ensure_segment()?;
+        let offset = self.current_len;
+        let file = self.current_file.as_mut().unwrap();
+        file.write_all(&buf[..torn_len])?;
+        self.current_len += torn_len as u64;
+        self.disk_bytes += torn_len as u64;
+        // Only an atom with a durable prior record gets its index entry
+        // retargeted at the torn bytes (prev = that record): the crash
+        // analogue of an acknowledged-then-torn append. An atom with no
+        // prior record keeps "no record" semantics, like the memory
+        // backend's dropped tail.
+        if let Some(entry) = self.index.get(&atom).copied() {
+            let loc = RecordLoc {
+                segment: self.current_segment,
+                offset,
+                iter,
+                len: torn_len as u64,
+                torn: true,
+            };
+            self.live_bytes =
+                self.live_bytes.saturating_sub(entry.latest.len) + torn_len as u64;
+            self.dead_records += 1;
+            // Back-to-back tears: the fallback stays the last *readable*
+            // record, never an earlier torn one.
+            let prev = if entry.latest.torn { entry.prev } else { Some(entry.latest) };
+            self.index.insert(atom, AtomIndex { latest: loc, prev });
         }
         Ok(())
     }
@@ -456,6 +745,152 @@ impl ShardBackend for DiskStore {
 
     fn sync(&mut self) -> Result<()> {
         self.write_manifest()
+    }
+
+    fn garbage_ratio(&self) -> f64 {
+        DiskStore::garbage_ratio(self)
+    }
+
+    fn on_disk_bytes(&self) -> u64 {
+        self.disk_bytes
+    }
+
+    fn compact(&mut self) -> Result<Option<CompactionStats>> {
+        Ok(Some(DiskStore::compact(self)?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Segment-log compaction
+// ---------------------------------------------------------------------------
+
+impl DiskStore {
+    /// Fraction of on-disk segment bytes not referenced as any atom's
+    /// latest record: superseded records, prev-fallback redundancy, and
+    /// torn garbage. This is what a compaction pass reclaims, and what
+    /// the `storage.compact_threshold` trigger compares against.
+    pub fn garbage_ratio(&self) -> f64 {
+        if self.disk_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - (self.live_bytes.min(self.disk_bytes) as f64 / self.disk_bytes as f64)
+    }
+
+    /// Bytes the segment files currently occupy (shrinks on compaction,
+    /// unlike the cumulative `bytes_written` accounting).
+    pub fn on_disk_bytes(&self) -> u64 {
+        self.disk_bytes
+    }
+
+    /// `(compaction passes, bytes reclaimed)` by this handle so far.
+    pub fn compaction_counters(&self) -> (u64, u64) {
+        (self.compactions, self.reclaimed_bytes)
+    }
+
+    /// Phase one of a compaction: fold every atom's latest readable
+    /// record into fresh segments, numbered after the active one.
+    /// Nothing becomes visible — the index, the manifest, and the old
+    /// segments are untouched, so dropping the plan instead of committing
+    /// it is exactly a mid-compaction crash (and loses nothing: the next
+    /// [`DiskStore::open`] removes the orphaned fresh segments).
+    pub fn prepare_compaction(&mut self) -> Result<CompactionPlan> {
+        let mut atoms: Vec<usize> = self.index.keys().copied().collect();
+        atoms.sort_unstable(); // deterministic segment layout
+        let mut seg = self.current_segment + 1;
+        let mut entries = Vec::with_capacity(atoms.len());
+        let mut new_segments: Vec<u64> = Vec::new();
+        let mut file: Option<fs::File> = None;
+        let mut offset = 0u64;
+        let mut new_bytes = 0u64;
+        for atom in atoms {
+            // get_atom applies the torn/corrupt fallback, so compaction
+            // always carries the *readable* copy forward.
+            let saved = ShardBackend::get_atom(self, atom)?
+                .with_context(|| format!("compacting atom {atom}"))?;
+            let buf = encode_record(atom, saved.iter, &saved.values);
+            if file.is_some() && offset >= self.segment_limit {
+                seg += 1;
+                file = None;
+            }
+            if file.is_none() {
+                let path = self.segment_path(seg);
+                // Truncate: a leftover orphan from an earlier crashed
+                // compaction must not leak stale bytes into this one.
+                let f = fs::OpenOptions::new()
+                    .create(true)
+                    .write(true)
+                    .truncate(true)
+                    .open(&path)
+                    .with_context(|| {
+                        format!("creating compaction segment {}", path.display())
+                    })?;
+                new_segments.push(seg);
+                offset = 0;
+                file = Some(f);
+            }
+            file.as_mut().unwrap().write_all(&buf)?;
+            let rec_len = buf.len() as u64;
+            let loc =
+                RecordLoc { segment: seg, offset, iter: saved.iter, len: rec_len, torn: false };
+            entries.push((atom, loc));
+            offset += rec_len;
+            new_bytes += rec_len;
+        }
+        Ok(CompactionPlan { entries, new_segments, new_bytes })
+    }
+
+    /// Phase two: atomically swap the manifest onto the fresh segments,
+    /// retarget the in-memory index, and delete every superseded segment
+    /// file. The manifest rename is the commit point — a crash before it
+    /// recovers the pre-compaction store, a crash after it the compacted
+    /// one; no interleaving reads half of each.
+    pub fn commit_compaction(&mut self, plan: CompactionPlan) -> Result<CompactionStats> {
+        let old_bytes = self.disk_bytes;
+        let old_segments = self.segment_numbers()?;
+        let dead = self.dead_records;
+        self.index.clear();
+        for (atom, loc) in &plan.entries {
+            // Latest-only: after a rewrite of every live record the prev
+            // fallback is redundancy the pass exists to reclaim.
+            self.index.insert(*atom, AtomIndex { latest: *loc, prev: None });
+        }
+        // Appends continue at the end of the last fresh segment (or a
+        // brand-new one when the store was empty).
+        self.current_segment =
+            plan.new_segments.last().copied().unwrap_or(self.current_segment + 1);
+        self.current_file = None;
+        self.current_len = 0;
+        self.write_manifest()?; // the commit point
+        self.maps.borrow_mut().clear();
+        let mut removed = 0usize;
+        for segnum in old_segments {
+            if !plan.new_segments.contains(&segnum)
+                && fs::remove_file(self.segment_path(segnum)).is_ok()
+            {
+                removed += 1;
+            }
+        }
+        let live_records = plan.entries.len() as u64;
+        self.disk_bytes = plan.new_bytes;
+        self.live_bytes = plan.new_bytes;
+        self.dead_records = 0;
+        self.compactions += 1;
+        let reclaimed = old_bytes.saturating_sub(plan.new_bytes);
+        self.reclaimed_bytes += reclaimed;
+        Ok(CompactionStats {
+            live_records,
+            dead_records: dead,
+            reclaimed_bytes: reclaimed,
+            segments_removed: removed,
+        })
+    }
+
+    /// Fold superseded records into fresh segments (prepare + commit).
+    /// Reads before and after return identical values; only the on-disk
+    /// footprint shrinks.
+    pub fn compact(&mut self) -> Result<CompactionStats> {
+        let plan = self.prepare_compaction()?;
+        self.commit_compaction(plan)
     }
 }
 
@@ -648,6 +1083,130 @@ mod tests {
         fs::write(&seg, &bytes[..10]).unwrap();
         let s = DiskStore::open(&dir).unwrap();
         assert!(s.get_atom(0).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sealed_segments_are_served_zero_copy() {
+        let dir = tmpdir("mmap-sealed");
+        let mut s = DiskStore::open(&dir).unwrap();
+        s.set_segment_limit(1); // every put rolls to a fresh segment
+        for iter in 1..=3usize {
+            s.put_atoms(iter, &[(0, &[iter as f32][..])]).unwrap();
+        }
+        s.put_atoms(4, &[(1, &[9.0][..])]).unwrap();
+        // Atom 0's latest record now sits in a sealed segment; atom 1's
+        // is in the active one.
+        assert!(s.current_segment >= 3);
+        assert_eq!(s.get_atom(0).unwrap().unwrap().values, vec![3.0]);
+        assert_eq!(s.get_atom(1).unwrap().unwrap().values, vec![9.0]);
+        if cfg!(all(unix, target_pointer_width = "64", feature = "mmap")) {
+            assert!(s.mapped_reads() > 0, "sealed reads must go through the mmap path");
+        }
+        // A reopen serves the same bytes (maps rebuilt lazily).
+        s.write_manifest().unwrap();
+        drop(s);
+        let s = DiskStore::open(&dir).unwrap();
+        assert_eq!(s.get_atom(0).unwrap().unwrap().values, vec![3.0]);
+        assert_eq!(s.get_atom(1).unwrap().unwrap().values, vec![9.0]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compaction_reclaims_superseded_records_and_preserves_reads() {
+        let dir = tmpdir("compact");
+        let mut s = DiskStore::open(&dir).unwrap();
+        for iter in 1..=8usize {
+            s.put_atoms(iter, &[(0, &[iter as f32, 0.5][..]), (1, &[-(iter as f32)][..])])
+                .unwrap();
+        }
+        s.write_manifest().unwrap();
+        let before_disk = s.on_disk_bytes();
+        assert!(DiskStore::garbage_ratio(&s) > 0.5, "7/8 of each atom's records are garbage");
+        let a0 = s.get_atom(0).unwrap().unwrap();
+        let a1 = s.get_atom(1).unwrap().unwrap();
+        let stats = DiskStore::compact(&mut s).unwrap();
+        assert_eq!(stats.live_records, 2);
+        assert!(stats.reclaimed_bytes > 0);
+        assert!(stats.segments_removed >= 1);
+        assert!(s.on_disk_bytes() < before_disk, "compaction must shrink the on-disk bytes");
+        assert_eq!(DiskStore::garbage_ratio(&s), 0.0);
+        assert_eq!(s.get_atom(0).unwrap().unwrap(), a0);
+        assert_eq!(s.get_atom(1).unwrap().unwrap(), a1);
+        // Cumulative write accounting is untouched by compaction.
+        assert_eq!(s.records_written(), 16);
+        // The swapped manifest governs a reopen, and appends continue.
+        drop(s);
+        let mut s = DiskStore::open(&dir).unwrap();
+        assert_eq!(s.get_atom(0).unwrap().unwrap(), a0);
+        assert_eq!(s.get_atom(1).unwrap().unwrap(), a1);
+        s.put_atoms(9, &[(0, &[99.0, 99.0][..])]).unwrap();
+        assert_eq!(s.get_atom(0).unwrap().unwrap().values, vec![99.0, 99.0]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_put_leaves_truncated_record_and_falls_back() {
+        let dir = tmpdir("torn-put");
+        let mut s = DiskStore::open(&dir).unwrap();
+        s.put_atoms(1, &[(0, &[1.0, 2.0][..]), (1, &[5.0][..])]).unwrap();
+        // Tear a 2-record batch after the first record: atom 1's new
+        // record lands physically truncated.
+        s.put_torn(4, &[(0, &[9.0, 9.0][..]), (1, &[7.0][..])], 1).unwrap();
+        assert_eq!(s.get_atom(0).unwrap().unwrap().values, vec![9.0, 9.0]);
+        let got = s.get_atom(1).unwrap().unwrap();
+        assert_eq!(got.iter, 1, "torn record must fall back to the previous one");
+        assert_eq!(got.values, vec![5.0]);
+        // Same story through the manifest after a reopen.
+        s.write_manifest().unwrap();
+        drop(s);
+        let mut s = DiskStore::open(&dir).unwrap();
+        let got = s.get_atom(1).unwrap().unwrap();
+        assert_eq!((got.iter, got.values.clone()), (1, vec![5.0]));
+        // Overwriting the torn atom must carry the last *readable* record
+        // into the fallback slot — never the torn bytes. Corrupt the
+        // fresh record (a later crash mid-append) and the read still
+        // lands on the good iter-1 record.
+        s.put_atoms(6, &[(1, &[8.0][..])]).unwrap();
+        assert_eq!(s.get_atom(1).unwrap().unwrap().values, vec![8.0]);
+        s.write_manifest().unwrap();
+        drop(s);
+        let seg = dir.join("seg-000000.bin");
+        let bytes = fs::read(&seg).unwrap();
+        fs::write(&seg, &bytes[..bytes.len() - 10]).unwrap();
+        let s = DiskStore::open(&dir).unwrap();
+        let got = s.get_atom(1).unwrap().unwrap();
+        assert_eq!(
+            (got.iter, got.values.clone()),
+            (1, vec![5.0]),
+            "fallback chain must skip the torn record"
+        );
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn mid_compaction_crash_leaves_pre_compaction_state() {
+        let dir = tmpdir("compact-crash");
+        let mut s = DiskStore::open(&dir).unwrap();
+        for iter in 1..=5usize {
+            s.put_atoms(iter, &[(0, &[iter as f32][..]), (1, &[10.0 + iter as f32][..])])
+                .unwrap();
+        }
+        s.write_manifest().unwrap();
+        let a0 = s.get_atom(0).unwrap().unwrap();
+        let a1 = s.get_atom(1).unwrap().unwrap();
+        // Phase one only — the manifest swap (the commit point) never
+        // happens, exactly a crash mid-compaction.
+        let _plan = s.prepare_compaction().unwrap();
+        assert!(dir.join("seg-000001.bin").exists(), "fresh segment written by phase one");
+        drop(s);
+        let s = DiskStore::open(&dir).unwrap();
+        assert_eq!(s.get_atom(0).unwrap().unwrap(), a0);
+        assert_eq!(s.get_atom(1).unwrap().unwrap(), a1);
+        assert!(
+            !s.segment_path(1).exists(),
+            "orphaned compaction segment must be removed on reopen"
+        );
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -36,7 +36,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
-use super::{DiskStore, LatencyModel, MemStore, SavedAtom, ShardBackend};
+use super::{CompactionStats, DiskStore, LatencyModel, MemStore, SavedAtom, ShardBackend};
 use crate::partition::Partition;
 
 pub struct ShardedStore {
@@ -52,6 +52,11 @@ pub struct ShardedStore {
     /// Records written through degraded routing (home shard down,
     /// re-routed to a survivor).
     degraded: AtomicU64,
+    /// Compaction passes run across all shards (via
+    /// [`compact_if_needed`](ShardedStore::compact_if_needed)).
+    compaction_runs: AtomicU64,
+    /// Segment bytes reclaimed by those passes.
+    compaction_reclaimed: AtomicU64,
     latency: LatencyModel,
 }
 
@@ -60,36 +65,30 @@ impl ShardedStore {
     pub fn new_mem(n_shards: usize) -> ShardedStore {
         assert!(n_shards >= 1, "need at least one shard");
         let shards = (0..n_shards)
-            .map(|_| Mutex::new(Box::new(MemStore::new()) as Box<dyn ShardBackend>))
+            .map(|_| Box::new(MemStore::new()) as Box<dyn ShardBackend>)
             .collect();
-        ShardedStore {
-            shards,
-            route: Mutex::new(Vec::new()),
-            committed: Mutex::new(None),
-            down: Mutex::new(vec![false; n_shards]),
-            degraded: AtomicU64::new(0),
-            latency: LatencyModel::default(),
-        }
+        ShardedStore::from_backends(shards)
     }
 
-    /// `n_shards` on-disk shards under `dir/shard-NNN/`.
-    pub fn open_disk(dir: &Path, n_shards: usize) -> Result<ShardedStore> {
+    /// The `n_shards` on-disk backends a disk-backed store routes over,
+    /// one `DiskStore` per `dir/shard-NNN/` subdirectory. Exposed so the
+    /// chaos subsystem can wrap them
+    /// ([`FaultPlan::disk_store`](crate::chaos::FaultPlan::disk_store)).
+    pub fn disk_backends(dir: &Path, n_shards: usize) -> Result<Vec<Box<dyn ShardBackend>>> {
         assert!(n_shards >= 1, "need at least one shard");
-        let mut shards = Vec::with_capacity(n_shards);
+        let mut backends: Vec<Box<dyn ShardBackend>> = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
             let sub = dir.join(format!("shard-{s:03}"));
             let store = DiskStore::open(&sub)
                 .with_context(|| format!("opening shard {s} at {}", sub.display()))?;
-            shards.push(Mutex::new(Box::new(store) as Box<dyn ShardBackend>));
+            backends.push(Box::new(store));
         }
-        Ok(ShardedStore {
-            shards,
-            route: Mutex::new(Vec::new()),
-            committed: Mutex::new(None),
-            down: Mutex::new(vec![false; n_shards]),
-            degraded: AtomicU64::new(0),
-            latency: LatencyModel::default(),
-        })
+        Ok(backends)
+    }
+
+    /// `n_shards` on-disk shards under `dir/shard-NNN/`.
+    pub fn open_disk(dir: &Path, n_shards: usize) -> Result<ShardedStore> {
+        Ok(ShardedStore::from_backends(ShardedStore::disk_backends(dir, n_shards)?))
     }
 
     /// Build from caller-provided backends (tests, custom backends).
@@ -102,6 +101,8 @@ impl ShardedStore {
             committed: Mutex::new(None),
             down: Mutex::new(vec![false; n]),
             degraded: AtomicU64::new(0),
+            compaction_runs: AtomicU64::new(0),
+            compaction_reclaimed: AtomicU64::new(0),
             latency: LatencyModel::default(),
         }
     }
@@ -312,6 +313,60 @@ impl ShardedStore {
     pub fn total_records(&self) -> u64 {
         self.shards.iter().map(|s| s.lock().unwrap().records_written()).sum()
     }
+
+    /// Bytes the shards' on-disk representation currently occupies
+    /// (0 for memory shards; shrinks when compaction runs).
+    pub fn total_on_disk_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().on_disk_bytes()).sum()
+    }
+
+    /// Per-shard garbage ratios (superseded-record fraction a compaction
+    /// pass would reclaim; always 0 for memory shards).
+    pub fn garbage_ratios(&self) -> Vec<f64> {
+        self.shards.iter().map(|s| s.lock().unwrap().garbage_ratio()).collect()
+    }
+
+    /// Compact every live shard whose garbage ratio has reached
+    /// `threshold` and whose on-disk size is at least `min_bytes`
+    /// (`threshold <= 0` compacts any shard with garbage at all). Down
+    /// shards are skipped — their log is unreachable until they heal.
+    /// Returns `(shard, stats)` for each pass that ran, and feeds the
+    /// `compaction_runs`/`compaction_reclaimed_bytes` counters.
+    pub fn compact_if_needed(
+        &self,
+        threshold: f64,
+        min_bytes: u64,
+    ) -> Result<Vec<(usize, CompactionStats)>> {
+        let mut out = Vec::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            let mut guard = shard.lock().unwrap();
+            if guard.is_down() {
+                continue;
+            }
+            let ratio = guard.garbage_ratio();
+            if ratio <= 0.0 || ratio < threshold || guard.on_disk_bytes() < min_bytes {
+                continue;
+            }
+            if let Some(stats) =
+                guard.compact().with_context(|| format!("compacting shard {s}"))?
+            {
+                self.compaction_runs.fetch_add(1, Ordering::Relaxed);
+                self.compaction_reclaimed.fetch_add(stats.reclaimed_bytes, Ordering::Relaxed);
+                out.push((s, stats));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Compaction passes run through this router so far.
+    pub fn compaction_runs(&self) -> u64 {
+        self.compaction_runs.load(Ordering::Relaxed)
+    }
+
+    /// Segment bytes reclaimed by those passes.
+    pub fn compaction_reclaimed_bytes(&self) -> u64 {
+        self.compaction_reclaimed.load(Ordering::Relaxed)
+    }
 }
 
 impl super::CheckpointStore for ShardedStore {
@@ -425,6 +480,39 @@ mod tests {
         let s = ShardedStore::open_disk(&dir, 2).unwrap();
         assert_eq!(s.get_atom_any(1).unwrap().unwrap().values, vec![2.0, 3.0]);
         assert_eq!(s.total_bytes(), 12);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compact_if_needed_respects_threshold_and_counts() {
+        let dir = std::env::temp_dir()
+            .join(format!("scar-sharded-compact-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ShardedStore::open_disk(&dir, 2).unwrap();
+        for iter in 1..=6usize {
+            s.put_atoms_at(iter, &[(0, &[iter as f32][..]), (1, &[iter as f32 * 2.0][..])])
+                .unwrap();
+        }
+        s.sync_all().unwrap();
+        let before = s.total_on_disk_bytes();
+        assert!(s.garbage_ratios().iter().all(|&r| r > 0.5), "{:?}", s.garbage_ratios());
+        // A threshold above the actual ratios runs nothing.
+        assert!(s.compact_if_needed(0.99, 0).unwrap().is_empty());
+        assert_eq!(s.compaction_runs(), 0);
+        // A min_bytes floor above the shard sizes also runs nothing.
+        assert!(s.compact_if_needed(0.5, before * 4).unwrap().is_empty());
+        let runs = s.compact_if_needed(0.5, 0).unwrap();
+        assert_eq!(runs.len(), 2, "both shards were above the threshold");
+        assert!(s.total_on_disk_bytes() < before);
+        assert_eq!(s.compaction_runs(), 2);
+        assert!(s.compaction_reclaimed_bytes() > 0);
+        assert_eq!(s.get_atom_any(0).unwrap().unwrap().values, vec![6.0]);
+        assert_eq!(s.get_atom_any(1).unwrap().unwrap().values, vec![12.0]);
+        // Memory shards never report garbage, so the trigger is inert.
+        let mem = ShardedStore::new_mem(2);
+        mem.put_atoms_at(1, &[(0, &[1.0][..])]).unwrap();
+        mem.put_atoms_at(2, &[(0, &[2.0][..])]).unwrap();
+        assert!(mem.compact_if_needed(0.0, 0).unwrap().is_empty());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

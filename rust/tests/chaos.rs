@@ -6,6 +6,7 @@
 //! because the coordinator rebuilds a dead shard's records from its
 //! in-memory cache.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use scar::chaos::{FaultKind, FaultPlan, ShardFault};
@@ -13,6 +14,7 @@ use scar::checkpoint::{AsyncCheckpointer, CheckpointMode, CheckpointPolicy, Sele
 use scar::models::synthetic::SyntheticTrainer;
 use scar::recovery::{recover, RecoveryMode};
 use scar::scenario::{self, Scenario};
+use scar::storage::ShardedStore;
 use scar::trainer::Trainer;
 use scar::util::rng::Rng;
 
@@ -22,15 +24,30 @@ fn kill(shard: usize, at: usize) -> FaultPlan {
     }
 }
 
-/// Train a synthetic model with checkpoint barriers, fail half the atoms
-/// at iter 9, recover through the flush fence, and return the final
-/// parameter bytes — same harness as `tests/async_checkpoint.rs`, plus an
-/// injected storage-fault plan.
-fn train_fail_recover(mode: CheckpointMode, shards: usize, plan: &FaultPlan) -> Vec<u8> {
+/// Train a synthetic model with checkpoint barriers, fail `lost` atoms at
+/// iter 9, recover through the flush fence, and return the final
+/// parameter bytes plus the store — same harness as
+/// `tests/async_checkpoint.rs`, plus an injected storage-fault plan, over
+/// memory shards (`dir = None`) or real on-disk shards, optionally with
+/// flush-fence compaction.
+fn drive_chaos(
+    mode: CheckpointMode,
+    shards: usize,
+    plan: &FaultPlan,
+    dir: Option<&Path>,
+    compact_threshold: f64,
+    lost: &[usize],
+) -> (Vec<u8>, Arc<ShardedStore>) {
     let mut trainer = SyntheticTrainer::new(32, 0.85, 3);
     trainer.init(7).unwrap();
     let layout = trainer.layout().clone();
-    let store = Arc::new(plan.mem_store(shards));
+    let store = Arc::new(match dir {
+        None => plan.mem_store(shards),
+        Some(d) => {
+            let _ = std::fs::remove_dir_all(d);
+            plan.disk_store(d, shards).unwrap()
+        }
+    });
     let policy = CheckpointPolicy::partial(6, 3, Selector::Priority);
     let mut ck = AsyncCheckpointer::new(
         policy,
@@ -40,10 +57,9 @@ fn train_fail_recover(mode: CheckpointMode, shards: usize, plan: &FaultPlan) -> 
         mode,
         shards,
     )
-    .unwrap();
+    .unwrap()
+    .with_compaction(compact_threshold, 0);
     let mut rng = Rng::new(11);
-    let mut fail_rng = Rng::new(13);
-    let lost = fail_rng.sample_indices(layout.n_atoms(), layout.n_atoms() / 2);
     for iter in 0..30usize {
         if iter == 9 {
             ck.flush().unwrap();
@@ -51,7 +67,7 @@ fn train_fail_recover(mode: CheckpointMode, shards: usize, plan: &FaultPlan) -> 
                 RecoveryMode::Partial,
                 trainer.state_mut(),
                 &layout,
-                &lost,
+                lost,
                 store.as_ref(),
             )
             .unwrap();
@@ -59,14 +75,29 @@ fn train_fail_recover(mode: CheckpointMode, shards: usize, plan: &FaultPlan) -> 
         trainer.step(iter).unwrap();
         ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng).unwrap();
     }
-    ck.finish().unwrap();
+    let store = ck.finish().unwrap();
     let mut bytes = Vec::new();
     for t in &trainer.state().tensors {
         for v in &t.data {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
     }
-    bytes
+    (bytes, store)
+}
+
+/// The classic memory-shard configuration with the default random lost
+/// set (half the atoms, seed 13).
+fn train_fail_recover(mode: CheckpointMode, shards: usize, plan: &FaultPlan) -> Vec<u8> {
+    drive_chaos(mode, shards, plan, None, 0.0, &default_lost()).0
+}
+
+fn default_lost() -> Vec<usize> {
+    let mut fail_rng = Rng::new(13);
+    fail_rng.sample_indices(32, 16)
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("scar-chaos-it-{tag}-{}", std::process::id()))
 }
 
 #[test]
@@ -108,6 +139,132 @@ fn torn_and_slow_runs_are_reproducible() {
         let b = train_fail_recover(mode, 3, &plan);
         assert_eq!(a, b, "{mode}: same seed + same fault plan must be byte-identical");
     }
+}
+
+#[test]
+fn disk_backend_chaos_runs_match_mem_backend_byte_for_byte() {
+    // The acceptance pin for chaos-over-disk: the same kill + torn + slow
+    // plan over real on-disk shards produces recovered parameters
+    // byte-identical to memory shards, sync and async. (The torn strike
+    // is scheduled after the kill, as in scenarios/shard_failures.toml:
+    // an earlier torn could race the post-kill cache rebuild against the
+    // in-flight writer job for which batch trips it first.)
+    let plan = FaultPlan {
+        faults: vec![
+            ShardFault { shard: 1, at: 6, kind: FaultKind::Kill { heal_at: None } },
+            ShardFault { shard: 0, at: 8, kind: FaultKind::TornWrite },
+            ShardFault {
+                shard: 2,
+                at: 2,
+                kind: FaultKind::Slow { until: Some(8), delay_us: 20 },
+            },
+        ],
+    };
+    let lost = default_lost();
+    let base = tmpdir("backend-identity");
+    for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
+        let (mem_bytes, _) = drive_chaos(mode, 3, &plan, None, 0.0, &lost);
+        let dir = base.join(format!("{mode}"));
+        let (disk_bytes, _) = drive_chaos(mode, 3, &plan, Some(dir.as_path()), 0.0, &lost);
+        assert_eq!(
+            mem_bytes, disk_bytes,
+            "{mode}: disk-backed chaos run diverged from the mem-backed run"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn torn_disk_record_recovers_from_manifest_tracked_previous_record() {
+    // Lost atoms are the evens (routed to shard 0 of 2); the torn write
+    // strikes shard 1 (odd atoms), so recovery never reads a torn atom —
+    // the run must therefore be byte-identical to the fault-free run,
+    // while the torn atom itself is served via the real CRC/truncation
+    // fallback from the manifest-tracked previous record.
+    let evens: Vec<usize> = (0..32).step_by(2).collect();
+    let reference =
+        drive_chaos(CheckpointMode::Sync, 2, &FaultPlan::default(), None, 0.0, &evens).0;
+    let torn_plan = FaultPlan {
+        faults: vec![ShardFault { shard: 1, at: 5, kind: FaultKind::TornWrite }],
+    };
+    let (mem_bytes, mem_store) =
+        drive_chaos(CheckpointMode::Sync, 2, &torn_plan, None, 0.0, &evens);
+    let dir = tmpdir("torn-fallback");
+    let (disk_bytes, disk_store) =
+        drive_chaos(CheckpointMode::Sync, 2, &torn_plan, Some(dir.as_path()), 0.0, &evens);
+    assert_eq!(
+        reference, mem_bytes,
+        "torn tail never intersects the lost set, so recovery matches fault-free"
+    );
+    assert_eq!(reference, disk_bytes, "same pin over real on-disk shards");
+    // Record-level pin: every atom (including the torn one, whose latest
+    // on-disk copy is physically truncated) reads back exactly what the
+    // memory backend's drop-the-tail semantics produce — the torn atom's
+    // value can only come from DiskStore's previous-record fallback.
+    for atom in 0..32 {
+        assert_eq!(
+            mem_store.get_atom_any(atom).unwrap(),
+            disk_store.get_atom_any(atom).unwrap(),
+            "atom {atom}: disk CRC fallback diverged from mem torn semantics"
+        );
+    }
+    // And the fallback survives reopening the raw shards from their
+    // manifests.
+    drop(disk_store);
+    let reopened = ShardedStore::open_disk(&dir, 2).unwrap();
+    for atom in 0..32 {
+        assert_eq!(
+            mem_store.get_atom_any(atom).unwrap(),
+            reopened.get_atom_any(atom).unwrap(),
+            "atom {atom}: manifest-tracked fallback lost after reopen"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compaction_shrinks_disk_bytes_and_leaves_results_byte_identical() {
+    let lost = default_lost();
+    let base = tmpdir("compaction");
+    let plain_dir = base.join("plain");
+    let compacted_dir = base.join("compacted");
+    let (plain_bytes, plain_store) = drive_chaos(
+        CheckpointMode::Sync,
+        2,
+        &FaultPlan::default(),
+        Some(plain_dir.as_path()),
+        0.0,
+        &lost,
+    );
+    let (compacted_bytes, compacted_store) = drive_chaos(
+        CheckpointMode::Sync,
+        2,
+        &FaultPlan::default(),
+        Some(compacted_dir.as_path()),
+        0.3,
+        &lost,
+    );
+    assert_eq!(
+        plain_bytes, compacted_bytes,
+        "compaction changed recovered parameters"
+    );
+    assert!(compacted_store.compaction_runs() > 0, "the 0.3 threshold never triggered");
+    assert!(compacted_store.compaction_reclaimed_bytes() > 0);
+    assert!(
+        compacted_store.total_on_disk_bytes() < plain_store.total_on_disk_bytes(),
+        "compaction must shrink on-disk bytes ({} vs {})",
+        compacted_store.total_on_disk_bytes(),
+        plain_store.total_on_disk_bytes()
+    );
+    // Every atom still reads identical values from the compacted store.
+    for atom in 0..32 {
+        assert_eq!(
+            plain_store.get_atom_any(atom).unwrap(),
+            compacted_store.get_atom_any(atom).unwrap(),
+            "atom {atom}: compaction changed a stored record"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&base);
 }
 
 #[test]
@@ -228,11 +385,20 @@ gap = 4
 checkpoint_mode = "sync"
 "#;
 
-fn sweep_with(storage_and_chaos: &str) -> String {
+fn sweep_with_dir(storage_and_chaos: &str, dir: Option<&Path>) -> String {
     let toml = format!("{CHAOS_SWEEP_HEAD}{storage_and_chaos}{CHAOS_SWEEP_CELLS}");
-    let scn = Scenario::from_toml_str(&toml).unwrap();
+    let mut scn = Scenario::from_toml_str(&toml).unwrap();
+    if let Some(d) = dir {
+        let _ = std::fs::remove_dir_all(d);
+        scn.checkpoint_dir = Some(d.to_string_lossy().into_owned());
+        scn.validate().unwrap();
+    }
     let report = scenario::run_scenario(&scn, None).unwrap();
     format!("{}\n{}", report.render(), report.to_csv())
+}
+
+fn sweep_with(storage_and_chaos: &str) -> String {
+    sweep_with_dir(storage_and_chaos, None)
 }
 
 #[test]
@@ -253,6 +419,22 @@ fn chaos_scenario_reports_byte_identical_across_shard_counts_and_modes() {
     // And repeatability on the exact same spec.
     let again = sweep_with(&format!("[storage]\nshards = 2\nwriters = 2\n{kill_shard_1}"));
     assert_eq!(two, again, "same-seed chaos sweep must be byte-identical");
+}
+
+#[test]
+fn disk_backed_sweep_report_is_byte_identical_to_mem() {
+    // The acceptance pin at the scenario level: the same chaos sweep
+    // (kill + torn), once over memory shards and once over real on-disk
+    // shards with flush-fence compaction enabled, renders byte-identical
+    // reports and CSVs.
+    let spec = "[storage]\nshards = 2\nwriters = 2\ncompact_threshold = 0.4\n\
+                [[chaos.kill]]\nshard = 1\nat = 6\n\
+                [[chaos.torn]]\nshard = 0\nat = 8\n";
+    let mem = sweep_with(spec);
+    let dir = tmpdir("disk-sweep");
+    let disk = sweep_with_dir(spec, Some(dir.as_path()));
+    assert_eq!(mem, disk, "disk-backed sweep diverged from the mem-backed report");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
@@ -302,5 +484,13 @@ of_nodes = 3
     for cell in &a.panels[0].cells {
         assert_eq!(cell.costs.len(), 3);
         assert!(cell.costs.iter().all(|c| c.is_finite()), "{:?}", cell.costs);
+        // Cluster trials now measure a real recovery perturbation ‖δ‖
+        // (previously reported NaN), so every delta is finite…
+        assert!(cell.deltas.iter().all(|d| d.is_finite()), "{:?}", cell.deltas);
     }
+    // …and node kills under partial checkpoints genuinely perturb state.
+    assert!(
+        a.panels[0].cells.iter().flat_map(|c| c.deltas.iter()).any(|&d| d > 0.0),
+        "every cluster trial reported ‖δ‖ = 0"
+    );
 }

@@ -9,13 +9,22 @@ use scar::checkpoint::{select, CheckpointCoordinator, CheckpointPolicy, Selector
 use scar::params::{AtomLayout, ParamStore, Segment, Tensor};
 use scar::partition::Partition;
 use scar::recovery::{recover, RecoveryMode};
-use scar::storage::{CheckpointStore, MemStore};
+use scar::storage::{CheckpointStore, DiskStore, MemStore};
 use scar::theory;
 use scar::util::rng::Rng;
 
+/// Cases per property: the in-repo default, overridden globally by the
+/// standard `PROPTEST_CASES` env var (the nightly CI job sets 1024).
+fn case_count(default_cases: usize) -> usize {
+    match std::env::var("PROPTEST_CASES") {
+        Ok(v) => v.parse().unwrap_or(default_cases),
+        Err(_) => default_cases,
+    }
+}
+
 /// Run `cases` random cases of a property; panics with the failing seed.
 fn prop_check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng)) {
-    for case in 0..cases {
+    for case in 0..case_count(cases) {
         let seed = 0x5EED_0000 + case as u64;
         let mut rng = Rng::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
@@ -248,6 +257,71 @@ fn prop_bound_nonnegative_and_monotone() {
         );
         assert!(b_split >= b1 - 1e-12);
     });
+}
+
+#[test]
+fn prop_recovery_unchanged_by_mid_compaction_crash() {
+    // Compaction never races recovery: write a history of overwrites to
+    // a DiskStore, crash mid-compaction (fresh segments written, the
+    // manifest never swapped), reopen, and full recovery must return the
+    // exact pre-compaction parameters. A *committed* compaction must
+    // change nothing either.
+    let base = std::env::temp_dir().join(format!("scar-prop-compact-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let mut case = 0usize;
+    prop_check("compaction crash safety", 20, |rng| {
+        case += 1;
+        let dir = base.join(format!("case-{case}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (state, layout) = random_store(rng);
+        let n = layout.n_atoms();
+        let mut disk = DiskStore::open(&dir).unwrap();
+        let mut buf = Vec::new();
+        for iter in 0..4usize {
+            let source = if iter == 0 { state.clone() } else { perturbed(rng, &state, 1.0) };
+            let atoms: Vec<usize> = if iter == 0 {
+                (0..n).collect() // x(0) for every atom first
+            } else {
+                let k = 1 + rng.below(n);
+                rng.sample_indices(n, k)
+            };
+            let payloads: Vec<(usize, Vec<f32>)> = atoms
+                .iter()
+                .map(|&a| {
+                    source.read_atom(&layout, a, &mut buf);
+                    (a, buf.clone())
+                })
+                .collect();
+            let refs: Vec<(usize, &[f32])> =
+                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+            disk.put_atoms(iter, &refs).unwrap();
+        }
+        disk.sync().unwrap();
+        let mut before = state.clone();
+        recover(RecoveryMode::Full, &mut before, &layout, &[], &disk).unwrap();
+        // Crash mid-compaction: phase one only.
+        let _abandoned_plan = disk.prepare_compaction().unwrap();
+        drop(disk);
+        let mut reopened = DiskStore::open(&dir).unwrap();
+        let mut after = state.clone();
+        recover(RecoveryMode::Full, &mut after, &layout, &[], &reopened).unwrap();
+        assert_eq!(
+            before.l2_distance(&after),
+            0.0,
+            "mid-compaction crash changed recovered parameters"
+        );
+        // Committed compaction: still byte-identical recovery.
+        reopened.compact().unwrap();
+        let mut compacted = state.clone();
+        recover(RecoveryMode::Full, &mut compacted, &layout, &[], &reopened).unwrap();
+        assert_eq!(
+            before.l2_distance(&compacted),
+            0.0,
+            "committed compaction changed recovered parameters"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+    let _ = std::fs::remove_dir_all(&base);
 }
 
 #[test]
