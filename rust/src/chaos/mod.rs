@@ -31,6 +31,23 @@
 //!     discarded (a one-record batch loses its record), exactly what
 //!     `DiskStore`'s CRC check does to a record cut short by a crash.
 //!     Readers transparently see the previous record for the torn atoms.
+//!   - **partition** — the shard is reachable but unwritable inside
+//!     `[at, until)`: reads serve throughout, writes re-route at the
+//!     router (counted as degraded). No record is ever lost in-process
+//!     or after the heal, so the recovery planner has nothing to
+//!     rebuild — the fault family that distinguishes *unreachability*
+//!     from *data loss*. (Crash durability is the one carve-out: a
+//!     partitioned shard's manifest cannot sync until it heals, so a
+//!     crash *inside* the window rolls its unsynced tail back — exactly
+//!     the fsync family's territory; see `ShardedStore::sync_all`.)
+//!   - **flaky** — deterministic kill+heal cycles (`period`, `down_for`,
+//!     `cycles`). Each down phase triggers a selective rebuild of the
+//!     shard's slice onto survivors; each heal has the shard re-adopt
+//!     its slice via the planner so its records are fresh again.
+//!   - **fsync** — one-shot metadata-journal loss: the next manifest
+//!     sync at/after `at` silently does not persist, or a compaction
+//!     pass due first crashes inside the manifest rename window. A
+//!     reopen recovers the last manifest that genuinely hit the disk.
 //!
 //! The epoch clock is advanced by the checkpoint front-end once per
 //! training iteration (`ShardedStore::advance_epoch`), so faults take
@@ -42,7 +59,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::storage::{CompactionStats, MemStore, SavedAtom, ShardBackend, ShardedStore};
 
@@ -56,6 +73,23 @@ pub enum FaultKind {
     Slow { until: Option<usize>, delay_us: u64 },
     /// The first put at/after `at` is torn mid-batch (fires once).
     TornWrite,
+    /// Network partition in `[at, until)`: the shard is reachable but
+    /// unwritable — reads are served throughout, writes re-route at the
+    /// router (`until = None` = for the rest of the run). No data is
+    /// lost, so the recovery planner has nothing to rebuild.
+    Partition { until: Option<usize> },
+    /// Deterministic kill+heal cycles: down in
+    /// `[at + c·period, at + c·period + down_for)` for `c in 0..cycles`.
+    /// Each heal has the shard re-adopt its slice via the rebuild
+    /// planner, so its records are fresh again before the next cycle.
+    Flaky { period: usize, down_for: usize, cycles: usize },
+    /// One-shot fsync failure at/after `at`: the next durability fence
+    /// (manifest sync) silently does not persist, or — if a compaction
+    /// pass comes first — the pass crashes inside the manifest rename
+    /// window (fresh segments land, the commit never does). Models
+    /// metadata-journal loss; recovery after a reopen lands on the last
+    /// manifest that genuinely reached the disk.
+    FsyncFail,
 }
 
 /// One scheduled fault: which shard, from which epoch, what kind.
@@ -80,9 +114,11 @@ impl FaultPlan {
     }
 
     /// Validate against a shard count: every fault must target an
-    /// existing shard at epoch >= 1, and no epoch may leave every shard
-    /// down at once (degraded routing needs a survivor at all times —
-    /// overlapping heal windows are checked, not just forever-kills).
+    /// existing shard at epoch >= 1; no epoch may leave every shard down
+    /// at once (degraded reads need a survivor — kill and flaky windows
+    /// are checked, with overlapping heal windows, not just
+    /// forever-kills); and no epoch may leave every shard *unwritable*
+    /// (down or partitioned — degraded writes need a writable target).
     pub fn validate(&self, n_shards: usize) -> Result<()> {
         for f in &self.faults {
             if f.shard >= n_shards {
@@ -94,42 +130,95 @@ impl FaultPlan {
             if f.at == 0 {
                 bail!("chaos fault on shard {} has at = 0; epochs start at 1", f.shard);
             }
-            if let FaultKind::Kill { heal_at: Some(h) } = f.kind {
-                if h <= f.at {
-                    bail!(
-                        "chaos kill on shard {}: heal_at {h} must be > at {}",
-                        f.shard,
-                        f.at
-                    );
+            match f.kind {
+                FaultKind::Kill { heal_at: Some(h) } => {
+                    if h <= f.at {
+                        bail!(
+                            "chaos kill on shard {}: heal_at {h} must be > at {}",
+                            f.shard,
+                            f.at
+                        );
+                    }
                 }
+                FaultKind::Partition { until: Some(u) } => {
+                    if u <= f.at {
+                        bail!(
+                            "chaos partition on shard {}: until {u} must be > at {}",
+                            f.shard,
+                            f.at
+                        );
+                    }
+                }
+                FaultKind::Flaky { period, down_for, cycles } => {
+                    if cycles == 0 {
+                        bail!("chaos flaky on shard {}: cycles must be >= 1", f.shard);
+                    }
+                    if down_for == 0 {
+                        bail!("chaos flaky on shard {}: down_for must be >= 1", f.shard);
+                    }
+                    if period <= down_for {
+                        bail!(
+                            "chaos flaky on shard {}: period {period} must be > down_for \
+                             {down_for} (each cycle needs an up phase to heal into)",
+                            f.shard
+                        );
+                    }
+                }
+                _ => {}
             }
         }
-        // An "all shards down" interval can only begin at some kill's
-        // `at` epoch, so checking each of those epochs is exhaustive.
-        let kills: Vec<(usize, usize, Option<usize>)> = self
-            .faults
-            .iter()
-            .filter_map(|f| match f.kind {
-                FaultKind::Kill { heal_at } => Some((f.shard, f.at, heal_at)),
-                _ => None,
-            })
-            .collect();
-        for &(_, e, _) in &kills {
+        // Down windows: kills plus every flaky cycle, as (shard, start,
+        // end) intervals. An "all shards down" (or unwritable) interval
+        // can only begin at some window's start epoch, so checking each
+        // start is exhaustive.
+        let mut down_windows: Vec<(usize, usize, Option<usize>)> = Vec::new();
+        let mut unwritable_windows: Vec<(usize, usize, Option<usize>)> = Vec::new();
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::Kill { heal_at } => down_windows.push((f.shard, f.at, heal_at)),
+                FaultKind::Flaky { period, down_for, cycles } => {
+                    for c in 0..cycles {
+                        let start = f.at + c * period;
+                        down_windows.push((f.shard, start, Some(start + down_for)));
+                    }
+                }
+                FaultKind::Partition { until } => {
+                    unwritable_windows.push((f.shard, f.at, until));
+                }
+                _ => {}
+            }
+        }
+        // A down shard is also unwritable.
+        unwritable_windows.extend(down_windows.iter().copied());
+        let covers = |(_, at, end): &(usize, usize, Option<usize>), e: usize| {
+            *at <= e && end.map(|u| e < u).unwrap_or(true)
+        };
+        for &(_, e, _) in &down_windows {
             let mut down = vec![false; n_shards];
-            for &(s, at, heal) in &kills {
-                let covers = at <= e
-                    && match heal {
-                        Some(h) => e < h,
-                        None => true,
-                    };
-                if covers {
-                    down[s] = true;
+            for w in &down_windows {
+                if covers(w, e) {
+                    down[w.0] = true;
                 }
             }
             if down.iter().all(|&d| d) {
                 bail!(
                     "chaos plan takes every shard down at iteration {e}; at least one \
                      shard must be serving"
+                );
+            }
+        }
+        for &(_, e, _) in &unwritable_windows {
+            let mut unwritable = vec![false; n_shards];
+            for w in &unwritable_windows {
+                if covers(w, e) {
+                    unwritable[w.0] = true;
+                }
+            }
+            if unwritable.iter().all(|&d| d) {
+                bail!(
+                    "chaos plan leaves no writable shard at iteration {e} (kills + \
+                     partitions cover the whole store); at least one shard must accept \
+                     writes"
                 );
             }
         }
@@ -173,12 +262,16 @@ impl FaultPlan {
     }
 
     /// Serialize to the scenario value model (`{kill: [...], slow: [...],
-    /// torn: [...]}`), the inverse of the scenario `[chaos]` parser.
+    /// torn: [...], partition: [...], flaky: [...], fsync: [...]}`), the
+    /// inverse of the scenario `[chaos]` parser.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let mut kills = Vec::new();
         let mut slows = Vec::new();
         let mut torns = Vec::new();
+        let mut partitions = Vec::new();
+        let mut flakies = Vec::new();
+        let mut fsyncs = Vec::new();
         for f in &self.faults {
             let mut m = BTreeMap::new();
             m.insert("shard".to_string(), Json::from(f.shard));
@@ -198,19 +291,126 @@ impl FaultPlan {
                     slows.push(Json::Obj(m));
                 }
                 FaultKind::TornWrite => torns.push(Json::Obj(m)),
+                FaultKind::Partition { until } => {
+                    if let Some(u) = until {
+                        m.insert("until".to_string(), Json::from(u));
+                    }
+                    partitions.push(Json::Obj(m));
+                }
+                FaultKind::Flaky { period, down_for, cycles } => {
+                    m.insert("period".to_string(), Json::from(period));
+                    m.insert("down_for".to_string(), Json::from(down_for));
+                    m.insert("cycles".to_string(), Json::from(cycles));
+                    flakies.push(Json::Obj(m));
+                }
+                FaultKind::FsyncFail => fsyncs.push(Json::Obj(m)),
             }
         }
         let mut obj = BTreeMap::new();
-        if !kills.is_empty() {
-            obj.insert("kill".to_string(), Json::Arr(kills));
-        }
-        if !slows.is_empty() {
-            obj.insert("slow".to_string(), Json::Arr(slows));
-        }
-        if !torns.is_empty() {
-            obj.insert("torn".to_string(), Json::Arr(torns));
+        for (key, arr) in [
+            ("kill", kills),
+            ("slow", slows),
+            ("torn", torns),
+            ("partition", partitions),
+            ("flaky", flakies),
+            ("fsync", fsyncs),
+        ] {
+            if !arr.is_empty() {
+                obj.insert(key.to_string(), Json::Arr(arr));
+            }
         }
         crate::util::json::Json::Obj(obj)
+    }
+
+    /// Parse the compact CLI chaos grammar (`scar train/cluster --chaos`,
+    /// RunConfig key `chaos`): comma-separated entries, each
+    /// `kind:shard@at` plus a kind-specific suffix —
+    ///
+    /// * `kill:1@6` / `kill:1@6..9` (heal at 9)
+    /// * `slow:0@4..9x50` (50 µs per put; `..9` optional)
+    /// * `torn:2@8`
+    /// * `part:0@4..12` (partition; `..12` optional)
+    /// * `flaky:2@5p8d3c2` (period 8, down 3, 2 cycles)
+    /// * `fsync:0@7`
+    ///
+    /// The empty string parses to the empty (no-chaos) plan.
+    pub fn parse_spec(spec: &str) -> Result<FaultPlan> {
+        fn num(s: &str, what: &str, entry: &str) -> Result<usize> {
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("chaos spec '{entry}': bad {what} '{s}'"))
+        }
+        /// Split `"4..9"`-style windows; the `..end` part is optional.
+        fn window(s: &str, entry: &str) -> Result<(usize, Option<usize>)> {
+            match s.split_once("..") {
+                None => Ok((num(s, "epoch", entry)?, None)),
+                Some((a, b)) => Ok((num(a, "epoch", entry)?, Some(num(b, "epoch", entry)?))),
+            }
+        }
+        let mut faults = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind_tag, rest) = entry
+                .split_once(':')
+                .with_context(|| format!("chaos spec '{entry}': expected kind:shard@at..."))?;
+            let (shard, tail) = rest
+                .split_once('@')
+                .with_context(|| format!("chaos spec '{entry}': expected shard@at after ':'"))?;
+            let shard = num(shard, "shard", entry)?;
+            let fault = match kind_tag {
+                "kill" => {
+                    let (at, heal_at) = window(tail, entry)?;
+                    ShardFault { shard, at, kind: FaultKind::Kill { heal_at } }
+                }
+                "slow" => {
+                    let (win, delay) = tail.split_once('x').with_context(|| {
+                        format!("chaos spec '{entry}': slow needs xDELAY_US suffix")
+                    })?;
+                    let (at, until) = window(win, entry)?;
+                    let delay_us = num(delay, "delay_us", entry)? as u64;
+                    ShardFault { shard, at, kind: FaultKind::Slow { until, delay_us } }
+                }
+                "torn" => ShardFault {
+                    shard,
+                    at: num(tail, "epoch", entry)?,
+                    kind: FaultKind::TornWrite,
+                },
+                "part" | "partition" => {
+                    let (at, until) = window(tail, entry)?;
+                    ShardFault { shard, at, kind: FaultKind::Partition { until } }
+                }
+                "flaky" => {
+                    // at 'p' period 'd' down_for 'c' cycles, all required.
+                    let (at, rest) = tail.split_once('p').with_context(|| {
+                        format!("chaos spec '{entry}': flaky needs pPERIOD")
+                    })?;
+                    let (period, rest) = rest.split_once('d').with_context(|| {
+                        format!("chaos spec '{entry}': flaky needs dDOWN_FOR")
+                    })?;
+                    let (down_for, cycles) = rest.split_once('c').with_context(|| {
+                        format!("chaos spec '{entry}': flaky needs cCYCLES")
+                    })?;
+                    ShardFault {
+                        shard,
+                        at: num(at, "epoch", entry)?,
+                        kind: FaultKind::Flaky {
+                            period: num(period, "period", entry)?,
+                            down_for: num(down_for, "down_for", entry)?,
+                            cycles: num(cycles, "cycles", entry)?,
+                        },
+                    }
+                }
+                "fsync" => ShardFault {
+                    shard,
+                    at: num(tail, "epoch", entry)?,
+                    kind: FaultKind::FsyncFail,
+                },
+                other => bail!(
+                    "chaos spec '{entry}': unknown fault kind '{other}' \
+                     (kill|slow|torn|part|flaky|fsync)"
+                ),
+            };
+            faults.push(fault);
+        }
+        Ok(FaultPlan { faults })
     }
 }
 
@@ -225,19 +425,34 @@ pub struct ChaosBackend {
     epoch: usize,
     /// Records dropped by torn writes (accounting/debugging).
     torn_records: u64,
+    /// Durability fences silently dropped by fsync faults.
+    fsync_failures: u64,
 }
 
 impl ChaosBackend {
     pub fn new(inner: Box<dyn ShardBackend>, shard: usize, faults: Vec<ShardFault>) -> Self {
         let fired = vec![false; faults.len()];
-        ChaosBackend { inner, shard, faults, fired, epoch: 0, torn_records: 0 }
+        ChaosBackend {
+            inner,
+            shard,
+            faults,
+            fired,
+            epoch: 0,
+            torn_records: 0,
+            fsync_failures: 0,
+        }
     }
 
     pub fn torn_records(&self) -> u64 {
         self.torn_records
     }
 
-    /// Is the shard inside a kill window at `epoch`?
+    pub fn fsync_failures(&self) -> u64 {
+        self.fsync_failures
+    }
+
+    /// Is the shard inside a kill window (or a flaky down phase) at
+    /// `epoch`?
     fn down_at(&self, epoch: usize) -> bool {
         self.faults.iter().any(|f| match f.kind {
             FaultKind::Kill { heal_at } => {
@@ -247,8 +462,45 @@ impl ChaosBackend {
                         None => true,
                     }
             }
+            FaultKind::Flaky { period, down_for, cycles } => {
+                if epoch < f.at {
+                    return false;
+                }
+                let rel = epoch - f.at;
+                rel / period < cycles && rel % period < down_for
+            }
             _ => false,
         })
+    }
+
+    /// Is the shard inside a partition (unwritable) window at `epoch`?
+    fn partitioned_at(&self, epoch: usize) -> bool {
+        self.faults.iter().any(|f| match f.kind {
+            FaultKind::Partition { until } => {
+                f.at <= epoch
+                    && match until {
+                        Some(u) => epoch < u,
+                        None => true,
+                    }
+            }
+            _ => false,
+        })
+    }
+
+    /// Consume a pending one-shot fsync fault, if one is due at the
+    /// current epoch.
+    fn take_fsync_fault(&mut self) -> bool {
+        for i in 0..self.faults.len() {
+            if !self.fired[i]
+                && matches!(self.faults[i].kind, FaultKind::FsyncFail)
+                && self.epoch >= self.faults[i].at
+            {
+                self.fired[i] = true;
+                self.fsync_failures += 1;
+                return true;
+            }
+        }
+        false
     }
 
     /// Injected write delay at `epoch`, if inside a slow window.
@@ -286,6 +538,11 @@ impl ShardBackend for ChaosBackend {
         if self.down_at(self.epoch) && self.down_at(iter) {
             bail!("shard {} is down (injected kill)", self.shard);
         }
+        // Same in-flight acceptance rule as kills: a put issued before
+        // the partition began still lands (it was on the wire).
+        if self.partitioned_at(self.epoch) && self.partitioned_at(iter) {
+            bail!("shard {} is partitioned (injected fault): reachable but unwritable", self.shard);
+        }
         if let Some(delay_us) = self.slow_at(iter) {
             if delay_us > 0 {
                 std::thread::sleep(std::time::Duration::from_micros(delay_us));
@@ -316,7 +573,22 @@ impl ShardBackend for ChaosBackend {
         if self.down_at(self.epoch) {
             bail!("shard {} is down (injected kill)", self.shard);
         }
+        // Partitioned shards still serve reads — that is the point.
         self.inner.get_atom(atom)
+    }
+
+    fn read_atom_into(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
+        if self.down_at(self.epoch) {
+            bail!("shard {} is down (injected kill)", self.shard);
+        }
+        self.inner.read_atom_into(atom, out)
+    }
+
+    fn atom_iter(&self, atom: usize) -> Result<Option<usize>> {
+        if self.down_at(self.epoch) {
+            bail!("shard {} is down (injected kill)", self.shard);
+        }
+        self.inner.atom_iter(atom)
     }
 
     fn bytes_written(&self) -> u64 {
@@ -331,6 +603,12 @@ impl ShardBackend for ChaosBackend {
         if self.down_at(self.epoch) {
             bail!("shard {} is down (injected kill)", self.shard);
         }
+        if self.take_fsync_fault() {
+            // The fence is acknowledged but never reaches the disk: the
+            // manifest on disk stays whatever the previous sync wrote —
+            // only a reopen (a crash) observes the loss.
+            return Ok(());
+        }
         self.inner.sync()
     }
 
@@ -343,6 +621,10 @@ impl ShardBackend for ChaosBackend {
 
     fn is_down(&self) -> bool {
         self.down_at(self.epoch)
+    }
+
+    fn is_writable(&self) -> bool {
+        !self.partitioned_at(self.epoch)
     }
 
     fn put_torn(&mut self, iter: usize, atoms: &[(usize, &[f32])], keep: usize) -> Result<()> {
@@ -361,7 +643,20 @@ impl ShardBackend for ChaosBackend {
         if self.down_at(self.epoch) {
             bail!("shard {} is down (injected kill)", self.shard);
         }
+        if self.take_fsync_fault() {
+            // The pass crashes inside the manifest rename window: phase
+            // one's fresh segments land on disk, the commit (manifest
+            // swap) never happens. In-process reads are unaffected; a
+            // reopen recovers the last manifest that reached the disk
+            // and removes the orphaned fresh segments.
+            self.inner.compact_abandoned()?;
+            return Ok(None);
+        }
         self.inner.compact()
+    }
+
+    fn compact_abandoned(&mut self) -> Result<()> {
+        self.inner.compact_abandoned()
     }
 }
 
@@ -489,6 +784,210 @@ mod tests {
     }
 
     #[test]
+    fn partition_window_blocks_writes_but_serves_reads() {
+        let plan = FaultPlan {
+            faults: vec![ShardFault {
+                shard: 0,
+                at: 3,
+                kind: FaultKind::Partition { until: Some(7) },
+            }],
+        };
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, plan.for_shard(0));
+        put1(&mut b, 1, 0, 1.0);
+        b.advance_epoch(4);
+        assert!(!b.is_down(), "a partitioned shard is not down");
+        assert!(!b.is_writable(), "but it refuses writes");
+        assert!(b.put_atoms(5, &[(0, &[5.0][..])]).is_err());
+        // In-flight write from before the partition still lands.
+        put1(&mut b, 2, 1, 2.0);
+        // Reads are served throughout the window.
+        assert_eq!(b.get_atom(0).unwrap().unwrap().values, vec![1.0]);
+        assert_eq!(b.get_atom(1).unwrap().unwrap().values, vec![2.0]);
+        b.advance_epoch(7);
+        assert!(b.is_writable(), "the partition lifts at `until`");
+        put1(&mut b, 8, 0, 8.0);
+        assert_eq!(b.get_atom(0).unwrap().unwrap().values, vec![8.0]);
+    }
+
+    #[test]
+    fn partitioned_shard_reroutes_writes_and_keeps_serving_reads() {
+        let plan = FaultPlan {
+            faults: vec![ShardFault {
+                shard: 1,
+                at: 3,
+                kind: FaultKind::Partition { until: Some(8) },
+            }],
+        };
+        let store = plan.mem_store(2);
+        store.put_atoms_at(1, &[(0, &[1.0][..]), (1, &[1.0][..])]).unwrap();
+        let report = store.advance_epoch(4);
+        assert!(report.newly_down.is_empty(), "a partition is not a death");
+        assert_eq!(store.down_shards(), Vec::<usize>::new());
+        assert_eq!(store.unwritable_shards(), vec![1]);
+        // Writes for atom 1 re-route to shard 0 (degraded), reads still
+        // find both the old record on the partitioned shard and the new
+        // one on the survivor.
+        store.put_atoms_at(5, &[(1, &[5.0][..])]).unwrap();
+        assert_eq!(store.degraded_records(), 1);
+        assert_eq!(store.placement_of(1), Some(0));
+        assert_eq!(store.get_atom_any(1).unwrap().unwrap().values, vec![5.0]);
+        assert_eq!(store.get_atom_any(0).unwrap().unwrap().values, vec![1.0]);
+        // After the window, writes land home again.
+        store.advance_epoch(8);
+        assert_eq!(store.unwritable_shards(), Vec::<usize>::new());
+        store.put_atoms_at(9, &[(1, &[9.0][..])]).unwrap();
+        assert_eq!(store.placement_of(1), Some(1));
+    }
+
+    #[test]
+    fn flaky_shard_cycles_down_and_heals() {
+        // period 4, down 2, 2 cycles from epoch 3: down at [3,5) and
+        // [7,9), up everywhere else and after the cycles end.
+        let plan = FaultPlan {
+            faults: vec![ShardFault {
+                shard: 0,
+                at: 3,
+                kind: FaultKind::Flaky { period: 4, down_for: 2, cycles: 2 },
+            }],
+        };
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, plan.for_shard(0));
+        let down_epochs: Vec<usize> = (0..12)
+            .filter(|&e| {
+                b.advance_epoch(e);
+                b.is_down()
+            })
+            .collect();
+        assert_eq!(down_epochs, vec![3, 4, 7, 8]);
+        // The store-level clock reports each transition exactly once.
+        let store = plan.mem_store(2);
+        let mut transitions = Vec::new();
+        for e in 1..12 {
+            let r = store.advance_epoch(e);
+            for s in r.newly_down {
+                transitions.push((e, "down", s));
+            }
+            for s in r.newly_healed {
+                transitions.push((e, "heal", s));
+            }
+        }
+        assert_eq!(
+            transitions,
+            vec![(3, "down", 0), (5, "heal", 0), (7, "down", 0), (9, "heal", 0)]
+        );
+    }
+
+    #[test]
+    fn fsync_fault_drops_one_fence_then_recovers() {
+        let dir = std::env::temp_dir().join(format!("scar-chaos-fsync-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let plan = FaultPlan {
+            faults: vec![ShardFault { shard: 0, at: 2, kind: FaultKind::FsyncFail }],
+        };
+        let store = plan.disk_store(&dir, 1).unwrap();
+        store.put_atoms_at(1, &[(0, &[1.0][..])]).unwrap();
+        store.sync_all().unwrap(); // epoch 1: before the fault, durable
+        store.advance_epoch(2);
+        store.put_atoms_at(2, &[(0, &[2.0][..])]).unwrap();
+        store.sync_all().unwrap(); // silently dropped by the fault
+        store.put_atoms_at(3, &[(0, &[3.0][..])]).unwrap();
+        // In-process reads are unaffected — only a crash observes it.
+        assert_eq!(store.get_atom_any(0).unwrap().unwrap().values, vec![3.0]);
+        drop(store);
+        let reopened = ShardedStore::open_disk(&dir, 1).unwrap();
+        let got = reopened.get_atom_any(0).unwrap().unwrap();
+        assert_eq!(
+            (got.iter, got.values),
+            (1, vec![1.0]),
+            "a crash must land on the last manifest that reached the disk"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn parse_spec_grammar_round_trips() {
+        let plan = FaultPlan::parse_spec(
+            "kill:1@6..9, slow:0@4..9x50, torn:2@8, part:0@4..12, flaky:2@5p8d3c2, fsync:0@7",
+        )
+        .unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                ShardFault { shard: 1, at: 6, kind: FaultKind::Kill { heal_at: Some(9) } },
+                ShardFault {
+                    shard: 0,
+                    at: 4,
+                    kind: FaultKind::Slow { until: Some(9), delay_us: 50 },
+                },
+                ShardFault { shard: 2, at: 8, kind: FaultKind::TornWrite },
+                ShardFault { shard: 0, at: 4, kind: FaultKind::Partition { until: Some(12) } },
+                ShardFault {
+                    shard: 2,
+                    at: 5,
+                    kind: FaultKind::Flaky { period: 8, down_for: 3, cycles: 2 },
+                },
+                ShardFault { shard: 0, at: 7, kind: FaultKind::FsyncFail },
+            ]
+        );
+        assert!(FaultPlan::parse_spec("").unwrap().is_empty());
+        assert!(FaultPlan::parse_spec("kill:1@forever").is_err());
+        assert!(FaultPlan::parse_spec("meteor:0@3").is_err());
+        assert!(FaultPlan::parse_spec("flaky:0@3").is_err(), "flaky needs p/d/c");
+    }
+
+    #[test]
+    fn validation_covers_new_families() {
+        // Flaky windows participate in the no-survivor check: shard 0
+        // killed forever, shard 1 flaky-down overlapping → rejected.
+        let no_reader = FaultPlan {
+            faults: vec![
+                ShardFault { shard: 0, at: 2, kind: FaultKind::Kill { heal_at: None } },
+                ShardFault {
+                    shard: 1,
+                    at: 4,
+                    kind: FaultKind::Flaky { period: 5, down_for: 2, cycles: 1 },
+                },
+            ],
+        };
+        assert!(no_reader.validate(2).is_err(), "flaky down phase leaves no reader");
+        // A kill plus a partition covering the other shard leaves no
+        // writable target → rejected, even though reads still work.
+        let no_writer = FaultPlan {
+            faults: vec![
+                ShardFault { shard: 0, at: 2, kind: FaultKind::Kill { heal_at: None } },
+                ShardFault { shard: 1, at: 3, kind: FaultKind::Partition { until: Some(9) } },
+            ],
+        };
+        assert!(no_writer.validate(2).is_err(), "no writable shard at 3..9");
+        // Partitions alone never violate the read-survivor rule.
+        let both_partitioned = FaultPlan {
+            faults: vec![
+                ShardFault { shard: 0, at: 2, kind: FaultKind::Partition { until: Some(5) } },
+                ShardFault { shard: 1, at: 6, kind: FaultKind::Partition { until: Some(9) } },
+            ],
+        };
+        both_partitioned.validate(2).unwrap();
+        // Degenerate flaky parameters are named errors.
+        let bad_flaky = |period, down_for, cycles| FaultPlan {
+            faults: vec![ShardFault {
+                shard: 0,
+                at: 2,
+                kind: FaultKind::Flaky { period, down_for, cycles },
+            }],
+        };
+        assert!(bad_flaky(4, 4, 1).validate(2).is_err(), "down_for must be < period");
+        assert!(bad_flaky(4, 0, 1).validate(2).is_err(), "down_for must be >= 1");
+        assert!(bad_flaky(4, 2, 0).validate(2).is_err(), "cycles must be >= 1");
+        let bad_partition = FaultPlan {
+            faults: vec![ShardFault {
+                shard: 0,
+                at: 5,
+                kind: FaultKind::Partition { until: Some(5) },
+            }],
+        };
+        assert!(bad_partition.validate(2).is_err(), "until must be > at");
+    }
+
+    #[test]
     fn disk_store_torn_write_drives_the_real_crc_fallback() {
         let dir = std::env::temp_dir().join(format!("scar-chaos-disk-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -519,8 +1018,9 @@ mod tests {
         let store = plan.mem_store(2);
         // Atom 1 homes on shard 1; before the kill it lands there.
         store.put_atoms_at(1, &[(0, &[1.0][..]), (1, &[1.0][..])]).unwrap();
-        let newly = store.advance_epoch(3);
-        assert_eq!(newly, vec![1]);
+        let report = store.advance_epoch(3);
+        assert_eq!(report.newly_down, vec![1]);
+        assert!(report.newly_healed.is_empty());
         assert_eq!(store.down_shards(), vec![1]);
         // Degraded write: atom 1 re-routes to the survivor.
         store.put_atoms_at(4, &[(1, &[4.0][..])]).unwrap();

@@ -35,8 +35,12 @@
 //!   frequency instead of growing snapshot memory without bound.
 //! * **Storage chaos**: every `maybe_checkpoint` call advances the
 //!   store's injected-fault clock ([`crate::chaos`]); when a shard dies,
-//!   the running checkpoint is re-persisted from the in-memory cache so
-//!   recovery can always read every atom through the survivors.
+//!   the [`RebuildPlan`](crate::recovery::RebuildPlan) planner
+//!   re-persists *only that shard's slice* (per the store's placement
+//!   map) from the in-memory cache, so recovery can always read every
+//!   atom through the survivors at ~`1/n_shards` of the old full
+//!   re-persist's write amplification; healed (flaky) shards re-adopt
+//!   their slices the same way.
 //! * **Segment compaction**
 //!   ([`with_compaction`](AsyncCheckpointer::with_compaction)): disk
 //!   shards accumulate superseded records; at every `flush` fence — the
@@ -48,7 +52,6 @@
 //!   `compaction_*` counters identical run to run and across sync/async
 //!   modes; the pass changes the on-disk footprint, never a read result.
 
-use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -56,6 +59,7 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Result};
 
 use crate::params::{AtomLayout, ParamStore};
+use crate::recovery::RebuildPlan;
 use crate::storage::ShardedStore;
 use crate::util::rng::Rng;
 
@@ -107,6 +111,16 @@ pub struct AsyncCheckpointer {
     compact_threshold: f64,
     /// Minimum on-disk shard size before compaction is worthwhile.
     compact_min_bytes: u64,
+    /// Atoms selectively rebuilt onto survivors after shard deaths.
+    rebuilt_atoms: u64,
+    /// Payload bytes those rebuilds re-persisted (the selective-recovery
+    /// headline number: ~`1/n_shards` of the checkpoint per death,
+    /// where the old full re-persist paid the whole checkpoint).
+    rebuilt_bytes: u64,
+    /// Atoms re-adopted by healed shards (flaky up phases).
+    readopted_atoms: u64,
+    /// Payload bytes those re-adoptions re-persisted.
+    readopted_bytes: u64,
 }
 
 impl AsyncCheckpointer {
@@ -177,6 +191,10 @@ impl AsyncCheckpointer {
             last_tick_iter: usize::MAX,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
+            rebuilt_atoms: 0,
+            rebuilt_bytes: 0,
+            readopted_atoms: 0,
+            readopted_bytes: 0,
         })
     }
 
@@ -209,6 +227,34 @@ impl AsyncCheckpointer {
 
     pub fn mode(&self) -> CheckpointMode {
         self.mode
+    }
+
+    /// Atoms selectively rebuilt onto survivors after storage-shard
+    /// deaths so far (the planner's slices, not full re-persists).
+    pub fn rebuilt_atoms(&self) -> u64 {
+        self.rebuilt_atoms
+    }
+
+    /// Payload bytes those rebuilds re-persisted. With a placement-aware
+    /// plan this is ~`1/n_shards` of the running checkpoint per death.
+    ///
+    /// Like `degraded_records`, the exact count is observability, not
+    /// part of the determinism contract: with async writers, whether an
+    /// in-flight pre-kill job lands before or after the tick can move an
+    /// atom's placement between a dead and a live shard — the rebuilt
+    /// *content* any read returns is identical either way.
+    pub fn rebuilt_bytes(&self) -> u64 {
+        self.rebuilt_bytes
+    }
+
+    /// Atoms re-adopted by healed shards (flaky up phases) so far.
+    pub fn readopted_atoms(&self) -> u64 {
+        self.readopted_atoms
+    }
+
+    /// Payload bytes those re-adoptions re-persisted.
+    pub fn readopted_bytes(&self) -> u64 {
+        self.readopted_bytes
     }
 
     pub fn policy(&self) -> CheckpointPolicy {
@@ -247,31 +293,62 @@ impl AsyncCheckpointer {
         Ok(Some(self.checkpoint_now(iter, current, layout, rng)?))
     }
 
-    /// Advance the store's injected-fault clock to `iter`. If a shard
-    /// just went down, re-persist the full running checkpoint from the
-    /// in-memory cache (the §4.3 cache exists precisely so the persistent
-    /// copy is re-derivable): the dead shard's records are unreachable,
-    /// and the re-written copies land on survivors through the degraded
-    /// router. Records keep their original saved iterations, so the
-    /// commit-watermark rule is unchanged.
+    /// Advance the store's injected-fault clock to `iter` and react to
+    /// health transitions through the rebuild planner
+    /// ([`RebuildPlan`](crate::recovery::RebuildPlan)):
+    ///
+    /// * a shard that just **died** gets exactly its slice — the atoms
+    ///   whose freshest routed record the placement map puts on it —
+    ///   re-persisted from the in-memory cache (the §4.3 cache exists
+    ///   precisely so the persistent copy is re-derivable), landing on
+    ///   survivors through the degraded router. This used to re-persist
+    ///   the *entire* running checkpoint; the planner cuts the write
+    ///   amplification to the dead shard's ~`1/n_shards` share
+    ///   (`rebuilt_atoms`/`rebuilt_bytes` report it).
+    /// * a shard that just **healed** (a flaky shard's up phase, or a
+    ///   kill window ending) re-adopts its slice: the atoms *routed* to
+    ///   it are re-persisted from the cache so the healed shard holds
+    ///   their freshest records again and a later death of a survivor
+    ///   has nothing of theirs to rebuild.
+    ///
+    /// Either way every record keeps its original saved iteration and
+    /// carries the exact cache value the freshest committed record
+    /// already holds, so the commit-watermark rule — and byte-identity
+    /// with the old full re-persist — is unchanged
+    /// (`rust/tests/chaos.rs` pins both).
     fn tick(&mut self, iter: usize, layout: &AtomLayout) -> Result<()> {
         if iter == self.last_tick_iter {
             return Ok(());
         }
         self.last_tick_iter = iter;
-        let newly_down = self.store.advance_epoch(iter);
-        if newly_down.is_empty() {
-            return Ok(());
+        let epoch = self.store.advance_epoch(iter);
+        if !epoch.newly_down.is_empty() {
+            let placement = self.store.placement_shards();
+            let plan = RebuildPlan::for_dead_shards(
+                &epoch.newly_down,
+                &placement,
+                |a| self.coord.saved_iter(a),
+                layout.n_atoms(),
+            );
+            let bytes = plan.execute_from_cache(self.coord.cache(), layout, &self.store)?;
+            self.rebuilt_atoms += plan.rebuilt_atoms() as u64;
+            self.rebuilt_bytes += bytes;
         }
-        let mut by_iter: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        for a in 0..layout.n_atoms() {
-            by_iter.entry(self.coord.saved_iter(a)).or_default().push(a);
-        }
-        for (saved, atoms) in by_iter {
-            let payloads = collect_payloads(&atoms, self.coord.cache(), layout);
-            let refs: Vec<(usize, &[f32])> =
-                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
-            self.store.put_atoms_at(saved, &refs)?;
+        if !epoch.newly_healed.is_empty() {
+            // Batch route resolution: one lock for the whole layout, not
+            // one shard_of() lock round-trip per atom.
+            let all: Vec<usize> = (0..layout.n_atoms()).collect();
+            let homes = self.store.shard_map(&all);
+            let atoms: Vec<usize> = all
+                .into_iter()
+                .zip(homes)
+                .filter(|(_, home)| epoch.newly_healed.contains(home))
+                .map(|(a, _)| a)
+                .collect();
+            let plan = RebuildPlan::for_atoms(&atoms, |a| self.coord.saved_iter(a));
+            let bytes = plan.execute_from_cache(self.coord.cache(), layout, &self.store)?;
+            self.readopted_atoms += plan.rebuilt_atoms() as u64;
+            self.readopted_bytes += bytes;
         }
         Ok(())
     }

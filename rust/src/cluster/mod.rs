@@ -80,6 +80,22 @@ fn spawn_node(id: usize, beat_tx: Sender<(usize, Instant)>) -> NodeHandle {
     NodeHandle { tx, join: Some(join), alive: true }
 }
 
+/// What one [`Cluster::recover_nodes`] call rebuilt: the re-homed atom
+/// ids, the reload's size (the dead nodes' slices only — the selective
+/// analogue of the storage layer's `rebuilt_bytes`), and the measured
+/// recovery perturbation ‖δ‖.
+#[derive(Debug, Clone, Default)]
+pub struct RecoverOutcome {
+    /// Atoms re-homed and reloaded from the running checkpoint.
+    pub moved: Vec<usize>,
+    /// ‖δ‖ over the moved atoms (reloaded vs the controller's view).
+    pub delta_norm: f64,
+    /// Atoms the reload plan covered (== `moved.len()`).
+    pub rebuilt_atoms: usize,
+    /// Payload bytes reloaded from the store.
+    pub rebuilt_bytes: u64,
+}
+
 /// A notable runtime event, for logs and assertions in tests.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClusterEvent {
@@ -235,12 +251,17 @@ impl Cluster {
 
     /// Recovery coordinator (§4.3): re-partition the dead nodes' atoms
     /// onto survivors and reload their values from the running checkpoint
-    /// in shared storage. `reference` is the controller's current view of
-    /// the full parameter state (the last scattered values) — the
-    /// recovery perturbation ‖δ‖ is the L2 distance between it and the
-    /// reloaded checkpoint values over the moved atoms, the cluster
-    /// analogue of the harness's pre/post-recovery distance (Thm 3.2's
-    /// δ). Returns the recovered atom ids and that ‖δ‖.
+    /// in shared storage. The reload covers exactly the moved atoms —
+    /// never the full state (the node-level analogue of the storage
+    /// layer's [`RebuildPlan`](crate::recovery::RebuildPlan) slices) —
+    /// read through the store's single-copy path, and its size is
+    /// reported as `rebuilt_atoms`/`rebuilt_bytes` alongside the
+    /// recovery ‖δ‖.
+    /// `reference` is the controller's current view of the full parameter
+    /// state (the last scattered values) — the recovery perturbation ‖δ‖
+    /// is the L2 distance between it and the reloaded checkpoint values
+    /// over the moved atoms, the cluster analogue of the harness's
+    /// pre/post-recovery distance (Thm 3.2's δ).
     pub fn recover_nodes(
         &mut self,
         dead: &[usize],
@@ -248,32 +269,36 @@ impl Cluster {
         store: &dyn CheckpointStore,
         iter: usize,
         reference: &ParamStore,
-    ) -> Result<(Vec<usize>, f64)> {
+    ) -> Result<RecoverOutcome> {
         if dead.is_empty() {
-            return Ok((Vec::new(), 0.0));
+            return Ok(RecoverOutcome::default());
         }
         let moved = self.partition.repartition(dead);
         if moved.is_empty() && self.partition.n_atoms() > 0 {
             bail!("all PS nodes failed; cannot recover in place");
         }
-        // Reload lost atoms from persistent storage into their new owners.
+        // Reload lost atoms from persistent storage into their new
+        // owners — the dead nodes' slices only, single-copy reads.
         let watermark = store.committed_iter();
         let mut per_node: HashMap<usize, Vec<(usize, Vec<f32>)>> = HashMap::new();
         let mut delta_sq = 0.0f64;
+        let mut rebuilt_bytes = 0u64;
+        let mut buf = Vec::new();
         for &a in &moved {
-            let saved = store
-                .get_atom(a)?
+            let saved_iter = store
+                .read_atom_into(a, &mut buf)?
                 .with_context(|| format!("atom {a} missing from checkpoint store"))?;
-            crate::recovery::check_watermark(a, saved.iter, watermark)?;
+            crate::recovery::check_watermark(a, saved_iter, watermark)?;
             reference.read_atom(layout, a, &mut self.scratch);
-            for (new, old) in saved.values.iter().zip(self.scratch.iter()) {
+            for (new, old) in buf.iter().zip(self.scratch.iter()) {
                 let d = (*new - *old) as f64;
                 delta_sq += d * d;
             }
+            rebuilt_bytes += (buf.len() * 4) as u64;
             per_node
                 .entry(self.partition.owner[a])
                 .or_default()
-                .push((a, saved.values));
+                .push((a, buf.clone()));
         }
         for (node, values) in per_node {
             let _ = self.nodes[node].tx.send(PsMsg::Put { values });
@@ -283,7 +308,12 @@ impl Cluster {
             atoms: moved.len(),
             iter,
         });
-        Ok((moved, delta_sq.sqrt()))
+        Ok(RecoverOutcome {
+            rebuilt_atoms: moved.len(),
+            rebuilt_bytes,
+            moved,
+            delta_norm: delta_sq.sqrt(),
+        })
     }
 
     pub fn alive_nodes(&self) -> Vec<usize> {
@@ -317,6 +347,13 @@ pub struct ClusterRunReport {
     /// event — the same convention as the harness path, so cluster
     /// trials feed the Thm 3.2 bound's ‖δ‖ instead of NaN.
     pub recovery_delta_norm: f64,
+    /// Atoms selectively rebuilt/reloaded across all recovery events:
+    /// node recoveries reload exactly the dead nodes' slices, and the
+    /// checkpointer rebuilds exactly dead storage shards' slices (plus
+    /// healed-shard re-adoptions) — never the full checkpoint.
+    pub rebuilt_atoms: u64,
+    /// Payload bytes those selective rebuilds moved.
+    pub rebuilt_bytes: u64,
     /// Segment-compaction passes run on the store during this job.
     pub compaction_runs: u64,
     /// Segment bytes those passes reclaimed.
@@ -451,6 +488,8 @@ pub fn run_cluster_training(
 
     let mut losses = Vec::with_capacity(job.iters);
     let mut recovery_delta_sq = 0.0f64;
+    let mut rebuilt_atoms = 0u64;
+    let mut rebuilt_bytes = 0u64;
     for iter in 0..job.iters {
         let mut killed_now = Vec::new();
         for &(kill_iter, node) in &job.kills {
@@ -476,9 +515,11 @@ pub fn run_cluster_training(
             // ‖δ‖ is measured against the controller's current full view
             // (the last scattered state still holds the dead nodes' lost
             // values), so cluster cells report a real perturbation size.
-            let (_, delta) =
+            let outcome =
                 cluster.recover_nodes(&dead, &layout, store.as_ref(), iter, trainer.state())?;
-            recovery_delta_sq += delta * delta;
+            recovery_delta_sq += outcome.delta_norm * outcome.delta_norm;
+            rebuilt_atoms += outcome.rebuilt_atoms as u64;
+            rebuilt_bytes += outcome.rebuilt_bytes;
             // New records follow the atoms' new owners.
             store.set_route_partition(&cluster.partition);
         }
@@ -502,6 +543,10 @@ pub fn run_cluster_training(
             break;
         }
     }
+    // Storage-shard deaths rebuilt selectively by the checkpointer count
+    // toward the same totals as node-slice reloads.
+    rebuilt_atoms += ck.rebuilt_atoms() + ck.readopted_atoms();
+    rebuilt_bytes += ck.rebuilt_bytes() + ck.readopted_bytes();
     ck.finish()?;
     let events = cluster.events.clone();
     let bytes = store.total_bytes();
@@ -515,6 +560,8 @@ pub fn run_cluster_training(
         checkpoint_bytes: bytes,
         degraded_records: degraded,
         recovery_delta_norm: recovery_delta_sq.sqrt(),
+        rebuilt_atoms,
+        rebuilt_bytes,
         compaction_runs,
         compaction_reclaimed_bytes,
     })
@@ -570,11 +617,15 @@ mod tests {
         std::thread::sleep(Duration::from_millis(40));
         let dead = cluster.poll_failures(1);
         assert_eq!(dead, vec![1]);
-        let (moved, delta) = cluster.recover_nodes(&dead, &layout, &store, 1, &state).unwrap();
-        assert!(!moved.is_empty());
+        let outcome = cluster.recover_nodes(&dead, &layout, &store, 1, &state).unwrap();
+        assert!(!outcome.moved.is_empty());
         // Recovery reloads exactly the values the reference holds
         // (x(0) everywhere), so the measured perturbation is zero.
-        assert_eq!(delta, 0.0);
+        assert_eq!(outcome.delta_norm, 0.0);
+        // The reload covers exactly the dead node's slice — never the
+        // full state — and its size is reported.
+        assert_eq!(outcome.rebuilt_atoms, outcome.moved.len());
+        assert_eq!(outcome.rebuilt_bytes, (outcome.moved.len() * 3 * 4) as u64);
         assert!(cluster.partition.atoms_of[1].is_empty());
         assert!(cluster.partition.is_consistent());
         // All atoms still gatherable.

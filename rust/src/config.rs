@@ -70,6 +70,12 @@ pub struct RunConfig {
     pub fail_flaky_max: usize,
     /// Where checkpoints go (empty = in-memory store).
     pub checkpoint_dir: String,
+    /// Injected storage-fault schedule in the compact CLI grammar
+    /// ([`FaultPlan::parse_spec`](crate::chaos::FaultPlan::parse_spec)):
+    /// comma-separated `kill:1@6..9`,
+    /// `slow:0@4..9x50`, `torn:2@8`, `part:0@4..12`, `flaky:2@5p8d3c2`,
+    /// `fsync:0@7` entries. Empty = no chaos.
+    pub chaos: String,
 }
 
 impl Default for RunConfig {
@@ -101,6 +107,7 @@ impl Default for RunConfig {
             fail_flaky_prob: 0.5,
             fail_flaky_max: 5,
             checkpoint_dir: String::new(),
+            chaos: String::new(),
         }
     }
 }
@@ -116,8 +123,12 @@ impl RunConfig {
         let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
         let mut cfg = RunConfig::default();
         let obj = v.as_obj().context("config must be a JSON object")?;
-        for (k, val) in obj {
-            cfg.apply(k, &json_to_str(val))?;
+        // `chaos` validates against `storage_shards`, so apply it after
+        // every other key regardless of the file's key order.
+        let mut keys: Vec<&String> = obj.keys().collect();
+        keys.sort_by_key(|k| *k == "chaos");
+        for k in keys {
+            cfg.apply(k, &json_to_str(&obj[k]))?;
         }
         Ok(cfg)
     }
@@ -180,6 +191,7 @@ impl RunConfig {
             }
             "fail_flaky_max" => self.fail_flaky_max = value.parse().context("fail_flaky_max")?,
             "checkpoint_dir" => self.checkpoint_dir = value.to_string(),
+            "chaos" => self.chaos = value.to_string(),
             other => bail!("unknown config key '{other}'"),
         }
         self.validate()
@@ -222,7 +234,17 @@ impl RunConfig {
         if let Some(plan) = self.failure_plan() {
             plan.validate().map_err(anyhow::Error::msg)?;
         }
+        // Chaos spec: both the grammar and the plan's shard/epoch rules
+        // must hold against the configured shard count.
+        crate::chaos::FaultPlan::parse_spec(&self.chaos)?.validate(self.storage_shards)?;
         Ok(())
+    }
+
+    /// The parsed storage-fault schedule (empty plan when no `chaos` key
+    /// is set). `validate` has already checked it, so this cannot fail
+    /// on a validated config.
+    pub fn chaos_plan(&self) -> Result<crate::chaos::FaultPlan> {
+        crate::chaos::FaultPlan::parse_spec(&self.chaos)
     }
 
     /// Writer-pool size after resolving the `0 = one per shard` default.
@@ -348,6 +370,32 @@ mod tests {
             cfg.failure_plan(),
             Some(FailurePlan::Flaky { prob, .. }) if (prob - 0.9).abs() < 1e-12
         ));
+    }
+
+    #[test]
+    fn chaos_key_parses_and_validates_against_shards() {
+        use crate::chaos::FaultKind;
+        let mut cfg = RunConfig::default();
+        cfg.apply("storage_shards", "3").unwrap();
+        cfg.apply("chaos", "kill:1@6..9,part:0@4..12").unwrap();
+        let plan = cfg.chaos_plan().unwrap();
+        assert_eq!(plan.faults.len(), 2);
+        assert_eq!(plan.faults[0].kind, FaultKind::Kill { heal_at: Some(9) });
+        // Out-of-range shard and grammar errors are rejected.
+        assert!(cfg.apply("chaos", "kill:7@6").is_err());
+        assert!(cfg.apply("chaos", "meteor:0@6").is_err());
+        // A single-shard store cannot lose its only shard.
+        let mut one = RunConfig::default();
+        assert!(one.apply("chaos", "kill:0@6").is_err());
+        // A config *file* may list `chaos` before `storage_shards`
+        // (BTreeMap order); from_file must still accept it.
+        let dir = std::env::temp_dir().join(format!("scar-cfg-chaos-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.json");
+        std::fs::write(&p, r#"{"chaos":"kill:1@6","storage_shards":2}"#).unwrap();
+        let cfg = RunConfig::from_file(&p).unwrap();
+        assert_eq!(cfg.chaos_plan().unwrap().faults.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

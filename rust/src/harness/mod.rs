@@ -228,6 +228,16 @@ pub struct TrialResult {
     pub iteration_cost: f64,
     pub censored: bool,
     pub recovery: RecoveryReport,
+    /// Atoms the checkpointer selectively rebuilt after storage-shard
+    /// deaths (plus healed-shard re-adoptions) during the trial — the
+    /// planner's slices, never the full checkpoint. 0 without chaos.
+    pub rebuilt_atoms: u64,
+    /// Payload bytes those rebuilds re-persisted.
+    pub rebuilt_bytes: u64,
+    /// Segment-compaction passes the trial's store ran.
+    pub compaction_runs: u64,
+    /// Segment bytes those passes reclaimed.
+    pub compaction_reclaimed_bytes: u64,
 }
 
 /// Cap for perturbed runs: generous multiple of the baseline so heavy
@@ -260,6 +270,10 @@ pub fn run_trial(
         iteration_cost: total as f64 - traj.converged_iters as f64,
         censored,
         recovery: report,
+        rebuilt_atoms: 0,
+        rebuilt_bytes: 0,
+        compaction_runs: 0,
+        compaction_reclaimed_bytes: 0,
     })
 }
 
@@ -365,6 +379,8 @@ pub fn run_plan_trial_with(
             break;
         }
     }
+    let rebuilt_atoms = ck.rebuilt_atoms() + ck.readopted_atoms();
+    let rebuilt_bytes = ck.rebuilt_bytes() + ck.readopted_bytes();
     ck.finish()?;
     report.delta_norm = delta_sq.sqrt();
     let (total, censored) = match total {
@@ -375,6 +391,10 @@ pub fn run_plan_trial_with(
         iteration_cost: total as f64 - traj.converged_iters as f64,
         censored,
         recovery: report,
+        rebuilt_atoms,
+        rebuilt_bytes,
+        compaction_runs: store.compaction_runs(),
+        compaction_reclaimed_bytes: store.compaction_reclaimed_bytes(),
     })
 }
 

@@ -39,6 +39,7 @@ fn main() -> Result<()> {
         "bound" => cmd_bound(&args),
         "advisor" => cmd_advisor(&args),
         "compact" => cmd_compact(&args),
+        "trend" => cmd_trend(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -54,7 +55,7 @@ fn print_help() {
     eprintln!(
         "scar — self-correcting checkpoint-based fault tolerance for ML training
 
-USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact> [flags]
+USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend> [flags]
 
   info                          list AOT artifacts
   train   --set k=v ...         local training loop with SCAR checkpointing
@@ -63,7 +64,7 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact> [flags]
           [--kills i:n,i:n]       schedule of node kills
   run-scenario <file.toml|json> declarative scenario sweep on a worker pool
           [--workers n] [--trials n] [--seed s] [--output f.csv] [--dry-run]
-          [--backend mem|disk] [--checkpoint-dir d]
+          [--backend mem|disk] [--checkpoint-dir d] [--metrics-out f.json]
   bound   --model <variant>     Theorem 3.2 iteration-cost bounds
   advisor --model <variant>     run a probe, estimate c on-the-fly, and
           [--fail-rate p]         recommend a checkpoint policy (§7)
@@ -71,6 +72,10 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact> [flags]
           [--shards n]            shard into fresh segments ([--threshold r]
                                   only compacts shards at/above that
                                   garbage ratio; default compacts any)
+  trend   --file trend.csv      append nightly metrics to an append-only
+          --commit <sha>          commit-keyed CSV and fail on >max-regress
+          --from-metrics a.json[,b.json...]   vs the previous row
+          [--max-regress 0.25] [--gate wall_secs,rebuilt_bytes]
 
 Config keys (for --set): model seed iters target_iters ps_nodes workers
   checkpoint_interval checkpoint_k checkpoint_mode(sync|async) selector
@@ -78,18 +83,19 @@ Config keys (for --set): model seed iters target_iters ps_nodes workers
   storage_compact_threshold storage_compact_min_bytes
   fail_fraction fail_geom_p fail_plan fail_nodes fail_cascade_extra
   fail_cascade_gap fail_flaky_period fail_flaky_prob fail_flaky_max
-  checkpoint_dir
+  checkpoint_dir chaos (e.g. \"kill:1@6..9,part:0@4..12,flaky:2@5p8d3c2\")
 
-Scenario files additionally take [chaos] (per-shard kill/slow/torn-write
-schedules), checkpoint_dir (disk-backed trials),
-[storage] compact_threshold/compact_min_bytes, deploy =
-\"harness\"|\"cluster\", and ps_nodes.
+Scenario files additionally take [chaos] (per-shard
+kill/slow/torn/partition/flaky/fsync schedules), checkpoint_dir
+(disk-backed trials), [storage] compact_threshold/compact_min_bytes,
+deploy = \"harness\"|\"cluster\", and ps_nodes.
 
 Bundled scenarios: scenarios/fig5.toml, fig6.toml, fig7.toml (paper
 figure sweeps), scenarios/failure_models.toml (correlated/cascade/flaky),
 scenarios/shard_failures.toml + shard_failures_cluster.toml (storage
 chaos), scenarios/disk_chaos.toml (the same chaos family over real
-on-disk shards, with compaction)."
+on-disk shards, with compaction), scenarios/selective_recovery.toml
+(partition + flaky-shard families over the selective rebuild planner)."
     );
 }
 
@@ -105,10 +111,95 @@ fn cmd_run_scenario(args: &Args) -> Result<()> {
         print!("{}", scn.describe());
         return Ok(());
     }
+    let t0 = std::time::Instant::now();
     let report = scenario::run_with_default_engine(&scn)?;
+    let wall_secs = t0.elapsed().as_secs_f64();
     print!("{}", report.render());
     if let Some(out) = scenario::write_output(&report, &scn)? {
         println!("-> {out}");
+    }
+    // Trend surface: sweep wall-clock plus the selective-rebuild and
+    // compaction totals, as one JSON object `scar trend` can aggregate.
+    if let Some(path) = args.str_opt("metrics-out") {
+        use scar::util::json::Json;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("scenario".to_string(), Json::from(report.scenario.as_str()));
+        obj.insert("wall_secs".to_string(), Json::Num(wall_secs));
+        for (k, v) in report.metrics() {
+            obj.insert(k, Json::Num(v));
+        }
+        let path = std::path::Path::new(path);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, Json::Obj(obj).to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("-> {}", path.display());
+    }
+    Ok(())
+}
+
+/// `scar trend`: fold one or more `--metrics-out` JSON files into a new
+/// commit-keyed row of an append-only trend CSV, and fail loudly when a
+/// gated metric regressed more than `--max-regress` vs the previous row
+/// (the nightly CI's regression gate).
+fn cmd_trend(args: &Args) -> Result<()> {
+    let file = args
+        .str_opt("file")
+        .context("usage: scar trend --file trend.csv --commit sha --from-metrics a.json[,b.json]")?;
+    let commit = args.str_opt("commit").context("scar trend needs --commit <sha>")?;
+    let sources = args
+        .str_opt("from-metrics")
+        .context("scar trend needs --from-metrics a.json[,b.json...]")?;
+    let max_regress = args.f64_or("max-regress", 0.25);
+    // Cost-like metrics (lower is better) gate the run; the rest are
+    // recorded for plots only. `wall_secs` and `rebuilt_bytes` regressing
+    // means sweeps got slower / selective recovery got less selective.
+    let gate_csv = args.str_or("gate", "wall_secs,rebuilt_bytes");
+    let gates: Vec<&str> = gate_csv.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+
+    // Sum same-named numeric metrics across the source files (several
+    // scenarios feed one nightly row).
+    let mut metrics: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+    for src in sources.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let text = std::fs::read_to_string(src)
+            .with_context(|| format!("reading metrics file {src}"))?;
+        let v = scar::util::json::Json::parse(&text)
+            .with_context(|| format!("parsing metrics file {src}"))?;
+        let obj = v
+            .as_obj()
+            .with_context(|| format!("metrics file {src} must be a JSON object"))?;
+        for (k, val) in obj {
+            if let Some(n) = val.as_f64() {
+                *metrics.entry(k.clone()).or_insert(0.0) += n;
+            }
+        }
+    }
+    if metrics.is_empty() {
+        bail!("no numeric metrics found in {sources}");
+    }
+    let regressions = scar::util::trend::append_and_check(
+        std::path::Path::new(file),
+        commit,
+        &metrics,
+        &gates,
+        max_regress,
+    )?;
+    println!("trend: appended {} metric(s) for {commit} to {file}", metrics.len());
+    for (k, v) in &metrics {
+        println!("  {k} = {v}");
+    }
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!("REGRESSION {r}");
+        }
+        bail!(
+            "{} metric(s) regressed more than {:.0}% vs the previous nightly",
+            regressions.len(),
+            max_regress * 100.0
+        );
     }
     Ok(())
 }
@@ -127,7 +218,7 @@ fn parse_config(args: &Args) -> Result<RunConfig> {
         "storage_compact_threshold", "storage_compact_min_bytes",
         "fail_fraction", "fail_geom_p", "fail_plan", "fail_nodes",
         "fail_cascade_extra", "fail_cascade_gap", "fail_flaky_period",
-        "fail_flaky_prob", "fail_flaky_max", "checkpoint_dir",
+        "fail_flaky_prob", "fail_flaky_max", "checkpoint_dir", "chaos",
     ] {
         if let Some(v) = args.str_opt(key) {
             cfg.apply(key, v)?;
@@ -163,10 +254,16 @@ fn cmd_info() -> Result<()> {
 }
 
 fn make_store(cfg: &RunConfig) -> Result<Arc<ShardedStore>> {
-    let store = if cfg.checkpoint_dir.is_empty() {
-        ShardedStore::new_mem(cfg.storage_shards)
-    } else {
-        ShardedStore::open_disk(std::path::Path::new(&cfg.checkpoint_dir), cfg.storage_shards)?
+    // The `chaos` config key wraps every shard in the fault-injecting
+    // backend (the same plans scenario files take), so `scar
+    // train`/`cluster` can drive storage faults straight from the CLI.
+    let plan = cfg.chaos_plan()?;
+    let store = match (cfg.checkpoint_dir.is_empty(), plan.is_empty()) {
+        (true, true) => ShardedStore::new_mem(cfg.storage_shards),
+        (true, false) => plan.mem_store(cfg.storage_shards),
+        (false, _) => {
+            plan.disk_store(std::path::Path::new(&cfg.checkpoint_dir), cfg.storage_shards)?
+        }
     };
     Ok(Arc::new(store))
 }
@@ -258,12 +355,29 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
     }
+    let (rebuilt_atoms, rebuilt_bytes) = (ck.rebuilt_atoms(), ck.rebuilt_bytes());
+    let (readopted_atoms, readopted_bytes) = (ck.readopted_atoms(), ck.readopted_bytes());
     ck.finish()?;
     println!(
         "done in {:.1}s; checkpoint bytes written: {}",
         t0.elapsed().as_secs_f64(),
         scar::util::fmt_bytes(store.total_bytes())
     );
+    if rebuilt_atoms > 0 {
+        println!(
+            "selective rebuild after shard death(s): {} atom(s), {} (placement-planned \
+             slices, not full re-persists)",
+            rebuilt_atoms,
+            scar::util::fmt_bytes(rebuilt_bytes)
+        );
+    }
+    if readopted_atoms > 0 {
+        println!(
+            "healed shards re-adopted {} atom(s), {}",
+            readopted_atoms,
+            scar::util::fmt_bytes(readopted_bytes)
+        );
+    }
     if store.compaction_runs() > 0 {
         println!(
             "compaction: {} pass(es), {} reclaimed; on disk now: {}",
@@ -324,6 +438,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!(
             "degraded storage writes (re-homed off a dead shard): {}",
             report.degraded_records
+        );
+    }
+    if report.rebuilt_atoms > 0 {
+        println!(
+            "selective rebuilds (dead node/shard slices only): {} atom(s), {}",
+            report.rebuilt_atoms,
+            scar::util::fmt_bytes(report.rebuilt_bytes)
         );
     }
     if report.compaction_runs > 0 {

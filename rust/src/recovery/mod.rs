@@ -13,10 +13,14 @@
 //! [`RecoveryReport`] carries the measured ‖δ‖ so experiments can feed the
 //! Theorem 3.2 bound.
 
+pub mod planner;
+
 use anyhow::{Context, Result};
 
 use crate::params::{AtomLayout, ParamStore};
 use crate::storage::CheckpointStore;
+
+pub use planner::RebuildPlan;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RecoveryMode {
@@ -115,14 +119,18 @@ pub fn recover(
     };
     let watermark = store.committed_iter();
     let mut elems = 0usize;
+    // Single-copy restore path: records decode straight into `buf` (on
+    // mmap-backed disk shards, directly out of the mapped segment) and
+    // from there into the live state — no intermediate `SavedAtom`.
+    let mut buf = Vec::new();
     for &a in atoms {
-        let saved = store
-            .get_atom(a)
+        let saved_iter = store
+            .read_atom_into(a, &mut buf)
             .with_context(|| format!("reading atom {a} from checkpoint store"))?
             .with_context(|| format!("atom {a} missing from running checkpoint"))?;
-        check_watermark(a, saved.iter, watermark)?;
-        elems += saved.values.len();
-        state.write_atom(layout, a, &saved.values);
+        check_watermark(a, saved_iter, watermark)?;
+        elems += buf.len();
+        state.write_atom(layout, a, &buf);
     }
     Ok(RecoveryReport {
         mode,

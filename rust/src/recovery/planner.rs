@@ -1,0 +1,175 @@
+//! Per-shard rebuild planner: turn a set of dead storage shards into the
+//! *minimal* set of atom slices that must be re-persisted.
+//!
+//! SCAR's core claim is that recovery cost is governed by the
+//! perturbation you re-introduce, so the right system rebuilds only the
+//! lost slice of state instead of blasting the full checkpoint back out.
+//! Before this planner the checkpoint front-end re-persisted the
+//! **entire** running checkpoint from its in-memory cache whenever any
+//! shard died — write amplification proportional to the full model, for a
+//! fault that only ever takes out `1/n_shards` of the records.
+//!
+//! The planner consumes the [`ShardedStore`] **placement map** (per atom:
+//! which shard holds its freshest routed record) and the coordinator's
+//! per-atom saved iterations, and produces a [`RebuildPlan`]: exactly the
+//! atoms whose freshest committed record lived on a dead shard, grouped
+//! by the iteration their replacement records must keep (records keep
+//! their original saved iterations, so the commit-watermark recovery rule
+//! is unchanged). Executing the plan writes those slices from the
+//! coordinator's in-memory running-checkpoint cache (§4.3 keeps that
+//! cache precisely so the persistent copy is re-derivable) through the
+//! store's degraded router, which re-homes them onto survivors.
+//!
+//! The same plan shape also describes the *heal* direction: a flaky shard
+//! that comes back re-adopts its slice (the atoms routed to it) via
+//! [`RebuildPlan::for_atoms`], so its records are fresh again and a later
+//! death of a survivor does not have to rebuild them.
+//!
+//! Byte-identity contract: every record the plan writes carries `(saved
+//! iteration, cache value)` — exactly the payload the freshest committed
+//! record for that atom already holds — so recovered parameters after a
+//! selective rebuild are byte-identical to the old full re-persist
+//! (pinned in `rust/tests/chaos.rs`), while `rebuilt_bytes` drops from
+//! the full checkpoint size to roughly `1/n_shards` of it.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::params::{AtomLayout, ParamStore};
+use crate::storage::ShardedStore;
+
+/// A minimal rebuild: the atom slices whose freshest committed records
+/// were lost (or must be re-adopted), each pinned to the iteration its
+/// replacement record keeps.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RebuildPlan {
+    /// Shards whose loss this plan repairs (empty for heal/re-adoption
+    /// plans built from an explicit atom set).
+    pub dead_shards: Vec<usize>,
+    /// `(atom, record iteration)` pairs to rebuild, ascending by atom.
+    pub atoms: Vec<(usize, usize)>,
+}
+
+impl RebuildPlan {
+    /// Plan the rebuild for `dead` shards: an atom needs rebuilding iff
+    /// its freshest routed record is placed on a dead shard. Unknown
+    /// placement (a store reopened from disk, whose placement map only
+    /// reflects writes through this handle) is treated as possibly-dead —
+    /// conservative, never lossy.
+    pub fn for_dead_shards(
+        dead: &[usize],
+        placement: &[Option<usize>],
+        saved_iter: impl Fn(usize) -> usize,
+        n_atoms: usize,
+    ) -> RebuildPlan {
+        let mut atoms = Vec::new();
+        for atom in 0..n_atoms {
+            let lost = match placement.get(atom).copied().flatten() {
+                Some(shard) => dead.contains(&shard),
+                None => true,
+            };
+            if lost {
+                atoms.push((atom, saved_iter(atom)));
+            }
+        }
+        RebuildPlan { dead_shards: dead.to_vec(), atoms }
+    }
+
+    /// Plan for an explicit atom set (heal re-adoption, and the cluster's
+    /// dead-node slices).
+    pub fn for_atoms(atoms: &[usize], saved_iter: impl Fn(usize) -> usize) -> RebuildPlan {
+        let mut atoms: Vec<(usize, usize)> = atoms.iter().map(|&a| (a, saved_iter(a))).collect();
+        atoms.sort_unstable();
+        RebuildPlan { dead_shards: Vec::new(), atoms }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.atoms.is_empty()
+    }
+
+    /// Atoms this plan rebuilds.
+    pub fn rebuilt_atoms(&self) -> usize {
+        self.atoms.len()
+    }
+
+    /// The plan's slices grouped by the iteration their records keep —
+    /// one store write per group, deterministic order (BTreeMap).
+    pub fn by_iter(&self) -> BTreeMap<usize, Vec<usize>> {
+        let mut slices: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &(atom, iter) in &self.atoms {
+            slices.entry(iter).or_default().push(atom);
+        }
+        slices
+    }
+
+    /// Execute against the coordinator's in-memory running-checkpoint
+    /// cache: write each slice at its saved iteration through the store's
+    /// (degraded) router, so replacement records land on live shards.
+    /// Returns the payload bytes written — the `rebuilt_bytes` the
+    /// reports carry.
+    pub fn execute_from_cache(
+        &self,
+        cache: &ParamStore,
+        layout: &AtomLayout,
+        store: &ShardedStore,
+    ) -> Result<u64> {
+        let mut bytes = 0u64;
+        let mut buf = Vec::new();
+        for (iter, atoms) in self.by_iter() {
+            let mut payloads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(atoms.len());
+            for &a in &atoms {
+                cache.read_atom(layout, a, &mut buf);
+                bytes += (buf.len() * 4) as u64;
+                payloads.push((a, buf.clone()));
+            }
+            let refs: Vec<(usize, &[f32])> =
+                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+            store.put_atoms_at(iter, &refs)?;
+        }
+        Ok(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{AtomLayout, ParamStore, Tensor};
+
+    #[test]
+    fn plans_only_dead_placed_atoms() {
+        // Atoms 0..6; placement: even atoms on shard 0, odd on shard 1,
+        // atom 5 unknown (conservatively rebuilt).
+        let placement = vec![Some(0), Some(1), Some(0), Some(1), Some(0), None];
+        let plan = RebuildPlan::for_dead_shards(&[1], &placement, |a| 10 + a, 6);
+        assert_eq!(plan.dead_shards, vec![1]);
+        assert_eq!(plan.atoms, vec![(1, 11), (3, 13), (5, 15)]);
+        assert_eq!(plan.rebuilt_atoms(), 3);
+        let by = plan.by_iter();
+        assert_eq!(by.len(), 3);
+        assert_eq!(by[&11], vec![1]);
+
+        // Nothing placed on the dead shard: the plan is empty — the old
+        // behavior re-persisted the whole checkpoint here.
+        let all_safe = vec![Some(0); 6];
+        assert!(RebuildPlan::for_dead_shards(&[1], &all_safe, |_| 0, 6).is_empty());
+    }
+
+    #[test]
+    fn executes_slices_from_the_cache_and_counts_bytes() {
+        let mut cache = ParamStore::new(vec![Tensor::zeros("w", &[4, 2])]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&cache, "w"));
+        for (i, v) in cache.get_mut("w").data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let store = ShardedStore::new_mem(2);
+        // Saved iters: atom 1 at 4, atom 3 at 4, grouped into one write.
+        let plan = RebuildPlan::for_atoms(&[1, 3], |_| 4);
+        let bytes = plan.execute_from_cache(&cache, &layout, &store).unwrap();
+        assert_eq!(bytes, 16, "2 atoms x 2 f32s x 4 bytes");
+        let got = store.get_atom_any(3).unwrap().unwrap();
+        assert_eq!(got.iter, 4);
+        assert_eq!(got.values, vec![6.0, 7.0]);
+        assert!(store.get_atom_any(0).unwrap().is_none(), "unplanned atom untouched");
+    }
+}

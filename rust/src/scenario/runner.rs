@@ -62,6 +62,16 @@ pub struct CellReport {
     pub censored_trials: Vec<bool>,
     pub censored: usize,
     pub summary: Summary,
+    /// Atoms selectively rebuilt (storage-shard deaths + heal
+    /// re-adoptions + cluster node-slice reloads), summed over trials.
+    /// Not part of the rendered report — the trend/metrics surface.
+    pub rebuilt_atoms: u64,
+    /// Payload bytes those rebuilds moved, summed over trials.
+    pub rebuilt_bytes: u64,
+    /// Segment-compaction passes, summed over trials.
+    pub compaction_runs: u64,
+    /// Segment bytes compaction reclaimed, summed over trials.
+    pub compaction_reclaimed_bytes: u64,
 }
 
 impl CellReport {
@@ -135,6 +145,36 @@ impl ScenarioReport {
             out.push('\n');
         }
         out
+    }
+
+    /// Aggregate counters for the nightly trend artifact (`scar trend`):
+    /// selective-rebuild and compaction totals summed over every (panel,
+    /// cell, trial). Deliberately *not* part of [`render`] /
+    /// [`to_csv`] — those are pinned byte-identical across storage
+    /// configurations, while these counters legitimately vary with the
+    /// fault plan (that variation is the thing the trend tracks).
+    ///
+    /// [`render`]: ScenarioReport::render
+    /// [`to_csv`]: ScenarioReport::to_csv
+    pub fn metrics(&self) -> std::collections::BTreeMap<String, f64> {
+        let mut rebuilt_atoms = 0u64;
+        let mut rebuilt_bytes = 0u64;
+        let mut compaction_runs = 0u64;
+        let mut compaction_reclaimed = 0u64;
+        for p in &self.panels {
+            for c in &p.cells {
+                rebuilt_atoms += c.rebuilt_atoms;
+                rebuilt_bytes += c.rebuilt_bytes;
+                compaction_runs += c.compaction_runs;
+                compaction_reclaimed += c.compaction_reclaimed_bytes;
+            }
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("rebuilt_atoms".to_string(), rebuilt_atoms as f64);
+        m.insert("rebuilt_bytes".to_string(), rebuilt_bytes as f64);
+        m.insert("compaction_runs".to_string(), compaction_runs as f64);
+        m.insert("compaction_reclaimed_bytes".to_string(), compaction_reclaimed as f64);
+        m
     }
 
     /// Per-trial CSV (`scenario,panel,cell,trial,cost,delta,bound,censored`).
@@ -374,6 +414,10 @@ struct Outcome {
     cost: f64,
     delta: f64,
     censored: bool,
+    rebuilt_atoms: u64,
+    rebuilt_bytes: u64,
+    compaction_runs: u64,
+    compaction_reclaimed_bytes: u64,
 }
 
 fn job_rng(scn_seed: u64, cell: usize, trial: usize) -> Rng {
@@ -579,6 +623,10 @@ fn run_cluster_job(
         // recovery distance, feeding the same report column.
         delta: report.recovery_delta_norm,
         censored,
+        rebuilt_atoms: report.rebuilt_atoms,
+        rebuilt_bytes: report.rebuilt_bytes,
+        compaction_runs: report.compaction_runs,
+        compaction_reclaimed_bytes: report.compaction_reclaimed_bytes,
     })
 }
 
@@ -587,7 +635,15 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
         JobKind::Perturb { kind, at_iter } => {
             let (delta, cost, censored) =
                 harness::run_perturbation_trial(trainer, traj, *at_iter, *kind, job.seed)?;
-            Ok(Outcome { cost, delta, censored })
+            Ok(Outcome {
+                cost,
+                delta,
+                censored,
+                rebuilt_atoms: 0,
+                rebuilt_bytes: 0,
+                compaction_runs: 0,
+                compaction_reclaimed_bytes: 0,
+            })
         }
         JobKind::Plan { setup, mode, events } => {
             let r = harness::run_plan_trial_with(trainer, traj, setup, *mode, events, job.seed)?;
@@ -595,6 +651,10 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
                 cost: r.iteration_cost,
                 delta: r.recovery.delta_norm,
                 censored: r.censored,
+                rebuilt_atoms: r.rebuilt_atoms,
+                rebuilt_bytes: r.rebuilt_bytes,
+                compaction_runs: r.compaction_runs,
+                compaction_reclaimed_bytes: r.compaction_reclaimed_bytes,
             })
         }
         JobKind::Cluster { setup, n_nodes, kills } => {
@@ -681,6 +741,10 @@ fn run_panel(
         let mut bounds = Vec::with_capacity(scn.trials);
         let mut censored_trials = Vec::with_capacity(scn.trials);
         let mut censored = 0usize;
+        let mut rebuilt_atoms = 0u64;
+        let mut rebuilt_bytes = 0u64;
+        let mut compaction_runs = 0u64;
+        let mut compaction_reclaimed_bytes = 0u64;
         for trial in 0..scn.trials {
             let idx = ci * scn.trials + trial;
             let out = results[idx]
@@ -694,6 +758,10 @@ fn run_panel(
             deltas.push(out.delta);
             censored_trials.push(out.censored);
             censored += out.censored as usize;
+            rebuilt_atoms += out.rebuilt_atoms;
+            rebuilt_bytes += out.rebuilt_bytes;
+            compaction_runs += out.compaction_runs;
+            compaction_reclaimed_bytes += out.compaction_reclaimed_bytes;
             let bound = match &jobs[idx].kind {
                 JobKind::Perturb { at_iter, .. }
                     if c.is_finite() && c > 0.0 && c < 1.0 && x0 > 0.0 =>
@@ -717,6 +785,10 @@ fn run_panel(
             censored_trials,
             censored,
             summary,
+            rebuilt_atoms,
+            rebuilt_bytes,
+            compaction_runs,
+            compaction_reclaimed_bytes,
         });
     }
 

@@ -723,14 +723,16 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
 }
 
 /// Parse the `[chaos]` table: per-shard fault schedules under the keys
-/// `kill`, `slow`, and `torn`, each an array of tables.
+/// `kill`, `slow`, `torn`, `partition`, `flaky`, and `fsync`, each an
+/// array of tables.
 fn parse_chaos(v: &Json, ctx: &str) -> Result<FaultPlan> {
     let obj = v
         .as_obj()
         .with_context(|| format!("{ctx}: 'chaos' must be a table"))?;
+    const CHAOS_KEYS: &[&str] = &["kill", "slow", "torn", "partition", "flaky", "fsync"];
     for key in obj.keys() {
-        if !["kill", "slow", "torn"].contains(&key.as_str()) {
-            bail!("{ctx}: chaos: unknown key '{key}' (kill|slow|torn)");
+        if !CHAOS_KEYS.contains(&key.as_str()) {
+            bail!("{ctx}: chaos: unknown key '{key}' (expected one of {CHAOS_KEYS:?})");
         }
     }
     /// The `chaos.<key>` array as a list of tables (empty when absent).
@@ -796,6 +798,45 @@ fn parse_chaos(v: &Json, ctx: &str) -> Result<FaultPlan> {
         }
         let (shard, at) = shard_at(e, "torn", ctx)?;
         faults.push(ShardFault { shard, at, kind: FaultKind::TornWrite });
+    }
+    for e in entries(obj, "partition", ctx)? {
+        for key in e.keys() {
+            if !["shard", "at", "until"].contains(&key.as_str()) {
+                bail!("{ctx}: chaos.partition: unknown key '{key}' (shard|at|until)");
+            }
+        }
+        let (shard, at) = shard_at(e, "partition", ctx)?;
+        let until = opt_usize(e, "until", ctx)?;
+        faults.push(ShardFault { shard, at, kind: FaultKind::Partition { until } });
+    }
+    for e in entries(obj, "flaky", ctx)? {
+        for key in e.keys() {
+            if !["shard", "at", "period", "down_for", "cycles"].contains(&key.as_str()) {
+                bail!(
+                    "{ctx}: chaos.flaky: unknown key '{key}' \
+                     (shard|at|period|down_for|cycles)"
+                );
+            }
+        }
+        let (shard, at) = shard_at(e, "flaky", ctx)?;
+        faults.push(ShardFault {
+            shard,
+            at,
+            kind: FaultKind::Flaky {
+                period: opt_usize(e, "period", ctx)?.unwrap_or(5),
+                down_for: opt_usize(e, "down_for", ctx)?.unwrap_or(2),
+                cycles: opt_usize(e, "cycles", ctx)?.unwrap_or(2),
+            },
+        });
+    }
+    for e in entries(obj, "fsync", ctx)? {
+        for key in e.keys() {
+            if !["shard", "at"].contains(&key.as_str()) {
+                bail!("{ctx}: chaos.fsync: unknown key '{key}' (shard|at)");
+            }
+        }
+        let (shard, at) = shard_at(e, "fsync", ctx)?;
+        faults.push(ShardFault { shard, at, kind: FaultKind::FsyncFail });
     }
     Ok(FaultPlan { faults })
 }
@@ -1211,6 +1252,57 @@ norm_log10 = [-2.0, 0.0]
         assert_eq!(s.chaos.faults[2].kind, FaultKind::TornWrite);
         let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
         assert_eq!(s, again);
+    }
+
+    #[test]
+    fn partition_flaky_fsync_chaos_keys_parse_and_roundtrip() {
+        use crate::chaos::FaultKind;
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=4\n\
+             [[chaos.partition]]\nshard=0\nat=4\nuntil=12\n\
+             [[chaos.flaky]]\nshard=2\nat=6\nperiod=8\ndown_for=3\ncycles=2\n\
+             [[chaos.fsync]]\nshard=1\nat=7\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.chaos.faults.len(), 3);
+        assert_eq!(s.chaos.faults[0].kind, FaultKind::Partition { until: Some(12) });
+        assert_eq!(
+            s.chaos.faults[1].kind,
+            FaultKind::Flaky { period: 8, down_for: 3, cycles: 2 }
+        );
+        assert_eq!(s.chaos.faults[2].kind, FaultKind::FsyncFail);
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+        // Defaults fill missing flaky parameters.
+        let d = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=2\n\
+             [[chaos.flaky]]\nshard=1\nat=3\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            d.chaos.faults[0].kind,
+            FaultKind::Flaky { period: 5, down_for: 2, cycles: 2 }
+        );
+        // Validation runs through the shared FaultPlan rules: a flaky
+        // window overlapping a forever-kill on the only other shard is
+        // rejected with a named epoch.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=2\n\
+             [[chaos.kill]]\nshard=0\nat=2\n\
+             [[chaos.flaky]]\nshard=1\nat=3\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("down at iteration"), "{e:?}");
+        // Unknown per-entry keys are named.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[chaos.partition]]\nshard=0\nat=3\nheal=9\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("heal"), "{e:?}");
     }
 
     #[test]

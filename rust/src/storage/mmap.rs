@@ -3,8 +3,17 @@
 //!
 //! A sealed segment (one the store no longer appends to) is mapped once
 //! and every record read is served straight out of the mapping — no
-//! `seek`/`read` syscalls, no intermediate record buffer; the only copy
-//! left is the little-endian `f32` decode into the caller's `SavedAtom`.
+//! `seek`/`read` syscalls, no intermediate record buffer. Two read forms
+//! sit on top of a mapping:
+//!
+//! * owned — `DiskStore::get_atom` decodes the payload into a fresh
+//!   `SavedAtom` (one copy: the little-endian `f32` decode);
+//! * borrowed — `DiskStore::get_atom_ref` hands back an
+//!   [`AtomRef`](super::AtomRef) view of the CRC-validated payload bytes
+//!   *inside* the mapping, so the caller's decode (straight into its own
+//!   buffer, e.g. the recovery planner's slice copy) is the only copy.
+//!   The view holds a read borrow on the store's segment-map cache:
+//!   decode and drop it before the next write or compaction.
 //!
 //! The mapping uses raw `mmap`/`munmap` declarations: on unix targets std
 //! already links the platform C library, so no external crate is needed

@@ -14,7 +14,9 @@
 //!     implements the paper's *running checkpoint* (a mix of atoms saved
 //!     at different iterations, §4.2). Sealed segments are mmap'd once
 //!     and served zero-copy (the `mmap` module, feature-gated with a
-//!     pread fallback); superseded records are reclaimed by
+//!     pread fallback): [`DiskStore::get_atom_ref`] hands back a borrowed
+//!     [`AtomRef`] view of the validated payload, so the caller's decode
+//!     is the only copy; superseded records are reclaimed by
 //!     [`DiskStore::compact`] (fresh segments + atomic manifest swap).
 //! * [`CheckpointStore`] — what the checkpoint coordinator, recovery
 //!   coordinator, and cluster consume: the backend surface plus the
@@ -32,7 +34,7 @@
 mod mmap;
 pub mod shard;
 
-use std::cell::{Cell, RefCell};
+use std::cell::{Cell, Ref, RefCell};
 use std::collections::HashMap;
 use std::fs;
 use std::io::{Read, Write};
@@ -43,13 +45,96 @@ use anyhow::{bail, Context, Result};
 use self::mmap::SegmentMap;
 use crate::util::json::Json;
 
-pub use shard::ShardedStore;
+pub use shard::{EpochReport, ShardedStore};
 
 /// A saved atom: which iteration it was captured at, and its values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SavedAtom {
     pub iter: usize,
     pub values: Vec<f32>,
+}
+
+/// A borrowed view of one validated record's payload inside a mapped
+/// segment — the zero-copy read surface of [`DiskStore`]. Holding an
+/// `AtomRef` keeps a read borrow on the store's segment-map cache, so
+/// decode it (via [`copy_into`](AtomRef::copy_into) or
+/// [`to_saved`](AtomRef::to_saved)) and drop it before writing.
+pub struct AtomRef<'a> {
+    iter: usize,
+    /// Little-endian f32 payload bytes, CRC-validated before this view
+    /// was handed out.
+    payload: Ref<'a, [u8]>,
+}
+
+impl AtomRef<'_> {
+    /// Iteration the record was captured at.
+    pub fn iter(&self) -> usize {
+        self.iter
+    }
+
+    /// f32 element count of the payload.
+    pub fn len(&self) -> usize {
+        self.payload.len() / 4
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    /// Decode the payload into `out` (cleared first) — the single copy of
+    /// the zero-copy path.
+    pub fn copy_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len());
+        out.extend(
+            self.payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+        );
+    }
+
+    /// Owned form, byte-equal to the pread path's [`SavedAtom`].
+    pub fn to_saved(&self) -> SavedAtom {
+        let mut values = Vec::new();
+        self.copy_into(&mut values);
+        SavedAtom { iter: self.iter, values }
+    }
+}
+
+/// Outcome of a [`DiskStore::get_atom_ref`] read: a borrowed view when
+/// the record sits in a mapped sealed segment, the owned fallback
+/// otherwise (active segment, or a platform/build without mmap). The two
+/// forms are byte-equal for the same record.
+pub enum AtomRead<'a> {
+    Mapped(AtomRef<'a>),
+    Owned(SavedAtom),
+}
+
+impl AtomRead<'_> {
+    pub fn iter(&self) -> usize {
+        match self {
+            AtomRead::Mapped(r) => r.iter(),
+            AtomRead::Owned(s) => s.iter,
+        }
+    }
+
+    /// Decode into `out` (cleared first); one copy either way.
+    pub fn copy_into(&self, out: &mut Vec<f32>) {
+        match self {
+            AtomRead::Mapped(r) => r.copy_into(out),
+            AtomRead::Owned(s) => {
+                out.clear();
+                out.extend_from_slice(&s.values);
+            }
+        }
+    }
+
+    pub fn to_saved(self) -> SavedAtom {
+        match self {
+            AtomRead::Mapped(r) => r.to_saved(),
+            AtomRead::Owned(s) => s,
+        }
+    }
 }
 
 /// The primitive write/read surface of one storage shard.
@@ -60,6 +145,28 @@ pub trait ShardBackend: Send {
 
     /// Latest saved record for an atom, if any.
     fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>>;
+
+    /// Latest record decoded straight into `out` (cleared first),
+    /// returning the record's iteration. The default buys nothing over
+    /// [`get_atom`](ShardBackend::get_atom); backends with a borrowed
+    /// read path ([`DiskStore`]'s mmap'd segments) override it so the
+    /// decode into `out` is the only copy.
+    fn read_atom_into(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
+        Ok(self.get_atom(atom)?.map(|s| {
+            out.clear();
+            out.extend_from_slice(&s.values);
+            s.iter
+        }))
+    }
+
+    /// Cheap peek at the latest *readable* record's iteration, without
+    /// decoding its payload. May over-report when an index entry points
+    /// at a physically corrupt record the full read would fall back
+    /// from — callers that care must verify against the actual read
+    /// (see [`ShardedStore::get_atom_any_ref`](shard::ShardedStore::get_atom_any_ref)).
+    fn atom_iter(&self, atom: usize) -> Result<Option<usize>> {
+        Ok(self.get_atom(atom)?.map(|s| s.iter))
+    }
 
     /// Total payload bytes written so far (for §4.2/§5.5 accounting).
     fn bytes_written(&self) -> u64;
@@ -84,6 +191,15 @@ pub trait ShardBackend: Send {
     /// re-route writes and skip reads in degraded mode.
     fn is_down(&self) -> bool {
         false
+    }
+
+    /// Whether the shard currently accepts writes. A *partitioned* shard
+    /// (injected network fault — reachable but unwritable) reports
+    /// `false` here while still serving reads; the router re-routes its
+    /// writes without touching the read path. Healthy backends are
+    /// always writable.
+    fn is_writable(&self) -> bool {
+        true
     }
 
     /// Tear a put mid-batch (the chaos torn-write injection): records
@@ -114,6 +230,14 @@ pub trait ShardBackend: Send {
     fn compact(&mut self) -> Result<Option<CompactionStats>> {
         Ok(None)
     }
+
+    /// Run a compaction pass that crashes *inside the manifest rename
+    /// window*: phase one (fresh segments hit the disk) completes, the
+    /// commit never lands. Used by the chaos fsync-fault injection; the
+    /// default — backends with no manifest to lose — does nothing.
+    fn compact_abandoned(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Write/read interface to the shared persistent checkpoint storage, as
@@ -130,6 +254,17 @@ pub trait CheckpointStore: Send {
     fn put_atoms(&mut self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()>;
 
     fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>>;
+
+    /// Freshest record decoded straight into `out` (cleared first),
+    /// returning its iteration — the single-copy restore path recovery
+    /// uses. Backends with a borrowed read surface override it.
+    fn read_atom_into(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
+        Ok(self.get_atom(atom)?.map(|s| {
+            out.clear();
+            out.extend_from_slice(&s.values);
+            s.iter
+        }))
+    }
 
     fn bytes_written(&self) -> u64;
 
@@ -167,6 +302,10 @@ macro_rules! checkpoint_store_via_backend {
 
             fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
                 ShardBackend::get_atom(self, atom)
+            }
+
+            fn read_atom_into(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
+                ShardBackend::read_atom_into(self, atom, out)
             }
 
             fn bytes_written(&self) -> u64 {
@@ -216,6 +355,18 @@ impl ShardBackend for MemStore {
 
     fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
         Ok(self.map.get(&atom).cloned())
+    }
+
+    fn read_atom_into(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
+        Ok(self.map.get(&atom).map(|s| {
+            out.clear();
+            out.extend_from_slice(&s.values);
+            s.iter
+        }))
+    }
+
+    fn atom_iter(&self, atom: usize) -> Result<Option<usize>> {
+        Ok(self.map.get(&atom).map(|s| s.iter))
     }
 
     fn bytes_written(&self) -> u64 {
@@ -494,43 +645,82 @@ impl DiskStore {
         Ok(())
     }
 
+    /// Latest readable record as a borrowed-or-owned [`AtomRead`]: the
+    /// torn/corrupt fallback chain applies exactly as on
+    /// [`get_atom`](ShardBackend::get_atom), but records in sealed mmap'd
+    /// segments come back as [`AtomRef`] views into the mapping — the
+    /// caller's decode (e.g. [`AtomRef::copy_into`]) is the only copy.
+    /// Byte-equality between the two forms is pinned in the module tests.
+    pub fn get_atom_ref(&self, atom: usize) -> Result<Option<AtomRead<'_>>> {
+        let Some(entry) = self.index.get(&atom).copied() else {
+            return Ok(None);
+        };
+        match self.read_any(atom, &entry.latest) {
+            Ok(read) => Ok(Some(read)),
+            Err(latest_err) => match &entry.prev {
+                // Crash fallback: a torn/corrupt latest record falls back
+                // to the previous good record for the atom instead of
+                // poisoning the whole store.
+                Some(prev) => {
+                    let read = self.read_any(atom, prev).with_context(|| {
+                        format!(
+                            "atom {atom}: latest record unreadable ({latest_err:#}) \
+                             and fallback record also unreadable"
+                        )
+                    })?;
+                    Ok(Some(read))
+                }
+                None => Err(latest_err),
+            },
+        }
+    }
+
     /// Read and validate one record. Any structural failure — short read
     /// (truncated final record after a crash), bad magic, atom mismatch,
     /// implausible length, CRC mismatch — is an error the caller may fall
     /// back from. Records in sealed segments (everything before the
-    /// active one) are served from an mmap when available; the active
-    /// segment, and platforms without mmap, use pread-style file reads.
-    fn read_record(&self, atom: usize, loc: &RecordLoc) -> Result<SavedAtom> {
+    /// active one) are served borrowed from an mmap when available; the
+    /// active segment, and platforms without mmap, use pread-style file
+    /// reads into an owned record.
+    fn read_any(&self, atom: usize, loc: &RecordLoc) -> Result<AtomRead<'_>> {
         if loc.segment < self.current_segment {
-            if let Some(saved) = self.read_record_mapped(atom, loc)? {
-                return Ok(saved);
+            if let Some(atom_ref) = self.mapped_ref(atom, loc)? {
+                return Ok(AtomRead::Mapped(atom_ref));
             }
         }
-        self.read_record_file(atom, loc)
+        Ok(AtomRead::Owned(self.read_record_file(atom, loc)?))
     }
 
-    /// Zero-copy read path: serve the record straight out of the sealed
-    /// segment's mapping. `Ok(None)` means "no mapping available, use the
-    /// file path"; `Err` is a structural record failure (fallback to the
-    /// previous record applies exactly as on the file path).
-    fn read_record_mapped(&self, atom: usize, loc: &RecordLoc) -> Result<Option<SavedAtom>> {
-        use std::collections::hash_map::Entry;
-        let mut maps = self.maps.borrow_mut();
-        let map = match maps.entry(loc.segment) {
-            Entry::Occupied(e) => e.into_mut(),
-            Entry::Vacant(slot) => {
-                let Ok(file) = fs::File::open(self.segment_path(loc.segment)) else {
-                    return Ok(None);
-                };
-                match SegmentMap::map(&file) {
-                    Some(m) => slot.insert(m),
-                    None => return Ok(None),
-                }
-            }
-        };
-        let saved = decode_record(atom, map.bytes(), loc.offset as usize)?;
+    /// Zero-copy read path: validate the record in place and hand back a
+    /// borrowed view of its payload inside the sealed segment's mapping.
+    /// `Ok(None)` means "no mapping available, use the file path"; `Err`
+    /// is a structural record failure (fallback to the previous record
+    /// applies exactly as on the file path).
+    fn mapped_ref(&self, atom: usize, loc: &RecordLoc) -> Result<Option<AtomRef<'_>>> {
+        // Build the mapping lazily under a short write borrow, so the
+        // read borrow below can escape in the returned `AtomRef`. The
+        // already-mapped fast path takes no write borrow at all, so
+        // reads of mapped segments stay legal while an `AtomRef` into
+        // another record is still alive.
+        if !self.maps.borrow().contains_key(&loc.segment) {
+            let Ok(file) = fs::File::open(self.segment_path(loc.segment)) else {
+                return Ok(None);
+            };
+            let Some(map) = SegmentMap::map(&file) else {
+                return Ok(None);
+            };
+            self.maps.borrow_mut().insert(loc.segment, map);
+        }
+        let maps = self.maps.borrow();
+        let (iter, payload) =
+            validate_record(atom, maps[&loc.segment].bytes(), loc.offset as usize)?;
         self.mapped_reads.set(self.mapped_reads.get() + 1);
-        Ok(Some(saved))
+        let seg = loc.segment;
+        let (lo, hi) = (payload.start, payload.end);
+        Ok(Some(AtomRef {
+            iter,
+            payload: Ref::map(maps, move |m| &m[&seg].bytes()[lo..hi]),
+        }))
     }
 
     /// Plain file read path (the active segment, and the feature-gated
@@ -584,11 +774,17 @@ fn encode_record(atom: usize, iter: usize, vals: &[f32]) -> Vec<u8> {
     buf
 }
 
-/// Decode and validate the record at `offset` within `seg` (a whole
-/// mapped segment, or a single record read from the file). Every
-/// structural failure — truncation, bad magic, atom mismatch, implausible
-/// length, CRC mismatch — is an error the caller may fall back from.
-fn decode_record(atom: usize, seg: &[u8], offset: usize) -> Result<SavedAtom> {
+/// Validate the record at `offset` within `seg` (a whole mapped segment,
+/// or a single record read from the file) without decoding its payload:
+/// returns the record's iteration and the payload byte range — what the
+/// borrowed [`AtomRef`] read path serves in place. Every structural
+/// failure — truncation, bad magic, atom mismatch, implausible length,
+/// CRC mismatch — is an error the caller may fall back from.
+fn validate_record(
+    atom: usize,
+    seg: &[u8],
+    offset: usize,
+) -> Result<(usize, std::ops::Range<usize>)> {
     let head_end = offset
         .checked_add(RECORD_HEADER)
         .filter(|&e| e <= seg.len())
@@ -620,11 +816,18 @@ fn decode_record(atom: usize, seg: &[u8], offset: usize) -> Result<SavedAtom> {
     if hasher.finalize() != crc_stored {
         bail!("corrupt record for atom {atom}: crc mismatch");
     }
-    let values = payload
+    Ok((rec_iter, head_end..payload_end))
+}
+
+/// Decode and validate the record at `offset` within `seg` into an owned
+/// [`SavedAtom`] (the pread-path form of [`validate_record`]).
+fn decode_record(atom: usize, seg: &[u8], offset: usize) -> Result<SavedAtom> {
+    let (iter, payload) = validate_record(atom, seg, offset)?;
+    let values = seg[payload]
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    Ok(SavedAtom { iter: rec_iter, values })
+    Ok(SavedAtom { iter, values })
 }
 
 impl ShardBackend for DiskStore {
@@ -712,27 +915,31 @@ impl ShardBackend for DiskStore {
     }
 
     fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
-        let Some(entry) = self.index.get(&atom) else {
-            return Ok(None);
-        };
-        match self.read_record(atom, &entry.latest) {
-            Ok(saved) => Ok(Some(saved)),
-            Err(latest_err) => match &entry.prev {
-                // Crash fallback: a torn/corrupt latest record falls back
-                // to the previous good record for the atom instead of
-                // poisoning the whole store.
-                Some(prev) => {
-                    let saved = self.read_record(atom, prev).with_context(|| {
-                        format!(
-                            "atom {atom}: latest record unreadable ({latest_err:#}) \
-                             and fallback record also unreadable"
-                        )
-                    })?;
-                    Ok(Some(saved))
-                }
-                None => Err(latest_err),
-            },
+        Ok(self.get_atom_ref(atom)?.map(AtomRead::to_saved))
+    }
+
+    fn read_atom_into(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
+        match self.get_atom_ref(atom)? {
+            None => Ok(None),
+            Some(read) => {
+                read.copy_into(out);
+                Ok(Some(read.iter()))
+            }
         }
+    }
+
+    fn atom_iter(&self, atom: usize) -> Result<Option<usize>> {
+        // Index peek: a torn latest record is known-unreadable, so its
+        // fallback's iteration is the honest answer. (Physical corruption
+        // the index doesn't know about can still over-report — callers
+        // verify against the actual read.)
+        Ok(self.index.get(&atom).and_then(|e| {
+            if e.latest.torn {
+                e.prev.map(|p| p.iter)
+            } else {
+                Some(e.latest.iter)
+            }
+        }))
     }
 
     fn bytes_written(&self) -> u64 {
@@ -757,6 +964,16 @@ impl ShardBackend for DiskStore {
 
     fn compact(&mut self) -> Result<Option<CompactionStats>> {
         Ok(Some(DiskStore::compact(self)?))
+    }
+
+    fn compact_abandoned(&mut self) -> Result<()> {
+        // Phase one only: fresh segments land on disk, the manifest swap
+        // (the commit point) never happens — exactly a crash inside the
+        // rename window. Dropping the plan loses nothing: the in-memory
+        // index still governs every read, and the next `open` removes the
+        // orphaned fresh segments.
+        let _abandoned = DiskStore::prepare_compaction(self)?;
+        Ok(())
     }
 }
 
@@ -1084,6 +1301,48 @@ mod tests {
         let s = DiskStore::open(&dir).unwrap();
         assert!(s.get_atom(0).is_err());
         fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn borrowed_reads_are_byte_equal_to_owned_reads() {
+        use super::AtomRead;
+        let dir = tmpdir("atomref");
+        let mut s = DiskStore::open(&dir).unwrap();
+        s.set_segment_limit(1); // every put rolls to a fresh (sealed) segment
+        for iter in 1..=3usize {
+            s.put_atoms(iter, &[(0, &[iter as f32, -(iter as f32)][..])]).unwrap();
+        }
+        s.put_atoms(4, &[(1, &[9.0][..])]).unwrap(); // active segment
+        for atom in [0usize, 1] {
+            let owned = ShardBackend::get_atom(&s, atom).unwrap().unwrap();
+            {
+                let via_ref = s.get_atom_ref(atom).unwrap().unwrap();
+                if atom == 0 && cfg!(all(unix, target_pointer_width = "64", feature = "mmap")) {
+                    assert!(
+                        matches!(via_ref, AtomRead::Mapped(_)),
+                        "sealed record must be served borrowed"
+                    );
+                }
+                let mut buf = Vec::new();
+                via_ref.copy_into(&mut buf);
+                assert_eq!(buf, owned.values, "atom {atom}: borrowed decode diverged");
+                assert_eq!(via_ref.iter(), owned.iter);
+                assert_eq!(via_ref.to_saved(), owned, "owned conversion diverged");
+            }
+            // And the into-buffer read matches too.
+            let mut buf2 = vec![99.0f32]; // must be cleared by the read
+            let it = ShardBackend::read_atom_into(&s, atom, &mut buf2).unwrap().unwrap();
+            assert_eq!((it, buf2), (owned.iter, owned.values.clone()));
+        }
+        // A torn latest record serves the fallback identically both ways.
+        s.put_torn(6, &[(0, &[5.0, 5.0][..])], 0).unwrap();
+        let owned = ShardBackend::get_atom(&s, 0).unwrap().unwrap();
+        assert_eq!(owned.iter, 3, "torn latest must fall back");
+        let mut buf = Vec::new();
+        let it = ShardBackend::read_atom_into(&s, 0, &mut buf).unwrap().unwrap();
+        assert_eq!((it, buf), (owned.iter, owned.values.clone()));
+        assert_eq!(ShardBackend::atom_iter(&s, 0).unwrap(), Some(3), "peek is torn-aware");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

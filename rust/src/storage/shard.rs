@@ -17,10 +17,21 @@
 //! **Degraded mode** (chaos subsystem): a shard reporting
 //! [`is_down`](crate::storage::ShardBackend::is_down) — an injected fault
 //! from [`crate::chaos`] — is routed around: its batches re-route to the
-//! first surviving shard, reads skip it, and `sync_all` ignores it. The
-//! freshest-record read scan makes the re-homing invisible to callers,
-//! and the checkpoint front-end re-persists the dead shard's records from
-//! its in-memory cache so no atom is left without a readable record.
+//! first surviving shard, reads skip it, and `sync_all` ignores it. A
+//! *partitioned* shard ([`is_writable`](crate::storage::ShardBackend::is_writable)
+//! false — reachable but unwritable) is routed around for writes only;
+//! reads still serve from it, so nothing needs rebuilding. The
+//! freshest-record read scan makes the re-homing invisible to callers.
+//!
+//! The **placement map** tracks, per atom, which shard holds its
+//! freshest routed record (updated on every put, including degraded
+//! re-routes; compaction never moves records between shards). When a
+//! shard dies, the checkpoint front-end consults it through the
+//! [`RebuildPlan`](crate::recovery::RebuildPlan) planner and re-persists
+//! *only the dead shard's slice* from its in-memory cache — roughly
+//! `1/n_shards` of the checkpoint instead of the whole thing — so no
+//! atom is left without a readable record, at minimal write
+//! amplification. Healed shards re-adopt their slices the same way.
 //!
 //! The **commit watermark** is the recovery rule for pipelined writes:
 //! `committed()` is the highest iteration whose barrier the writer pool
@@ -39,10 +50,32 @@ use anyhow::{bail, Context, Result};
 use super::{CompactionStats, DiskStore, LatencyModel, MemStore, SavedAtom, ShardBackend};
 use crate::partition::Partition;
 
+/// What one fault-clock tick changed about shard health (returned by
+/// [`ShardedStore::advance_epoch`]): the checkpoint front-end rebuilds
+/// the `newly_down` shards' slices from its cache, and re-adopts the
+/// `newly_healed` shards' slices back onto them — both through the
+/// [`RebuildPlan`](crate::recovery::RebuildPlan) planner.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EpochReport {
+    /// Shards that went down since the last tick.
+    pub newly_down: Vec<usize>,
+    /// Shards that came back up since the last tick (a flaky shard's
+    /// heal, or a `heal_at` kill window ending).
+    pub newly_healed: Vec<usize>,
+}
+
 pub struct ShardedStore {
     shards: Vec<Mutex<Box<dyn ShardBackend>>>,
     /// Explicit per-atom shard map (empty = route by `atom % n_shards`).
     route: Mutex<Vec<usize>>,
+    /// Placement map: per atom, `(shard, iter)` of the freshest record
+    /// *routed through this handle* — maintained on every put (including
+    /// degraded re-routes), it is what lets the recovery planner rebuild
+    /// exactly a dead shard's slice instead of the whole checkpoint.
+    /// Compaction never moves a record between shards, so placement
+    /// survives it; a store reopened from disk starts with an empty map
+    /// (unknown placement is treated as possibly-lost by the planner).
+    placement: Mutex<Vec<Option<(usize, usize)>>>,
     /// Commit watermark; `None` until the first `mark_committed`.
     committed: Mutex<Option<usize>>,
     /// Last-observed per-shard health, updated by
@@ -98,6 +131,7 @@ impl ShardedStore {
         ShardedStore {
             shards: backends.into_iter().map(Mutex::new).collect(),
             route: Mutex::new(Vec::new()),
+            placement: Mutex::new(Vec::new()),
             committed: Mutex::new(None),
             down: Mutex::new(vec![false; n]),
             degraded: AtomicU64::new(0),
@@ -180,44 +214,70 @@ impl ShardedStore {
             if target != s {
                 self.degraded.fetch_add(batch.len() as u64, Ordering::Relaxed);
             }
-            let mut shard = self.shards[target].lock().unwrap();
-            shard
-                .put_atoms(iter, batch)
-                .with_context(|| format!("writing {} atoms to shard {target}", batch.len()))?;
+            {
+                let mut shard = self.shards[target].lock().unwrap();
+                shard
+                    .put_atoms(iter, batch)
+                    .with_context(|| format!("writing {} atoms to shard {target}", batch.len()))?;
+            }
+            // Placement follows the freshest routed record (ties go to
+            // the latest write, so a rebuild/re-adoption copy at the same
+            // iteration moves placement to where the readable copy is).
+            let mut placement = self.placement.lock().unwrap();
+            for &(atom, _) in batch {
+                if placement.len() <= atom {
+                    placement.resize(atom + 1, None);
+                }
+                let newer = match placement[atom] {
+                    Some((_, have)) => iter >= have,
+                    None => true,
+                };
+                if newer {
+                    placement[atom] = Some((target, iter));
+                }
+            }
         }
         Ok(())
     }
 
-    /// First serving shard at or after `s` (wrapping), for degraded
-    /// writes. Errors only when every shard is down.
+    /// First *writable* serving shard at or after `s` (wrapping), for
+    /// degraded writes: both dead shards and partitioned
+    /// (reachable-but-unwritable) shards are routed around. Errors only
+    /// when no shard accepts writes.
     fn live_target(&self, s: usize) -> Result<usize> {
         let n = self.shards.len();
         for off in 0..n {
             let t = (s + off) % n;
-            if !self.shards[t].lock().unwrap().is_down() {
+            let guard = self.shards[t].lock().unwrap();
+            if !guard.is_down() && guard.is_writable() {
                 return Ok(t);
             }
         }
-        bail!("all {n} storage shard(s) are down (injected faults)");
+        bail!("all {n} storage shard(s) are down or unwritable (injected faults)");
     }
 
     /// Advance every shard's injected-fault clock to training iteration
-    /// `iter`; returns the shards that went down since the last call (the
-    /// checkpoint front-end rebuilds their records from its in-memory
-    /// cache — see [`crate::checkpoint::AsyncCheckpointer`]).
-    pub fn advance_epoch(&self, iter: usize) -> Vec<usize> {
-        let mut newly = Vec::new();
+    /// `iter`; reports health transitions since the last call — the
+    /// checkpoint front-end rebuilds newly-down shards' slices from its
+    /// in-memory cache and re-adopts newly-healed shards' slices back
+    /// onto them (see [`crate::checkpoint::AsyncCheckpointer`] and
+    /// [`crate::recovery::RebuildPlan`]).
+    pub fn advance_epoch(&self, iter: usize) -> EpochReport {
+        let mut report = EpochReport::default();
         let mut down = self.down.lock().unwrap();
         for (s, shard) in self.shards.iter().enumerate() {
             let mut guard = shard.lock().unwrap();
             guard.advance_epoch(iter);
             let d = guard.is_down();
             if d && !down[s] {
-                newly.push(s);
+                report.newly_down.push(s);
+            }
+            if !d && down[s] {
+                report.newly_healed.push(s);
             }
             down[s] = d;
         }
-        newly
+        report
     }
 
     /// Shards currently refusing service.
@@ -227,6 +287,40 @@ impl ShardedStore {
             .enumerate()
             .filter(|(_, s)| s.lock().unwrap().is_down())
             .map(|(s, _)| s)
+            .collect()
+    }
+
+    /// Shards currently refusing *writes* while still serving reads (an
+    /// injected network partition). Down shards are not listed — they
+    /// refuse everything.
+    pub fn unwritable_shards(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                let guard = s.lock().unwrap();
+                !guard.is_down() && !guard.is_writable()
+            })
+            .map(|(s, _)| s)
+            .collect()
+    }
+
+    /// Shard holding the freshest record routed through this handle for
+    /// `atom` (`None` when nothing was written for it through this
+    /// handle — e.g. a store reopened from disk).
+    pub fn placement_of(&self, atom: usize) -> Option<usize> {
+        self.placement.lock().unwrap().get(atom).copied().flatten().map(|(s, _)| s)
+    }
+
+    /// Snapshot of the whole placement map (shard of each atom's
+    /// freshest routed record), the planner's input. Indices past the
+    /// highest atom ever written read as `None`.
+    pub fn placement_shards(&self) -> Vec<Option<usize>> {
+        self.placement
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|p| p.map(|(s, _)| s))
             .collect()
     }
 
@@ -266,6 +360,63 @@ impl ShardedStore {
         Ok(best)
     }
 
+    /// Freshest record for an atom decoded straight into `out` (cleared
+    /// first), returning its iteration — the single-copy read path: on
+    /// mmap-backed disk shards the payload is decoded directly out of the
+    /// mapped segment, so the planner's (and recovery's) slice copy into
+    /// `out` is the only copy.
+    ///
+    /// Byte-equal to [`get_atom_any`](ShardedStore::get_atom_any) by
+    /// construction: shards are first ranked by a cheap index peek
+    /// ([`ShardBackend::atom_iter`]), and if the winning shard's actual
+    /// read disagrees with its peek (a physically corrupt record behind a
+    /// stale index entry, repaired by the fallback chain), the owned
+    /// full scan is served instead.
+    pub fn get_atom_any_ref(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
+        // Rank live shards by their peeked freshest iteration (ties to
+        // the lowest shard index, matching the owned scan).
+        let mut best: Option<(usize, usize)> = None; // (shard, iter)
+        for (s, shard) in self.shards.iter().enumerate() {
+            let guard = shard.lock().unwrap();
+            if guard.is_down() {
+                continue;
+            }
+            if let Some(it) = guard.atom_iter(atom)? {
+                let better = match best {
+                    Some((_, have)) => it > have,
+                    None => true,
+                };
+                if better {
+                    best = Some((s, it));
+                }
+            }
+        }
+        let Some((s, expect)) = best else {
+            return Ok(None);
+        };
+        {
+            let guard = self.shards[s].lock().unwrap();
+            if !guard.is_down() {
+                if let Some(it) = guard.read_atom_into(atom, out)? {
+                    if it == expect {
+                        return Ok(Some(it));
+                    }
+                }
+            }
+        }
+        // The peek and the actual read disagreed (corrupt-record
+        // fallback): serve the owned scan, which applies the full
+        // fallback chain across every shard.
+        match self.get_atom_any(atom)? {
+            Some(saved) => {
+                out.clear();
+                out.extend_from_slice(&saved.values);
+                Ok(Some(saved.iter))
+            }
+            None => Ok(None),
+        }
+    }
+
     /// Per-shard `(bytes, records)` written so far, for the latency model
     /// (the slowest shard gates a parallel barrier).
     pub fn per_shard_io(&self) -> Vec<(u64, u64)> {
@@ -281,11 +432,21 @@ impl ShardedStore {
     /// Durability fence across every shard (disk manifests etc.). Down
     /// shards are skipped — their records are unreachable until they
     /// heal, and the rebuilt copies on the survivors are what recovery
-    /// reads.
+    /// reads. Partitioned (unwritable) shards are skipped too: their
+    /// manifest catches up at the first fence after the partition lifts.
+    ///
+    /// Caveat: skipping a partitioned shard means records it accepted
+    /// *between its last synced fence and the partition start* are not
+    /// manifest-durable until it heals — in-process reads are unaffected
+    /// (the segment log has the bytes), but a **crash inside the
+    /// window** reopens that shard on its stale manifest, the same
+    /// exposure `[[chaos.fsync]]` models deliberately. The no-data-loss
+    /// partition contract is an in-process/post-heal property, not a
+    /// crash-durability one.
     pub fn sync_all(&self) -> Result<()> {
         for (s, shard) in self.shards.iter().enumerate() {
             let mut guard = shard.lock().unwrap();
-            if guard.is_down() {
+            if guard.is_down() || !guard.is_writable() {
                 continue;
             }
             guard.sync().with_context(|| format!("syncing shard {s}"))?;
@@ -340,7 +501,7 @@ impl ShardedStore {
         let mut out = Vec::new();
         for (s, shard) in self.shards.iter().enumerate() {
             let mut guard = shard.lock().unwrap();
-            if guard.is_down() {
+            if guard.is_down() || !guard.is_writable() {
                 continue;
             }
             let ratio = guard.garbage_ratio();
@@ -376,6 +537,10 @@ impl super::CheckpointStore for ShardedStore {
 
     fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
         self.get_atom_any(atom)
+    }
+
+    fn read_atom_into(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
+        self.get_atom_any_ref(atom, out)
     }
 
     fn bytes_written(&self) -> u64 {
@@ -454,6 +619,48 @@ mod tests {
             assert_eq!(got.iter, 5, "atom {a}");
             assert_eq!(got.values, vec![2.0]);
         }
+    }
+
+    #[test]
+    fn placement_tracks_freshest_routed_record() {
+        let s = ShardedStore::new_mem(2);
+        assert_eq!(s.placement_of(0), None, "nothing written yet");
+        s.put_atoms_at(1, &[(0, &[1.0][..]), (1, &[1.0][..]), (2, &[1.0][..])]).unwrap();
+        assert_eq!(s.placement_of(0), Some(0));
+        assert_eq!(s.placement_of(1), Some(1));
+        assert_eq!(s.placement_of(2), Some(0));
+        // A newer record re-routed elsewhere moves placement; an *older*
+        // record does not (the freshest copy still governs).
+        let mut route = Partition::random(3, 1, &mut Rng::new(1));
+        route.owner = vec![1, 1, 1];
+        route.atoms_of = vec![vec![], vec![0, 1, 2]];
+        s.set_route_partition(&route);
+        s.put_atoms_at(5, &[(0, &[5.0][..])]).unwrap();
+        assert_eq!(s.placement_of(0), Some(1));
+        s.clear_route();
+        s.put_atoms_at(3, &[(0, &[3.0][..])]).unwrap();
+        assert_eq!(s.placement_of(0), Some(1), "older record must not move placement");
+        // Same-iteration rewrite (a rebuild/re-adoption copy) does move
+        // placement to where the latest copy landed.
+        s.put_atoms_at(5, &[(0, &[5.0][..])]).unwrap();
+        assert_eq!(s.placement_of(0), Some(0));
+        let snapshot = s.placement_shards();
+        assert_eq!(snapshot[0], Some(0));
+        assert_eq!(snapshot[1], Some(1));
+    }
+
+    #[test]
+    fn get_atom_any_ref_matches_owned_scan() {
+        let s = ShardedStore::new_mem(3);
+        s.put_atoms_at(1, &[(0, &[1.0, 2.0][..]), (1, &[3.0][..])]).unwrap();
+        s.put_atoms_at(4, &[(1, &[4.0][..])]).unwrap();
+        let mut buf = Vec::new();
+        for atom in 0..2 {
+            let owned = s.get_atom_any(atom).unwrap().unwrap();
+            let it = s.get_atom_any_ref(atom, &mut buf).unwrap().unwrap();
+            assert_eq!((it, buf.clone()), (owned.iter, owned.values.clone()), "atom {atom}");
+        }
+        assert_eq!(s.get_atom_any_ref(9, &mut buf).unwrap(), None);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod cli;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod trend;
 
 use std::time::Instant;
 

@@ -1,0 +1,271 @@
+//! Append-only metric trend files with regression gating (the nightly CI
+//! artifact behind `scar trend`).
+//!
+//! A trend file is a CSV keyed by commit: a header
+//! `commit,<metric>...,status`, then one row per nightly run.
+//! [`append_and_check`] compares the new metrics against the **last
+//! passing row** — not merely the previous row — then appends the new
+//! row with its own pass/fail status. Comparing against the last passing
+//! row is what keeps the gate meaningful: a regressed nightly does not
+//! become tomorrow's accepted baseline (the regression stays red until
+//! the metric actually comes back down or a human starts a fresh file).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One detected regression, human-readable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    pub metric: String,
+    pub previous: f64,
+    pub current: f64,
+    /// current/previous − 1.
+    pub increase: f64,
+}
+
+impl std::fmt::Display for Regression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {} -> {} (+{:.1}%)",
+            self.metric,
+            self.previous,
+            self.current,
+            self.increase * 100.0
+        )
+    }
+}
+
+/// Append `metrics` as a new `commit`-keyed row of the trend CSV at
+/// `path` (created with a header if missing) and return the regressions
+/// vs the last *passing* row.
+///
+/// * The metric *set* is fixed by the file's header: appending with a
+///   different set is an error (the file is append-only — migrate by
+///   starting a fresh file), so every row stays comparable.
+/// * Only metrics named in `lower_is_better` are gated; the rest are
+///   recorded for trend plots without failing anything.
+/// * A regression is `current > previous * (1 + max_regress)` with a
+///   positive previous value; metrics at 0 never gate (nothing to
+///   regress from).
+/// * The row is recorded either way, tagged `ok` or `regressed` in the
+///   trailing `status` column; regressed rows are never used as a
+///   comparison baseline, so one bad night cannot ratchet the budget.
+pub fn append_and_check(
+    path: &Path,
+    commit: &str,
+    metrics: &BTreeMap<String, f64>,
+    lower_is_better: &[&str],
+    max_regress: f64,
+) -> Result<Vec<Regression>> {
+    if commit.contains(',') || commit.contains('\n') {
+        bail!("trend commit key '{commit}' must not contain commas or newlines");
+    }
+    let header: Vec<String> = std::iter::once("commit".to_string())
+        .chain(metrics.keys().cloned())
+        .chain(std::iter::once("status".to_string()))
+        .collect();
+    let mut baseline: Option<BTreeMap<String, f64>> = None;
+    let mut body = String::new();
+    if path.exists() {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trend file {}", path.display()))?;
+        let mut lines = text.lines();
+        let have = lines
+            .next()
+            .with_context(|| format!("trend file {} is empty", path.display()))?;
+        let have: Vec<&str> = have.split(',').collect();
+        if have != header.iter().map(String::as_str).collect::<Vec<_>>() {
+            bail!(
+                "trend file {} tracks columns {have:?}, but this run reports {header:?}; \
+                 the file is append-only — start a fresh file to change the metric set",
+                path.display()
+            );
+        }
+        // Baseline = the newest row whose status is "ok".
+        for line in lines.filter(|l| !l.trim().is_empty()) {
+            let row: Vec<&str> = line.split(',').collect();
+            if row.len() != header.len() {
+                bail!(
+                    "trend file {}: malformed row ({} fields, header has {})",
+                    path.display(),
+                    row.len(),
+                    header.len()
+                );
+            }
+            if *row.last().unwrap() != "ok" {
+                continue;
+            }
+            let mut prev = BTreeMap::new();
+            for (name, value) in header[1..header.len() - 1].iter().zip(row[1..].iter()) {
+                let v: f64 = value.parse().with_context(|| {
+                    format!("trend file {}: bad value '{value}' for {name}", path.display())
+                })?;
+                prev.insert(name.clone(), v);
+            }
+            baseline = Some(prev);
+        }
+        body = text;
+        if !body.ends_with('\n') {
+            body.push('\n');
+        }
+    } else {
+        body.push_str(&header.join(","));
+        body.push('\n');
+    }
+
+    let mut regressions = Vec::new();
+    if let Some(prev) = &baseline {
+        for &name in lower_is_better {
+            let (Some(&p), Some(&c)) = (prev.get(name), metrics.get(name)) else {
+                continue;
+            };
+            if p > 0.0 && c > p * (1.0 + max_regress) {
+                regressions.push(Regression {
+                    metric: name.to_string(),
+                    previous: p,
+                    current: c,
+                    increase: c / p - 1.0,
+                });
+            }
+        }
+    }
+
+    let status = if regressions.is_empty() { "ok" } else { "regressed" };
+    let row: Vec<String> = std::iter::once(commit.to_string())
+        .chain(metrics.values().map(|v| format!("{v}")))
+        .chain(std::iter::once(status.to_string()))
+        .collect();
+    body.push_str(&row.join(","));
+    body.push('\n');
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trend dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, body)
+        .with_context(|| format!("writing trend file {}", path.display()))?;
+    Ok(regressions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("scar-trend-{tag}-{}", std::process::id()))
+    }
+
+    fn metrics(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn first_row_creates_file_and_never_regresses() {
+        let dir = tmp("first");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nightly.csv");
+        let r = append_and_check(
+            &path,
+            "abc123",
+            &metrics(&[("rebuilt_bytes", 100.0), ("wall_secs", 2.5)]),
+            &["rebuilt_bytes", "wall_secs"],
+            0.25,
+        )
+        .unwrap();
+        assert!(r.is_empty());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "commit,rebuilt_bytes,wall_secs,status\nabc123,100,2.5,ok\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn appends_and_flags_only_gated_regressions() {
+        let dir = tmp("gate");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nightly.csv");
+        let gate = ["wall_secs"];
+        append_and_check(
+            &path,
+            "a",
+            &metrics(&[("reclaimed", 50.0), ("wall_secs", 2.0)]),
+            &gate,
+            0.25,
+        )
+        .unwrap();
+        // Within the 25% budget: no regression.
+        let ok = append_and_check(
+            &path,
+            "b",
+            &metrics(&[("reclaimed", 10.0), ("wall_secs", 2.4)]),
+            &gate,
+            0.25,
+        )
+        .unwrap();
+        assert!(ok.is_empty(), "{ok:?} (reclaimed is not gated, 2.4 <= 2.0*1.25)");
+        // 3.6 > 2.4 * 1.25: regression, named and quantified.
+        let bad = append_and_check(
+            &path,
+            "c",
+            &metrics(&[("reclaimed", 10.0), ("wall_secs", 3.6)]),
+            &gate,
+            0.25,
+        )
+        .unwrap();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].metric, "wall_secs");
+        assert!((bad[0].increase - 0.5).abs() < 1e-9);
+        assert!(bad[0].to_string().contains("wall_secs"), "{}", bad[0]);
+        // All three rows survive (append-only), the bad one tagged.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.lines().nth(2).unwrap().ends_with(",ok"));
+        assert!(text.lines().nth(3).unwrap().ends_with(",regressed"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn regressed_rows_never_become_the_baseline() {
+        // A regression must stay red until the metric really recovers:
+        // the comparison baseline is the last *passing* row, so one bad
+        // night cannot ratchet the budget up.
+        let dir = tmp("ratchet");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nightly.csv");
+        let gate = ["wall_secs"];
+        append_and_check(&path, "a", &metrics(&[("wall_secs", 2.0)]), &gate, 0.25).unwrap();
+        let bad = append_and_check(&path, "b", &metrics(&[("wall_secs", 4.0)]), &gate, 0.25)
+            .unwrap();
+        assert_eq!(bad.len(), 1, "4.0 vs 2.0 regresses");
+        // Still 4.0 the next night: must STILL regress (vs a, not b).
+        let again =
+            append_and_check(&path, "c", &metrics(&[("wall_secs", 4.0)]), &gate, 0.25).unwrap();
+        assert_eq!(again.len(), 1, "a regressed row must not become the baseline");
+        assert_eq!(again[0].previous, 2.0);
+        // Coming back under budget goes green and re-arms the baseline.
+        let fixed =
+            append_and_check(&path, "d", &metrics(&[("wall_secs", 2.2)]), &gate, 0.25).unwrap();
+        assert!(fixed.is_empty());
+        let e = append_and_check(&path, "e", &metrics(&[("wall_secs", 2.6)]), &gate, 0.25)
+            .unwrap();
+        assert_eq!(e.len(), 0, "2.6 <= 2.2*1.25 vs the new passing baseline");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn metric_set_changes_are_rejected() {
+        let dir = tmp("schema");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nightly.csv");
+        append_and_check(&path, "a", &metrics(&[("x", 1.0)]), &[], 0.25).unwrap();
+        let e = append_and_check(&path, "b", &metrics(&[("y", 1.0)]), &[], 0.25).unwrap_err();
+        assert!(format!("{e:?}").contains("append-only"), "{e:?}");
+        // The previous passing row still gates later appends.
+        let r = append_and_check(&path, "c", &metrics(&[("x", 5.0)]), &["x"], 0.25).unwrap();
+        assert_eq!(r.len(), 1, "5 vs 1 regresses");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

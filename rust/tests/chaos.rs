@@ -24,6 +24,16 @@ fn kill(shard: usize, at: usize) -> FaultPlan {
     }
 }
 
+/// Everything one chaos trial produced: the final parameter bytes, the
+/// store, and the checkpointer's selective-rebuild accounting.
+struct ChaosRun {
+    params: Vec<u8>,
+    store: Arc<ShardedStore>,
+    rebuilt_atoms: u64,
+    rebuilt_bytes: u64,
+    readopted_atoms: u64,
+}
+
 /// Train a synthetic model with checkpoint barriers, fail `lost` atoms at
 /// iter 9, recover through the flush fence, and return the final
 /// parameter bytes plus the store — same harness as
@@ -37,7 +47,7 @@ fn drive_chaos(
     dir: Option<&Path>,
     compact_threshold: f64,
     lost: &[usize],
-) -> (Vec<u8>, Arc<ShardedStore>) {
+) -> ChaosRun {
     let mut trainer = SyntheticTrainer::new(32, 0.85, 3);
     trainer.init(7).unwrap();
     let layout = trainer.layout().clone();
@@ -75,20 +85,22 @@ fn drive_chaos(
         trainer.step(iter).unwrap();
         ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng).unwrap();
     }
+    let (rebuilt_atoms, rebuilt_bytes) = (ck.rebuilt_atoms(), ck.rebuilt_bytes());
+    let readopted_atoms = ck.readopted_atoms();
     let store = ck.finish().unwrap();
-    let mut bytes = Vec::new();
+    let mut params = Vec::new();
     for t in &trainer.state().tensors {
         for v in &t.data {
-            bytes.extend_from_slice(&v.to_le_bytes());
+            params.extend_from_slice(&v.to_le_bytes());
         }
     }
-    (bytes, store)
+    ChaosRun { params, store, rebuilt_atoms, rebuilt_bytes, readopted_atoms }
 }
 
 /// The classic memory-shard configuration with the default random lost
 /// set (half the atoms, seed 13).
 fn train_fail_recover(mode: CheckpointMode, shards: usize, plan: &FaultPlan) -> Vec<u8> {
-    drive_chaos(mode, shards, plan, None, 0.0, &default_lost()).0
+    drive_chaos(mode, shards, plan, None, 0.0, &default_lost()).params
 }
 
 fn default_lost() -> Vec<usize> {
@@ -120,6 +132,164 @@ fn recovered_params_byte_identical_across_shard_kills_and_modes() {
             }
         }
     }
+}
+
+#[test]
+fn single_shard_death_rebuilds_only_its_slice() {
+    // The acceptance pin for placement-tracked selective recovery: in a
+    // 4-shard store, killing one shard rebuilds only that shard's slice —
+    // ~1/4 of the checkpoint — where the pre-refactor path re-persisted
+    // the *entire* running checkpoint from the cache. Recovered
+    // parameters stay byte-identical to the fault-free reference (i.e. to
+    // what the full re-persist produced — pinned above by
+    // recovered_params_byte_identical_across_shard_kills_and_modes).
+    let full_state_bytes = 32u64 * 4; // 32 atoms x 1 f32 each
+    let slice_bytes = full_state_bytes / 4;
+    let sync = drive_chaos(CheckpointMode::Sync, 4, &kill(1, 6), None, 0.0, &default_lost());
+    assert_eq!(sync.rebuilt_atoms, 8, "exactly the dead shard's 8/32 atoms");
+    assert_eq!(sync.rebuilt_bytes, slice_bytes, "exactly the dead shard's byte slice");
+    assert_eq!(sync.readopted_atoms, 0, "no heal in this plan");
+    // Async: an in-flight pre-kill write that lands after the fault clock
+    // tick can re-home an atom early and shrink the rebuild set — the
+    // bound (never *more* than the slice) is the contract.
+    let asynced = drive_chaos(CheckpointMode::Async, 4, &kill(1, 6), None, 0.0, &default_lost());
+    assert!(
+        asynced.rebuilt_bytes <= slice_bytes,
+        "async rebuilt {} bytes, more than the dead shard's {slice_bytes}-byte slice",
+        asynced.rebuilt_bytes
+    );
+    assert!(asynced.rebuilt_atoms <= 8);
+    // A fault-free run rebuilds nothing at all.
+    let clean =
+        drive_chaos(CheckpointMode::Sync, 4, &FaultPlan::default(), None, 0.0, &default_lost());
+    assert_eq!((clean.rebuilt_atoms, clean.rebuilt_bytes), (0, 0));
+}
+
+#[test]
+fn partitioned_shard_changes_nothing_and_rebuilds_nothing() {
+    // A partition is unreachability, not data loss: writes re-route for
+    // the window, reads serve throughout, the planner has nothing to do,
+    // and the run stays byte-identical to the fault-free single-shard
+    // reference.
+    let reference = train_fail_recover(CheckpointMode::Sync, 1, &FaultPlan::default());
+    let partition = FaultPlan {
+        faults: vec![ShardFault {
+            shard: 2,
+            at: 5,
+            kind: FaultKind::Partition { until: Some(12) },
+        }],
+    };
+    for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
+        let run = drive_chaos(mode, 4, &partition, None, 0.0, &default_lost());
+        assert_eq!(reference, run.params, "{mode}: partition changed recovered params");
+        assert_eq!(run.rebuilt_atoms, 0, "{mode}: a partition must not trigger rebuilds");
+        assert_eq!(run.readopted_atoms, 0);
+    }
+}
+
+#[test]
+fn flaky_shard_kill_heal_cycles_rebuild_and_readopt_the_slice() {
+    // Deterministic kill+heal cycles on shard 1 of 4: every down phase
+    // selectively rebuilds the slice onto survivors, every heal has the
+    // shard re-adopt it (placement returns home), and recovered
+    // parameters stay byte-identical to the fault-free reference.
+    let reference = train_fail_recover(CheckpointMode::Sync, 1, &FaultPlan::default());
+    let flaky = FaultPlan {
+        faults: vec![ShardFault {
+            shard: 1,
+            at: 4,
+            kind: FaultKind::Flaky { period: 6, down_for: 2, cycles: 2 },
+        }],
+    };
+    let sync = drive_chaos(CheckpointMode::Sync, 4, &flaky, None, 0.0, &default_lost());
+    assert_eq!(reference, sync.params, "flaky cycles changed recovered params");
+    assert_eq!(sync.rebuilt_atoms, 16, "two down phases x the 8-atom slice");
+    assert_eq!(sync.readopted_atoms, 16, "two heals re-adopt the 8-atom slice");
+    // After the final heal the slice is homed on shard 1 again.
+    for atom in (0..32usize).filter(|a| a % 4 == 1) {
+        assert_eq!(sync.store.placement_of(atom), Some(1), "atom {atom} not re-adopted");
+    }
+    let asynced = drive_chaos(CheckpointMode::Async, 4, &flaky, None, 0.0, &default_lost());
+    assert_eq!(reference, asynced.params, "async flaky run diverged");
+    assert!(asynced.rebuilt_atoms <= 16, "rebuilds are bounded by the slice per cycle");
+    assert_eq!(asynced.readopted_atoms, 16, "re-adoption is route-based: always the slice");
+}
+
+#[test]
+fn fsync_fault_in_the_compaction_window_lands_on_last_readable_manifest() {
+    // Direct strike inside the compaction commit: the pass runs phase one
+    // (fresh segments hit the disk) but the manifest rename never lands.
+    // In-process reads are unaffected; a crash + reopen recovers the
+    // pre-compaction manifest exactly, with the orphaned segments gone.
+    let dir = tmpdir("fsync-compact");
+    let _ = std::fs::remove_dir_all(&dir);
+    // at = 6: the manual sync below happens at epoch 4, before the fault
+    // is due, so the one-shot is still pending when compaction runs.
+    let plan = FaultPlan {
+        faults: vec![ShardFault { shard: 0, at: 6, kind: FaultKind::FsyncFail }],
+    };
+    let store = plan.disk_store(&dir, 1).unwrap();
+    for iter in 1..=4usize {
+        store
+            .put_atoms_at(iter, &[(0, &[iter as f32][..]), (1, &[10.0 + iter as f32][..])])
+            .unwrap();
+    }
+    // Make the current state durable *before* the fault epoch arrives.
+    store.sync_all().unwrap();
+    store.advance_epoch(6);
+    store.put_atoms_at(7, &[(0, &[5.0][..])]).unwrap();
+    // The compaction trigger fires; the pending fsync fault turns the
+    // pass into a crash inside the rename window (no stats recorded).
+    assert!(store.compact_if_needed(0.1, 0).unwrap().is_empty());
+    assert_eq!(store.compaction_runs(), 0);
+    // In-process reads still serve the freshest records.
+    assert_eq!(store.get_atom_any(0).unwrap().unwrap().values, vec![5.0]);
+    drop(store);
+    // Crash: the reopen must land on the last manifest that really hit
+    // the disk (iter <= 4 records) and clean the orphaned fresh segments.
+    let reopened = ShardedStore::open_disk(&dir, 1).unwrap();
+    let a0 = reopened.get_atom_any(0).unwrap().unwrap();
+    assert_eq!((a0.iter, a0.values), (4, vec![4.0]));
+    let a1 = reopened.get_atom_any(1).unwrap().unwrap();
+    assert_eq!((a1.iter, a1.values), (4, vec![14.0]));
+    // A later real compaction still works on the reopened store.
+    assert!(!reopened.compact_if_needed(0.0, 0).unwrap().is_empty());
+    assert_eq!(reopened.get_atom_any(0).unwrap().unwrap().values, vec![4.0]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fsync_dropped_fence_only_costs_after_a_crash() {
+    // End-to-end: a full pipeline run whose shard 0 silently drops one
+    // durability fence. In-process results are byte-identical to the
+    // clean run; after a crash (reopen) every atom still resolves to a
+    // readable record from the last manifest that reached the disk.
+    let base = tmpdir("fsync-fence");
+    let dir = base.join("faulty");
+    let clean_dir = base.join("clean");
+    let plan = FaultPlan {
+        faults: vec![ShardFault { shard: 0, at: 7, kind: FaultKind::FsyncFail }],
+    };
+    let run =
+        drive_chaos(CheckpointMode::Sync, 2, &plan, Some(dir.as_path()), 0.0, &default_lost());
+    let clean = drive_chaos(
+        CheckpointMode::Sync,
+        2,
+        &FaultPlan::default(),
+        Some(clean_dir.as_path()),
+        0.0,
+        &default_lost(),
+    );
+    assert_eq!(run.params, clean.params, "a dropped fence must not change in-process results");
+    drop(run);
+    let reopened = ShardedStore::open_disk(&dir, 2).unwrap();
+    for atom in 0..32 {
+        assert!(
+            reopened.get_atom_any(atom).unwrap().is_some(),
+            "atom {atom} unreadable after the fsync fault + crash"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&base);
 }
 
 #[test]
@@ -163,11 +333,11 @@ fn disk_backend_chaos_runs_match_mem_backend_byte_for_byte() {
     let lost = default_lost();
     let base = tmpdir("backend-identity");
     for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
-        let (mem_bytes, _) = drive_chaos(mode, 3, &plan, None, 0.0, &lost);
+        let mem = drive_chaos(mode, 3, &plan, None, 0.0, &lost);
         let dir = base.join(format!("{mode}"));
-        let (disk_bytes, _) = drive_chaos(mode, 3, &plan, Some(dir.as_path()), 0.0, &lost);
+        let disk = drive_chaos(mode, 3, &plan, Some(dir.as_path()), 0.0, &lost);
         assert_eq!(
-            mem_bytes, disk_bytes,
+            mem.params, disk.params,
             "{mode}: disk-backed chaos run diverged from the mem-backed run"
         );
     }
@@ -183,20 +353,19 @@ fn torn_disk_record_recovers_from_manifest_tracked_previous_record() {
     // fallback from the manifest-tracked previous record.
     let evens: Vec<usize> = (0..32).step_by(2).collect();
     let reference =
-        drive_chaos(CheckpointMode::Sync, 2, &FaultPlan::default(), None, 0.0, &evens).0;
+        drive_chaos(CheckpointMode::Sync, 2, &FaultPlan::default(), None, 0.0, &evens).params;
     let torn_plan = FaultPlan {
         faults: vec![ShardFault { shard: 1, at: 5, kind: FaultKind::TornWrite }],
     };
-    let (mem_bytes, mem_store) =
-        drive_chaos(CheckpointMode::Sync, 2, &torn_plan, None, 0.0, &evens);
+    let mem = drive_chaos(CheckpointMode::Sync, 2, &torn_plan, None, 0.0, &evens);
     let dir = tmpdir("torn-fallback");
-    let (disk_bytes, disk_store) =
-        drive_chaos(CheckpointMode::Sync, 2, &torn_plan, Some(dir.as_path()), 0.0, &evens);
+    let disk = drive_chaos(CheckpointMode::Sync, 2, &torn_plan, Some(dir.as_path()), 0.0, &evens);
+    let (mem_store, disk_store) = (mem.store, disk.store);
     assert_eq!(
-        reference, mem_bytes,
+        reference, mem.params,
         "torn tail never intersects the lost set, so recovery matches fault-free"
     );
-    assert_eq!(reference, disk_bytes, "same pin over real on-disk shards");
+    assert_eq!(reference, disk.params, "same pin over real on-disk shards");
     // Record-level pin: every atom (including the torn one, whose latest
     // on-disk copy is physically truncated) reads back exactly what the
     // memory backend's drop-the-tail semantics produce — the torn atom's
@@ -228,7 +397,7 @@ fn compaction_shrinks_disk_bytes_and_leaves_results_byte_identical() {
     let base = tmpdir("compaction");
     let plain_dir = base.join("plain");
     let compacted_dir = base.join("compacted");
-    let (plain_bytes, plain_store) = drive_chaos(
+    let plain = drive_chaos(
         CheckpointMode::Sync,
         2,
         &FaultPlan::default(),
@@ -236,7 +405,7 @@ fn compaction_shrinks_disk_bytes_and_leaves_results_byte_identical() {
         0.0,
         &lost,
     );
-    let (compacted_bytes, compacted_store) = drive_chaos(
+    let compacted = drive_chaos(
         CheckpointMode::Sync,
         2,
         &FaultPlan::default(),
@@ -244,8 +413,9 @@ fn compaction_shrinks_disk_bytes_and_leaves_results_byte_identical() {
         0.3,
         &lost,
     );
+    let (plain_store, compacted_store) = (plain.store, compacted.store);
     assert_eq!(
-        plain_bytes, compacted_bytes,
+        plain.params, compacted.params,
         "compaction changed recovered parameters"
     );
     assert!(compacted_store.compaction_runs() > 0, "the 0.3 threshold never triggered");
@@ -288,7 +458,7 @@ fn degraded_recovery_reads_survivors_under_the_watermark() {
     store.put_atoms_at(3, &[(1, &[3.0, 3.0][..])]).unwrap();
     store.mark_committed_at(3);
     // The shard dies; degraded writes re-route, degraded reads skip it.
-    assert_eq!(store.advance_epoch(5), vec![0]);
+    assert_eq!(store.advance_epoch(5).newly_down, vec![0]);
     store.put_atoms_at(6, &[(0, &[6.0, 6.0][..]), (2, &[6.0, 6.0][..])]).unwrap();
     assert!(store.degraded_records() > 0);
 
@@ -419,6 +589,23 @@ fn chaos_scenario_reports_byte_identical_across_shard_counts_and_modes() {
     // And repeatability on the exact same spec.
     let again = sweep_with(&format!("[storage]\nshards = 2\nwriters = 2\n{kill_shard_1}"));
     assert_eq!(two, again, "same-seed chaos sweep must be byte-identical");
+}
+
+#[test]
+fn partition_and_flaky_sweeps_match_the_fault_free_reference() {
+    // The scenario-level pin for the new fault families: partitions and
+    // flaky shards lose no data (writes re-route; down phases rebuild
+    // selectively, heals re-adopt), so a sweep under them renders the
+    // exact report of a fault-free single-shard sweep — and repeats
+    // byte-identically.
+    let reference = sweep_with("[storage]\nshards = 1\n");
+    let spec = "[storage]\nshards = 4\nwriters = 2\n\
+                [[chaos.partition]]\nshard = 0\nat = 4\nuntil = 12\n\
+                [[chaos.flaky]]\nshard = 2\nat = 6\nperiod = 8\ndown_for = 3\ncycles = 2\n";
+    let faulty = sweep_with(spec);
+    assert_eq!(reference, faulty, "partition+flaky sweep diverged from fault-free");
+    let again = sweep_with(spec);
+    assert_eq!(faulty, again, "same-seed partition+flaky sweep must be byte-identical");
 }
 
 #[test]

@@ -325,6 +325,109 @@ fn prop_recovery_unchanged_by_mid_compaction_crash() {
 }
 
 #[test]
+fn prop_flaky_kill_heal_schedules_recover_byte_identical() {
+    // Placement-tracked selective recovery under arbitrary kill/heal
+    // schedules: any mix of healing kills and flaky (kill+heal cycling)
+    // shards — as long as one shard stays clean — leaves the recovered
+    // parameters byte-identical to a fault-free single-shard run, sync
+    // and async. Down phases rebuild only the dead slices from the
+    // cache; heals re-adopt them; reads always see canonical content.
+    use std::sync::Arc;
+
+    use scar::chaos::{FaultKind, FaultPlan, ShardFault};
+    use scar::checkpoint::{AsyncCheckpointer, CheckpointMode};
+    use scar::models::synthetic::SyntheticTrainer;
+    use scar::trainer::Trainer;
+
+    fn drive(plan: &FaultPlan, shards: usize, mode: CheckpointMode, lost: &[usize]) -> Vec<u8> {
+        let mut trainer = SyntheticTrainer::new(24, 0.85, 3);
+        trainer.init(7).unwrap();
+        let layout = trainer.layout().clone();
+        let store = Arc::new(plan.mem_store(shards));
+        let policy = CheckpointPolicy::partial(6, 3, Selector::Priority);
+        let mut ck = AsyncCheckpointer::new(
+            policy,
+            trainer.state(),
+            &layout,
+            store.clone(),
+            mode,
+            shards,
+        )
+        .unwrap();
+        let mut c_rng = Rng::new(11);
+        for iter in 0..30usize {
+            if iter == 9 {
+                ck.flush().unwrap();
+                recover(
+                    RecoveryMode::Partial,
+                    trainer.state_mut(),
+                    &layout,
+                    lost,
+                    store.as_ref(),
+                )
+                .unwrap();
+            }
+            trainer.step(iter).unwrap();
+            ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut c_rng).unwrap();
+        }
+        ck.finish().unwrap();
+        let mut bytes = Vec::new();
+        for t in &trainer.state().tensors {
+            for v in &t.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        bytes
+    }
+
+    let mut reference: Option<(Vec<usize>, Vec<u8>)> = None;
+    prop_check("flaky kill/heal schedules", 12, |rng| {
+        let shards = 2 + rng.below(3); // 2..=4
+        // Random schedule on shards 1.. (shard 0 stays clean, so the
+        // plan always validates: a survivor exists at every epoch).
+        let n_events = 1 + rng.below(3);
+        let mut faults = Vec::new();
+        for _ in 0..n_events {
+            let shard = 1 + rng.below(shards - 1);
+            let at = 1 + rng.below(20);
+            if rng.below(2) == 0 {
+                let heal_at = Some(at + 1 + rng.below(8));
+                faults.push(ShardFault { shard, at, kind: FaultKind::Kill { heal_at } });
+            } else {
+                let period = 3 + rng.below(6); // 3..=8
+                let down_for = 1 + rng.below(period - 1); // 1..period
+                let cycles = 1 + rng.below(3);
+                faults.push(ShardFault {
+                    shard,
+                    at,
+                    kind: FaultKind::Flaky { period, down_for, cycles },
+                });
+            }
+        }
+        let plan = FaultPlan { faults };
+        plan.validate(shards).unwrap();
+        let lost = {
+            let mut fail_rng = Rng::new(13);
+            fail_rng.sample_indices(24, 12)
+        };
+        // The fault-free reference depends only on (model, seed, lost
+        // set), so trace it once for all cases.
+        if reference.as_ref().map(|(l, _)| l != &lost).unwrap_or(true) {
+            let params = drive(&FaultPlan::default(), 1, CheckpointMode::Sync, &lost);
+            reference = Some((lost.clone(), params));
+        }
+        let (_, expect) = reference.as_ref().unwrap();
+        for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
+            let got = drive(&plan, shards, mode, &lost);
+            assert_eq!(
+                expect, &got,
+                "schedule {plan:?} on {shards} shards ({mode:?}) diverged from fault-free"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_running_checkpoint_mixes_iterations() {
     // With partial checkpoints, saved_iter must differ across atoms and
     // recovery must read each atom's *latest* record.

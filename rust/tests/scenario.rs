@@ -125,6 +125,7 @@ fn bundled_scenario_files_parse_and_describe() {
         "shard_failures.toml",
         "shard_failures_cluster.toml",
         "disk_chaos.toml",
+        "selective_recovery.toml",
     ] {
         let path = scenario::find_bundled(&format!("scenarios/{name}"));
         assert!(path.exists(), "bundled scenario {name} not found at {}", path.display());
