@@ -32,6 +32,7 @@ smoke: build
 	$(CARGO_DIR)/target/release/scar run-scenario scenarios/shard_failures.toml --trials 2
 	$(CARGO_DIR)/target/release/scar run-scenario scenarios/shard_failures_cluster.toml --trials 2
 	$(CARGO_DIR)/target/release/scar run-scenario scenarios/selective_recovery.toml --trials 2
+	$(CARGO_DIR)/target/release/scar run-scenario scenarios/erasure_recovery.toml --trials 2
 	$(CARGO_DIR)/target/release/scar run-scenario scenarios/disk_chaos.toml --trials 2
 	$(CARGO_DIR)/target/release/scar run-scenario scenarios/disk_chaos.toml --trials 2 --backend mem --output results/disk_chaos-mem.csv
 	diff results/disk_chaos.csv results/disk_chaos-mem.csv

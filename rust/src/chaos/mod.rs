@@ -48,6 +48,13 @@
 //!     sync at/after `at` silently does not persist, or a compaction
 //!     pass due first crashes inside the manifest rename window. A
 //!     reopen recovers the last manifest that genuinely hit the disk.
+//!   - **bitflip** — one-shot soft error: at the first epoch tick
+//!     at/after `at`, one payload bit of the target atom's latest record
+//!     flips in place (on disk: physically, in the segment file; in
+//!     memory: the record becomes unreadable, the post-CRC-detection
+//!     state). With erasure coding enabled the next parity fence
+//!     detects the CRC mismatch and *repairs the record from parity*;
+//!     without it, reads fall back to the previous good record.
 //!
 //! The epoch clock is advanced by the checkpoint front-end once per
 //! training iteration (`ShardedStore::advance_epoch`), so faults take
@@ -90,6 +97,12 @@ pub enum FaultKind {
     /// metadata-journal loss; recovery after a reopen lands on the last
     /// manifest that genuinely reached the disk.
     FsyncFail,
+    /// One-shot soft error at the first epoch tick at/after `at`: one
+    /// payload bit of `atom`'s latest record on this shard flips in
+    /// place (see [`ShardBackend::corrupt_record`]). The record stays
+    /// where it is — the damage is only *observable* through a CRC
+    /// mismatch on read, and only *repairable* from parity.
+    Bitflip { atom: usize },
 }
 
 /// One scheduled fault: which shard, from which epoch, what kind.
@@ -258,7 +271,7 @@ impl FaultPlan {
     /// results stay byte-identical to the same plan on memory shards).
     pub fn disk_store(&self, dir: &Path, n_shards: usize) -> Result<ShardedStore> {
         let backends = ShardedStore::disk_backends(dir, n_shards)?;
-        Ok(ShardedStore::from_backends(self.wrap(backends)))
+        Ok(ShardedStore::from_backends(self.wrap(backends)).with_placement_dir(dir))
     }
 
     /// Serialize to the scenario value model (`{kill: [...], slow: [...],
@@ -272,6 +285,7 @@ impl FaultPlan {
         let mut partitions = Vec::new();
         let mut flakies = Vec::new();
         let mut fsyncs = Vec::new();
+        let mut bitflips = Vec::new();
         for f in &self.faults {
             let mut m = BTreeMap::new();
             m.insert("shard".to_string(), Json::from(f.shard));
@@ -304,6 +318,10 @@ impl FaultPlan {
                     flakies.push(Json::Obj(m));
                 }
                 FaultKind::FsyncFail => fsyncs.push(Json::Obj(m)),
+                FaultKind::Bitflip { atom } => {
+                    m.insert("atom".to_string(), Json::from(atom));
+                    bitflips.push(Json::Obj(m));
+                }
             }
         }
         let mut obj = BTreeMap::new();
@@ -314,6 +332,7 @@ impl FaultPlan {
             ("partition", partitions),
             ("flaky", flakies),
             ("fsync", fsyncs),
+            ("bitflip", bitflips),
         ] {
             if !arr.is_empty() {
                 obj.insert(key.to_string(), Json::Arr(arr));
@@ -332,6 +351,9 @@ impl FaultPlan {
     /// * `part:0@4..12` (partition; `..12` optional)
     /// * `flaky:2@5p8d3c2` (period 8, down 3, 2 cycles)
     /// * `fsync:0@7`
+    /// * `bitflip:1@6` / `bitflip:1@6a9` (flip a bit of atom 9's record;
+    ///   the atom defaults to the shard index when the `aATOM` suffix is
+    ///   omitted)
     ///
     /// The empty string parses to the empty (no-chaos) plan.
     pub fn parse_spec(spec: &str) -> Result<FaultPlan> {
@@ -403,9 +425,22 @@ impl FaultPlan {
                     at: num(tail, "epoch", entry)?,
                     kind: FaultKind::FsyncFail,
                 },
+                "bitflip" => {
+                    // `AT` or `ATaATOM`; the atom defaults to the shard
+                    // index (every shard owns its own atom id under
+                    // modulo routing, so the default always has a record
+                    // to hit).
+                    let (at, atom) = match tail.split_once('a') {
+                        None => (num(tail, "epoch", entry)?, shard),
+                        Some((at, atom)) => {
+                            (num(at, "epoch", entry)?, num(atom, "atom", entry)?)
+                        }
+                    };
+                    ShardFault { shard, at, kind: FaultKind::Bitflip { atom } }
+                }
                 other => bail!(
                     "chaos spec '{entry}': unknown fault kind '{other}' \
-                     (kill|slow|torn|part|flaky|fsync)"
+                     (kill|slow|torn|part|flaky|fsync|bitflip)"
                 ),
             };
             faults.push(fault);
@@ -427,6 +462,8 @@ pub struct ChaosBackend {
     torn_records: u64,
     /// Durability fences silently dropped by fsync faults.
     fsync_failures: u64,
+    /// Records corrupted by bitflip faults.
+    bitflips: u64,
 }
 
 impl ChaosBackend {
@@ -440,6 +477,7 @@ impl ChaosBackend {
             epoch: 0,
             torn_records: 0,
             fsync_failures: 0,
+            bitflips: 0,
         }
     }
 
@@ -449,6 +487,10 @@ impl ChaosBackend {
 
     pub fn fsync_failures(&self) -> u64 {
         self.fsync_failures
+    }
+
+    pub fn bitflips(&self) -> u64 {
+        self.bitflips
     }
 
     /// Is the shard inside a kill window (or a flaky down phase) at
@@ -617,6 +659,26 @@ impl ShardBackend for ChaosBackend {
             self.epoch = iter;
         }
         self.inner.advance_epoch(iter);
+        // Bitflips fire one-shot off the fault clock, so the corruption
+        // lands at a deterministic epoch in every mode. A fault whose
+        // atom has no record yet simply misses (no bit to flip); IO
+        // errors while flipping are ignored — injection must never fail
+        // the training loop, and the suite asserts on repairs, not
+        // flips.
+        for i in 0..self.faults.len() {
+            if self.fired[i] {
+                continue;
+            }
+            let FaultKind::Bitflip { atom } = self.faults[i].kind else {
+                continue;
+            };
+            if self.epoch >= self.faults[i].at {
+                self.fired[i] = true;
+                if let Ok(true) = self.inner.corrupt_record(atom) {
+                    self.bitflips += 1;
+                }
+            }
+        }
     }
 
     fn is_down(&self) -> bool {
@@ -657,6 +719,10 @@ impl ShardBackend for ChaosBackend {
 
     fn compact_abandoned(&mut self) -> Result<()> {
         self.inner.compact_abandoned()
+    }
+
+    fn corrupt_record(&mut self, atom: usize) -> Result<bool> {
+        self.inner.corrupt_record(atom)
     }
 }
 
@@ -906,7 +972,8 @@ mod tests {
     #[test]
     fn parse_spec_grammar_round_trips() {
         let plan = FaultPlan::parse_spec(
-            "kill:1@6..9, slow:0@4..9x50, torn:2@8, part:0@4..12, flaky:2@5p8d3c2, fsync:0@7",
+            "kill:1@6..9, slow:0@4..9x50, torn:2@8, part:0@4..12, flaky:2@5p8d3c2, fsync:0@7, \
+             bitflip:1@6, bitflip:0@3a7",
         )
         .unwrap();
         assert_eq!(
@@ -926,9 +993,12 @@ mod tests {
                     kind: FaultKind::Flaky { period: 8, down_for: 3, cycles: 2 },
                 },
                 ShardFault { shard: 0, at: 7, kind: FaultKind::FsyncFail },
+                ShardFault { shard: 1, at: 6, kind: FaultKind::Bitflip { atom: 1 } },
+                ShardFault { shard: 0, at: 3, kind: FaultKind::Bitflip { atom: 7 } },
             ]
         );
         assert!(FaultPlan::parse_spec("").unwrap().is_empty());
+        assert!(FaultPlan::parse_spec("bitflip:0@3afoo").is_err());
         assert!(FaultPlan::parse_spec("kill:1@forever").is_err());
         assert!(FaultPlan::parse_spec("meteor:0@3").is_err());
         assert!(FaultPlan::parse_spec("flaky:0@3").is_err(), "flaky needs p/d/c");
@@ -985,6 +1055,27 @@ mod tests {
             }],
         };
         assert!(bad_partition.validate(2).is_err(), "until must be > at");
+    }
+
+    #[test]
+    fn bitflip_fires_once_at_its_epoch() {
+        let faults = vec![ShardFault { shard: 0, at: 3, kind: FaultKind::Bitflip { atom: 0 } }];
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, faults);
+        put1(&mut b, 1, 0, 1.5);
+        b.advance_epoch(2);
+        assert_eq!(b.bitflips(), 0, "not due yet");
+        assert!(b.get_atom(0).unwrap().is_some());
+        b.advance_epoch(3);
+        assert_eq!(b.bitflips(), 1, "fired at its epoch");
+        assert!(
+            b.get_atom(0).unwrap().is_none(),
+            "memory model: the corrupted record is unreadable"
+        );
+        // One-shot: a rewritten record is not re-corrupted.
+        put1(&mut b, 4, 0, 2.5);
+        b.advance_epoch(5);
+        assert_eq!(b.bitflips(), 1);
+        assert_eq!(b.get_atom(0).unwrap().unwrap().values, vec![2.5]);
     }
 
     #[test]

@@ -476,6 +476,12 @@ impl AsyncCheckpointer {
                 bail!("checkpoint writer failed: {e}");
             }
         }
+        // Parity fence before the durability fence, on the drained store:
+        // scrub-repair any member a bitflip (or a dead shard the cache
+        // path missed) left unreadable, then re-encode every stripe from
+        // the settled state — running it here, after the async drain, is
+        // what keeps sync and async parity byte-identical.
+        self.store.parity_fence()?;
         self.store.sync_all()?;
         self.store.mark_committed_at(self.last_barrier_iter);
         if self.compact_threshold > 0.0 {

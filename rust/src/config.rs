@@ -46,6 +46,11 @@ pub struct RunConfig {
     pub storage_compact_threshold: f64,
     /// Minimum on-disk shard bytes before compaction runs.
     pub storage_compact_min_bytes: usize,
+    /// Erasure-coded parity shards (0 = off, 1 = single-parity XOR
+    /// coding): flush fences encode each stripe of atom records into a
+    /// parity record, so a dead shard's slice is reconstructable from
+    /// survivors alone and CRC-failed records are repaired in place.
+    pub storage_parity: usize,
     pub selector: Selector,
     pub recovery: RecoveryMode,
     /// Inject a failure? (fraction of atoms lost; 0 disables)
@@ -74,7 +79,7 @@ pub struct RunConfig {
     /// ([`FaultPlan::parse_spec`](crate::chaos::FaultPlan::parse_spec)):
     /// comma-separated `kill:1@6..9`,
     /// `slow:0@4..9x50`, `torn:2@8`, `part:0@4..12`, `flaky:2@5p8d3c2`,
-    /// `fsync:0@7` entries. Empty = no chaos.
+    /// `fsync:0@7`, `bitflip:1@6a9` entries. Empty = no chaos.
     pub chaos: String,
 }
 
@@ -95,6 +100,7 @@ impl Default for RunConfig {
             storage_max_pending: 0,
             storage_compact_threshold: 0.0,
             storage_compact_min_bytes: 0,
+            storage_parity: 0,
             selector: Selector::Priority,
             recovery: RecoveryMode::Partial,
             fail_fraction: 0.0,
@@ -167,6 +173,9 @@ impl RunConfig {
                 self.storage_compact_min_bytes =
                     value.parse().context("storage_compact_min_bytes")?
             }
+            "storage_parity" => {
+                self.storage_parity = value.parse().context("storage_parity")?
+            }
             "selector" => {
                 self.selector = Selector::from_str(value).map_err(anyhow::Error::msg)?
             }
@@ -217,6 +226,13 @@ impl RunConfig {
             bail!(
                 "storage_compact_threshold must be in [0, 1), got {}",
                 self.storage_compact_threshold
+            );
+        }
+        if self.storage_parity > 1 {
+            bail!(
+                "storage_parity must be 0 or 1 (only single-parity XOR coding is \
+                 implemented), got {}",
+                self.storage_parity
             );
         }
         if !(0.0..=1.0).contains(&self.fail_fraction) {
@@ -335,9 +351,13 @@ mod tests {
         cfg.apply("storage_compact_min_bytes", "1024").unwrap();
         assert!((cfg.storage_compact_threshold - 0.4).abs() < 1e-12);
         assert_eq!(cfg.storage_compact_min_bytes, 1024);
+        cfg.apply("storage_parity", "1").unwrap();
+        assert_eq!(cfg.storage_parity, 1);
         assert!(cfg.apply("storage_shards", "0").is_err());
         assert!(cfg.apply("checkpoint_mode", "never").is_err());
         assert!(cfg.apply("storage_compact_threshold", "1.5").is_err());
+        // Only single-parity coding exists.
+        assert!(cfg.apply("storage_parity", "2").is_err());
     }
 
     #[test]
@@ -377,10 +397,11 @@ mod tests {
         use crate::chaos::FaultKind;
         let mut cfg = RunConfig::default();
         cfg.apply("storage_shards", "3").unwrap();
-        cfg.apply("chaos", "kill:1@6..9,part:0@4..12").unwrap();
+        cfg.apply("chaos", "kill:1@6..9,part:0@4..12,bitflip:2@5a8").unwrap();
         let plan = cfg.chaos_plan().unwrap();
-        assert_eq!(plan.faults.len(), 2);
+        assert_eq!(plan.faults.len(), 3);
         assert_eq!(plan.faults[0].kind, FaultKind::Kill { heal_at: Some(9) });
+        assert_eq!(plan.faults[2].kind, FaultKind::Bitflip { atom: 8 });
         // Out-of-range shard and grammar errors are rejected.
         assert!(cfg.apply("chaos", "kill:7@6").is_err());
         assert!(cfg.apply("chaos", "meteor:0@6").is_err());

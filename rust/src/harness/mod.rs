@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::chaos::FaultPlan;
 use crate::checkpoint::{
@@ -145,6 +145,12 @@ pub struct CheckpointSetup {
     pub max_pending: usize,
     /// Injected storage faults (empty = no chaos).
     pub chaos: FaultPlan,
+    /// Erasure-coded parity shards (`storage.parity`; 0 = none, 1 = one
+    /// XOR parity shard per store — the only coding implemented). With
+    /// parity on, every flush fence scrubs/re-encodes stripes, CRC-failed
+    /// records are repaired in place, and a cold-restarted store can
+    /// rebuild a dead shard's slice from survivors alone.
+    pub parity: usize,
     /// Disk-backed trial: root directory for this trial's shards
     /// (`None` = in-memory shards, the default). The directory is wiped
     /// at store build time — stale records from an earlier run would
@@ -178,6 +184,7 @@ impl CheckpointSetup {
             writers,
             max_pending: 0,
             chaos: FaultPlan::default(),
+            parity: 0,
             checkpoint_dir: None,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
@@ -190,14 +197,22 @@ impl CheckpointSetup {
     /// plan produce byte-identical trial results
     /// (`rust/tests/chaos.rs`).
     pub fn build_store(&self) -> Result<ShardedStore> {
+        if self.parity > 1 {
+            bail!(
+                "storage.parity = {} is not supported: only single-parity XOR coding \
+                 (parity <= 1) is implemented (Reed–Solomon m > 1 is not)",
+                self.parity
+            );
+        }
         match &self.checkpoint_dir {
             None => {
-                if self.chaos.is_empty() {
-                    Ok(ShardedStore::new_mem(self.shards))
+                let store = if self.chaos.is_empty() {
+                    ShardedStore::new_mem(self.shards)
                 } else {
                     self.chaos.validate(self.shards)?;
-                    Ok(self.chaos.mem_store(self.shards))
-                }
+                    self.chaos.mem_store(self.shards)
+                };
+                Ok(store.with_mem_parity(self.parity))
             }
             Some(dir) => {
                 if dir.exists() {
@@ -206,7 +221,7 @@ impl CheckpointSetup {
                     })?;
                 }
                 self.chaos.validate(self.shards)?;
-                self.chaos.disk_store(dir, self.shards)
+                self.chaos.disk_store(dir, self.shards)?.with_disk_parity(dir, self.parity)
             }
         }
     }
@@ -238,6 +253,11 @@ pub struct TrialResult {
     pub compaction_runs: u64,
     /// Segment bytes those passes reclaimed.
     pub compaction_reclaimed_bytes: u64,
+    /// Records the parity scrub repaired in place (bitflipped/CRC-failed
+    /// members). 0 without `storage.parity`.
+    pub repaired_records: u64,
+    /// Payload bytes of those repaired records.
+    pub repaired_bytes: u64,
 }
 
 /// Cap for perturbed runs: generous multiple of the baseline so heavy
@@ -274,6 +294,8 @@ pub fn run_trial(
         rebuilt_bytes: 0,
         compaction_runs: 0,
         compaction_reclaimed_bytes: 0,
+        repaired_records: 0,
+        repaired_bytes: 0,
     })
 }
 
@@ -395,6 +417,8 @@ pub fn run_plan_trial_with(
         rebuilt_bytes,
         compaction_runs: store.compaction_runs(),
         compaction_reclaimed_bytes: store.compaction_reclaimed_bytes(),
+        repaired_records: store.repaired_records(),
+        repaired_bytes: store.repaired_bytes(),
     })
 }
 

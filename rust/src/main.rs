@@ -80,22 +80,25 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend> [flags
 Config keys (for --set): model seed iters target_iters ps_nodes workers
   checkpoint_interval checkpoint_k checkpoint_mode(sync|async) selector
   recovery storage_shards storage_writers storage_max_pending
-  storage_compact_threshold storage_compact_min_bytes
+  storage_compact_threshold storage_compact_min_bytes storage_parity
   fail_fraction fail_geom_p fail_plan fail_nodes fail_cascade_extra
   fail_cascade_gap fail_flaky_period fail_flaky_prob fail_flaky_max
-  checkpoint_dir chaos (e.g. \"kill:1@6..9,part:0@4..12,flaky:2@5p8d3c2\")
+  checkpoint_dir chaos (e.g. \"kill:1@6..9,part:0@4..12,flaky:2@5p8d3c2,
+  bitflip:1@6a9\" — bitflip:SHARD@EPOCH[aATOM] corrupts one record)
 
 Scenario files additionally take [chaos] (per-shard
-kill/slow/torn/partition/flaky/fsync schedules), checkpoint_dir
-(disk-backed trials), [storage] compact_threshold/compact_min_bytes,
-deploy = \"harness\"|\"cluster\", and ps_nodes.
+kill/slow/torn/partition/flaky/fsync/bitflip schedules), checkpoint_dir
+(disk-backed trials), [storage] compact_threshold/compact_min_bytes/
+parity, deploy = \"harness\"|\"cluster\", and ps_nodes.
 
 Bundled scenarios: scenarios/fig5.toml, fig6.toml, fig7.toml (paper
 figure sweeps), scenarios/failure_models.toml (correlated/cascade/flaky),
 scenarios/shard_failures.toml + shard_failures_cluster.toml (storage
 chaos), scenarios/disk_chaos.toml (the same chaos family over real
 on-disk shards, with compaction), scenarios/selective_recovery.toml
-(partition + flaky-shard families over the selective rebuild planner)."
+(partition + flaky-shard families over the selective rebuild planner),
+scenarios/erasure_recovery.toml (parity-coded shards under bitflip and
+kill faults)."
     );
 }
 
@@ -215,7 +218,7 @@ fn parse_config(args: &Args) -> Result<RunConfig> {
         "model", "seed", "iters", "target_iters", "ps_nodes", "workers",
         "checkpoint_interval", "checkpoint_k", "checkpoint_mode", "selector",
         "recovery", "storage_shards", "storage_writers", "storage_max_pending",
-        "storage_compact_threshold", "storage_compact_min_bytes",
+        "storage_compact_threshold", "storage_compact_min_bytes", "storage_parity",
         "fail_fraction", "fail_geom_p", "fail_plan", "fail_nodes",
         "fail_cascade_extra", "fail_cascade_gap", "fail_flaky_period",
         "fail_flaky_prob", "fail_flaky_max", "checkpoint_dir", "chaos",
@@ -259,10 +262,15 @@ fn make_store(cfg: &RunConfig) -> Result<Arc<ShardedStore>> {
     // train`/`cluster` can drive storage faults straight from the CLI.
     let plan = cfg.chaos_plan()?;
     let store = match (cfg.checkpoint_dir.is_empty(), plan.is_empty()) {
-        (true, true) => ShardedStore::new_mem(cfg.storage_shards),
-        (true, false) => plan.mem_store(cfg.storage_shards),
+        (true, true) => ShardedStore::new_mem(cfg.storage_shards)
+            .with_mem_parity(cfg.storage_parity),
+        (true, false) => plan
+            .mem_store(cfg.storage_shards)
+            .with_mem_parity(cfg.storage_parity),
         (false, _) => {
-            plan.disk_store(std::path::Path::new(&cfg.checkpoint_dir), cfg.storage_shards)?
+            let dir = std::path::Path::new(&cfg.checkpoint_dir);
+            plan.disk_store(dir, cfg.storage_shards)?
+                .with_disk_parity(dir, cfg.storage_parity)?
         }
     };
     Ok(Arc::new(store))
@@ -376,6 +384,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             "healed shards re-adopted {} atom(s), {}",
             readopted_atoms,
             scar::util::fmt_bytes(readopted_bytes)
+        );
+    }
+    if store.repaired_records() > 0 {
+        println!(
+            "parity scrub repaired {} corrupt record(s) in place, {}",
+            store.repaired_records(),
+            scar::util::fmt_bytes(store.repaired_bytes())
         );
     }
     if store.compaction_runs() > 0 {

@@ -20,7 +20,7 @@ use anyhow::{Context, Result};
 use crate::params::{AtomLayout, ParamStore};
 use crate::storage::CheckpointStore;
 
-pub use planner::RebuildPlan;
+pub use planner::{RebuildPlan, RebuildSource};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RecoveryMode {

@@ -25,6 +25,15 @@
 //! [`RebuildPlan::for_atoms`], so its records are fresh again and a later
 //! death of a survivor does not have to rebuild them.
 //!
+//! A plan can execute from two [`RebuildSource`]s: the coordinator's warm
+//! in-memory cache (in-process recovery, the fast path), or — when the
+//! cache died with the process — the store's **parity shards**
+//! ([`RebuildPlan::execute_from_parity`]): each lost atom is
+//! reconstructed from its stripe's surviving members plus the XOR parity
+//! record alone (see [`crate::storage::parity`]), so a cold restart plus
+//! a dead shard is still a bounded selective rebuild instead of data
+//! loss.
+//!
 //! Byte-identity contract: every record the plan writes carries `(saved
 //! iteration, cache value)` — exactly the payload the freshest committed
 //! record for that atom already holds — so recovered parameters after a
@@ -38,6 +47,16 @@ use anyhow::Result;
 
 use crate::params::{AtomLayout, ParamStore};
 use crate::storage::ShardedStore;
+
+/// Where a [`RebuildPlan`] sources its replacement payloads.
+pub enum RebuildSource<'a> {
+    /// The checkpoint coordinator's warm in-memory running-checkpoint
+    /// cache — the in-process fast path.
+    Cache(&'a ParamStore, &'a AtomLayout),
+    /// The store's parity shards — the cold-restart path, when no cache
+    /// survived the process.
+    Parity,
+}
 
 /// A minimal rebuild: the atom slices whose freshest committed records
 /// were lost (or must be re-adopted), each pinned to the iteration its
@@ -129,6 +148,38 @@ impl RebuildPlan {
         }
         Ok(bytes)
     }
+
+    /// Execute against the store's parity shards: each planned atom is
+    /// reconstructed from its stripe's surviving members plus the parity
+    /// record — the atom's own (lost) records are never read — and
+    /// re-persisted at the iteration the parity metadata carries (the
+    /// plan's own iterations may be a conservative `0` when the caller
+    /// has no coordinator state, as after a cold restart). Atoms with no
+    /// parity coverage (never written) are skipped; a stripe with more
+    /// damage than parity absorbs is a hard error. Returns the payload
+    /// bytes written, like
+    /// [`execute_from_cache`](RebuildPlan::execute_from_cache).
+    pub fn execute_from_parity(&self, store: &ShardedStore) -> Result<u64> {
+        let mut bytes = 0u64;
+        for &(atom, _) in &self.atoms {
+            let Some(saved) = store.reconstruct_atom(atom)? else {
+                continue;
+            };
+            bytes += (saved.values.len() * 4) as u64;
+            store.put_atoms_repair(saved.iter, &[(atom, &saved.values[..])])?;
+        }
+        Ok(bytes)
+    }
+
+    /// Dispatch on the payload source (see [`RebuildSource`]).
+    pub fn execute(&self, source: RebuildSource<'_>, store: &ShardedStore) -> Result<u64> {
+        match source {
+            RebuildSource::Cache(cache, layout) => {
+                self.execute_from_cache(cache, layout, store)
+            }
+            RebuildSource::Parity => self.execute_from_parity(store),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -171,5 +222,31 @@ mod tests {
         assert_eq!(got.iter, 4);
         assert_eq!(got.values, vec![6.0, 7.0]);
         assert!(store.get_atom_any(0).unwrap().is_none(), "unplanned atom untouched");
+    }
+
+    #[test]
+    fn executes_from_parity_without_the_cache() {
+        let store = ShardedStore::new_mem(2).with_mem_parity(1);
+        let payloads: Vec<(usize, Vec<f32>)> =
+            (0..4).map(|a| (a, vec![a as f32 + 0.25, -(a as f32)])).collect();
+        let refs: Vec<(usize, &[f32])> =
+            payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+        store.put_atoms_at(5, &refs).unwrap();
+        store.parity_fence().unwrap();
+        // Lose shard 0's records outright (the cache is gone with the
+        // process — the plan's iterations are the conservative 0).
+        for atom in [0usize, 2] {
+            assert!(store.corrupt_record_on(0, atom).unwrap());
+        }
+        let plan = RebuildPlan::for_atoms(&[0, 2], |_| 0);
+        let bytes = plan
+            .execute(RebuildSource::Parity, &store)
+            .expect("parity rebuild");
+        assert_eq!(bytes, 16, "2 atoms x 2 f32s x 4 bytes");
+        for atom in [0usize, 2] {
+            let got = store.get_atom_any(atom).unwrap().unwrap();
+            assert_eq!(got.iter, 5, "record iteration restored from parity metadata");
+            assert_eq!(got.values, vec![atom as f32 + 0.25, -(atom as f32)]);
+        }
     }
 }

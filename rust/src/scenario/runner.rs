@@ -72,6 +72,11 @@ pub struct CellReport {
     pub compaction_runs: u64,
     /// Segment bytes compaction reclaimed, summed over trials.
     pub compaction_reclaimed_bytes: u64,
+    /// Records the parity scrub repaired in place (CRC-failed/bitflipped
+    /// members), summed over trials.
+    pub repaired_records: u64,
+    /// Payload bytes of those repairs, summed over trials.
+    pub repaired_bytes: u64,
 }
 
 impl CellReport {
@@ -161,12 +166,16 @@ impl ScenarioReport {
         let mut rebuilt_bytes = 0u64;
         let mut compaction_runs = 0u64;
         let mut compaction_reclaimed = 0u64;
+        let mut repaired_records = 0u64;
+        let mut repaired_bytes = 0u64;
         for p in &self.panels {
             for c in &p.cells {
                 rebuilt_atoms += c.rebuilt_atoms;
                 rebuilt_bytes += c.rebuilt_bytes;
                 compaction_runs += c.compaction_runs;
                 compaction_reclaimed += c.compaction_reclaimed_bytes;
+                repaired_records += c.repaired_records;
+                repaired_bytes += c.repaired_bytes;
             }
         }
         let mut m = std::collections::BTreeMap::new();
@@ -174,6 +183,8 @@ impl ScenarioReport {
         m.insert("rebuilt_bytes".to_string(), rebuilt_bytes as f64);
         m.insert("compaction_runs".to_string(), compaction_runs as f64);
         m.insert("compaction_reclaimed_bytes".to_string(), compaction_reclaimed as f64);
+        m.insert("repaired_records".to_string(), repaired_records as f64);
+        m.insert("repaired_bytes".to_string(), repaired_bytes as f64);
         m
     }
 
@@ -418,6 +429,8 @@ struct Outcome {
     rebuilt_bytes: u64,
     compaction_runs: u64,
     compaction_reclaimed_bytes: u64,
+    repaired_records: u64,
+    repaired_bytes: u64,
 }
 
 fn job_rng(scn_seed: u64, cell: usize, trial: usize) -> Rng {
@@ -488,6 +501,7 @@ fn build_jobs(
                         checkpoint_dir: scn.checkpoint_dir.as_ref().map(|d| {
                             Path::new(d).join(format!("p{panel_idx}-c{ci}-t{trial}"))
                         }),
+                        parity: scn.storage.parity,
                         compact_threshold: scn.storage.compact_threshold,
                         compact_min_bytes: scn.storage.compact_min_bytes as u64,
                     };
@@ -627,6 +641,10 @@ fn run_cluster_job(
         rebuilt_bytes: report.rebuilt_bytes,
         compaction_runs: report.compaction_runs,
         compaction_reclaimed_bytes: report.compaction_reclaimed_bytes,
+        // The cluster path shares the store handle, so parity repairs are
+        // read straight off it.
+        repaired_records: store.repaired_records(),
+        repaired_bytes: store.repaired_bytes(),
     })
 }
 
@@ -643,6 +661,8 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
                 rebuilt_bytes: 0,
                 compaction_runs: 0,
                 compaction_reclaimed_bytes: 0,
+                repaired_records: 0,
+                repaired_bytes: 0,
             })
         }
         JobKind::Plan { setup, mode, events } => {
@@ -655,6 +675,8 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
                 rebuilt_bytes: r.rebuilt_bytes,
                 compaction_runs: r.compaction_runs,
                 compaction_reclaimed_bytes: r.compaction_reclaimed_bytes,
+                repaired_records: r.repaired_records,
+                repaired_bytes: r.repaired_bytes,
             })
         }
         JobKind::Cluster { setup, n_nodes, kills } => {
@@ -745,6 +767,8 @@ fn run_panel(
         let mut rebuilt_bytes = 0u64;
         let mut compaction_runs = 0u64;
         let mut compaction_reclaimed_bytes = 0u64;
+        let mut repaired_records = 0u64;
+        let mut repaired_bytes = 0u64;
         for trial in 0..scn.trials {
             let idx = ci * scn.trials + trial;
             let out = results[idx]
@@ -762,6 +786,8 @@ fn run_panel(
             rebuilt_bytes += out.rebuilt_bytes;
             compaction_runs += out.compaction_runs;
             compaction_reclaimed_bytes += out.compaction_reclaimed_bytes;
+            repaired_records += out.repaired_records;
+            repaired_bytes += out.repaired_bytes;
             let bound = match &jobs[idx].kind {
                 JobKind::Perturb { at_iter, .. }
                     if c.is_finite() && c > 0.0 && c < 1.0 && x0 > 0.0 =>
@@ -789,6 +815,8 @@ fn run_panel(
             rebuilt_bytes,
             compaction_runs,
             compaction_reclaimed_bytes,
+            repaired_records,
+            repaired_bytes,
         });
     }
 

@@ -74,6 +74,11 @@ impl CheckpointSpec {
 /// garbage ratio at flush fences, 0 = never; `compact_min_bytes` floors
 /// the shard size worth compacting). Compaction keys only matter when the
 /// scenario sets `checkpoint_dir` — memory shards never report garbage.
+/// `parity` adds that many erasure-coded parity shards (0 = off, 1 = the
+/// single-parity XOR coding implemented): every flush fence encodes each
+/// stripe of atom records into a parity record, so a dead shard's slice
+/// is reconstructable from survivors alone and a CRC-failed record is
+/// repaired in place.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StorageSpec {
     pub shards: usize,
@@ -81,6 +86,7 @@ pub struct StorageSpec {
     pub max_pending: usize,
     pub compact_threshold: f64,
     pub compact_min_bytes: usize,
+    pub parity: usize,
 }
 
 impl Default for StorageSpec {
@@ -91,6 +97,7 @@ impl Default for StorageSpec {
             max_pending: 0,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
+            parity: 0,
         }
     }
 }
@@ -107,6 +114,13 @@ impl StorageSpec {
             bail!(
                 "{ctx}: storage compact_threshold must be in [0, 1), got {}",
                 self.compact_threshold
+            );
+        }
+        if self.parity > 1 {
+            bail!(
+                "{ctx}: storage parity must be 0 or 1 (only single-parity XOR \
+                 coding is implemented), got {}",
+                self.parity
             );
         }
         Ok(())
@@ -513,6 +527,12 @@ impl Scenario {
                 self.storage.compact_threshold, self.storage.compact_min_bytes
             ));
         }
+        if self.storage.parity > 0 {
+            out.push_str(&format!(
+                "  erasure coding: {} XOR parity shard(s), encoded at flush fences\n",
+                self.storage.parity
+            ));
+        }
         if !self.chaos.is_empty() {
             out.push_str(&format!("  chaos: {} storage fault(s)\n", self.chaos.faults.len()));
             for f in &self.chaos.faults {
@@ -553,6 +573,7 @@ fn storage_json(s: &StorageSpec) -> Json {
     m.insert("max_pending".into(), Json::from(s.max_pending));
     m.insert("compact_threshold".into(), Json::Num(s.compact_threshold));
     m.insert("compact_min_bytes".into(), Json::from(s.compact_min_bytes));
+    m.insert("parity".into(), Json::from(s.parity));
     Json::Obj(m)
 }
 
@@ -701,8 +722,14 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
     let obj = v
         .as_obj()
         .with_context(|| format!("{ctx}: 'storage' must be a table"))?;
-    const STORAGE_KEYS: &[&str] =
-        &["shards", "writers", "max_pending", "compact_threshold", "compact_min_bytes"];
+    const STORAGE_KEYS: &[&str] = &[
+        "shards",
+        "writers",
+        "max_pending",
+        "compact_threshold",
+        "compact_min_bytes",
+        "parity",
+    ];
     for key in obj.keys() {
         if !STORAGE_KEYS.contains(&key.as_str()) {
             bail!("{ctx}: storage: unknown key '{key}' (expected one of {STORAGE_KEYS:?})");
@@ -719,17 +746,19 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
             .unwrap_or(base.compact_threshold),
         compact_min_bytes: opt_usize(obj, "compact_min_bytes", ctx)?
             .unwrap_or(base.compact_min_bytes),
+        parity: opt_usize(obj, "parity", ctx)?.unwrap_or(base.parity),
     })
 }
 
 /// Parse the `[chaos]` table: per-shard fault schedules under the keys
-/// `kill`, `slow`, `torn`, `partition`, `flaky`, and `fsync`, each an
-/// array of tables.
+/// `kill`, `slow`, `torn`, `partition`, `flaky`, `fsync`, and `bitflip`,
+/// each an array of tables.
 fn parse_chaos(v: &Json, ctx: &str) -> Result<FaultPlan> {
     let obj = v
         .as_obj()
         .with_context(|| format!("{ctx}: 'chaos' must be a table"))?;
-    const CHAOS_KEYS: &[&str] = &["kill", "slow", "torn", "partition", "flaky", "fsync"];
+    const CHAOS_KEYS: &[&str] =
+        &["kill", "slow", "torn", "partition", "flaky", "fsync", "bitflip"];
     for key in obj.keys() {
         if !CHAOS_KEYS.contains(&key.as_str()) {
             bail!("{ctx}: chaos: unknown key '{key}' (expected one of {CHAOS_KEYS:?})");
@@ -837,6 +866,18 @@ fn parse_chaos(v: &Json, ctx: &str) -> Result<FaultPlan> {
         }
         let (shard, at) = shard_at(e, "fsync", ctx)?;
         faults.push(ShardFault { shard, at, kind: FaultKind::FsyncFail });
+    }
+    for e in entries(obj, "bitflip", ctx)? {
+        for key in e.keys() {
+            if !["shard", "at", "atom"].contains(&key.as_str()) {
+                bail!("{ctx}: chaos.bitflip: unknown key '{key}' (shard|at|atom)");
+            }
+        }
+        let (shard, at) = shard_at(e, "bitflip", ctx)?;
+        // The corrupted atom defaults to the shard index, mirroring the
+        // CLI grammar's `bitflip:SHARD@AT` shorthand.
+        let atom = opt_usize(e, "atom", ctx)?.unwrap_or(shard);
+        faults.push(ShardFault { shard, at, kind: FaultKind::Bitflip { atom } });
     }
     Ok(FaultPlan { faults })
 }
@@ -1303,6 +1344,41 @@ norm_log10 = [-2.0, 0.0]
         )
         .unwrap_err();
         assert!(format!("{e:?}").contains("heal"), "{e:?}");
+    }
+
+    #[test]
+    fn parity_and_bitflip_keys_parse_and_roundtrip() {
+        use crate::chaos::FaultKind;
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=4\nparity=1\n\
+             [[chaos.bitflip]]\nshard=1\nat=6\natom=9\n\
+             [[chaos.bitflip]]\nshard=2\nat=8\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.storage.parity, 1);
+        assert_eq!(s.chaos.faults.len(), 2);
+        assert_eq!(s.chaos.faults[0].kind, FaultKind::Bitflip { atom: 9 });
+        // Atom defaults to the shard index, like the CLI grammar.
+        assert_eq!(s.chaos.faults[1].kind, FaultKind::Bitflip { atom: 2 });
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+        // The dry-run description names the coding.
+        assert!(s.describe().contains("erasure coding"), "{}", s.describe());
+        // Only single-parity coding exists; m > 1 is rejected by name.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=4\nparity=2\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("parity"), "{e:?}");
+        // Unknown per-entry keys are named.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[chaos.bitflip]]\nshard=0\nat=3\nbit=4\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("bit"), "{e:?}");
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //! simulation without actually sleeping.
 
 mod mmap;
+pub mod parity;
 pub mod shard;
 
 use std::cell::{Cell, Ref, RefCell};
@@ -238,6 +239,15 @@ pub trait ShardBackend: Send {
     fn compact_abandoned(&mut self) -> Result<()> {
         Ok(())
     }
+
+    /// Corrupt the latest record for `atom` in place (the chaos bitflip
+    /// injection): after this, reading the atom must behave exactly as a
+    /// soft error would make it — a CRC mismatch on disk, a missing
+    /// record in memory. Returns whether a record existed to corrupt.
+    /// The default — backends with no record to damage — does nothing.
+    fn corrupt_record(&mut self, _atom: usize) -> Result<bool> {
+        Ok(false)
+    }
 }
 
 /// Write/read interface to the shared persistent checkpoint storage, as
@@ -375,6 +385,15 @@ impl ShardBackend for MemStore {
 
     fn records_written(&self) -> u64 {
         self.records
+    }
+
+    /// Memory model of a bitflipped record: there is no CRC to fail, so
+    /// the post-detection state — "this record is unreadable" — is
+    /// modelled directly by dropping it. Cumulative byte/record counters
+    /// are untouched, matching the disk backend (where the damaged bytes
+    /// stay in the log).
+    fn corrupt_record(&mut self, atom: usize) -> Result<bool> {
+        Ok(self.map.remove(&atom).is_some())
     }
 }
 
@@ -974,6 +993,42 @@ impl ShardBackend for DiskStore {
         // orphaned fresh segments.
         let _abandoned = DiskStore::prepare_compaction(self)?;
         Ok(())
+    }
+
+    /// Disk bitflip: physically flip one payload bit of the atom's
+    /// latest record inside its segment file, exactly the soft error a
+    /// cosmic ray or firmware bug leaves. The next read fails the CRC
+    /// and drives the real corrupt-record fallback/repair machinery. A
+    /// latest record that is already torn is already unreadable —
+    /// nothing left to corrupt.
+    fn corrupt_record(&mut self, atom: usize) -> Result<bool> {
+        let Some(entry) = self.index.get(&atom).copied() else {
+            return Ok(false);
+        };
+        let loc = entry.latest;
+        if loc.torn {
+            return Ok(false);
+        }
+        let path = self.segment_path(loc.segment);
+        let mut file = fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("opening segment {} to corrupt", path.display()))?;
+        use std::io::Seek;
+        // First payload byte (the CRC for a zero-length payload — a CRC
+        // flip is detected the same way).
+        let pos = loc.offset + RECORD_HEADER as u64;
+        file.seek(std::io::SeekFrom::Start(pos))?;
+        let mut b = [0u8; 1];
+        file.read_exact(&mut b)?;
+        b[0] ^= 0x01;
+        file.seek(std::io::SeekFrom::Start(pos))?;
+        file.write_all(&b)?;
+        // A sealed segment may already be mmap'd; drop the mapping so
+        // the next read sees the damaged bytes.
+        self.maps.borrow_mut().remove(&loc.segment);
+        Ok(true)
     }
 }
 

@@ -1,0 +1,240 @@
+//! Stripe-parity codec for erasure-coded shards.
+//!
+//! A [`crate::storage::ShardedStore`] built with `parity = 1` groups its
+//! atoms into *stripes* of `k` members (one per data shard, because atom
+//! routing and striping both use modulo arithmetic) and maintains one XOR
+//! parity record per stripe in a dedicated parity backend. The parity
+//! record is an ordinary atom record whose id is the stripe index, so it
+//! rides the existing record codec, CRC, manifest, and compaction
+//! machinery unchanged — only its payload is interpreted differently:
+//!
+//! ```text
+//! [0]          k (shard count at encode time; reopen guard)
+//! [1 + 3j]     member j's atom id        (j in 0..k)
+//! [2 + 3j]     member j's iteration
+//! [3 + 3j]     member j's payload length (0 = no member record)
+//! [1 + 3k ..]  XOR of member payloads, zero-padded to the longest
+//! ```
+//!
+//! Every meta word is a `u32` bit-cast into the `f32` slot (`enc`/`dec`
+//! below), and the XOR region combines raw bit patterns
+//! (`f32::from_bits(a.to_bits() ^ b.to_bits())`) — payload floats are
+//! only ever copied, never arithmetically combined, so reconstruction is
+//! bit-exact: XOR-ing out every surviving member's payload leaves the
+//! missing member's exact bits. `0.0f32` is the all-zeros pattern, which
+//! is what makes zero-padding the XOR identity.
+
+use anyhow::{bail, Result};
+
+/// Stripe index that atom `atom` belongs to under `k` data shards.
+pub fn stripe_of(atom: usize, k: usize) -> usize {
+    atom / k
+}
+
+/// Slot (member position) of atom `atom` within its stripe.
+pub fn slot_of(atom: usize, k: usize) -> usize {
+    atom % k
+}
+
+/// Bitwise XOR of two f32 payload words. Pure bit manipulation — the
+/// result is not a meaningful float until the final XOR restores a real
+/// payload word.
+pub fn xor_bits(a: f32, b: f32) -> f32 {
+    f32::from_bits(a.to_bits() ^ b.to_bits())
+}
+
+fn enc(n: usize) -> f32 {
+    f32::from_bits(n as u32)
+}
+
+fn dec(v: f32) -> usize {
+    v.to_bits() as usize
+}
+
+/// One stripe's parity state, decoded from (or encodable into) the
+/// parity record's payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stripe {
+    k: usize,
+    /// Per-slot member metadata: `(atom, iter, len)`. `len == 0` means
+    /// the slot has no member record yet.
+    meta: Vec<(usize, usize, usize)>,
+    /// XOR of the member payloads, zero-padded to the longest member.
+    data: Vec<f32>,
+}
+
+impl Stripe {
+    /// Fresh, empty stripe `stripe` for a `k`-data-shard store: every
+    /// slot pre-labelled with its member atom id, no payload bits yet.
+    pub fn new(k: usize, stripe: usize) -> Stripe {
+        Stripe {
+            k,
+            meta: (0..k).map(|j| (stripe * k + j, 0, 0)).collect(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Decode a parity record payload. The embedded shard count must
+    /// match `k`: a mismatch means the store was reopened with a
+    /// different shard layout, for which the stripe geometry (and so
+    /// every XOR) would be wrong.
+    pub fn from_payload(payload: &[f32], k: usize) -> Result<Stripe> {
+        if payload.is_empty() {
+            bail!("parity record is empty");
+        }
+        let rec_k = dec(payload[0]);
+        if rec_k != k {
+            bail!("parity record encoded for {rec_k} data shards, store has {k}");
+        }
+        let head = 1 + 3 * k;
+        if payload.len() < head {
+            bail!("parity record truncated: {} < {head} meta words", payload.len());
+        }
+        let meta = (0..k)
+            .map(|j| {
+                (
+                    dec(payload[1 + 3 * j]),
+                    dec(payload[2 + 3 * j]),
+                    dec(payload[3 + 3 * j]),
+                )
+            })
+            .collect();
+        Ok(Stripe { k, meta, data: payload[head..].to_vec() })
+    }
+
+    /// Serialize into the parity record payload (the layout in the
+    /// module doc).
+    pub fn payload(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(1 + 3 * self.k + self.data.len());
+        out.push(enc(self.k));
+        for &(atom, iter, len) in &self.meta {
+            out.push(enc(atom));
+            out.push(enc(iter));
+            out.push(enc(len));
+        }
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    /// Member metadata `(atom, iter, len)` for `slot`.
+    pub fn member(&self, slot: usize) -> (usize, usize, usize) {
+        self.meta[slot]
+    }
+
+    /// Record that `slot`'s member now holds a `len`-word payload saved
+    /// at `iter`. The atom id is fixed by the stripe geometry.
+    pub fn set_member(&mut self, slot: usize, iter: usize, len: usize) {
+        self.meta[slot].1 = iter;
+        self.meta[slot].2 = len;
+    }
+
+    /// True when no slot has a member record (nothing to persist).
+    pub fn is_empty(&self) -> bool {
+        self.meta.iter().all(|&(_, _, len)| len == 0)
+    }
+
+    /// XOR `vals` into the parity region, growing it (zero-padded) if
+    /// `vals` is the longest member seen so far. XOR is its own inverse,
+    /// so the same call both adds a member payload and removes it — the
+    /// incremental update on overwrite is `xor(old); xor(new)`.
+    pub fn xor(&mut self, vals: &[f32]) {
+        if self.data.len() < vals.len() {
+            self.data.resize(vals.len(), 0.0);
+        }
+        for (d, v) in self.data.iter_mut().zip(vals) {
+            *d = xor_bits(*d, *v);
+        }
+    }
+
+    /// The raw XOR region (longest-member length, zero-padded).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_roundtrips_through_the_payload() {
+        let mut s = Stripe::new(4, 7);
+        s.set_member(0, 12, 5);
+        s.set_member(3, 9, 3);
+        s.xor(&[1.5, -2.25, f32::NAN, 0.0, 1e-38]);
+        let back = Stripe::from_payload(&s.payload(), 4).unwrap();
+        assert_eq!(back.member(0), (28, 12, 5));
+        assert_eq!(back.member(1), (29, 0, 0));
+        assert_eq!(back.member(3), (31, 9, 3));
+        // Bit-for-bit, including the NaN.
+        let (a, b): (Vec<u32>, Vec<u32>) = (
+            s.data().iter().map(|v| v.to_bits()).collect(),
+            back.data().iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shard_count_mismatch_is_an_error() {
+        let s = Stripe::new(2, 0);
+        let err = Stripe::from_payload(&s.payload(), 4).unwrap_err();
+        assert!(err.to_string().contains("2 data shards"), "{err}");
+    }
+
+    #[test]
+    fn xor_reconstructs_a_missing_member_bit_exactly() {
+        let members: Vec<Vec<f32>> = vec![
+            vec![0.1, -7.5, 3.25],
+            vec![42.0],
+            vec![f32::INFINITY, f32::MIN_POSITIVE, -0.0, 9.0],
+        ];
+        let mut s = Stripe::new(3, 0);
+        for (j, m) in members.iter().enumerate() {
+            s.xor(m);
+            s.set_member(j, 1, m.len());
+        }
+        // Lose member 2; XOR the survivors back out.
+        let mut acc = s.data().to_vec();
+        for m in &members[..2] {
+            let mut padded = m.clone();
+            padded.resize(acc.len(), 0.0);
+            for (a, v) in acc.iter_mut().zip(&padded) {
+                *a = xor_bits(*a, *v);
+            }
+        }
+        acc.truncate(s.member(2).2);
+        let (got, want): (Vec<u32>, Vec<u32>) = (
+            acc.iter().map(|v| v.to_bits()).collect(),
+            members[2].iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn incremental_overwrite_matches_fresh_encode() {
+        // xor(old); xor(new) on a live stripe == re-encoding from scratch.
+        let old = vec![1.0f32, 2.0, 3.0];
+        let new = vec![-4.5f32, 0.25, 6.0, 7.5];
+        let other = vec![10.0f32, 20.0];
+
+        let mut incremental = Stripe::new(2, 1);
+        incremental.xor(&other);
+        incremental.set_member(0, 1, other.len());
+        incremental.xor(&old);
+        incremental.set_member(1, 1, old.len());
+        incremental.xor(&old); // remove the superseded payload
+        incremental.xor(&new);
+        incremental.set_member(1, 2, new.len());
+
+        let mut fresh = Stripe::new(2, 1);
+        fresh.xor(&other);
+        fresh.set_member(0, 1, other.len());
+        fresh.xor(&new);
+        fresh.set_member(1, 2, new.len());
+
+        assert_eq!(
+            incremental.payload().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            fresh.payload().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -32,6 +32,24 @@
 //! `1/n_shards` of the checkpoint instead of the whole thing — so no
 //! atom is left without a readable record, at minimal write
 //! amplification. Healed shards re-adopt their slices the same way.
+//! Disk-backed stores persist the map as a `placement.json` sidecar at
+//! every durability fence and reload it on open (each entry validated
+//! against the shard's actual index), so the first post-restart shard
+//! death plans a selective rebuild instead of conservatively rebuilding
+//! everything.
+//!
+//! **Erasure coding** (`storage.parity = 1`): atoms are grouped into
+//! *stripes* of `n_shards` members — one per data shard, since striping
+//! and routing share the modulo arithmetic — and each stripe maintains
+//! an XOR parity record in a dedicated parity backend (see
+//! [`crate::storage::parity`]). Every put incrementally updates the
+//! stripe (XOR the superseded payload out, the new one in), and the
+//! [`parity_fence`](ShardedStore::parity_fence) run at each flush
+//! barrier scrubs damaged members (CRC-failed records are *repaired in
+//! place* from parity, not fallen back from) and re-encodes parity from
+//! the settled store state. A cold-restarted store can then rebuild a
+//! dead shard's slice from the survivors alone — no warm checkpointer
+//! cache — via [`reconstruct_atom`](ShardedStore::reconstruct_atom).
 //!
 //! The **commit watermark** is the recovery rule for pipelined writes:
 //! `committed()` is the highest iteration whose barrier the writer pool
@@ -41,14 +59,17 @@
 //! fence drains the pool and advances it, which is what makes async and
 //! sync checkpointing byte-identical at recovery time.
 
-use std::path::Path;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use super::parity::{self, Stripe};
 use super::{CompactionStats, DiskStore, LatencyModel, MemStore, SavedAtom, ShardBackend};
 use crate::partition::Partition;
+use crate::util::json::Json;
 
 /// What one fault-clock tick changed about shard health (returned by
 /// [`ShardedStore::advance_epoch`]): the checkpoint front-end rebuilds
@@ -73,9 +94,37 @@ pub struct ShardedStore {
     /// degraded re-routes), it is what lets the recovery planner rebuild
     /// exactly a dead shard's slice instead of the whole checkpoint.
     /// Compaction never moves a record between shards, so placement
-    /// survives it; a store reopened from disk starts with an empty map
-    /// (unknown placement is treated as possibly-lost by the planner).
+    /// survives it. Disk stores persist the map as a sidecar at each
+    /// durability fence and reload it on open; entries that fail
+    /// validation (or a missing sidecar) read as `None`, which the
+    /// planner treats as possibly-lost.
     placement: Mutex<Vec<Option<(usize, usize)>>>,
+    /// Parity backends (`m` of them; currently `m <= 1`, single XOR
+    /// parity). Stripe `s` routes to parity backend `s % m`. Excluded
+    /// from the byte/record totals — parity is redundancy, not
+    /// checkpoint data — but synced and compacted alongside the data
+    /// shards.
+    parity: Vec<Mutex<Box<dyn ShardBackend>>>,
+    /// Disk root this store was opened under (`placement.json` sidecar
+    /// and `parity-NNN/` subdirectories live here); `None` for memory
+    /// stores.
+    dir: Option<PathBuf>,
+    /// Records repaired in place from parity (bitflipped/CRC-failed
+    /// members and dead-shard members re-persisted by the scrub).
+    repaired_records: AtomicU64,
+    /// Payload bytes of those repaired records.
+    repaired_bytes: AtomicU64,
+    /// Payload bytes of parity records written at encode fences.
+    parity_bytes: AtomicU64,
+    /// Stripes whose incremental parity is known stale: a member was
+    /// overwritten while the record carrying its previous contribution
+    /// was unreadable (dead shard, bitflip), so the XOR
+    /// read-modify-write could not remove it. Reconstructing from a
+    /// stale stripe would fabricate bytes, so the scrub refuses it (a
+    /// clean error if another member is also unreadable — that really
+    /// is more damage than single parity absorbs); the fence re-encode
+    /// washes the set clean.
+    dirty_stripes: Mutex<HashSet<usize>>,
     /// Commit watermark; `None` until the first `mark_committed`.
     committed: Mutex<Option<usize>>,
     /// Last-observed per-shard health, updated by
@@ -119,9 +168,20 @@ impl ShardedStore {
         Ok(backends)
     }
 
-    /// `n_shards` on-disk shards under `dir/shard-NNN/`.
+    /// `n_shards` on-disk shards under `dir/shard-NNN/`. Parity shards a
+    /// previous handle created under `dir/parity-NNN/` are reattached
+    /// automatically — a cold restart must find its redundancy without
+    /// being told — and the placement sidecar is reloaded.
     pub fn open_disk(dir: &Path, n_shards: usize) -> Result<ShardedStore> {
-        Ok(ShardedStore::from_backends(ShardedStore::disk_backends(dir, n_shards)?))
+        let mut store = ShardedStore::from_backends(ShardedStore::disk_backends(dir, n_shards)?);
+        let mut m = 0;
+        while dir.join(format!("parity-{m:03}")).is_dir() {
+            m += 1;
+        }
+        if m > 0 {
+            store = store.with_disk_parity(dir, m)?;
+        }
+        Ok(store.with_placement_dir(dir))
     }
 
     /// Build from caller-provided backends (tests, custom backends).
@@ -137,8 +197,110 @@ impl ShardedStore {
             degraded: AtomicU64::new(0),
             compaction_runs: AtomicU64::new(0),
             compaction_reclaimed: AtomicU64::new(0),
+            parity: Vec::new(),
+            dir: None,
+            repaired_records: AtomicU64::new(0),
+            repaired_bytes: AtomicU64::new(0),
+            parity_bytes: AtomicU64::new(0),
+            dirty_stripes: Mutex::new(HashSet::new()),
             latency: LatencyModel::default(),
         }
+    }
+
+    /// Attach `m` in-memory parity backends (XOR erasure coding over
+    /// stripes of `n_shards` atoms; see [`crate::storage::parity`]).
+    pub fn with_mem_parity(mut self, m: usize) -> ShardedStore {
+        assert!(m <= 1, "only single-parity XOR coding (m <= 1) is implemented");
+        self.parity = (0..m)
+            .map(|_| Mutex::new(Box::new(MemStore::new()) as Box<dyn ShardBackend>))
+            .collect();
+        self
+    }
+
+    /// Attach `m` on-disk parity backends under `dir/parity-NNN/` and
+    /// remember `dir` as the store's disk root (for the placement
+    /// sidecar).
+    pub fn with_disk_parity(mut self, dir: &Path, m: usize) -> Result<ShardedStore> {
+        assert!(m <= 1, "only single-parity XOR coding (m <= 1) is implemented");
+        let mut parity = Vec::with_capacity(m);
+        for p in 0..m {
+            let sub = dir.join(format!("parity-{p:03}"));
+            let store = DiskStore::open(&sub)
+                .with_context(|| format!("opening parity shard {p} at {}", sub.display()))?;
+            parity.push(Mutex::new(Box::new(store) as Box<dyn ShardBackend>));
+        }
+        self.parity = parity;
+        self.dir = Some(dir.to_path_buf());
+        Ok(self)
+    }
+
+    /// Remember `dir` as the store's disk root and reload the placement
+    /// sidecar a previous handle persisted there (see
+    /// [`sync_all`](ShardedStore::sync_all)). Each entry is validated
+    /// against the named shard's actual index — an entry the shard can
+    /// no longer honour (e.g. the sidecar outlived a fence the shard's
+    /// manifest lost to an fsync fault) is dropped, leaving the planner
+    /// conservative rather than wrong.
+    pub fn with_placement_dir(mut self, dir: &Path) -> ShardedStore {
+        self.dir = Some(dir.to_path_buf());
+        self.load_placement(&dir.join("placement.json"));
+        self
+    }
+
+    fn load_placement(&self, path: &Path) {
+        let Ok(text) = std::fs::read_to_string(path) else { return };
+        let Ok(v) = Json::parse(&text) else { return };
+        let Some(entries) = v.get("placement").as_arr() else { return };
+        let mut placement = self.placement.lock().unwrap();
+        for e in entries {
+            let (Some(atom), Some(shard), Some(iter)) =
+                (e.idx(0).as_usize(), e.idx(1).as_usize(), e.idx(2).as_usize())
+            else {
+                continue;
+            };
+            if shard >= self.shards.len() {
+                continue;
+            }
+            let honoured = {
+                let guard = self.shards[shard].lock().unwrap();
+                !guard.is_down()
+                    && matches!(guard.atom_iter(atom), Ok(Some(it)) if it >= iter)
+            };
+            if !honoured {
+                continue;
+            }
+            if placement.len() <= atom {
+                placement.resize(atom + 1, None);
+            }
+            placement[atom] = Some((shard, iter));
+        }
+    }
+
+    /// Persist the placement map as a JSON sidecar (tmp + rename, like
+    /// the shard manifests): `{"placement": [[atom, shard, iter], ...]}`
+    /// with only the known entries listed.
+    fn persist_placement(&self, dir: &Path) -> Result<()> {
+        let entries: Vec<Json> = {
+            let placement = self.placement.lock().unwrap();
+            placement
+                .iter()
+                .enumerate()
+                .filter_map(|(atom, p)| {
+                    p.map(|(shard, iter)| {
+                        Json::Arr(vec![
+                            Json::from(atom),
+                            Json::from(shard),
+                            Json::from(iter),
+                        ])
+                    })
+                })
+                .collect()
+        };
+        let v = crate::util::json::obj([("placement", Json::Arr(entries))]);
+        let tmp = dir.join("placement.json.tmp");
+        std::fs::write(&tmp, v.to_string())?;
+        std::fs::rename(&tmp, dir.join("placement.json"))?;
+        Ok(())
     }
 
     pub fn with_latency(mut self, latency: LatencyModel) -> ShardedStore {
@@ -214,30 +376,77 @@ impl ShardedStore {
             if target != s {
                 self.degraded.fetch_add(batch.len() as u64, Ordering::Relaxed);
             }
+            // Snapshot the payloads these records supersede *before* the
+            // put: the incremental parity update below XORs the old
+            // contribution out and the new one in.
+            let old: Vec<Option<SavedAtom>> = if self.parity.is_empty() {
+                Vec::new()
+            } else {
+                batch.iter().map(|&(atom, _)| self.best_readable(atom)).collect()
+            };
             {
                 let mut shard = self.shards[target].lock().unwrap();
                 shard
                     .put_atoms(iter, batch)
                     .with_context(|| format!("writing {} atoms to shard {target}", batch.len()))?;
             }
-            // Placement follows the freshest routed record (ties go to
-            // the latest write, so a rebuild/re-adoption copy at the same
-            // iteration moves placement to where the readable copy is).
-            let mut placement = self.placement.lock().unwrap();
-            for &(atom, _) in batch {
-                if placement.len() <= atom {
-                    placement.resize(atom + 1, None);
-                }
-                let newer = match placement[atom] {
-                    Some((_, have)) => iter >= have,
-                    None => true,
-                };
-                if newer {
-                    placement[atom] = Some((target, iter));
-                }
-            }
+            self.update_parity(iter, batch, &old)?;
+            self.update_placement(iter, target, batch);
         }
         Ok(())
+    }
+
+    /// Re-persist repaired records (parity scrub, cold-restart parity
+    /// rebuild). Identical routing/placement behaviour to
+    /// [`put_atoms_at`](ShardedStore::put_atoms_at) but *bypasses the
+    /// incremental parity update*: a repaired payload is exactly the
+    /// contribution parity already holds for that member, so XOR-ing a
+    /// fallback "old" value out (the normal path's rule) would corrupt
+    /// the stripe. Degraded-routing counters are also left alone —
+    /// repairs re-home records by design.
+    pub(crate) fn put_atoms_repair(&self, iter: usize, atoms: &[(usize, &[f32])]) -> Result<()> {
+        let n = self.shards.len();
+        let mut per_shard: Vec<Vec<(usize, &[f32])>> = vec![Vec::new(); n];
+        {
+            let route = self.route.lock().unwrap();
+            for &(atom, vals) in atoms {
+                let s = route.get(atom).copied().unwrap_or(atom % n);
+                per_shard[s].push((atom, vals));
+            }
+        }
+        for (s, batch) in per_shard.iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let target = self.live_target(s)?;
+            {
+                let mut shard = self.shards[target].lock().unwrap();
+                shard.put_atoms(iter, batch).with_context(|| {
+                    format!("repairing {} atoms onto shard {target}", batch.len())
+                })?;
+            }
+            self.update_placement(iter, target, batch);
+        }
+        Ok(())
+    }
+
+    /// Placement follows the freshest routed record (ties go to the
+    /// latest write, so a rebuild/re-adoption/repair copy at the same
+    /// iteration moves placement to where the readable copy is).
+    fn update_placement(&self, iter: usize, target: usize, batch: &[(usize, &[f32])]) {
+        let mut placement = self.placement.lock().unwrap();
+        for &(atom, _) in batch {
+            if placement.len() <= atom {
+                placement.resize(atom + 1, None);
+            }
+            let newer = match placement[atom] {
+                Some((_, have)) => iter >= have,
+                None => true,
+            };
+            if newer {
+                placement[atom] = Some((target, iter));
+            }
+        }
     }
 
     /// First *writable* serving shard at or after `s` (wrapping), for
@@ -417,6 +626,291 @@ impl ShardedStore {
         }
     }
 
+    // -----------------------------------------------------------------
+    // Erasure coding (single XOR parity; see crate::storage::parity)
+    // -----------------------------------------------------------------
+
+    /// Number of parity backends attached (`m`; 0 = no erasure coding).
+    pub fn n_parity(&self) -> usize {
+        self.parity.len()
+    }
+
+    fn parity_backend_of(&self, stripe: usize) -> &Mutex<Box<dyn ShardBackend>> {
+        &self.parity[stripe % self.parity.len()]
+    }
+
+    /// Freshest *readable* record for an atom across live data shards:
+    /// like [`get_atom_any`](ShardedStore::get_atom_any), but a shard
+    /// whose record is unreadable (bitflipped, torn with no fallback) is
+    /// skipped instead of failing the scan — the parity machinery's view
+    /// of "what can the survivors actually serve".
+    fn best_readable(&self, atom: usize) -> Option<SavedAtom> {
+        let mut best: Option<SavedAtom> = None;
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap();
+            if guard.is_down() {
+                continue;
+            }
+            if let Ok(Some(saved)) = guard.get_atom(atom) {
+                let newer = best.as_ref().map(|b| saved.iter > b.iter).unwrap_or(true);
+                if newer {
+                    best = Some(saved);
+                }
+            }
+        }
+        best
+    }
+
+    /// Decode the parity record for `stripe` (`None` when no parity was
+    /// ever encoded for it).
+    fn read_stripe(&self, stripe: usize) -> Result<Option<Stripe>> {
+        let guard = self.parity_backend_of(stripe).lock().unwrap();
+        match guard.get_atom(stripe)? {
+            Some(rec) => Ok(Some(Stripe::from_payload(&rec.values, self.shards.len())?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Incremental (RAID-4 style) parity maintenance: for each written
+    /// record, XOR the superseded contribution out of its stripe and the
+    /// new payload in, under the parity backend's lock. XOR is
+    /// commutative, so concurrent writer threads converge on the same
+    /// final bits regardless of interleaving.
+    ///
+    /// The superseded contribution can only be removed if the record
+    /// carrying it is still readable *exactly as the stripe metadata
+    /// recorded it* (same iteration, same length). When it is not — the
+    /// member sat on a dead shard, or its record was bitflipped before
+    /// the overwrite — the stripe is marked dirty and its XOR region is
+    /// left alone: reconstruction from it is refused until the next
+    /// fence re-encode rebuilds it from the now-readable store.
+    fn update_parity(
+        &self,
+        iter: usize,
+        batch: &[(usize, &[f32])],
+        old: &[Option<SavedAtom>],
+    ) -> Result<()> {
+        if self.parity.is_empty() {
+            return Ok(());
+        }
+        let k = self.shards.len();
+        for (&(atom, vals), old) in batch.iter().zip(old) {
+            let stripe_id = parity::stripe_of(atom, k);
+            let mut guard = self.parity_backend_of(stripe_id).lock().unwrap();
+            let mut stripe = match guard.get_atom(stripe_id)? {
+                Some(rec) => Stripe::from_payload(&rec.values, k)?,
+                None => Stripe::new(k, stripe_id),
+            };
+            let slot = parity::slot_of(atom, k);
+            let (_, had_iter, had_len) = stripe.member(slot);
+            let mut dirty = self.dirty_stripes.lock().unwrap();
+            let removable = had_len == 0
+                || matches!(old, Some(o) if o.iter == had_iter && o.values.len() == had_len);
+            if !removable {
+                dirty.insert(stripe_id);
+            }
+            if !dirty.contains(&stripe_id) {
+                if had_len > 0 {
+                    if let Some(old) = old {
+                        stripe.xor(&old.values); // remove the superseded contribution
+                    }
+                }
+                stripe.xor(vals);
+            }
+            drop(dirty);
+            stripe.set_member(slot, iter, vals.len());
+            let payload = stripe.payload();
+            guard
+                .put_atoms(iter, &[(stripe_id, &payload[..])])
+                .with_context(|| format!("updating parity for stripe {stripe_id}"))?;
+        }
+        Ok(())
+    }
+
+    /// Reconstruct `atom`'s record from the parity shard and its stripe
+    /// co-members *alone* — the target atom's own records are never
+    /// read, which is what makes this a cold-restart recovery path.
+    /// `None` when no parity record covers the atom; an error when the
+    /// stripe has more damage than single parity can absorb.
+    pub fn reconstruct_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
+        if self.parity.is_empty() {
+            return Ok(None);
+        }
+        let k = self.shards.len();
+        let stripe_id = parity::stripe_of(atom, k);
+        if self.dirty_stripes.lock().unwrap().contains(&stripe_id) {
+            bail!(
+                "stripe {stripe_id}: parity record is stale (a member was rewritten \
+                 while its previous record was unreadable) — re-encode at the next \
+                 flush fence before reconstructing atom {atom}"
+            );
+        }
+        let Some(stripe) = self.read_stripe(stripe_id)? else {
+            return Ok(None);
+        };
+        let slot = parity::slot_of(atom, k);
+        let (_, iter, len) = stripe.member(slot);
+        if len == 0 {
+            return Ok(None);
+        }
+        let values = self.reconstruct_member(&stripe, stripe_id, slot)?;
+        Ok(Some(SavedAtom { iter, values }))
+    }
+
+    /// XOR every *other* member's readable payload out of the stripe's
+    /// parity region, leaving exactly the missing member's bits.
+    fn reconstruct_member(&self, stripe: &Stripe, stripe_id: usize, slot: usize) -> Result<Vec<f32>> {
+        let k = self.shards.len();
+        let (atom, _, len) = stripe.member(slot);
+        let mut acc = stripe.data().to_vec();
+        for co in 0..k {
+            if co == slot {
+                continue;
+            }
+            let (co_atom, co_iter, co_len) = stripe.member(co);
+            if co_len == 0 {
+                continue;
+            }
+            let saved = self
+                .best_readable(co_atom)
+                .filter(|s| s.iter == co_iter)
+                .with_context(|| {
+                    format!(
+                        "stripe {stripe_id}: cannot reconstruct atom {atom} from parity: \
+                         member atom {co_atom} has no readable record at iteration \
+                         {co_iter} (more corruptions than the parity shard can absorb)"
+                    )
+                })?;
+            for (a, v) in acc.iter_mut().zip(&saved.values) {
+                *a = parity::xor_bits(*a, *v);
+            }
+        }
+        acc.truncate(len);
+        Ok(acc)
+    }
+
+    /// Detect-and-repair pass over every stripe (phase one of the parity
+    /// fence): a member whose freshest readable record is older than the
+    /// parity metadata says it should be — a bitflipped record, or a
+    /// record stranded on a dead shard — is reconstructed from parity
+    /// and re-put *in place at its original iteration*. Returns the
+    /// number of records repaired. An unrepairable stripe is a hard
+    /// error, never silently-wrong parameters.
+    pub fn scrub_parity(&self) -> Result<u64> {
+        if self.parity.is_empty() {
+            return Ok(0);
+        }
+        let k = self.shards.len();
+        let n_atoms = self.placement.lock().unwrap().len();
+        let n_stripes = if n_atoms == 0 { 0 } else { parity::stripe_of(n_atoms - 1, k) + 1 };
+        let dirty: HashSet<usize> = self.dirty_stripes.lock().unwrap().clone();
+        let mut repaired = 0u64;
+        for stripe_id in 0..n_stripes {
+            let Some(stripe) = self.read_stripe(stripe_id)? else { continue };
+            for slot in 0..k {
+                let (atom, want_iter, len) = stripe.member(slot);
+                if len == 0 {
+                    continue;
+                }
+                let healthy =
+                    matches!(self.best_readable(atom), Some(s) if s.iter >= want_iter);
+                if healthy {
+                    continue;
+                }
+                if dirty.contains(&stripe_id) {
+                    bail!(
+                        "stripe {stripe_id}: cannot reconstruct atom {atom}: the \
+                         stripe's parity went stale when another member was \
+                         rewritten while its old record was unreadable — more \
+                         corruptions than the parity shard can absorb"
+                    );
+                }
+                let values = self.reconstruct_member(&stripe, stripe_id, slot)?;
+                self.put_atoms_repair(want_iter, &[(atom, &values[..])])?;
+                self.repaired_records.fetch_add(1, Ordering::Relaxed);
+                self.repaired_bytes.fetch_add((values.len() * 4) as u64, Ordering::Relaxed);
+                repaired += 1;
+            }
+        }
+        Ok(repaired)
+    }
+
+    /// Re-encode every stripe's parity from the store's current readable
+    /// state (phase two of the parity fence): heals any drift the
+    /// incremental updates could not see and normalizes the records so
+    /// sync and async pipelines persist byte-identical parity.
+    pub fn encode_parity(&self) -> Result<()> {
+        if self.parity.is_empty() {
+            return Ok(());
+        }
+        let k = self.shards.len();
+        let n_atoms = self.placement.lock().unwrap().len();
+        let n_stripes = if n_atoms == 0 { 0 } else { parity::stripe_of(n_atoms - 1, k) + 1 };
+        for stripe_id in 0..n_stripes {
+            let mut stripe = Stripe::new(k, stripe_id);
+            let mut iter = 0usize;
+            for slot in 0..k {
+                let atom = stripe_id * k + slot;
+                if let Some(saved) = self.best_readable(atom) {
+                    stripe.xor(&saved.values);
+                    stripe.set_member(slot, saved.iter, saved.values.len());
+                    iter = iter.max(saved.iter);
+                }
+            }
+            if stripe.is_empty() {
+                continue;
+            }
+            let payload = stripe.payload();
+            self.parity_bytes.fetch_add((payload.len() * 4) as u64, Ordering::Relaxed);
+            let mut guard = self.parity_backend_of(stripe_id).lock().unwrap();
+            guard
+                .put_atoms(iter, &[(stripe_id, &payload[..])])
+                .with_context(|| format!("encoding parity for stripe {stripe_id}"))?;
+        }
+        // Every stripe now reflects the store's readable state: whatever
+        // incremental drift was flagged has been overwritten.
+        self.dirty_stripes.lock().unwrap().clear();
+        Ok(())
+    }
+
+    /// The parity fence run at every flush barrier:
+    /// [`scrub_parity`](ShardedStore::scrub_parity) (repair damaged
+    /// members from the parity that still holds their contribution) then
+    /// [`encode_parity`](ShardedStore::encode_parity) (rewrite parity
+    /// from the now fully-readable store). Ordering matters: the scrub
+    /// must run against the pre-repair parity, and the re-encode must
+    /// run after repairs. Returns the number of records repaired.
+    pub fn parity_fence(&self) -> Result<u64> {
+        if self.parity.is_empty() {
+            return Ok(0);
+        }
+        let repaired = self.scrub_parity()?;
+        self.encode_parity()?;
+        Ok(repaired)
+    }
+
+    /// Corrupt `atom`'s latest record on data shard `shard` in place
+    /// (delegates to [`ShardBackend::corrupt_record`]) — the soft-error
+    /// injection surface the chaos subsystem and the parity tests drive.
+    pub fn corrupt_record_on(&self, shard: usize, atom: usize) -> Result<bool> {
+        self.shards[shard].lock().unwrap().corrupt_record(atom)
+    }
+
+    /// Records repaired in place from parity so far.
+    pub fn repaired_records(&self) -> u64 {
+        self.repaired_records.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes of those repaired records.
+    pub fn repaired_bytes(&self) -> u64 {
+        self.repaired_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes written to parity backends at encode fences.
+    pub fn parity_bytes(&self) -> u64 {
+        self.parity_bytes.load(Ordering::Relaxed)
+    }
+
     /// Per-shard `(bytes, records)` written so far, for the latency model
     /// (the slowest shard gates a parallel barrier).
     pub fn per_shard_io(&self) -> Vec<(u64, u64)> {
@@ -450,6 +944,13 @@ impl ShardedStore {
                 continue;
             }
             guard.sync().with_context(|| format!("syncing shard {s}"))?;
+        }
+        for (p, shard) in self.parity.iter().enumerate() {
+            let mut guard = shard.lock().unwrap();
+            guard.sync().with_context(|| format!("syncing parity shard {p}"))?;
+        }
+        if let Some(dir) = self.dir.clone() {
+            self.persist_placement(&dir).context("persisting placement sidecar")?;
         }
         Ok(())
     }
@@ -514,6 +1015,24 @@ impl ShardedStore {
                 self.compaction_runs.fetch_add(1, Ordering::Relaxed);
                 self.compaction_reclaimed.fetch_add(stats.reclaimed_bytes, Ordering::Relaxed);
                 out.push((s, stats));
+            }
+        }
+        // Parity backends churn a superseded record per incremental
+        // update, so they compact under the same trigger (reported with
+        // shard indices past the data shards).
+        let n = self.shards.len();
+        for (p, shard) in self.parity.iter().enumerate() {
+            let mut guard = shard.lock().unwrap();
+            let ratio = guard.garbage_ratio();
+            if ratio <= 0.0 || ratio < threshold || guard.on_disk_bytes() < min_bytes {
+                continue;
+            }
+            if let Some(stats) =
+                guard.compact().with_context(|| format!("compacting parity shard {p}"))?
+            {
+                self.compaction_runs.fetch_add(1, Ordering::Relaxed);
+                self.compaction_reclaimed.fetch_add(stats.reclaimed_bytes, Ordering::Relaxed);
+                out.push((n + p, stats));
             }
         }
         Ok(out)
@@ -720,6 +1239,126 @@ mod tests {
         mem.put_atoms_at(1, &[(0, &[1.0][..])]).unwrap();
         mem.put_atoms_at(2, &[(0, &[2.0][..])]).unwrap();
         assert!(mem.compact_if_needed(0.0, 0).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn parity_reconstructs_without_reading_the_atom() {
+        use crate::storage::ShardBackend;
+        let s = ShardedStore::new_mem(3).with_mem_parity(1);
+        let atoms: Vec<(usize, Vec<f32>)> =
+            (0..9).map(|a| (a, vec![a as f32 + 0.5, -(a as f32)])).collect();
+        let refs: Vec<(usize, &[f32])> = atoms.iter().map(|(a, v)| (*a, &v[..])).collect();
+        s.put_atoms_at(2, &refs).unwrap();
+        s.parity_fence().unwrap();
+        // reconstruct_atom never reads the atom's own record, so equality
+        // with the direct read proves survivor-only recovery per atom.
+        for a in 0..9 {
+            let direct = s.get_atom_any(a).unwrap().unwrap();
+            let rebuilt = s.reconstruct_atom(a).unwrap().unwrap();
+            assert_eq!(rebuilt, direct, "atom {a}");
+        }
+        // Losing the record outright changes nothing for reconstruction.
+        assert!(s.shards[1].lock().unwrap().corrupt_record(4).unwrap());
+        let rebuilt = s.reconstruct_atom(4).unwrap().unwrap();
+        assert_eq!((rebuilt.iter, rebuilt.values), (2, vec![4.5, -4.0]));
+    }
+
+    #[test]
+    fn scrub_repairs_a_corrupt_member_in_place() {
+        use crate::storage::ShardBackend;
+        let s = ShardedStore::new_mem(2).with_mem_parity(1);
+        let atoms: Vec<(usize, Vec<f32>)> = (0..6).map(|a| (a, vec![a as f32; 3])).collect();
+        let refs: Vec<(usize, &[f32])> = atoms.iter().map(|(a, v)| (*a, &v[..])).collect();
+        s.put_atoms_at(1, &refs).unwrap();
+        // A later overwrite, so the repaired record must come back at the
+        // *overwritten* iteration, not the stripe's original one.
+        s.put_atoms_at(4, &[(3, &[9.0, 9.0, 9.0][..])]).unwrap();
+        assert!(s.shards[1].lock().unwrap().corrupt_record(3).unwrap());
+        assert_eq!(s.repaired_records(), 0);
+        let repaired = s.parity_fence().unwrap();
+        assert_eq!(repaired, 1);
+        assert_eq!((s.repaired_records(), s.repaired_bytes()), (1, 12));
+        let got = s.get_atom_any(3).unwrap().unwrap();
+        assert_eq!((got.iter, got.values), (4, vec![9.0, 9.0, 9.0]));
+        // A clean follow-up fence repairs nothing further.
+        assert_eq!(s.parity_fence().unwrap(), 0);
+    }
+
+    #[test]
+    fn unrepairable_stripe_is_a_clean_error() {
+        use crate::storage::ShardBackend;
+        let s = ShardedStore::new_mem(2).with_mem_parity(1);
+        let atoms: Vec<(usize, Vec<f32>)> = (0..4).map(|a| (a, vec![a as f32])).collect();
+        let refs: Vec<(usize, &[f32])> = atoms.iter().map(|(a, v)| (*a, &v[..])).collect();
+        s.put_atoms_at(1, &refs).unwrap();
+        // Two corruptions in one stripe exceed what single parity absorbs.
+        assert!(s.shards[0].lock().unwrap().corrupt_record(0).unwrap());
+        assert!(s.shards[1].lock().unwrap().corrupt_record(1).unwrap());
+        let err = s.scrub_parity().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("parity shard can absorb"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn placement_sidecar_survives_reopen_and_validates() {
+        let dir = std::env::temp_dir()
+            .join(format!("scar-sharded-placement-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let s = ShardedStore::open_disk(&dir, 2).unwrap();
+            s.put_atoms_at(3, &[(0, &[1.0][..]), (1, &[2.0][..]), (2, &[4.0][..])]).unwrap();
+            s.sync_all().unwrap();
+        }
+        let s = ShardedStore::open_disk(&dir, 2).unwrap();
+        assert_eq!(s.placement_of(0), Some(0), "sidecar reloaded on open");
+        assert_eq!(s.placement_of(1), Some(1));
+        assert_eq!(s.placement_of(2), Some(0));
+        drop(s);
+        // An entry the named shard cannot honour (no record at least that
+        // fresh) is dropped — stale sidecars stay conservative, not wrong.
+        let sidecar = dir.join("placement.json");
+        std::fs::write(&sidecar, r#"{"placement": [[0, 0, 3], [5, 1, 9]]}"#).unwrap();
+        let s = ShardedStore::open_disk(&dir, 2).unwrap();
+        assert_eq!(s.placement_of(0), Some(0));
+        assert_eq!(s.placement_of(5), None, "unhonoured sidecar entry must read as unknown");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_parity_reopens_and_recovers_a_wiped_shard() {
+        let dir = std::env::temp_dir()
+            .join(format!("scar-sharded-parity-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let s = ShardedStore::open_disk(&dir, 2)
+                .unwrap()
+                .with_disk_parity(&dir, 1)
+                .unwrap();
+            s.put_atoms_at(
+                2,
+                &[
+                    (0, &[1.0, 2.0][..]),
+                    (1, &[3.0][..]),
+                    (2, &[5.0][..]),
+                    (3, &[7.0, 8.0][..]),
+                ],
+            )
+            .unwrap();
+            s.parity_fence().unwrap();
+            s.sync_all().unwrap();
+        }
+        // Cold restart with shard 0's directory destroyed outright.
+        std::fs::remove_dir_all(dir.join("shard-000")).unwrap();
+        let s = ShardedStore::open_disk(&dir, 2).unwrap();
+        assert_eq!(s.n_parity(), 1, "parity dir auto-detected on reopen");
+        assert!(s.get_atom_any(0).unwrap().is_none(), "shard 0's records are gone");
+        let rebuilt = s.reconstruct_atom(0).unwrap().unwrap();
+        assert_eq!((rebuilt.iter, rebuilt.values), (2, vec![1.0, 2.0]));
+        let rebuilt = s.reconstruct_atom(2).unwrap().unwrap();
+        assert_eq!((rebuilt.iter, rebuilt.values), (2, vec![5.0]));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -428,6 +428,135 @@ fn prop_flaky_kill_heal_schedules_recover_byte_identical() {
 }
 
 #[test]
+fn prop_parity_reconstruction_byte_identical() {
+    // Erasure-coded cold-restart recovery: random put/flush schedules
+    // drive a parity-coded store across {mem, disk} x {sync, async} x
+    // shards {2, 4}; then one shard dies with no warm cache left (the
+    // process restarted), the planner rebuilds its slice from the
+    // survivors + parity alone, and every rebuilt record must be
+    // byte-identical to the fault-free reference run's.
+    use std::sync::Arc;
+
+    use scar::chaos::FaultPlan;
+    use scar::checkpoint::{AsyncCheckpointer, CheckpointMode};
+    use scar::models::synthetic::SyntheticTrainer;
+    use scar::recovery::{RebuildPlan, RebuildSource};
+    use scar::storage::ShardedStore;
+    use scar::trainer::Trainer;
+
+    const ATOMS: usize = 24;
+
+    fn drive(
+        mode: CheckpointMode,
+        shards: usize,
+        dir: Option<&std::path::Path>,
+        fences: &[usize],
+    ) -> Arc<ShardedStore> {
+        let mut trainer = SyntheticTrainer::new(ATOMS, 0.85, 3);
+        trainer.init(7).unwrap();
+        let layout = trainer.layout().clone();
+        let store = Arc::new(match dir {
+            None => FaultPlan::default().mem_store(shards).with_mem_parity(1),
+            Some(d) => {
+                let _ = std::fs::remove_dir_all(d);
+                ShardedStore::open_disk(d, shards).unwrap().with_disk_parity(d, 1).unwrap()
+            }
+        });
+        let policy = CheckpointPolicy::partial(6, 3, Selector::Priority);
+        let mut ck = AsyncCheckpointer::new(
+            policy,
+            trainer.state(),
+            &layout,
+            store.clone(),
+            mode,
+            shards,
+        )
+        .unwrap();
+        let mut c_rng = Rng::new(11);
+        for iter in 0..24usize {
+            if fences.contains(&iter) {
+                ck.flush().unwrap();
+            }
+            trainer.step(iter).unwrap();
+            ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut c_rng).unwrap();
+        }
+        ck.finish().unwrap()
+    }
+
+    let base = std::env::temp_dir().join(format!("scar-prop-parity-{}", std::process::id()));
+    let mut case = 0usize;
+    prop_check("parity cold-restart reconstruction", 10, |rng| {
+        case += 1;
+        let shards = [2, 4][rng.below(2)];
+        let mode =
+            if rng.below(2) == 0 { CheckpointMode::Sync } else { CheckpointMode::Async };
+        let use_disk = rng.below(2) == 1;
+        let victim = rng.below(shards);
+        // Extra flush fences at random iterations, on top of the barrier
+        // cadence — the "random put/flush schedule".
+        let fences: Vec<usize> = (0..rng.below(3)).map(|_| 1 + rng.below(23)).collect();
+
+        // Fault-free reference records for this exact schedule.
+        let reference = drive(CheckpointMode::Sync, shards, None, &fences);
+        let expect: Vec<_> =
+            (0..ATOMS).map(|a| reference.get_atom_any(a).unwrap().unwrap()).collect();
+
+        if use_disk {
+            let dir = base.join(format!("case-{case}"));
+            let store = drive(mode, shards, Some(&dir), &fences);
+            drop(store);
+            // Cold restart: the process is gone, and so is the victim
+            // shard's entire directory.
+            std::fs::remove_dir_all(dir.join(format!("shard-{victim:03}"))).unwrap();
+            let reopened = ShardedStore::open_disk(&dir, shards).unwrap();
+            let plan = RebuildPlan::for_dead_shards(
+                &[victim],
+                &reopened.placement_shards(),
+                |_| 0,
+                ATOMS,
+            );
+            assert_eq!(
+                plan.rebuilt_atoms(),
+                ATOMS / shards,
+                "the reloaded placement sidecar must bound the plan to one slice"
+            );
+            plan.execute(RebuildSource::Parity, &reopened).unwrap();
+            for (a, want) in expect.iter().enumerate() {
+                let got = reopened.get_atom_any(a).unwrap().unwrap();
+                assert_eq!(
+                    &got, want,
+                    "atom {a} ({mode:?}, disk, {shards} shards, victim {victim})"
+                );
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        } else {
+            let store = drive(mode, shards, None, &fences);
+            // Survivor-only by construction: reconstruction never reads
+            // the atom's own record, so it must already agree with the
+            // direct read for every atom.
+            for (a, want) in expect.iter().enumerate() {
+                let got = store.reconstruct_atom(a).unwrap().unwrap();
+                assert_eq!(&got, want, "atom {a} reconstructed ({mode:?}, mem)");
+            }
+            // Cold cache: every record the victim shard holds becomes
+            // unreadable, and the plan rebuilds exactly that slice.
+            let dead: Vec<usize> =
+                (0..ATOMS).filter(|&a| store.placement_of(a) == Some(victim)).collect();
+            for &a in &dead {
+                assert!(store.corrupt_record_on(victim, a).unwrap());
+            }
+            let plan = RebuildPlan::for_atoms(&dead, |_| 0);
+            plan.execute(RebuildSource::Parity, &store).unwrap();
+            for (a, want) in expect.iter().enumerate() {
+                let got = store.get_atom_any(a).unwrap().unwrap();
+                assert_eq!(&got, want, "atom {a} ({mode:?}, mem, victim {victim})");
+            }
+        }
+    });
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
 fn prop_running_checkpoint_mixes_iterations() {
     // With partial checkpoints, saved_iter must differ across atoms and
     // recovery must read each atom's *latest* record.
