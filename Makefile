@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: build test check fmt clippy doc smoke artifacts figures figures-pjrt clean
+.PHONY: build test check fmt clippy doc smoke bench artifacts figures figures-pjrt clean
 
 build:
 	cd $(CARGO_DIR) && cargo build --release
@@ -36,6 +36,12 @@ smoke: build
 	$(CARGO_DIR)/target/release/scar run-scenario scenarios/disk_chaos.toml --trials 2
 	$(CARGO_DIR)/target/release/scar run-scenario scenarios/disk_chaos.toml --trials 2 --backend mem --output results/disk_chaos-mem.csv
 	diff results/disk_chaos.csv results/disk_chaos-mem.csv
+
+# Hot-path micro-bench: pinned fence/checkpoint/rebuild workload over
+# {mem,disk} x {sync,async} x parity {0,1}; writes BENCH_7.json. CI runs
+# the --quick variant on every push and the full one nightly.
+bench: build
+	$(CARGO_DIR)/target/release/scar bench --out BENCH_7.json
 
 # AOT-lower every model variant to HLO text + metadata (L2 -> artifacts/).
 artifacts:

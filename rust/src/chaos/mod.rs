@@ -464,6 +464,9 @@ pub struct ChaosBackend {
     fsync_failures: u64,
     /// Records corrupted by bitflip faults.
     bitflips: u64,
+    /// Atoms corrupted since the last `take_corruptions` drain, so the
+    /// router can mark their stripes dirty for the next parity fence.
+    corrupted: Vec<usize>,
 }
 
 impl ChaosBackend {
@@ -478,6 +481,7 @@ impl ChaosBackend {
             torn_records: 0,
             fsync_failures: 0,
             bitflips: 0,
+            corrupted: Vec::new(),
         }
     }
 
@@ -676,6 +680,7 @@ impl ShardBackend for ChaosBackend {
                 self.fired[i] = true;
                 if let Ok(true) = self.inner.corrupt_record(atom) {
                     self.bitflips += 1;
+                    self.corrupted.push(atom);
                 }
             }
         }
@@ -723,6 +728,12 @@ impl ShardBackend for ChaosBackend {
 
     fn corrupt_record(&mut self, atom: usize) -> Result<bool> {
         self.inner.corrupt_record(atom)
+    }
+
+    fn take_corruptions(&mut self) -> Vec<usize> {
+        let mut atoms = self.inner.take_corruptions();
+        atoms.append(&mut self.corrupted);
+        atoms
     }
 }
 

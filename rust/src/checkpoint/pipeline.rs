@@ -121,6 +121,24 @@ pub struct AsyncCheckpointer {
     readopted_atoms: u64,
     /// Payload bytes those re-adoptions re-persisted.
     readopted_bytes: u64,
+    /// Per-atom CRC of the last payload handed to the store: the
+    /// delta-skip filter drops a selected atom whose bytes are unchanged
+    /// since its last persisted record (recovery is untouched — the
+    /// freshest-record scan simply finds the identical older record).
+    last_crc: Vec<u32>,
+    /// Atoms elided by the delta-skip filter.
+    skipped_atoms: u64,
+    /// Payload bytes those elided writes would have cost.
+    skipped_bytes: u64,
+}
+
+/// Content fingerprint of one atom's payload (the delta-skip key).
+fn payload_crc(vals: &[f32]) -> u32 {
+    let mut hasher = crc32fast::Hasher::new();
+    for v in vals {
+        hasher.update(&v.to_le_bytes());
+    }
+    hasher.finalize()
 }
 
 impl AsyncCheckpointer {
@@ -140,6 +158,12 @@ impl AsyncCheckpointer {
         let coord = CheckpointCoordinator::new_unpersisted(policy, init, layout);
         let all: Vec<usize> = (0..layout.n_atoms()).collect();
         let payloads = collect_payloads(&all, init, layout);
+        // Seed the delta-skip cache from the x⁽⁰⁾ dump: every atom's CRC
+        // is known from here on, so the filter never misses a change.
+        let mut last_crc = vec![0u32; layout.n_atoms()];
+        for (atom, vals) in &payloads {
+            last_crc[*atom] = payload_crc(vals);
+        }
         let refs: Vec<(usize, &[f32])> =
             payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
         store.put_atoms_at(0, &refs)?;
@@ -154,6 +178,10 @@ impl AsyncCheckpointer {
             CheckpointMode::Sync => 0,
             CheckpointMode::Async => writers.clamp(1, store.n_shards()),
         };
+        // Parity fences and rebuild slices fan out over the same width
+        // as the writer pool (1 = serial for sync single-writer runs);
+        // the fan-out is byte-identical to a serial pass by design.
+        store.set_fence_workers(n_writers.max(1));
         let mut pool = Vec::with_capacity(n_writers);
         for w in 0..n_writers {
             let (tx, rx): (Sender<WriteJob>, Receiver<WriteJob>) = channel();
@@ -195,6 +223,9 @@ impl AsyncCheckpointer {
             rebuilt_bytes: 0,
             readopted_atoms: 0,
             readopted_bytes: 0,
+            last_crc,
+            skipped_atoms: 0,
+            skipped_bytes: 0,
         })
     }
 
@@ -255,6 +286,19 @@ impl AsyncCheckpointer {
     /// Payload bytes those re-adoptions re-persisted.
     pub fn readopted_bytes(&self) -> u64 {
         self.readopted_bytes
+    }
+
+    /// Selected atoms elided by the delta-skip filter so far (bytes
+    /// unchanged since their last persisted record).
+    pub fn skipped_atoms(&self) -> u64 {
+        self.skipped_atoms
+    }
+
+    /// Payload bytes those elided writes would have cost — checkpoint
+    /// bandwidth the filter saved (big for sparse-update workloads,
+    /// where `partial-k` keeps re-selecting barely-moving atoms).
+    pub fn skipped_bytes(&self) -> u64 {
+        self.skipped_bytes
     }
 
     pub fn policy(&self) -> CheckpointPolicy {
@@ -330,7 +374,12 @@ impl AsyncCheckpointer {
                 |a| self.coord.saved_iter(a),
                 layout.n_atoms(),
             );
-            let bytes = plan.execute_from_cache(self.coord.cache(), layout, &self.store)?;
+            let bytes = plan.execute_from_cache_with(
+                self.coord.cache(),
+                layout,
+                &self.store,
+                self.store.fence_workers(),
+            )?;
             self.rebuilt_atoms += plan.rebuilt_atoms() as u64;
             self.rebuilt_bytes += bytes;
         }
@@ -346,7 +395,12 @@ impl AsyncCheckpointer {
                 .map(|(a, _)| a)
                 .collect();
             let plan = RebuildPlan::for_atoms(&atoms, |a| self.coord.saved_iter(a));
-            let bytes = plan.execute_from_cache(self.coord.cache(), layout, &self.store)?;
+            let bytes = plan.execute_from_cache_with(
+                self.coord.cache(),
+                layout,
+                &self.store,
+                self.store.fence_workers(),
+            )?;
             self.readopted_atoms += plan.rebuilt_atoms() as u64;
             self.readopted_bytes += bytes;
         }
@@ -370,10 +424,31 @@ impl AsyncCheckpointer {
         self.tick(iter, layout)?;
         let t0 = std::time::Instant::now();
         let chosen = self.coord.select_and_update_cache(iter, current, layout, rng);
-        let payloads = collect_payloads(&chosen, current, layout);
+        let mut payloads = collect_payloads(&chosen, current, layout);
+        // Delta-skip: drop selected atoms whose bytes are unchanged
+        // since their last persisted record — the store already holds an
+        // identical copy at an older iteration, and the freshest-record
+        // recovery scan reads the same values from it. The filter runs
+        // on the barrier snapshot, before the mode branch, so sync and
+        // async pipelines skip identically.
+        let last_crc = &mut self.last_crc;
+        let (skipped_atoms, skipped_bytes) = (&mut self.skipped_atoms, &mut self.skipped_bytes);
+        payloads.retain(|(atom, vals)| {
+            let crc = payload_crc(vals);
+            if last_crc.get(*atom) == Some(&crc) {
+                *skipped_atoms += 1;
+                *skipped_bytes += (vals.len() * 4) as u64;
+                return false;
+            }
+            if last_crc.len() <= *atom {
+                last_crc.resize(*atom + 1, 0);
+            }
+            last_crc[*atom] = crc;
+            true
+        });
         let bytes: u64 = payloads.iter().map(|(_, v)| (v.len() * 4) as u64).sum();
         let blocking_secs = t0.elapsed().as_secs_f64();
-        let atoms_saved = chosen.len();
+        let atoms_saved = payloads.len();
 
         match self.mode {
             CheckpointMode::Sync => {
@@ -478,9 +553,10 @@ impl AsyncCheckpointer {
         }
         // Parity fence before the durability fence, on the drained store:
         // scrub-repair any member a bitflip (or a dead shard the cache
-        // path missed) left unreadable, then re-encode every stripe from
-        // the settled state — running it here, after the async drain, is
-        // what keeps sync and async parity byte-identical.
+        // path missed) left unreadable, then re-encode the stripes
+        // touched since the last fence from the settled state — running
+        // it here, after the async drain, is what keeps sync and async
+        // parity byte-identical.
         self.store.parity_fence()?;
         self.store.sync_all()?;
         self.store.mark_committed_at(self.last_barrier_iter);
@@ -605,5 +681,43 @@ mod tests {
             stats.push((s.iter, s.atoms_saved, s.bytes));
         }
         assert_eq!(stats[0], stats[1]);
+    }
+
+    #[test]
+    fn delta_skip_elides_unchanged_atoms() {
+        let (mut ps, layout) = setup(4);
+        let store = Arc::new(ShardedStore::new_mem(2));
+        let mut ck = AsyncCheckpointer::new(
+            CheckpointPolicy::full(1),
+            &ps,
+            &layout,
+            store.clone(),
+            CheckpointMode::Sync,
+            1,
+        )
+        .unwrap();
+        let mut rng = Rng::new(7);
+        // Nothing changed since the x⁽⁰⁾ dump: the barrier writes nothing.
+        let s = ck.checkpoint_now(1, &ps, &layout, &mut rng).unwrap();
+        assert_eq!((s.atoms_saved, s.bytes), (0, 0));
+        assert_eq!((ck.skipped_atoms(), ck.skipped_bytes()), (4, 32));
+        // Touch one atom: only it is written, the other three skip again.
+        ps.get_mut("w").data[0] = 1.5;
+        let s = ck.checkpoint_now(2, &ps, &layout, &mut rng).unwrap();
+        assert_eq!((s.atoms_saved, s.bytes), (1, 8));
+        assert_eq!(ck.skipped_atoms(), 7);
+        ck.flush().unwrap();
+        // The touched atom reads back fresh; skipped atoms still recover
+        // from their byte-identical iter-0 records.
+        let got = store.get_atom_any(0).unwrap().unwrap();
+        assert_eq!((got.iter, got.values), (2, vec![1.5, 0.0]));
+        for atom in 1..4 {
+            let got = store.get_atom_any(atom).unwrap().unwrap();
+            assert_eq!(got.iter, 0, "atom {atom} must keep its iter-0 record");
+            assert_eq!(got.values, vec![0.0, 0.0]);
+        }
+        // An unchanged barrier after the flush skips everything again.
+        let s = ck.checkpoint_now(3, &ps, &layout, &mut rng).unwrap();
+        assert_eq!((s.atoms_saved, s.bytes), (0, 0));
     }
 }

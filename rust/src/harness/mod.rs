@@ -151,6 +151,11 @@ pub struct CheckpointSetup {
     /// records are repaired in place, and a cold-restarted store can
     /// rebuild a dead shard's slice from survivors alone.
     pub parity: usize,
+    /// Deep-scrub cadence for dirty-only parity fences
+    /// (`storage.scrub_interval`): 0 = fences touch only stripes written
+    /// since the last fence; N > 0 = every Nth fence scans and re-encodes
+    /// the entire state.
+    pub scrub_interval: usize,
     /// Disk-backed trial: root directory for this trial's shards
     /// (`None` = in-memory shards, the default). The directory is wiped
     /// at store build time — stale records from an earlier run would
@@ -185,6 +190,7 @@ impl CheckpointSetup {
             max_pending: 0,
             chaos: FaultPlan::default(),
             parity: 0,
+            scrub_interval: 0,
             checkpoint_dir: None,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
@@ -204,7 +210,7 @@ impl CheckpointSetup {
                 self.parity
             );
         }
-        match &self.checkpoint_dir {
+        let store = match &self.checkpoint_dir {
             None => {
                 let store = if self.chaos.is_empty() {
                     ShardedStore::new_mem(self.shards)
@@ -212,7 +218,7 @@ impl CheckpointSetup {
                     self.chaos.validate(self.shards)?;
                     self.chaos.mem_store(self.shards)
                 };
-                Ok(store.with_mem_parity(self.parity))
+                store.with_mem_parity(self.parity)
             }
             Some(dir) => {
                 if dir.exists() {
@@ -221,9 +227,10 @@ impl CheckpointSetup {
                     })?;
                 }
                 self.chaos.validate(self.shards)?;
-                self.chaos.disk_store(dir, self.shards)?.with_disk_parity(dir, self.parity)
+                self.chaos.disk_store(dir, self.shards)?.with_disk_parity(dir, self.parity)?
             }
-        }
+        };
+        Ok(store.with_scrub_interval(self.scrub_interval))
     }
 }
 
@@ -258,6 +265,11 @@ pub struct TrialResult {
     pub repaired_records: u64,
     /// Payload bytes of those repaired records.
     pub repaired_bytes: u64,
+    /// Atoms the delta-skip filter elided from checkpoint barriers
+    /// because their payload CRC was unchanged since the last write.
+    pub skipped_atoms: u64,
+    /// Payload bytes those elided atoms would have written.
+    pub skipped_bytes: u64,
 }
 
 /// Cap for perturbed runs: generous multiple of the baseline so heavy
@@ -296,6 +308,8 @@ pub fn run_trial(
         compaction_reclaimed_bytes: 0,
         repaired_records: 0,
         repaired_bytes: 0,
+        skipped_atoms: 0,
+        skipped_bytes: 0,
     })
 }
 
@@ -403,6 +417,8 @@ pub fn run_plan_trial_with(
     }
     let rebuilt_atoms = ck.rebuilt_atoms() + ck.readopted_atoms();
     let rebuilt_bytes = ck.rebuilt_bytes() + ck.readopted_bytes();
+    let skipped_atoms = ck.skipped_atoms();
+    let skipped_bytes = ck.skipped_bytes();
     ck.finish()?;
     report.delta_norm = delta_sq.sqrt();
     let (total, censored) = match total {
@@ -419,6 +435,8 @@ pub fn run_plan_trial_with(
         compaction_reclaimed_bytes: store.compaction_reclaimed_bytes(),
         repaired_records: store.repaired_records(),
         repaired_bytes: store.repaired_bytes(),
+        skipped_atoms,
+        skipped_bytes,
     })
 }
 

@@ -14,12 +14,14 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use scar::checkpoint::{AsyncCheckpointer, CheckpointCoordinator};
+use scar::checkpoint::{AsyncCheckpointer, CheckpointCoordinator, CheckpointMode, CheckpointPolicy};
 use scar::config::RunConfig;
 use scar::failure::{FailureEvent, FailureInjector};
 use scar::harness;
 use scar::models::{build_trainer, default_engine, BuildOpts};
+use scar::params::{AtomLayout, ParamStore, Tensor};
 use scar::recovery;
+use scar::recovery::RebuildPlan;
 use scar::runtime::artifact;
 use scar::scenario::{self, Scenario};
 use scar::storage::{MemStore, ShardedStore};
@@ -40,6 +42,7 @@ fn main() -> Result<()> {
         "advisor" => cmd_advisor(&args),
         "compact" => cmd_compact(&args),
         "trend" => cmd_trend(&args),
+        "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -55,7 +58,7 @@ fn print_help() {
     eprintln!(
         "scar — self-correcting checkpoint-based fault tolerance for ML training
 
-USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend> [flags]
+USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|bench> [flags]
 
   info                          list AOT artifacts
   train   --set k=v ...         local training loop with SCAR checkpointing
@@ -76,6 +79,13 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend> [flags
           --commit <sha>          commit-keyed CSV and fail on >max-regress
           --from-metrics a.json[,b.json...]   vs the previous row
           [--max-regress 0.25] [--gate wall_secs,rebuilt_bytes]
+          [--render out.svg|out.html]  plot the accumulated CSV instead
+  bench   [--quick] [--out BENCH_7.json]  hot-path benchmark sweep over
+          [--dir d]               {mem,disk} x {sync,async} x parity
+                                  {off,on}: fence wall-clock + stripes
+                                  re-encoded, checkpoint bytes written vs
+                                  delta-skipped, serial vs parallel
+                                  rebuild, allocations avoided
 
 Config keys (for --set): model seed iters target_iters ps_nodes workers
   checkpoint_interval checkpoint_k checkpoint_mode(sync|async) selector
@@ -152,6 +162,33 @@ fn cmd_trend(args: &Args) -> Result<()> {
     let file = args
         .str_opt("file")
         .context("usage: scar trend --file trend.csv --commit sha --from-metrics a.json[,b.json]")?;
+    // `--render out.svg|out.html`: plot the accumulated CSV instead of
+    // appending to it (the nightly's drift dashboard artifact).
+    if let Some(out) = args.str_opt("render") {
+        let csv = std::fs::read_to_string(file)
+            .with_context(|| format!("reading trend file {file}"))?;
+        let svg = scar::util::trend::render_svg(&csv)?;
+        let text = if out.ends_with(".html") {
+            format!(
+                "<!doctype html>\n<html><head><title>scar trend</title></head>\n\
+                 <body>{svg}</body></html>\n"
+            )
+        } else {
+            svg
+        };
+        let path = std::path::Path::new(out);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, text).with_context(|| format!("writing {out}"))?;
+        println!(
+            "trend: rendered {} data row(s) from {file} -> {out}",
+            csv.lines().filter(|l| !l.trim().is_empty()).count().saturating_sub(1)
+        );
+        return Ok(());
+    }
     let commit = args.str_opt("commit").context("scar trend needs --commit <sha>")?;
     let sources = args
         .str_opt("from-metrics")
@@ -204,6 +241,188 @@ fn cmd_trend(args: &Args) -> Result<()> {
             max_regress * 100.0
         );
     }
+    Ok(())
+}
+
+/// `scar bench`: the hot-path benchmark sweep behind `BENCH_7.json`.
+///
+/// Two pinned workloads:
+/// * **fence**: a single-atom-update checkpoint loop over every
+///   {mem, disk} × {sync, async} × parity {0, 1} cell — per-fence stripes
+///   re-encoded (the dirty-only fence's work unit), checkpoint bytes
+///   written vs delta-skipped, and the fence loop's wall-clock.
+/// * **rebuild**: a wiped shard slice reconstructed from parity, serial
+///   vs fanned out over 4 workers, with the pooled-buffer allocation
+///   savings counted.
+///
+/// Work counters (stripes, bytes, allocations) are deterministic — they
+/// are what the nightly trend gates on; wall-clocks ride along for
+/// humans and plots. `--quick` shrinks the workload for the CI smoke
+/// job; `--out` defaults to `BENCH_7.json`.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use scar::util::json::Json;
+    let quick = args.bool("quick");
+    let out = args.str_or("out", "BENCH_7.json");
+    let base_dir = std::path::PathBuf::from(args.str_or("dir", "results/bench-ckpt"));
+    let (n_rows, n_fences, rebuild_reps) = if quick { (64, 8, 3) } else { (256, 32, 10) };
+    let shards = 4usize;
+    let row_elems = 8usize;
+    let n_stripes = (n_rows + shards - 1) / shards;
+
+    println!(
+        "scar bench{}: {n_rows} atoms x {row_elems} f32, {shards} shards, {n_fences} fences/cell",
+        if quick { " --quick" } else { "" }
+    );
+
+    let mut cells = std::collections::BTreeMap::new();
+    let mut top = std::collections::BTreeMap::new();
+    for backend in ["mem", "disk"] {
+        for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
+            for parity in [0usize, 1] {
+                let label = format!("{backend}-{mode}-parity{parity}");
+                let dir = base_dir.join(&label);
+                let store = match backend {
+                    "mem" => ShardedStore::new_mem(shards).with_mem_parity(parity),
+                    _ => {
+                        if dir.exists() {
+                            std::fs::remove_dir_all(&dir)
+                                .with_context(|| format!("clearing {}", dir.display()))?;
+                        }
+                        std::fs::create_dir_all(&dir)?;
+                        ShardedStore::open_disk(&dir, shards)?.with_disk_parity(&dir, parity)?
+                    }
+                };
+                let store = Arc::new(store);
+                let mut ps = ParamStore::new(vec![Tensor::zeros("w", &[n_rows, row_elems])]);
+                let layout = AtomLayout::new(AtomLayout::rows_of(&ps, "w"));
+                let mut rng = Rng::new(7);
+                let mut ck = AsyncCheckpointer::new(
+                    CheckpointPolicy::full(1),
+                    &ps,
+                    &layout,
+                    store.clone(),
+                    mode,
+                    shards,
+                )?;
+                // Warm fence: the iter-0 dump dirtied every stripe, so
+                // the first fence re-encodes the full state. Steady-state
+                // counters start after it.
+                ps.get_mut("w").data[0] += 1.0;
+                ck.maybe_checkpoint(1, &ps, &layout, &mut rng)?;
+                ck.flush()?;
+                let (s_reenc, s_scrub) = (store.stripes_reencoded(), store.stripes_scrubbed());
+                let (s_skip_a, s_skip_b) = (ck.skipped_atoms(), ck.skipped_bytes());
+                let t0 = std::time::Instant::now();
+                for fence in 0..n_fences {
+                    // One atom changes per fence — the workload dirty-only
+                    // fences exist for.
+                    let atom = (3 + fence * 7) % n_rows;
+                    ps.get_mut("w").data[atom * row_elems] += 1.0;
+                    ck.maybe_checkpoint(2 + fence, &ps, &layout, &mut rng)?;
+                    ck.flush()?;
+                }
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let reencoded = store.stripes_reencoded() - s_reenc;
+                let scrubbed = store.stripes_scrubbed() - s_scrub;
+                let skipped_atoms = ck.skipped_atoms() - s_skip_a;
+                let skipped_bytes = ck.skipped_bytes() - s_skip_b;
+                let bytes_written = store.total_bytes();
+                ck.finish()?;
+                println!(
+                    "  {label:<22} fence {wall_ms:>8.2} ms  stripes re-encoded {reencoded:>4} \
+                     (full would be {})  skipped {}",
+                    n_stripes * n_fences,
+                    scar::util::fmt_bytes(skipped_bytes)
+                );
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("fence_wall_ms".to_string(), Json::Num(wall_ms));
+                m.insert("stripes_reencoded".to_string(), Json::Num(reencoded as f64));
+                m.insert("stripes_scrubbed".to_string(), Json::Num(scrubbed as f64));
+                m.insert("skipped_atoms".to_string(), Json::Num(skipped_atoms as f64));
+                m.insert("skipped_bytes".to_string(), Json::Num(skipped_bytes as f64));
+                m.insert("bytes_written".to_string(), Json::Num(bytes_written as f64));
+                cells.insert(label.clone(), Json::Obj(m));
+                if backend == "mem" && mode == CheckpointMode::Async && parity == 1 {
+                    // The canonical cell feeds the flat, trend-gateable
+                    // top-level keys.
+                    top.insert("bench_fence_wall_ms".to_string(), Json::Num(wall_ms));
+                    top.insert(
+                        "bench_fence_stripes_reencoded".to_string(),
+                        Json::Num(reencoded as f64),
+                    );
+                    top.insert(
+                        "bench_fence_full_stripes".to_string(),
+                        Json::from(n_stripes * n_fences),
+                    );
+                    top.insert("bench_skipped_bytes".to_string(), Json::Num(skipped_bytes as f64));
+                    top.insert(
+                        "bench_ckpt_bytes_written".to_string(),
+                        Json::Num(bytes_written as f64),
+                    );
+                }
+                if backend == "disk" {
+                    let _ = std::fs::remove_dir_all(&dir);
+                }
+            }
+        }
+    }
+
+    // Rebuild workload: shard 2's slice reconstructed from parity, fresh
+    // store per repetition, best-of-N wall-clock.
+    let victims: Vec<usize> = (2..n_rows).step_by(shards).collect();
+    let plan = RebuildPlan::for_atoms(&victims, |_| 0);
+    let prepare = || -> Result<ShardedStore> {
+        let store = ShardedStore::new_mem(shards).with_mem_parity(1);
+        let payloads: Vec<(usize, Vec<f32>)> = (0..n_rows)
+            .map(|a| (a, vec![a as f32 + 0.5; row_elems]))
+            .collect();
+        let refs: Vec<(usize, &[f32])> =
+            payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+        store.put_atoms_at(5, &refs)?;
+        store.parity_fence()?;
+        for &atom in &victims {
+            store.corrupt_record_on(2, atom)?;
+        }
+        Ok(store)
+    };
+    let mut serial_ms = f64::INFINITY;
+    let mut parallel_ms = f64::INFINITY;
+    let mut rebuilt_bytes = 0u64;
+    for _ in 0..rebuild_reps {
+        let store = prepare()?;
+        let t0 = std::time::Instant::now();
+        rebuilt_bytes = plan.execute_from_parity_with(&store, 1)?;
+        serial_ms = serial_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        let store = prepare()?;
+        let t0 = std::time::Instant::now();
+        let b = plan.execute_from_parity_with(&store, 4)?;
+        parallel_ms = parallel_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(b == rebuilt_bytes, "parallel rebuild bytes diverged");
+    }
+    // The pooled reconstruction buffer replaces one owned Vec<f32> per
+    // rebuilt atom (reconstruct_atom's SavedAtom payload).
+    let allocs_avoided = victims.len() as u64;
+    println!(
+        "  rebuild {} atoms ({}): serial {serial_ms:.2} ms, 4 workers {parallel_ms:.2} ms, \
+         {allocs_avoided} allocation(s) avoided",
+        victims.len(),
+        scar::util::fmt_bytes(rebuilt_bytes)
+    );
+    top.insert("bench_rebuild_serial_ms".to_string(), Json::Num(serial_ms));
+    top.insert("bench_rebuild_parallel_ms".to_string(), Json::Num(parallel_ms));
+    top.insert("bench_rebuild_bytes".to_string(), Json::Num(rebuilt_bytes as f64));
+    top.insert("bench_rebuild_allocs_avoided".to_string(), Json::Num(allocs_avoided as f64));
+    top.insert("cells".to_string(), Json::Obj(cells));
+
+    let path = std::path::Path::new(&out);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, Json::Obj(top).to_string())
+        .with_context(|| format!("writing {out}"))?;
+    println!("-> {out}");
     Ok(())
 }
 

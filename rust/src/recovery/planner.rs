@@ -133,18 +133,78 @@ impl RebuildPlan {
         layout: &AtomLayout,
         store: &ShardedStore,
     ) -> Result<u64> {
+        self.execute_from_cache_with(cache, layout, store, 1)
+    }
+
+    /// [`execute_from_cache`](RebuildPlan::execute_from_cache) fanned out
+    /// over up to `workers` threads, one slice group per home shard —
+    /// the writer pool's rule, so each shard is written from exactly one
+    /// thread and the result is byte-identical to the serial pass
+    /// (records carry the same `(iteration, payload)` either way, and
+    /// parity's XOR read-modify-write commutes across stripe members,
+    /// exactly as it does under the async writer pool). Payloads are
+    /// staged in one flat arena per group instead of an owned buffer per
+    /// record.
+    pub fn execute_from_cache_with(
+        &self,
+        cache: &ParamStore,
+        layout: &AtomLayout,
+        store: &ShardedStore,
+        workers: usize,
+    ) -> Result<u64> {
         let mut bytes = 0u64;
-        let mut buf = Vec::new();
         for (iter, atoms) in self.by_iter() {
-            let mut payloads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(atoms.len());
-            for &a in &atoms {
-                cache.read_atom(layout, a, &mut buf);
-                bytes += (buf.len() * 4) as u64;
-                payloads.push((a, buf.clone()));
+            let homes = store.shard_map(&atoms);
+            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); store.n_shards()];
+            for (&a, home) in atoms.iter().zip(homes) {
+                groups[home].push(a);
             }
-            let refs: Vec<(usize, &[f32])> =
-                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
-            store.put_atoms_at(iter, &refs)?;
+            groups.retain(|g| !g.is_empty());
+            let write_group = |group: &[usize]| -> Result<u64> {
+                let mut buf = Vec::new();
+                let mut arena: Vec<f32> = Vec::new();
+                let mut spans: Vec<(usize, usize, usize)> = Vec::with_capacity(group.len());
+                for &a in group {
+                    cache.read_atom(layout, a, &mut buf);
+                    let start = arena.len();
+                    arena.extend_from_slice(&buf);
+                    spans.push((a, start, arena.len()));
+                }
+                let refs: Vec<(usize, &[f32])> =
+                    spans.iter().map(|&(a, s, e)| (a, &arena[s..e])).collect();
+                store.put_atoms_at(iter, &refs)?;
+                Ok((arena.len() * 4) as u64)
+            };
+            let n_workers = workers.max(1).min(groups.len().max(1));
+            if n_workers <= 1 {
+                for g in &groups {
+                    bytes += write_group(g)?;
+                }
+                continue;
+            }
+            let chunk = (groups.len() + n_workers - 1) / n_workers;
+            let write_group = &write_group;
+            let results: Vec<Result<u64>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = groups
+                    .chunks(chunk)
+                    .map(|part| {
+                        scope.spawn(move || -> Result<u64> {
+                            let mut total = 0u64;
+                            for g in part {
+                                total += write_group(g)?;
+                            }
+                            Ok(total)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("rebuild worker panicked"))
+                    .collect()
+            });
+            for r in results {
+                bytes += r?;
+            }
         }
         Ok(bytes)
     }
@@ -160,13 +220,51 @@ impl RebuildPlan {
     /// bytes written, like
     /// [`execute_from_cache`](RebuildPlan::execute_from_cache).
     pub fn execute_from_parity(&self, store: &ShardedStore) -> Result<u64> {
+        self.execute_from_parity_with(store, 1)
+    }
+
+    /// [`execute_from_parity`](RebuildPlan::execute_from_parity) fanned
+    /// out over up to `workers` threads. Each worker owns a contiguous
+    /// chunk of the (sorted) plan and one reusable reconstruction buffer
+    /// — no per-atom allocation. Safe to run concurrently: every
+    /// construction path hands the plan atoms whose reconstructions are
+    /// independent (atoms sharing a home shard occupy distinct stripes
+    /// under `slot = atom % n_shards` routing), and repairs write exactly
+    /// the bytes parity already encodes, so worker interleaving cannot
+    /// change any record.
+    pub fn execute_from_parity_with(&self, store: &ShardedStore, workers: usize) -> Result<u64> {
+        let rebuild = |atoms: &[(usize, usize)]| -> Result<u64> {
+            let mut bytes = 0u64;
+            let mut buf: Vec<f32> = Vec::new();
+            for &(atom, _) in atoms {
+                let Some(iter) = store.reconstruct_atom_into(atom, &mut buf)? else {
+                    continue;
+                };
+                bytes += (buf.len() * 4) as u64;
+                store.put_atoms_repair(iter, &[(atom, &buf[..])])?;
+            }
+            Ok(bytes)
+        };
+        let n_workers = workers.max(1).min(self.atoms.len().max(1));
+        if n_workers <= 1 {
+            return rebuild(&self.atoms);
+        }
+        let chunk = (self.atoms.len() + n_workers - 1) / n_workers;
+        let rebuild = &rebuild;
+        let results: Vec<Result<u64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .atoms
+                .chunks(chunk)
+                .map(|part| scope.spawn(move || rebuild(part)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rebuild worker panicked"))
+                .collect()
+        });
         let mut bytes = 0u64;
-        for &(atom, _) in &self.atoms {
-            let Some(saved) = store.reconstruct_atom(atom)? else {
-                continue;
-            };
-            bytes += (saved.values.len() * 4) as u64;
-            store.put_atoms_repair(saved.iter, &[(atom, &saved.values[..])])?;
+        for r in results {
+            bytes += r?;
         }
         Ok(bytes)
     }
@@ -247,6 +345,57 @@ mod tests {
             let got = store.get_atom_any(atom).unwrap().unwrap();
             assert_eq!(got.iter, 5, "record iteration restored from parity metadata");
             assert_eq!(got.values, vec![atom as f32 + 0.25, -(atom as f32)]);
+        }
+    }
+
+    #[test]
+    fn parallel_execute_matches_serial() {
+        // Cache path: the same plan through 1 worker and 4 workers must
+        // land byte-identical records and report the same byte count.
+        let mut cache = ParamStore::new(vec![Tensor::zeros("w", &[16, 2])]);
+        let layout = AtomLayout::new(AtomLayout::rows_of(&cache, "w"));
+        for (i, v) in cache.get_mut("w").data.iter_mut().enumerate() {
+            *v = i as f32 * 0.5;
+        }
+        let atoms: Vec<usize> = (0..16).collect();
+        let plan = RebuildPlan::for_atoms(&atoms, |a| 3 + (a % 2));
+        let serial = ShardedStore::new_mem(4);
+        let fanned = ShardedStore::new_mem(4);
+        let b1 = plan.execute_from_cache(&cache, &layout, &serial).unwrap();
+        let b2 = plan.execute_from_cache_with(&cache, &layout, &fanned, 4).unwrap();
+        assert_eq!(b1, b2, "cache-path bytes");
+        for a in 0..16 {
+            let lhs = serial.get_atom_any(a).unwrap().unwrap();
+            let rhs = fanned.get_atom_any(a).unwrap().unwrap();
+            assert_eq!((lhs.iter, lhs.values), (rhs.iter, rhs.values), "atom {a}");
+        }
+
+        // Parity path: reconstruct shard 2's wiped slice serially and
+        // with 4 workers from identically-prepared stores.
+        let build = || {
+            let store = ShardedStore::new_mem(4).with_mem_parity(1);
+            let payloads: Vec<(usize, Vec<f32>)> =
+                (0..16).map(|a| (a, vec![a as f32, -(a as f32)])).collect();
+            let refs: Vec<(usize, &[f32])> =
+                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+            store.put_atoms_at(7, &refs).unwrap();
+            store.parity_fence().unwrap();
+            for atom in (2..16).step_by(4) {
+                assert!(store.corrupt_record_on(2, atom).unwrap());
+            }
+            store
+        };
+        let victims: Vec<usize> = (2..16).step_by(4).collect();
+        let plan = RebuildPlan::for_atoms(&victims, |_| 0);
+        let (s1, s2) = (build(), build());
+        let b1 = plan.execute_from_parity(&s1).unwrap();
+        let b2 = plan.execute_from_parity_with(&s2, 4).unwrap();
+        assert_eq!(b1, b2, "parity-path bytes");
+        assert_eq!(b1, 32, "4 atoms x 2 f32s x 4 bytes");
+        for a in 0..16 {
+            let lhs = s1.get_atom_any(a).unwrap().unwrap();
+            let rhs = s2.get_atom_any(a).unwrap().unwrap();
+            assert_eq!((lhs.iter, lhs.values), (rhs.iter, rhs.values), "atom {a}");
         }
     }
 }

@@ -79,6 +79,12 @@ impl CheckpointSpec {
 /// stripe of atom records into a parity record, so a dead shard's slice
 /// is reconstructable from survivors alone and a CRC-failed record is
 /// repaired in place.
+///
+/// `scrub_interval` controls the deep-scrub cadence under dirty-only
+/// parity fences: 0 (default) means every fence touches only the stripes
+/// written since the previous fence; N > 0 additionally scans and
+/// re-encodes the *entire* state every Nth fence, catching silent media
+/// decay on cold stripes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StorageSpec {
     pub shards: usize,
@@ -87,6 +93,7 @@ pub struct StorageSpec {
     pub compact_threshold: f64,
     pub compact_min_bytes: usize,
     pub parity: usize,
+    pub scrub_interval: usize,
 }
 
 impl Default for StorageSpec {
@@ -98,6 +105,7 @@ impl Default for StorageSpec {
             compact_threshold: 0.0,
             compact_min_bytes: 0,
             parity: 0,
+            scrub_interval: 0,
         }
     }
 }
@@ -532,6 +540,12 @@ impl Scenario {
                 "  erasure coding: {} XOR parity shard(s), encoded at flush fences\n",
                 self.storage.parity
             ));
+            if self.storage.scrub_interval > 0 {
+                out.push_str(&format!(
+                    "  deep scrub: full-state parity scan every {} fence(s)\n",
+                    self.storage.scrub_interval
+                ));
+            }
         }
         if !self.chaos.is_empty() {
             out.push_str(&format!("  chaos: {} storage fault(s)\n", self.chaos.faults.len()));
@@ -574,6 +588,7 @@ fn storage_json(s: &StorageSpec) -> Json {
     m.insert("compact_threshold".into(), Json::Num(s.compact_threshold));
     m.insert("compact_min_bytes".into(), Json::from(s.compact_min_bytes));
     m.insert("parity".into(), Json::from(s.parity));
+    m.insert("scrub_interval".into(), Json::from(s.scrub_interval));
     Json::Obj(m)
 }
 
@@ -729,6 +744,7 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
         "compact_threshold",
         "compact_min_bytes",
         "parity",
+        "scrub_interval",
     ];
     for key in obj.keys() {
         if !STORAGE_KEYS.contains(&key.as_str()) {
@@ -747,6 +763,7 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
         compact_min_bytes: opt_usize(obj, "compact_min_bytes", ctx)?
             .unwrap_or(base.compact_min_bytes),
         parity: opt_usize(obj, "parity", ctx)?.unwrap_or(base.parity),
+        scrub_interval: opt_usize(obj, "scrub_interval", ctx)?.unwrap_or(base.scrub_interval),
     })
 }
 
@@ -1379,6 +1396,29 @@ norm_log10 = [-2.0, 0.0]
         )
         .unwrap_err();
         assert!(format!("{e:?}").contains("bit"), "{e:?}");
+    }
+
+    #[test]
+    fn scrub_interval_parses_defaults_and_roundtrips() {
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=4\nparity=1\n\
+             scrub_interval=8\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.storage.scrub_interval, 8);
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+        assert!(s.describe().contains("deep scrub"), "{}", s.describe());
+
+        // Omitted: dirty-only fences with no periodic deep scrub.
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=4\nparity=1\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.storage.scrub_interval, 0);
+        assert!(!s.describe().contains("deep scrub"), "{}", s.describe());
     }
 
     #[test]

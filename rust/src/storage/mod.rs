@@ -248,6 +248,16 @@ pub trait ShardBackend: Send {
     fn corrupt_record(&mut self, _atom: usize) -> Result<bool> {
         Ok(false)
     }
+
+    /// Drain the backend's media-error notifications: atoms whose records
+    /// it detected (or injected) physical damage on since the last call.
+    /// The sharded router polls this at every epoch advance and marks the
+    /// affected stripes dirty, so a dirty-only parity fence still scrubs
+    /// and repairs them even when no write touched their stripe. Healthy
+    /// backends never report anything.
+    fn take_corruptions(&mut self) -> Vec<usize> {
+        Vec::new()
+    }
 }
 
 /// Write/read interface to the shared persistent checkpoint storage, as

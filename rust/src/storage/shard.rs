@@ -61,7 +61,7 @@
 
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
@@ -125,6 +125,39 @@ pub struct ShardedStore {
     /// is more damage than single parity absorbs); the fence re-encode
     /// washes the set clean.
     dirty_stripes: Mutex<HashSet<usize>>,
+    /// Stripes touched since the last parity fence: every parity
+    /// read-modify-write marks its stripe here, as do injected
+    /// corruptions and the media-error notifications drained from the
+    /// backends at each epoch advance
+    /// ([`ShardBackend::take_corruptions`]). The fence's dirty-only mode
+    /// scrubs and re-encodes exactly this set — O(stripes touched), not
+    /// O(state) — and the quarantine set above is always a subset (its
+    /// only insert site also writes a parity record, which marks the
+    /// stripe here).
+    fence_dirty: Mutex<HashSet<usize>>,
+    /// Every `scrub_interval`-th fence widens to a full-state deep scrub
+    /// (`0` = dirty-only always): the periodic safety net against decay
+    /// no backend reported.
+    scrub_interval: usize,
+    /// Parity fences run so far (drives the deep-scrub cadence).
+    fences_run: AtomicU64,
+    /// Threads a fence pass may fan its per-stripe work over (`1` =
+    /// serial; the async checkpointer sets this to its writer-pool
+    /// width). Stripes are disjoint work units — distinct parity
+    /// records, distinct member atoms — so the fan-out is
+    /// byte-identical to the serial pass.
+    fence_workers: AtomicUsize,
+    /// Stripes visited by scrub passes / parity records written by
+    /// encode passes: the deterministic per-fence work counters the
+    /// bench harness gates on (wall-clock is too noisy for CI).
+    stripes_scrubbed: AtomicU64,
+    stripes_reencoded: AtomicU64,
+    /// Set when a placement entry actually changes value, cleared when
+    /// the sidecar is persisted — a fence without puts does no sidecar
+    /// I/O.
+    placement_dirty: AtomicBool,
+    /// Sidecar files actually written (the pin for the above).
+    sidecar_writes: AtomicU64,
     /// Commit watermark; `None` until the first `mark_committed`.
     committed: Mutex<Option<usize>>,
     /// Last-observed per-shard health, updated by
@@ -203,8 +236,23 @@ impl ShardedStore {
             repaired_bytes: AtomicU64::new(0),
             parity_bytes: AtomicU64::new(0),
             dirty_stripes: Mutex::new(HashSet::new()),
+            fence_dirty: Mutex::new(HashSet::new()),
+            scrub_interval: 0,
+            fences_run: AtomicU64::new(0),
+            fence_workers: AtomicUsize::new(1),
+            stripes_scrubbed: AtomicU64::new(0),
+            stripes_reencoded: AtomicU64::new(0),
+            placement_dirty: AtomicBool::new(false),
+            sidecar_writes: AtomicU64::new(0),
             latency: LatencyModel::default(),
         }
+    }
+
+    /// Run a full-state deep scrub every `every`-th parity fence
+    /// (`0`, the default, keeps every fence dirty-only).
+    pub fn with_scrub_interval(mut self, every: usize) -> ShardedStore {
+        self.scrub_interval = every;
+        self
     }
 
     /// Attach `m` in-memory parity backends (XOR erasure coding over
@@ -443,8 +491,9 @@ impl ShardedStore {
                 Some((_, have)) => iter >= have,
                 None => true,
             };
-            if newer {
+            if newer && placement[atom] != Some((target, iter)) {
                 placement[atom] = Some((target, iter));
+                self.placement_dirty.store(true, Ordering::Release);
             }
         }
     }
@@ -473,10 +522,12 @@ impl ShardedStore {
     /// [`crate::recovery::RebuildPlan`]).
     pub fn advance_epoch(&self, iter: usize) -> EpochReport {
         let mut report = EpochReport::default();
+        let mut corrupted: Vec<usize> = Vec::new();
         let mut down = self.down.lock().unwrap();
         for (s, shard) in self.shards.iter().enumerate() {
             let mut guard = shard.lock().unwrap();
             guard.advance_epoch(iter);
+            corrupted.append(&mut guard.take_corruptions());
             let d = guard.is_down();
             if d && !down[s] {
                 report.newly_down.push(s);
@@ -485,6 +536,17 @@ impl ShardedStore {
                 report.newly_healed.push(s);
             }
             down[s] = d;
+        }
+        drop(down);
+        // Media-error notifications: the damaged atoms' stripes go into
+        // the fence-dirty set so the next dirty-only fence scrubs (and
+        // repairs) them even though no write touched their stripe.
+        if !self.parity.is_empty() && !corrupted.is_empty() {
+            let k = self.shards.len();
+            let mut fence_dirty = self.fence_dirty.lock().unwrap();
+            for atom in corrupted {
+                fence_dirty.insert(parity::stripe_of(atom, k));
+            }
         }
         report
     }
@@ -723,6 +785,8 @@ impl ShardedStore {
             guard
                 .put_atoms(iter, &[(stripe_id, &payload[..])])
                 .with_context(|| format!("updating parity for stripe {stripe_id}"))?;
+            drop(guard);
+            self.fence_dirty.lock().unwrap().insert(stripe_id);
         }
         Ok(())
     }
@@ -733,6 +797,18 @@ impl ShardedStore {
     /// `None` when no parity record covers the atom; an error when the
     /// stripe has more damage than single parity can absorb.
     pub fn reconstruct_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
+        let mut values = Vec::new();
+        Ok(self
+            .reconstruct_atom_into(atom, &mut values)?
+            .map(|iter| SavedAtom { iter, values }))
+    }
+
+    /// Buffer-reusing form of
+    /// [`reconstruct_atom`](ShardedStore::reconstruct_atom): the
+    /// reconstructed payload is decoded into `out` (cleared first) and
+    /// its iteration returned, so a rebuild loop reconstructing a whole
+    /// slice pays one buffer, not one allocation per record.
+    pub fn reconstruct_atom_into(&self, atom: usize, out: &mut Vec<f32>) -> Result<Option<usize>> {
         if self.parity.is_empty() {
             return Ok(None);
         }
@@ -753,16 +829,31 @@ impl ShardedStore {
         if len == 0 {
             return Ok(None);
         }
-        let values = self.reconstruct_member(&stripe, stripe_id, slot)?;
-        Ok(Some(SavedAtom { iter, values }))
+        self.reconstruct_member_into(&stripe, stripe_id, slot, out)?;
+        Ok(Some(iter))
     }
 
     /// XOR every *other* member's readable payload out of the stripe's
     /// parity region, leaving exactly the missing member's bits.
     fn reconstruct_member(&self, stripe: &Stripe, stripe_id: usize, slot: usize) -> Result<Vec<f32>> {
+        let mut acc = Vec::new();
+        self.reconstruct_member_into(stripe, stripe_id, slot, &mut acc)?;
+        Ok(acc)
+    }
+
+    /// [`reconstruct_member`](ShardedStore::reconstruct_member) into a
+    /// caller-owned buffer (cleared first).
+    fn reconstruct_member_into(
+        &self,
+        stripe: &Stripe,
+        stripe_id: usize,
+        slot: usize,
+        acc: &mut Vec<f32>,
+    ) -> Result<()> {
         let k = self.shards.len();
         let (atom, _, len) = stripe.member(slot);
-        let mut acc = stripe.data().to_vec();
+        acc.clear();
+        acc.extend_from_slice(stripe.data());
         for co in 0..k {
             if co == slot {
                 continue;
@@ -786,7 +877,7 @@ impl ShardedStore {
             }
         }
         acc.truncate(len);
-        Ok(acc)
+        Ok(())
     }
 
     /// Detect-and-repair pass over every stripe (phase one of the parity
@@ -800,37 +891,98 @@ impl ShardedStore {
         if self.parity.is_empty() {
             return Ok(0);
         }
+        self.scrub_stripes(&self.all_stripes())
+    }
+
+    /// Every stripe id the store's state currently spans, in ascending
+    /// order (the full-scan work list).
+    fn all_stripes(&self) -> Vec<usize> {
         let k = self.shards.len();
         let n_atoms = self.placement.lock().unwrap().len();
         let n_stripes = if n_atoms == 0 { 0 } else { parity::stripe_of(n_atoms - 1, k) + 1 };
-        let dirty: HashSet<usize> = self.dirty_stripes.lock().unwrap().clone();
-        let mut repaired = 0u64;
-        for stripe_id in 0..n_stripes {
-            let Some(stripe) = self.read_stripe(stripe_id)? else { continue };
-            for slot in 0..k {
-                let (atom, want_iter, len) = stripe.member(slot);
-                if len == 0 {
-                    continue;
-                }
-                let healthy =
-                    matches!(self.best_readable(atom), Some(s) if s.iter >= want_iter);
-                if healthy {
-                    continue;
-                }
-                if dirty.contains(&stripe_id) {
-                    bail!(
-                        "stripe {stripe_id}: cannot reconstruct atom {atom}: the \
-                         stripe's parity went stale when another member was \
-                         rewritten while its old record was unreadable — more \
-                         corruptions than the parity shard can absorb"
-                    );
-                }
-                let values = self.reconstruct_member(&stripe, stripe_id, slot)?;
-                self.put_atoms_repair(want_iter, &[(atom, &values[..])])?;
-                self.repaired_records.fetch_add(1, Ordering::Relaxed);
-                self.repaired_bytes.fetch_add((values.len() * 4) as u64, Ordering::Relaxed);
-                repaired += 1;
+        (0..n_stripes).collect()
+    }
+
+    /// Fan per-stripe fence work over the worker pool as contiguous
+    /// chunks of the ascending stripe list, summing each job's count.
+    /// Stripes are disjoint work units (distinct parity records,
+    /// distinct member atoms; repairs route by atom id), every lock
+    /// below is taken one at a time, and XOR accumulation is
+    /// commutative — so the fan-out is byte-identical to the serial
+    /// pass. Errors surface deterministically too: a worker stops at
+    /// its chunk's first failure and chunks are scanned in order, so
+    /// the lowest failing stripe's error wins, exactly as in a serial
+    /// scan.
+    fn for_stripes<F>(&self, stripes: &[usize], job: F) -> Result<u64>
+    where
+        F: Fn(usize) -> Result<u64> + Sync,
+    {
+        let workers = self.fence_workers.load(Ordering::Relaxed).max(1).min(stripes.len());
+        if workers <= 1 {
+            let mut total = 0u64;
+            for &stripe_id in stripes {
+                total += job(stripe_id)?;
             }
+            return Ok(total);
+        }
+        let chunk = (stripes.len() + workers - 1) / workers;
+        let job = &job;
+        let results: Vec<Result<u64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = stripes
+                .chunks(chunk)
+                .map(|part| {
+                    scope.spawn(move || -> Result<u64> {
+                        let mut total = 0u64;
+                        for &stripe_id in part {
+                            total += job(stripe_id)?;
+                        }
+                        Ok(total)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("fence worker panicked")).collect()
+        });
+        let mut total = 0u64;
+        for r in results {
+            total += r?;
+        }
+        Ok(total)
+    }
+
+    /// Scrub exactly `stripes` (repairing damaged members in place from
+    /// parity), returning the number of records repaired.
+    fn scrub_stripes(&self, stripes: &[usize]) -> Result<u64> {
+        let dirty: HashSet<usize> = self.dirty_stripes.lock().unwrap().clone();
+        self.for_stripes(stripes, |stripe_id| self.scrub_one(stripe_id, &dirty))
+    }
+
+    fn scrub_one(&self, stripe_id: usize, dirty: &HashSet<usize>) -> Result<u64> {
+        self.stripes_scrubbed.fetch_add(1, Ordering::Relaxed);
+        let Some(stripe) = self.read_stripe(stripe_id)? else { return Ok(0) };
+        let k = self.shards.len();
+        let mut repaired = 0u64;
+        for slot in 0..k {
+            let (atom, want_iter, len) = stripe.member(slot);
+            if len == 0 {
+                continue;
+            }
+            let healthy = matches!(self.best_readable(atom), Some(s) if s.iter >= want_iter);
+            if healthy {
+                continue;
+            }
+            if dirty.contains(&stripe_id) {
+                bail!(
+                    "stripe {stripe_id}: cannot reconstruct atom {atom}: the \
+                     stripe's parity went stale when another member was \
+                     rewritten while its old record was unreadable — more \
+                     corruptions than the parity shard can absorb"
+                );
+            }
+            let values = self.reconstruct_member(&stripe, stripe_id, slot)?;
+            self.put_atoms_repair(want_iter, &[(atom, &values[..])])?;
+            self.repaired_records.fetch_add(1, Ordering::Relaxed);
+            self.repaired_bytes.fetch_add((values.len() * 4) as u64, Ordering::Relaxed);
+            repaired += 1;
         }
         Ok(repaired)
     }
@@ -843,57 +995,147 @@ impl ShardedStore {
         if self.parity.is_empty() {
             return Ok(());
         }
-        let k = self.shards.len();
-        let n_atoms = self.placement.lock().unwrap().len();
-        let n_stripes = if n_atoms == 0 { 0 } else { parity::stripe_of(n_atoms - 1, k) + 1 };
-        for stripe_id in 0..n_stripes {
-            let mut stripe = Stripe::new(k, stripe_id);
-            let mut iter = 0usize;
-            for slot in 0..k {
-                let atom = stripe_id * k + slot;
-                if let Some(saved) = self.best_readable(atom) {
-                    stripe.xor(&saved.values);
-                    stripe.set_member(slot, saved.iter, saved.values.len());
-                    iter = iter.max(saved.iter);
-                }
-            }
-            if stripe.is_empty() {
-                continue;
-            }
-            let payload = stripe.payload();
-            self.parity_bytes.fetch_add((payload.len() * 4) as u64, Ordering::Relaxed);
-            let mut guard = self.parity_backend_of(stripe_id).lock().unwrap();
-            guard
-                .put_atoms(iter, &[(stripe_id, &payload[..])])
-                .with_context(|| format!("encoding parity for stripe {stripe_id}"))?;
-        }
+        self.encode_stripes(&self.all_stripes())?;
         // Every stripe now reflects the store's readable state: whatever
-        // incremental drift was flagged has been overwritten.
+        // incremental drift was flagged has been overwritten, and no
+        // stripe owes the next fence anything.
         self.dirty_stripes.lock().unwrap().clear();
+        self.fence_dirty.lock().unwrap().clear();
         Ok(())
     }
 
-    /// The parity fence run at every flush barrier:
-    /// [`scrub_parity`](ShardedStore::scrub_parity) (repair damaged
-    /// members from the parity that still holds their contribution) then
-    /// [`encode_parity`](ShardedStore::encode_parity) (rewrite parity
-    /// from the now fully-readable store). Ordering matters: the scrub
-    /// must run against the pre-repair parity, and the re-encode must
-    /// run after repairs. Returns the number of records repaired.
+    /// Re-encode exactly `stripes` from the store's readable state.
+    /// Leaves the dirty bookkeeping to the caller.
+    fn encode_stripes(&self, stripes: &[usize]) -> Result<()> {
+        self.for_stripes(stripes, |stripe_id| self.encode_one(stripe_id).map(|_| 0u64))?;
+        Ok(())
+    }
+
+    fn encode_one(&self, stripe_id: usize) -> Result<()> {
+        let k = self.shards.len();
+        let mut stripe = Stripe::new(k, stripe_id);
+        let mut iter = 0usize;
+        for slot in 0..k {
+            let atom = stripe_id * k + slot;
+            if let Some(saved) = self.best_readable(atom) {
+                stripe.xor(&saved.values);
+                stripe.set_member(slot, saved.iter, saved.values.len());
+                iter = iter.max(saved.iter);
+            }
+        }
+        if stripe.is_empty() {
+            return Ok(());
+        }
+        let payload = stripe.payload();
+        self.parity_bytes.fetch_add((payload.len() * 4) as u64, Ordering::Relaxed);
+        self.stripes_reencoded.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.parity_backend_of(stripe_id).lock().unwrap();
+        guard
+            .put_atoms(iter, &[(stripe_id, &payload[..])])
+            .with_context(|| format!("encoding parity for stripe {stripe_id}"))
+    }
+
+    /// The parity fence run at every flush barrier: scrub (repair
+    /// damaged members from the parity that still holds their
+    /// contribution) then re-encode (rewrite parity from the
+    /// now fully-readable store). Ordering matters: the scrub must run
+    /// against the pre-repair parity, and the re-encode must run after
+    /// repairs. Returns the number of records repaired.
+    ///
+    /// The pass is **dirty-only**: it visits exactly the stripes touched
+    /// since the last fence (writes, injected corruptions, drained
+    /// media-error notifications), so a fence after a single-atom update
+    /// costs one stripe, not the whole state. Untouched stripes keep
+    /// their previous fence's record — already normalized, so sync and
+    /// async pipelines stay byte-identical. When
+    /// [`with_scrub_interval`](ShardedStore::with_scrub_interval) is set,
+    /// every `N`-th fence widens to the full-state scan.
     pub fn parity_fence(&self) -> Result<u64> {
         if self.parity.is_empty() {
             return Ok(0);
         }
-        let repaired = self.scrub_parity()?;
-        self.encode_parity()?;
+        let fence = self.fences_run.fetch_add(1, Ordering::Relaxed) + 1;
+        let deep = self.scrub_interval > 0 && fence % (self.scrub_interval as u64) == 0;
+        if deep {
+            let repaired = self.scrub_parity()?;
+            self.encode_parity()?;
+            return Ok(repaired);
+        }
+        let work: Vec<usize> = {
+            let fence_dirty = self.fence_dirty.lock().unwrap();
+            let mut v: Vec<usize> = fence_dirty.iter().copied().collect();
+            v.sort_unstable();
+            v
+        };
+        if work.is_empty() {
+            return Ok(0);
+        }
+        let repaired = self.scrub_stripes(&work)?;
+        self.encode_stripes(&work)?;
+        // Only the stripes this fence actually settled are washed clean
+        // — anything marked while the pass ran stays owed to the next
+        // fence. The quarantine set is a subset of the fence-dirty set
+        // (see the field docs), so removing the worked stripes from both
+        // cannot leave a stale quarantined stripe behind.
+        {
+            let mut quarantined = self.dirty_stripes.lock().unwrap();
+            for s in &work {
+                quarantined.remove(s);
+            }
+        }
+        {
+            let mut fence_dirty = self.fence_dirty.lock().unwrap();
+            for s in &work {
+                fence_dirty.remove(s);
+            }
+        }
         Ok(repaired)
+    }
+
+    /// Width of the fence/rebuild worker fan-out (`1` = serial). Set by
+    /// the async checkpointer to its writer-pool width; safe to change
+    /// between fences.
+    pub fn set_fence_workers(&self, workers: usize) {
+        self.fence_workers.store(workers.max(1), Ordering::Relaxed);
+    }
+
+    pub fn fence_workers(&self) -> usize {
+        self.fence_workers.load(Ordering::Relaxed).max(1)
+    }
+
+    /// Parity fences run so far.
+    pub fn parity_fences(&self) -> u64 {
+        self.fences_run.load(Ordering::Relaxed)
+    }
+
+    /// Stripes visited by scrub passes so far (the per-fence work the
+    /// dirty-only fence keeps proportional to what changed).
+    pub fn stripes_scrubbed(&self) -> u64 {
+        self.stripes_scrubbed.load(Ordering::Relaxed)
+    }
+
+    /// Parity records written by encode passes so far.
+    pub fn stripes_reencoded(&self) -> u64 {
+        self.stripes_reencoded.load(Ordering::Relaxed)
+    }
+
+    /// Placement sidecar files actually written by
+    /// [`sync_all`](ShardedStore::sync_all) (a fence with a clean
+    /// placement map writes none).
+    pub fn sidecar_writes(&self) -> u64 {
+        self.sidecar_writes.load(Ordering::Relaxed)
     }
 
     /// Corrupt `atom`'s latest record on data shard `shard` in place
     /// (delegates to [`ShardBackend::corrupt_record`]) — the soft-error
     /// injection surface the chaos subsystem and the parity tests drive.
     pub fn corrupt_record_on(&self, shard: usize, atom: usize) -> Result<bool> {
-        self.shards[shard].lock().unwrap().corrupt_record(atom)
+        let hit = self.shards[shard].lock().unwrap().corrupt_record(atom)?;
+        if hit && !self.parity.is_empty() {
+            let stripe = parity::stripe_of(atom, self.shards.len());
+            self.fence_dirty.lock().unwrap().insert(stripe);
+        }
+        Ok(hit)
     }
 
     /// Records repaired in place from parity so far.
@@ -950,7 +1192,15 @@ impl ShardedStore {
             guard.sync().with_context(|| format!("syncing parity shard {p}"))?;
         }
         if let Some(dir) = self.dir.clone() {
-            self.persist_placement(&dir).context("persisting placement sidecar")?;
+            // Rewrite the sidecar only when the map changed since the
+            // last persist — a fence without puts does no sidecar I/O.
+            if self.placement_dirty.swap(false, Ordering::AcqRel) {
+                if let Err(e) = self.persist_placement(&dir) {
+                    self.placement_dirty.store(true, Ordering::Release);
+                    return Err(e).context("persisting placement sidecar");
+                }
+                self.sidecar_writes.fetch_add(1, Ordering::Relaxed);
+            }
         }
         Ok(())
     }
@@ -1360,5 +1610,124 @@ mod tests {
         let rebuilt = s.reconstruct_atom(2).unwrap().unwrap();
         assert_eq!((rebuilt.iter, rebuilt.values), (2, vec![5.0]));
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fence_without_puts_skips_the_placement_sidecar() {
+        let dir = std::env::temp_dir()
+            .join(format!("scar-sharded-sidecar-skip-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ShardedStore::open_disk(&dir, 2).unwrap();
+        s.put_atoms_at(1, &[(0, &[1.0][..]), (1, &[2.0][..])]).unwrap();
+        s.sync_all().unwrap();
+        assert_eq!(s.sidecar_writes(), 1);
+        // Deleting the sidecar and fencing again proves the skip: a
+        // clean placement map does no sidecar I/O at all, so the file
+        // is not recreated.
+        std::fs::remove_file(dir.join("placement.json")).unwrap();
+        s.sync_all().unwrap();
+        assert_eq!(s.sidecar_writes(), 1, "clean fence must not rewrite the sidecar");
+        assert!(!dir.join("placement.json").exists());
+        // A put re-dirties the map; the next fence persists it again.
+        s.put_atoms_at(2, &[(0, &[3.0][..])]).unwrap();
+        s.sync_all().unwrap();
+        assert_eq!(s.sidecar_writes(), 2);
+        assert!(dir.join("placement.json").exists());
+        // A same-value rewrite (placement entry unchanged) stays clean.
+        s.put_atoms_at(2, &[(0, &[3.0][..])]).unwrap();
+        s.sync_all().unwrap();
+        assert_eq!(s.sidecar_writes(), 2, "unchanged placement entry must not dirty the map");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn no_parity_fence_is_zero_cost() {
+        let s = ShardedStore::new_mem(2);
+        s.put_atoms_at(1, &[(0, &[1.0][..]), (1, &[2.0][..]), (2, &[3.0][..])]).unwrap();
+        assert_eq!(s.parity_fence().unwrap(), 0);
+        // The early return fires before any stripe iteration or fence
+        // accounting — provably zero work, not merely zero repairs.
+        assert_eq!(s.parity_fences(), 0);
+        assert_eq!(s.stripes_scrubbed(), 0);
+        assert_eq!(s.stripes_reencoded(), 0);
+    }
+
+    #[test]
+    fn dirty_only_fence_reencodes_only_touched_stripes() {
+        // 8 atoms over 2 shards = 4 stripes. The first fence settles
+        // everything written so far; after a single-atom update the next
+        // fence must visit exactly that atom's stripe.
+        let s = ShardedStore::new_mem(2).with_mem_parity(1);
+        let atoms: Vec<(usize, Vec<f32>)> = (0..8).map(|a| (a, vec![a as f32; 2])).collect();
+        let refs: Vec<(usize, &[f32])> = atoms.iter().map(|(a, v)| (*a, &v[..])).collect();
+        s.put_atoms_at(1, &refs).unwrap();
+        s.parity_fence().unwrap();
+        assert_eq!((s.stripes_scrubbed(), s.stripes_reencoded()), (4, 4));
+        s.put_atoms_at(2, &[(0, &[9.0, 9.0][..])]).unwrap();
+        s.parity_fence().unwrap();
+        assert_eq!((s.stripes_scrubbed(), s.stripes_reencoded()), (5, 5));
+        // A fence with nothing touched does no stripe work at all.
+        s.parity_fence().unwrap();
+        assert_eq!((s.stripes_scrubbed(), s.stripes_reencoded()), (5, 5));
+        // Parity stays fully usable: every atom reconstructs to the
+        // freshest readable record, including the updated one.
+        for a in 0..8 {
+            let direct = s.get_atom_any(a).unwrap().unwrap();
+            let rebuilt = s.reconstruct_atom(a).unwrap().unwrap();
+            assert_eq!(rebuilt, direct, "atom {a}");
+        }
+    }
+
+    #[test]
+    fn deep_scrub_interval_widens_the_fence() {
+        let s = ShardedStore::new_mem(2).with_mem_parity(1).with_scrub_interval(2);
+        let atoms: Vec<(usize, Vec<f32>)> = (0..8).map(|a| (a, vec![a as f32])).collect();
+        let refs: Vec<(usize, &[f32])> = atoms.iter().map(|(a, v)| (*a, &v[..])).collect();
+        s.put_atoms_at(1, &refs).unwrap();
+        s.parity_fence().unwrap(); // fence 1: dirty-only (4 touched stripes)
+        assert_eq!((s.stripes_scrubbed(), s.stripes_reencoded()), (4, 4));
+        s.put_atoms_at(2, &[(0, &[9.0][..])]).unwrap();
+        s.parity_fence().unwrap(); // fence 2: deep — full-state scan
+        assert_eq!((s.stripes_scrubbed(), s.stripes_reencoded()), (8, 8));
+        s.parity_fence().unwrap(); // fence 3: dirty-only again, nothing touched
+        assert_eq!((s.stripes_scrubbed(), s.stripes_reencoded()), (8, 8));
+        assert_eq!(s.parity_fences(), 3);
+    }
+
+    #[test]
+    fn parallel_fence_matches_serial() {
+        use crate::storage::ShardBackend;
+        // Same writes and the same corruption through a serial fence and
+        // a fanned-out one: repairs, work counters, and every record
+        // (data and reconstruction) must be byte-identical.
+        let build = || {
+            let s = ShardedStore::new_mem(4).with_mem_parity(1);
+            let atoms: Vec<(usize, Vec<f32>)> =
+                (0..32).map(|a| (a, vec![a as f32 * 0.5, -(a as f32)])).collect();
+            let refs: Vec<(usize, &[f32])> = atoms.iter().map(|(a, v)| (*a, &v[..])).collect();
+            s.put_atoms_at(1, &refs).unwrap();
+            s.put_atoms_at(3, &[(5, &[7.0, 7.0][..]), (17, &[8.0, 8.0][..])]).unwrap();
+            assert!(s.shards[1].lock().unwrap().corrupt_record(5).unwrap());
+            s
+        };
+        let serial = build();
+        let parallel = build();
+        parallel.set_fence_workers(4);
+        assert_eq!(serial.parity_fence().unwrap(), parallel.parity_fence().unwrap());
+        assert_eq!(serial.repaired_records(), parallel.repaired_records());
+        assert_eq!(serial.stripes_scrubbed(), parallel.stripes_scrubbed());
+        assert_eq!(serial.stripes_reencoded(), parallel.stripes_reencoded());
+        for a in 0..32 {
+            assert_eq!(
+                serial.get_atom_any(a).unwrap(),
+                parallel.get_atom_any(a).unwrap(),
+                "atom {a}"
+            );
+            assert_eq!(
+                serial.reconstruct_atom(a).unwrap(),
+                parallel.reconstruct_atom(a).unwrap(),
+                "reconstruct atom {a}"
+            );
+        }
     }
 }

@@ -151,6 +151,152 @@ pub fn append_and_check(
     Ok(regressions)
 }
 
+/// Line-series colors for [`render_svg`], cycled when a trend tracks
+/// more metrics than the palette holds.
+const PALETTE: &[&str] = &[
+    "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b", "#e377c2", "#7f7f7f",
+    "#bcbd22", "#17becf",
+];
+
+/// Render a trend CSV (the [`append_and_check`] format) as a
+/// self-contained SVG line chart: one polyline per metric, each
+/// normalized to its own maximum so differently-scaled counters share
+/// one canvas; commits run left to right, regressed rows get a dashed
+/// red marker, and the legend carries each metric's latest/max values so
+/// absolute scales stay readable.
+pub fn render_svg(csv: &str) -> Result<String> {
+    let mut lines = csv.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<&str> = lines
+        .next()
+        .context("trend CSV is empty — nothing to render")?
+        .split(',')
+        .collect();
+    if header.len() < 3 || header.first() != Some(&"commit") || header.last() != Some(&"status") {
+        bail!("not a trend CSV: expected header 'commit,<metric>...,status', got {header:?}");
+    }
+    let metrics: Vec<&str> = header[1..header.len() - 1].to_vec();
+    let mut commits: Vec<&str> = Vec::new();
+    let mut regressed: Vec<bool> = Vec::new();
+    let mut series: Vec<Vec<f64>> = vec![Vec::new(); metrics.len()];
+    for line in lines {
+        let row: Vec<&str> = line.split(',').collect();
+        if row.len() != header.len() {
+            bail!(
+                "malformed trend row ({} fields, header has {}): {line}",
+                row.len(),
+                header.len()
+            );
+        }
+        commits.push(row[0]);
+        regressed.push(*row.last().unwrap() != "ok");
+        for (i, v) in row[1..row.len() - 1].iter().enumerate() {
+            let v: f64 = v
+                .parse()
+                .with_context(|| format!("bad value '{v}' for metric {}", metrics[i]))?;
+            series[i].push(v);
+        }
+    }
+    if commits.is_empty() {
+        bail!("trend CSV has a header but no rows — nothing to render");
+    }
+
+    // Geometry: fixed canvas, plot area left of the legend column.
+    let (width, height) = (960.0, 420.0);
+    let (left, right, top, bottom) = (60.0, width - 250.0, 40.0, height - 50.0);
+    let n = commits.len();
+    let x_at = |i: usize| -> f64 {
+        if n == 1 {
+            (left + right) / 2.0
+        } else {
+            left + (right - left) * i as f64 / (n - 1) as f64
+        }
+    };
+    let mut svg = String::new();
+    svg.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{width}\" height=\"{height}\" \
+         viewBox=\"0 0 {width} {height}\" font-family=\"monospace\" font-size=\"11\">\n"
+    ));
+    svg.push_str("<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n");
+    svg.push_str(&format!(
+        "<text x=\"{left}\" y=\"20\" font-size=\"14\">scar trend — {} metric(s), {} run(s), \
+         normalized per metric</text>\n",
+        metrics.len(),
+        n
+    ));
+    // Axes.
+    svg.push_str(&format!(
+        "<line x1=\"{left}\" y1=\"{bottom}\" x2=\"{right}\" y2=\"{bottom}\" stroke=\"#333\"/>\n\
+         <line x1=\"{left}\" y1=\"{top}\" x2=\"{left}\" y2=\"{bottom}\" stroke=\"#333\"/>\n"
+    ));
+    // Regressed runs: dashed red markers under the series.
+    for (i, &bad) in regressed.iter().enumerate() {
+        if bad {
+            let x = x_at(i);
+            svg.push_str(&format!(
+                "<line x1=\"{x}\" y1=\"{top}\" x2=\"{x}\" y2=\"{bottom}\" stroke=\"#d62728\" \
+                 stroke-dasharray=\"4 3\" opacity=\"0.6\"/>\n"
+            ));
+        }
+    }
+    // Commit ticks: first, last, and every few in between, truncated.
+    let tick_every = (n / 8).max(1);
+    for i in (0..n).step_by(tick_every).chain(std::iter::once(n - 1)) {
+        let x = x_at(i);
+        let label: String = commits[i].chars().take(7).collect();
+        svg.push_str(&format!(
+            "<text x=\"{x}\" y=\"{}\" text-anchor=\"middle\" fill=\"#555\">{}</text>\n",
+            bottom + 16.0,
+            xml_escape(&label)
+        ));
+    }
+    // One normalized polyline per metric, plus its legend row.
+    for (mi, name) in metrics.iter().enumerate() {
+        let color = PALETTE[mi % PALETTE.len()];
+        let max = series[mi].iter().cloned().fold(0.0f64, f64::max);
+        let points: Vec<String> = series[mi]
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let frac = if max > 0.0 { v / max } else { 0.0 };
+                format!("{:.1},{:.1}", x_at(i), bottom - (bottom - top) * frac)
+            })
+            .collect();
+        svg.push_str(&format!(
+            "<polyline fill=\"none\" stroke=\"{color}\" stroke-width=\"1.5\" points=\"{}\"/>\n",
+            points.join(" ")
+        ));
+        if n == 1 {
+            // A single run has no line segment; mark the point.
+            svg.push_str(&format!(
+                "<circle cx=\"{}\" cy=\"{}\" r=\"3\" fill=\"{color}\"/>\n",
+                x_at(0),
+                bottom - (bottom - top) * if max > 0.0 { 1.0 } else { 0.0 }
+            ));
+        }
+        let ly = top + 14.0 * mi as f64;
+        let last = *series[mi].last().unwrap();
+        svg.push_str(&format!(
+            "<line x1=\"{}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"{color}\" \
+             stroke-width=\"3\"/>\n",
+            right + 12.0,
+            ly - 3.0,
+            right + 28.0,
+            ly - 3.0
+        ));
+        svg.push_str(&format!(
+            "<text x=\"{}\" y=\"{ly}\">{} (last {last}, max {max})</text>\n",
+            right + 34.0,
+            xml_escape(name)
+        ));
+    }
+    svg.push_str("</svg>\n");
+    Ok(svg)
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +399,53 @@ mod tests {
             .unwrap();
         assert_eq!(e.len(), 0, "2.6 <= 2.2*1.25 vs the new passing baseline");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn renders_an_svg_with_one_polyline_per_metric() {
+        let dir = tmp("render");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nightly.csv");
+        let gate = ["wall_secs"];
+        append_and_check(
+            &path,
+            "a1",
+            &metrics(&[("rebuilt_bytes", 100.0), ("wall_secs", 2.0)]),
+            &gate,
+            0.25,
+        )
+        .unwrap();
+        append_and_check(
+            &path,
+            "b2",
+            &metrics(&[("rebuilt_bytes", 80.0), ("wall_secs", 9.0)]),
+            &gate,
+            0.25,
+        )
+        .unwrap();
+        let svg = render_svg(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(svg.starts_with("<svg"), "{}", &svg[..60.min(svg.len())]);
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert_eq!(svg.matches("<polyline").count(), 2, "one line per metric:\n{svg}");
+        assert!(svg.contains("rebuilt_bytes (last 80, max 100)"), "{svg}");
+        assert!(svg.contains("wall_secs"), "{svg}");
+        // Run b2 regressed wall_secs: it gets the dashed red marker.
+        assert!(svg.contains("stroke-dasharray"), "{svg}");
+        // Commit ticks are labeled.
+        assert!(svg.contains(">a1<") && svg.contains(">b2<"), "{svg}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn render_rejects_empty_and_malformed_input() {
+        let e = render_svg("").unwrap_err();
+        assert!(format!("{e:?}").contains("empty"), "{e:?}");
+        let e = render_svg("commit,x,status\n").unwrap_err();
+        assert!(format!("{e:?}").contains("no rows"), "{e:?}");
+        let e = render_svg("not,a,trend\nrow,1,ok\n").unwrap_err();
+        assert!(format!("{e:?}").contains("not a trend CSV"), "{e:?}");
+        let e = render_svg("commit,x,status\na,1\n").unwrap_err();
+        assert!(format!("{e:?}").contains("malformed"), "{e:?}");
     }
 
     #[test]

@@ -557,6 +557,169 @@ fn prop_parity_reconstruction_byte_identical() {
 }
 
 #[test]
+fn prop_delta_skip_recovery_byte_identical() {
+    // Delta-skip elides barrier writes whose payload CRC is unchanged
+    // since the atom's last record. Contract: against a *no-skip*
+    // reference — the plain CheckpointCoordinator, which writes every
+    // selected atom — the stored record values and the recovered
+    // parameters stay byte-identical over {mem, disk} x {sync, async} x
+    // parity {0, 1}; only write volume changes. Stall windows (barriers
+    // with no training step in between) guarantee the schedules actually
+    // exercise the skip: a RoundRobin rotation re-selects atoms whose
+    // values cannot have moved.
+    use std::sync::Arc;
+
+    use scar::chaos::FaultPlan;
+    use scar::checkpoint::{AsyncCheckpointer, CheckpointMode};
+    use scar::models::synthetic::SyntheticTrainer;
+    use scar::storage::ShardedStore;
+    use scar::trainer::Trainer;
+
+    const ATOMS: usize = 24;
+    const ITERS: usize = 24;
+
+    fn policy() -> CheckpointPolicy {
+        CheckpointPolicy::partial(6, 3, Selector::RoundRobin)
+    }
+
+    // One pipeline run: returns (final params, per-atom record values,
+    // skipped payload bytes).
+    fn drive(
+        mode: CheckpointMode,
+        shards: usize,
+        parity: usize,
+        dir: Option<&std::path::Path>,
+        stall_from: usize,
+        lost: &[usize],
+    ) -> (Vec<u8>, Vec<Vec<f32>>, u64) {
+        let mut trainer = SyntheticTrainer::new(ATOMS, 0.85, 3);
+        trainer.init(7).unwrap();
+        let layout = trainer.layout().clone();
+        let store = Arc::new(match dir {
+            None => FaultPlan::default().mem_store(shards).with_mem_parity(parity),
+            Some(d) => {
+                let _ = std::fs::remove_dir_all(d);
+                ShardedStore::open_disk(d, shards).unwrap().with_disk_parity(d, parity).unwrap()
+            }
+        });
+        let mut ck = AsyncCheckpointer::new(
+            policy(),
+            trainer.state(),
+            &layout,
+            store.clone(),
+            mode,
+            shards,
+        )
+        .unwrap();
+        let mut c_rng = Rng::new(11);
+        for iter in 0..ITERS {
+            if iter == 9 {
+                ck.flush().unwrap();
+                recover(
+                    RecoveryMode::Partial,
+                    trainer.state_mut(),
+                    &layout,
+                    lost,
+                    store.as_ref(),
+                )
+                .unwrap();
+            }
+            if iter < stall_from {
+                trainer.step(iter).unwrap();
+            }
+            ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut c_rng).unwrap();
+        }
+        let skipped = ck.skipped_bytes();
+        let store = ck.finish().unwrap();
+        let values: Vec<Vec<f32>> =
+            (0..ATOMS).map(|a| store.get_atom_any(a).unwrap().unwrap().values).collect();
+        let mut bytes = Vec::new();
+        for t in &trainer.state().tensors {
+            for v in &t.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        (bytes, values, skipped)
+    }
+
+    // The no-skip reference: the same schedule through the plain
+    // coordinator, which re-writes every selected atom unconditionally.
+    fn reference(stall_from: usize, lost: &[usize]) -> (Vec<u8>, Vec<Vec<f32>>) {
+        let mut trainer = SyntheticTrainer::new(ATOMS, 0.85, 3);
+        trainer.init(7).unwrap();
+        let layout = trainer.layout().clone();
+        let mut store = MemStore::new();
+        let mut coord =
+            CheckpointCoordinator::new(policy(), trainer.state(), &layout, &mut store).unwrap();
+        let interval = policy().interval;
+        let mut c_rng = Rng::new(11);
+        for iter in 0..ITERS {
+            if iter == 9 {
+                recover(RecoveryMode::Partial, trainer.state_mut(), &layout, lost, &store)
+                    .unwrap();
+            }
+            if iter < stall_from {
+                trainer.step(iter).unwrap();
+            }
+            let barrier = iter + 1;
+            if barrier % interval == 0 {
+                coord
+                    .checkpoint_now(barrier, trainer.state(), &layout, &mut store, &mut c_rng)
+                    .unwrap();
+            }
+        }
+        let values: Vec<Vec<f32>> =
+            (0..ATOMS).map(|a| store.get_atom(a).unwrap().unwrap().values).collect();
+        let mut bytes = Vec::new();
+        for t in &trainer.state().tensors {
+            for v in &t.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        (bytes, values)
+    }
+
+    let base = std::env::temp_dir().join(format!("scar-prop-skip-{}", std::process::id()));
+    let mut case = 0usize;
+    let mut saw_skip = false;
+    prop_check("delta-skip byte identity", 6, |rng| {
+        case += 1;
+        let shards = [2, 4][rng.below(2)];
+        // Training stalls from here on: every later barrier re-selects
+        // unchanged atoms.
+        let stall_from = 10 + rng.below(5);
+        let use_disk = rng.below(2) == 1;
+        let lost = rng.sample_indices(ATOMS, 6 + rng.below(6));
+        let (want_bytes, want_values) = reference(stall_from, &lost);
+        for mode in [CheckpointMode::Sync, CheckpointMode::Async] {
+            for parity in [0usize, 1] {
+                let dir = base.join(format!("case-{case}-{mode}-{parity}"));
+                let dir = if use_disk { Some(dir.as_path()) } else { None };
+                let (bytes, values, skipped) =
+                    drive(mode, shards, parity, dir, stall_from, &lost);
+                let ctx = format!(
+                    "{mode:?}/{}/parity{parity}/{shards} shards, stall_from {stall_from}",
+                    if use_disk { "disk" } else { "mem" }
+                );
+                assert_eq!(want_bytes, bytes, "recovered params diverged ({ctx})");
+                for (a, want) in want_values.iter().enumerate() {
+                    assert_eq!(
+                        want, &values[a],
+                        "atom {a} record values diverged from the no-skip reference ({ctx})"
+                    );
+                }
+                saw_skip |= skipped > 0;
+                if let Some(d) = dir {
+                    let _ = std::fs::remove_dir_all(d);
+                }
+            }
+        }
+    });
+    assert!(saw_skip, "no schedule ever skipped a write — the property never bit");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
 fn prop_running_checkpoint_mixes_iterations() {
     // With partial checkpoints, saved_iter must differ across atoms and
     // recovery must read each atom's *latest* record.
