@@ -55,6 +55,24 @@
 //!     state). With erasure coding enabled the next parity fence
 //!     detects the CRC mismatch and *repairs the record from parity*;
 //!     without it, reads fall back to the previous good record.
+//!   - **replay** — one-shot at-least-once delivery: the freshest put
+//!     batch delivered *before* epoch `at` is captured, and re-delivered
+//!     at the first durability fence at/after `at` — a network retry
+//!     arriving long after the original send. Re-delivery goes through
+//!     the iteration-supersede rule: any record whose atom has since
+//!     been overwritten at a newer iteration is dropped (counted as
+//!     superseded), the rest land carrying their *original* iteration,
+//!     so the store's freshest-record-by-iteration read scan is
+//!     unaffected. A correct store makes replay a state no-op —
+//!     byte-identical to the fault-free run — which is exactly what the
+//!     family pins.
+//!
+//! When a [`Recorder`](crate::obs::Recorder) is attached
+//! (`ShardBackend::set_recorder`), every injection and heal is recorded
+//! as an iteration-clocked event: window families (kill/flaky/partition/
+//! slow) emit a `Fault` on entry and a `Heal` on exit, one-shots
+//! (torn/fsync/bitflip) emit a `Fault` when they fire, and replays emit
+//! a `Replay` event carrying the re-delivered/superseded record counts.
 //!
 //! The epoch clock is advanced by the checkpoint front-end once per
 //! training iteration (`ShardedStore::advance_epoch`), so faults take
@@ -68,6 +86,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::{EventKind, Recorder};
 use crate::storage::{CompactionStats, MemStore, SavedAtom, ShardBackend, ShardedStore};
 
 /// What goes wrong with one shard (see the module docs for semantics).
@@ -103,6 +122,14 @@ pub enum FaultKind {
     /// where it is — the damage is only *observable* through a CRC
     /// mismatch on read, and only *repairable* from parity.
     Bitflip { atom: usize },
+    /// One-shot at-least-once delivery: the freshest put batch delivered
+    /// before `at` is re-delivered at the first durability fence
+    /// at/after `at`, filtered through the iteration-supersede rule (a
+    /// record overwritten at a newer iteration is dropped; survivors
+    /// land at their original iteration). Stresses the
+    /// freshest-record-by-iteration read scan directly: a correct store
+    /// makes the replay a state no-op.
+    Replay,
 }
 
 /// One scheduled fault: which shard, from which epoch, what kind.
@@ -286,6 +313,7 @@ impl FaultPlan {
         let mut flakies = Vec::new();
         let mut fsyncs = Vec::new();
         let mut bitflips = Vec::new();
+        let mut replays = Vec::new();
         for f in &self.faults {
             let mut m = BTreeMap::new();
             m.insert("shard".to_string(), Json::from(f.shard));
@@ -322,6 +350,7 @@ impl FaultPlan {
                     m.insert("atom".to_string(), Json::from(atom));
                     bitflips.push(Json::Obj(m));
                 }
+                FaultKind::Replay => replays.push(Json::Obj(m)),
             }
         }
         let mut obj = BTreeMap::new();
@@ -333,6 +362,7 @@ impl FaultPlan {
             ("flaky", flakies),
             ("fsync", fsyncs),
             ("bitflip", bitflips),
+            ("replay", replays),
         ] {
             if !arr.is_empty() {
                 obj.insert(key.to_string(), Json::Arr(arr));
@@ -354,6 +384,8 @@ impl FaultPlan {
     /// * `bitflip:1@6` / `bitflip:1@6a9` (flip a bit of atom 9's record;
     ///   the atom defaults to the shard index when the `aATOM` suffix is
     ///   omitted)
+    /// * `replay:1@7` (re-deliver shard 1's freshest pre-7 put batch at
+    ///   the first fence at/after epoch 7)
     ///
     /// The empty string parses to the empty (no-chaos) plan.
     pub fn parse_spec(spec: &str) -> Result<FaultPlan> {
@@ -438,9 +470,14 @@ impl FaultPlan {
                     };
                     ShardFault { shard, at, kind: FaultKind::Bitflip { atom } }
                 }
+                "replay" => ShardFault {
+                    shard,
+                    at: num(tail, "epoch", entry)?,
+                    kind: FaultKind::Replay,
+                },
                 other => bail!(
                     "chaos spec '{entry}': unknown fault kind '{other}' \
-                     (kill|slow|torn|part|flaky|fsync|bitflip)"
+                     (kill|slow|torn|part|flaky|fsync|bitflip|replay)"
                 ),
             };
             faults.push(fault);
@@ -448,6 +485,9 @@ impl FaultPlan {
         Ok(FaultPlan { faults })
     }
 }
+
+/// A captured put batch awaiting replay: `(barrier iter, owned records)`.
+type ReplayBatch = (usize, Vec<(usize, Vec<f32>)>);
 
 /// Fault-injecting wrapper around one storage shard.
 pub struct ChaosBackend {
@@ -467,11 +507,21 @@ pub struct ChaosBackend {
     /// Atoms corrupted since the last `take_corruptions` drain, so the
     /// router can mark their stripes dirty for the next parity fence.
     corrupted: Vec<usize>,
+    /// Captured batches for replay faults (parallel to `faults`; the
+    /// freshest fully-delivered pre-`at` batch wins).
+    replay_buf: Vec<Option<ReplayBatch>>,
+    /// Records re-delivered by replay faults.
+    replayed_records: u64,
+    /// Re-delivered records dropped by the iteration-supersede rule.
+    superseded_records: u64,
+    /// Flight recorder (disabled unless attached via `set_recorder`).
+    rec: Recorder,
 }
 
 impl ChaosBackend {
     pub fn new(inner: Box<dyn ShardBackend>, shard: usize, faults: Vec<ShardFault>) -> Self {
         let fired = vec![false; faults.len()];
+        let replay_buf = (0..faults.len()).map(|_| None).collect();
         ChaosBackend {
             inner,
             shard,
@@ -482,6 +532,10 @@ impl ChaosBackend {
             fsync_failures: 0,
             bitflips: 0,
             corrupted: Vec::new(),
+            replay_buf,
+            replayed_records: 0,
+            superseded_records: 0,
+            rec: Recorder::disabled(),
         }
     }
 
@@ -495,6 +549,14 @@ impl ChaosBackend {
 
     pub fn bitflips(&self) -> u64 {
         self.bitflips
+    }
+
+    pub fn replayed_records(&self) -> u64 {
+        self.replayed_records
+    }
+
+    pub fn superseded_records(&self) -> u64 {
+        self.superseded_records
     }
 
     /// Is the shard inside a kill window (or a flaky down phase) at
@@ -543,10 +605,113 @@ impl ChaosBackend {
             {
                 self.fired[i] = true;
                 self.fsync_failures += 1;
+                self.rec.record(
+                    self.epoch,
+                    EventKind::Fault { fault: "fsync".to_string(), shard: self.shard },
+                );
                 return true;
             }
         }
         false
+    }
+
+    /// Which window family has the shard down at `epoch` (for the
+    /// recorder's fault tag; kill wins when windows overlap).
+    fn down_kind_at(&self, epoch: usize) -> &'static str {
+        let mut kind = "kill";
+        for f in &self.faults {
+            match f.kind {
+                FaultKind::Kill { heal_at } => {
+                    if f.at <= epoch && heal_at.map(|h| epoch < h).unwrap_or(true) {
+                        return "kill";
+                    }
+                }
+                FaultKind::Flaky { period, down_for, cycles } => {
+                    if epoch >= f.at {
+                        let rel = epoch - f.at;
+                        if rel / period < cycles && rel % period < down_for {
+                            kind = "flaky";
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        kind
+    }
+
+    /// Remember the freshest fully-delivered pre-`at` batch for every
+    /// pending replay fault (called after a successful whole put).
+    fn capture_replay(&mut self, iter: usize, atoms: &[(usize, &[f32])]) {
+        for i in 0..self.faults.len() {
+            if self.fired[i]
+                || !matches!(self.faults[i].kind, FaultKind::Replay)
+                || iter >= self.faults[i].at
+            {
+                continue;
+            }
+            let fresher = match &self.replay_buf[i] {
+                Some((stored, _)) => iter >= *stored,
+                None => true,
+            };
+            if fresher {
+                self.replay_buf[i] =
+                    Some((iter, atoms.iter().map(|(a, v)| (*a, v.to_vec())).collect()));
+            }
+        }
+    }
+
+    /// Fire any replay fault due at the current epoch. Runs at the
+    /// durability fence (`sync`), after the writer pool has drained —
+    /// the one point where "the freshest batch delivered before `at`"
+    /// is the same set in sync and async mode, so the re-delivery (and
+    /// its trace event) is deterministic across modes.
+    fn fire_replays(&mut self) {
+        for i in 0..self.faults.len() {
+            if self.fired[i]
+                || !matches!(self.faults[i].kind, FaultKind::Replay)
+                || self.epoch < self.faults[i].at
+            {
+                continue;
+            }
+            self.fired[i] = true;
+            let Some((orig_iter, batch)) = self.replay_buf[i].take() else {
+                // Nothing was ever delivered before `at` — the retry had
+                // nothing to carry.
+                self.rec.record(
+                    self.epoch,
+                    EventKind::Replay { shard: self.shard, records: 0, superseded: 0 },
+                );
+                continue;
+            };
+            // The iteration-supersede rule, applied at the delivery
+            // boundary: a record whose atom has since been overwritten
+            // at a newer iteration is dropped; the rest re-land at their
+            // *original* iteration, so a re-delivered record is
+            // byte-identical to the one already present and the
+            // freshest-record read scan is unaffected either way.
+            let mut superseded = 0u64;
+            let mut deliver: Vec<(usize, &[f32])> = Vec::new();
+            for (atom, values) in &batch {
+                match self.inner.atom_iter(*atom) {
+                    Ok(Some(cur)) if cur > orig_iter => superseded += 1,
+                    _ => deliver.push((*atom, values.as_slice())),
+                }
+            }
+            let replayed = deliver.len() as u64;
+            if !deliver.is_empty() {
+                // Injection must never fail the training loop; a refused
+                // re-delivery (e.g. the shard died meanwhile) is simply a
+                // retry that never arrived.
+                let _ = self.inner.put_atoms(orig_iter, &deliver);
+            }
+            self.replayed_records += replayed;
+            self.superseded_records += superseded;
+            self.rec.record(
+                self.epoch,
+                EventKind::Replay { shard: self.shard, records: replayed, superseded },
+            );
+        }
     }
 
     /// Injected write delay at `epoch`, if inside a slow window.
@@ -609,10 +774,18 @@ impl ShardBackend for ChaosBackend {
                 // its real CRC/manifest fallback.
                 let keep = atoms.len() / 2;
                 self.torn_records += (atoms.len() - keep) as u64;
+                self.rec.record(
+                    iter,
+                    EventKind::Fault { fault: "torn".to_string(), shard: self.shard },
+                );
                 return self.inner.put_torn(iter, atoms, keep);
             }
         }
-        self.inner.put_atoms(iter, atoms)
+        self.inner.put_atoms(iter, atoms)?;
+        // Only a *whole* delivery is a replayable batch (a torn one never
+        // fully existed on the wire to retry).
+        self.capture_replay(iter, atoms);
+        Ok(())
     }
 
     fn get_atom(&self, atom: usize) -> Result<Option<SavedAtom>> {
@@ -649,6 +822,9 @@ impl ShardBackend for ChaosBackend {
         if self.down_at(self.epoch) {
             bail!("shard {} is down (injected kill)", self.shard);
         }
+        // Replays fire at the fence: the pool has drained, so the
+        // captured batch is mode-independent (see `fire_replays`).
+        self.fire_replays();
         if self.take_fsync_fault() {
             // The fence is acknowledged but never reaches the disk: the
             // manifest on disk stays whatever the previous sync wrote —
@@ -659,10 +835,45 @@ impl ShardBackend for ChaosBackend {
     }
 
     fn advance_epoch(&mut self, iter: usize) {
+        let was_down = self.down_at(self.epoch);
+        let was_partitioned = self.partitioned_at(self.epoch);
+        let was_slow = self.slow_at(self.epoch).is_some();
         if iter > self.epoch {
             self.epoch = iter;
         }
         self.inner.advance_epoch(iter);
+        // Narrate window transitions (entry = Fault, exit = Heal). The
+        // guard keeps the disabled-recorder path down to one branch.
+        if self.rec.is_enabled() {
+            let down = self.down_at(self.epoch);
+            let partitioned = self.partitioned_at(self.epoch);
+            let slow = self.slow_at(self.epoch).is_some();
+            if !was_down && down {
+                let fault = self.down_kind_at(self.epoch).to_string();
+                self.rec.record(iter, EventKind::Fault { fault, shard: self.shard });
+            }
+            if was_down && !down {
+                self.rec.record(iter, EventKind::Heal { shard: self.shard });
+            }
+            if !was_partitioned && partitioned {
+                self.rec.record(
+                    iter,
+                    EventKind::Fault { fault: "partition".to_string(), shard: self.shard },
+                );
+            }
+            if was_partitioned && !partitioned {
+                self.rec.record(iter, EventKind::Heal { shard: self.shard });
+            }
+            if !was_slow && slow {
+                self.rec.record(
+                    iter,
+                    EventKind::Fault { fault: "slow".to_string(), shard: self.shard },
+                );
+            }
+            if was_slow && !slow {
+                self.rec.record(iter, EventKind::Heal { shard: self.shard });
+            }
+        }
         // Bitflips fire one-shot off the fault clock, so the corruption
         // lands at a deterministic epoch in every mode. A fault whose
         // atom has no record yet simply misses (no bit to flip); IO
@@ -681,6 +892,10 @@ impl ShardBackend for ChaosBackend {
                 if let Ok(true) = self.inner.corrupt_record(atom) {
                     self.bitflips += 1;
                     self.corrupted.push(atom);
+                    self.rec.record(
+                        iter,
+                        EventKind::Fault { fault: "bitflip".to_string(), shard: self.shard },
+                    );
                 }
             }
         }
@@ -734,6 +949,11 @@ impl ShardBackend for ChaosBackend {
         let mut atoms = self.inner.take_corruptions();
         atoms.append(&mut self.corrupted);
         atoms
+    }
+
+    fn set_recorder(&mut self, rec: Recorder) {
+        self.inner.set_recorder(rec.clone());
+        self.rec = rec;
     }
 }
 
@@ -1132,5 +1352,94 @@ mod tests {
         assert_eq!(store.get_atom_any(1).unwrap().unwrap().values, vec![4.0]);
         // Atom 0 never depended on shard 1.
         assert_eq!(store.get_atom_any(0).unwrap().unwrap().values, vec![1.0]);
+    }
+
+    #[test]
+    fn parse_spec_accepts_replay() {
+        let plan = FaultPlan::parse_spec("replay:1@7").unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![ShardFault { shard: 1, at: 7, kind: FaultKind::Replay }]
+        );
+        // Round-trips through the scenario value model.
+        let json = plan.to_json();
+        assert_eq!(json.get("replay").idx(0).get("shard").as_usize(), Some(1));
+        assert_eq!(json.get("replay").idx(0).get("at").as_usize(), Some(7));
+    }
+
+    #[test]
+    fn replay_redelivery_is_idempotent() {
+        let faults = vec![ShardFault { shard: 0, at: 3, kind: FaultKind::Replay }];
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, faults);
+        b.put_atoms(2, &[(0, &[2.0][..]), (1, &[7.0][..])]).unwrap();
+        b.advance_epoch(3);
+        b.sync().unwrap(); // fires: both records re-land at iter 2
+        assert_eq!(b.replayed_records(), 2);
+        assert_eq!(b.superseded_records(), 0);
+        let got = b.get_atom(0).unwrap().unwrap();
+        assert_eq!((got.iter, got.values), (2, vec![2.0]), "state is a no-op");
+        // One-shot: a later fence does not re-fire.
+        b.sync().unwrap();
+        assert_eq!(b.replayed_records(), 2);
+    }
+
+    #[test]
+    fn replay_respects_the_supersede_rule() {
+        let faults = vec![ShardFault { shard: 0, at: 4, kind: FaultKind::Replay }];
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, faults);
+        b.put_atoms(2, &[(0, &[2.0][..]), (1, &[2.0][..])]).unwrap();
+        b.put_atoms(3, &[(0, &[3.0][..])]).unwrap(); // freshest pre-`at` batch wins
+        b.advance_epoch(4);
+        b.put_atoms(4, &[(0, &[4.0][..])]).unwrap(); // supersedes the captured record
+        b.sync().unwrap();
+        assert_eq!(b.superseded_records(), 1, "newer record blocks the re-delivery");
+        assert_eq!(b.replayed_records(), 0);
+        let got = b.get_atom(0).unwrap().unwrap();
+        assert_eq!((got.iter, got.values), (4, vec![4.0]), "stale replay never regresses state");
+    }
+
+    #[test]
+    fn replay_with_nothing_captured_fires_empty() {
+        let faults = vec![ShardFault { shard: 0, at: 2, kind: FaultKind::Replay }];
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, faults);
+        let rec = Recorder::enabled();
+        b.set_recorder(rec.clone());
+        b.advance_epoch(2);
+        b.sync().unwrap();
+        assert_eq!(b.replayed_records(), 0);
+        // The (empty) firing is still narrated.
+        let events = rec.drain();
+        assert_eq!(events.len(), 1);
+        assert!(matches!(
+            events[0].kind,
+            EventKind::Replay { shard: 0, records: 0, superseded: 0 }
+        ));
+    }
+
+    #[test]
+    fn recorder_narrates_faults_and_heals() {
+        let faults = vec![
+            ShardFault { shard: 0, at: 3, kind: FaultKind::Kill { heal_at: Some(5) } },
+            ShardFault { shard: 0, at: 7, kind: FaultKind::TornWrite },
+        ];
+        let mut b = ChaosBackend::new(Box::new(MemStore::new()), 0, faults);
+        let rec = Recorder::enabled();
+        b.set_recorder(rec.clone());
+        put1(&mut b, 1, 0, 1.0);
+        for e in 2..7 {
+            b.advance_epoch(e);
+        }
+        put1(&mut b, 7, 0, 7.0); // torn
+        let events = rec.drain();
+        let tags: Vec<(usize, &str)> = events.iter().map(|e| (e.iter, e.kind.tag())).collect();
+        assert_eq!(tags, vec![(3, "fault"), (5, "heal"), (7, "fault")]);
+        assert!(matches!(
+            &events[0].kind,
+            EventKind::Fault { fault, shard: 0 } if fault == "kill"
+        ));
+        assert!(matches!(
+            &events[2].kind,
+            EventKind::Fault { fault, shard: 0 } if fault == "torn"
+        ));
     }
 }

@@ -58,6 +58,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
+use crate::obs::{EventKind, Recorder};
 use crate::params::{AtomLayout, ParamStore};
 use crate::recovery::RebuildPlan;
 use crate::storage::ShardedStore;
@@ -130,6 +131,11 @@ pub struct AsyncCheckpointer {
     skipped_atoms: u64,
     /// Payload bytes those elided writes would have cost.
     skipped_bytes: u64,
+    /// Flight recorder (disabled unless attached via
+    /// [`with_recorder`](AsyncCheckpointer::with_recorder)): narrates
+    /// barriers, flush fences, parity-fence phases, rebuild-plan
+    /// executions, and back-pressure stalls as iteration-clocked events.
+    rec: Recorder,
 }
 
 /// Content fingerprint of one atom's payload (the delta-skip key).
@@ -226,7 +232,18 @@ impl AsyncCheckpointer {
             last_crc,
             skipped_atoms: 0,
             skipped_bytes: 0,
+            rec: Recorder::disabled(),
         })
+    }
+
+    /// Attach a flight recorder: the checkpointer narrates its barriers,
+    /// fences, rebuilds, and stalls through it, and forwards the handle
+    /// to every store backend so chaos injections are narrated too. The
+    /// default (disabled) recorder costs one branch per would-be event.
+    pub fn with_recorder(mut self, rec: Recorder) -> AsyncCheckpointer {
+        self.store.set_recorder(rec.clone());
+        self.rec = rec;
+        self
     }
 
     /// Bound the async writer queue: barriers block once more than
@@ -382,6 +399,7 @@ impl AsyncCheckpointer {
             )?;
             self.rebuilt_atoms += plan.rebuilt_atoms() as u64;
             self.rebuilt_bytes += bytes;
+            plan.record_into(&self.rec, iter, "cache", bytes, self.store.fence_workers());
         }
         if !epoch.newly_healed.is_empty() {
             // Batch route resolution: one lock for the whole layout, not
@@ -403,6 +421,7 @@ impl AsyncCheckpointer {
             )?;
             self.readopted_atoms += plan.rebuilt_atoms() as u64;
             self.readopted_bytes += bytes;
+            plan.record_into(&self.rec, iter, "readopt", bytes, self.store.fence_workers());
         }
         Ok(())
     }
@@ -431,6 +450,8 @@ impl AsyncCheckpointer {
         // recovery scan reads the same values from it. The filter runs
         // on the barrier snapshot, before the mode branch, so sync and
         // async pipelines skip identically.
+        let (skipped_atoms_before, skipped_bytes_before) =
+            (self.skipped_atoms, self.skipped_bytes);
         let last_crc = &mut self.last_crc;
         let (skipped_atoms, skipped_bytes) = (&mut self.skipped_atoms, &mut self.skipped_bytes);
         payloads.retain(|(atom, vals)| {
@@ -449,6 +470,17 @@ impl AsyncCheckpointer {
         let bytes: u64 = payloads.iter().map(|(_, v)| (v.len() * 4) as u64).sum();
         let blocking_secs = t0.elapsed().as_secs_f64();
         let atoms_saved = payloads.len();
+        if self.rec.is_enabled() {
+            self.rec.record(
+                iter,
+                EventKind::Barrier {
+                    atoms: atoms_saved,
+                    bytes,
+                    skipped_atoms: self.skipped_atoms - skipped_atoms_before,
+                    skipped_bytes: self.skipped_bytes - skipped_bytes_before,
+                },
+            );
+        }
 
         match self.mode {
             CheckpointMode::Sync => {
@@ -530,9 +562,16 @@ impl AsyncCheckpointer {
     /// Back-pressure point of a bounded queue: wait for room, counting
     /// the barrier as stalled if it had to wait. Writer errors surface at
     /// the next `flush` (the fence every recovery goes through).
+    ///
+    /// Stall events (like the `degraded_records` counter) are
+    /// observability, not part of the determinism contract: whether a
+    /// barrier stalls at all depends on how far the writer pool happened
+    /// to fall behind, which is wall-clock scheduling.
     fn wait_for_queue_room(&mut self) -> Result<()> {
+        let pending = self.shared.pending.lock().unwrap().in_flight;
         if self.wait_pending_at_most(self.max_pending)? {
             self.stalled_barriers += 1;
+            self.rec.record(self.last_tick_iter, EventKind::Stall { pending });
         }
         Ok(())
     }
@@ -557,9 +596,23 @@ impl AsyncCheckpointer {
         // touched since the last fence from the settled state — running
         // it here, after the async drain, is what keeps sync and async
         // parity byte-identical.
-        self.store.parity_fence()?;
+        let (scrubbed_before, reencoded_before) =
+            (self.store.stripes_scrubbed(), self.store.stripes_reencoded());
+        let repaired = self.store.parity_fence()?;
         self.store.sync_all()?;
         self.store.mark_committed_at(self.last_barrier_iter);
+        if self.rec.is_enabled() {
+            let at = self.last_barrier_iter;
+            let scrubbed = self.store.stripes_scrubbed() - scrubbed_before;
+            let reencoded = self.store.stripes_reencoded() - reencoded_before;
+            if scrubbed > 0 || repaired > 0 {
+                self.rec.record(at, EventKind::Scrub { stripes: scrubbed, repaired });
+            }
+            if reencoded > 0 {
+                self.rec.record(at, EventKind::Reencode { stripes: reencoded });
+            }
+            self.rec.record(at, EventKind::Flush { watermark: at });
+        }
         if self.compact_threshold > 0.0 {
             self.store.compact_if_needed(self.compact_threshold, self.compact_min_bytes)?;
         }

@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::{AsyncCheckpointer, CheckpointMode, CheckpointPolicy};
 use crate::failure::{HeartbeatDetector, Liveness};
+use crate::obs::{EventKind, Recorder};
 use crate::params::{AtomLayout, ParamStore};
 use crate::partition::Partition;
 use crate::storage::{CheckpointStore, ShardedStore};
@@ -397,6 +398,10 @@ pub struct ClusterJob {
     /// Stop as soon as the loss reaches this threshold (scenario
     /// iteration-cost measurement); `None` runs all `iters`.
     pub stop_at_loss: Option<f64>,
+    /// Flight recorder narrating the run: node kills/recoveries here,
+    /// plus everything the checkpointer and chaos layer record. The
+    /// default disabled recorder is a zero-cost no-op.
+    pub recorder: Recorder,
 }
 
 impl ClusterJob {
@@ -415,6 +420,7 @@ impl ClusterJob {
             seed,
             detect: Detect::Heartbeat(Duration::from_millis(20)),
             stop_at_loss: None,
+            recorder: Recorder::disabled(),
         }
     }
 }
@@ -484,7 +490,8 @@ pub fn run_cluster_training(
         job.ckpt_writers,
     )?
     .with_max_pending(job.max_pending)
-    .with_compaction(job.compact_threshold, job.compact_min_bytes);
+    .with_compaction(job.compact_threshold, job.compact_min_bytes)
+    .with_recorder(job.recorder.clone());
 
     let mut losses = Vec::with_capacity(job.iters);
     let mut recovery_delta_sq = 0.0f64;
@@ -495,6 +502,9 @@ pub fn run_cluster_training(
         for &(kill_iter, node) in &job.kills {
             if iter == kill_iter {
                 cluster.kill_node(node, iter);
+                if job.recorder.is_enabled() {
+                    job.recorder.record(iter, EventKind::NodeKill { node });
+                }
                 killed_now.push(node);
             }
         }
@@ -520,6 +530,16 @@ pub fn run_cluster_training(
             recovery_delta_sq += outcome.delta_norm * outcome.delta_norm;
             rebuilt_atoms += outcome.rebuilt_atoms as u64;
             rebuilt_bytes += outcome.rebuilt_bytes;
+            if job.recorder.is_enabled() {
+                job.recorder.record(
+                    iter,
+                    EventKind::NodeRecover {
+                        nodes: dead.len(),
+                        atoms: outcome.rebuilt_atoms,
+                        delta_norm: outcome.delta_norm,
+                    },
+                );
+            }
             // New records follow the atoms' new owners.
             store.set_route_partition(&cluster.partition);
         }
@@ -695,6 +715,33 @@ mod tests {
         // The final fence committed everything the pool wrote.
         assert!(store.committed().is_some());
         assert_eq!(report.checkpoint_bytes, store.total_bytes());
+    }
+
+    #[test]
+    fn recorder_narrates_node_kills_and_recoveries() {
+        use crate::models::synthetic::SyntheticTrainer;
+        let mut trainer = SyntheticTrainer::new(16, 0.8, 3);
+        let store = Arc::new(ShardedStore::new_mem(2));
+        let rec = Recorder::enabled();
+        let job = ClusterJob {
+            kills: vec![(5, 1)],
+            detect: Detect::Immediate,
+            recorder: rec.clone(),
+            ..ClusterJob::new(3, 40, CheckpointPolicy::full(4), 11)
+        };
+        run_cluster_training(&mut trainer, store, &job).unwrap();
+        let events = rec.drain();
+        assert!(
+            events
+                .iter()
+                .any(|e| e.iter == 5 && matches!(e.kind, EventKind::NodeKill { node: 1 })),
+            "missing NodeKill: {events:?}"
+        );
+        assert!(
+            events.iter().any(|e| e.iter == 5
+                && matches!(e.kind, EventKind::NodeRecover { nodes: 1, .. })),
+            "missing NodeRecover: {events:?}"
+        );
     }
 
     #[test]

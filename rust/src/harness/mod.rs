@@ -22,6 +22,7 @@ use crate::checkpoint::{
     AsyncCheckpointer, CheckpointCoordinator, CheckpointMode, CheckpointPolicy,
 };
 use crate::failure::FailureEvent;
+use crate::obs::{standard_registry, EventKind, Recorder};
 use crate::params::ParamStore;
 use crate::recovery::{recover, RecoveryMode, RecoveryReport};
 use crate::storage::{MemStore, ShardedStore};
@@ -166,6 +167,12 @@ pub struct CheckpointSetup {
     pub compact_threshold: f64,
     /// Minimum on-disk shard size before compaction runs.
     pub compact_min_bytes: u64,
+    /// Write the trial's flight-recorder trace to this JSONL file
+    /// (`None` = recorder disabled, the default — a single untaken
+    /// branch per would-be event). Tracing never changes results: the
+    /// traced run's recovered parameters and report are byte-identical
+    /// to the untraced run (pinned by `rust/tests/obs.rs`).
+    pub trace_path: Option<PathBuf>,
 }
 
 impl CheckpointSetup {
@@ -194,6 +201,7 @@ impl CheckpointSetup {
             checkpoint_dir: None,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
+            trace_path: None,
         }
     }
 
@@ -270,6 +278,11 @@ pub struct TrialResult {
     pub skipped_atoms: u64,
     /// Payload bytes those elided atoms would have written.
     pub skipped_bytes: u64,
+    /// Registry snapshot of the trial's counters, keyed by the
+    /// [`STANDARD_COUNTERS`](crate::obs::STANDARD_COUNTERS) names — one
+    /// shared key set in every trial (zeros where a subsystem never
+    /// ran), so cell-level sums and trend CSV columns stay stable.
+    pub metrics: BTreeMap<String, f64>,
 }
 
 /// Cap for perturbed runs: generous multiple of the baseline so heavy
@@ -310,6 +323,7 @@ pub fn run_trial(
         repaired_bytes: 0,
         skipped_atoms: 0,
         skipped_bytes: 0,
+        metrics: standard_registry().snapshot(),
     })
 }
 
@@ -362,6 +376,10 @@ pub fn run_plan_trial_with(
 
     let layout = trainer.layout().clone();
     let store = Arc::new(setup.build_store()?);
+    let rec = match setup.trace_path {
+        Some(_) => Recorder::enabled(),
+        None => Recorder::disabled(),
+    };
     let mut ck = AsyncCheckpointer::new(
         setup.policy,
         traj.state_at(0),
@@ -371,12 +389,25 @@ pub fn run_plan_trial_with(
         setup.writers,
     )?
     .with_max_pending(setup.max_pending)
-    .with_compaction(setup.compact_threshold, setup.compact_min_bytes);
+    .with_compaction(setup.compact_threshold, setup.compact_min_bytes)
+    .with_recorder(rec.clone());
     // Replay barriers along the cached trajectory up to the failure
     // (same RNG stream as replay_checkpoints).
     let mut replay_rng = Rng::new(trial_seed);
     for iter in 1..=first_iter {
         ck.maybe_checkpoint(iter, traj.state_at(iter), &layout, &mut replay_rng)?;
+        if rec.is_enabled() {
+            // The replayed prefix comes straight off the cached
+            // trajectory: per-iteration loss and update norm are
+            // re-derivable from its snapshots.
+            rec.record(
+                iter,
+                EventKind::Progress {
+                    loss: traj.losses[iter - 1],
+                    update_norm: traj.state_at(iter).l2_distance(traj.state_at(iter - 1)),
+                },
+            );
+        }
     }
 
     let mut state = traj.state_at(first_iter).clone();
@@ -408,7 +439,17 @@ pub fn run_plan_trial_with(
             delta_sq += r.delta_norm * r.delta_norm;
             next_event += 1;
         }
+        // The update norm is only computed when tracing: it costs a full
+        // state clone per iteration, which the untraced hot path never
+        // pays.
+        let prev = if rec.is_enabled() { Some(trainer.state().clone()) } else { None };
         let loss = trainer.step(iter)?;
+        if let Some(prev) = prev {
+            rec.record(
+                iter + 1,
+                EventKind::Progress { loss, update_norm: trainer.state().l2_distance(&prev) },
+            );
+        }
         ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut ckpt_rng)?;
         if loss <= traj.threshold {
             total = Some(iter + 1);
@@ -419,12 +460,35 @@ pub fn run_plan_trial_with(
     let rebuilt_bytes = ck.rebuilt_bytes() + ck.readopted_bytes();
     let skipped_atoms = ck.skipped_atoms();
     let skipped_bytes = ck.skipped_bytes();
+    let backpressure_stalls = ck.backpressure_stalls();
     ck.finish()?;
+    if let Some(path) = &setup.trace_path {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {}", dir.display()))?;
+        }
+        std::fs::write(path, crate::obs::to_jsonl(&rec.drain()))
+            .with_context(|| format!("writing trace {}", path.display()))?;
+    }
     report.delta_norm = delta_sq.sqrt();
     let (total, censored) = match total {
         Some(t) => (t, false),
         None => (cap, true),
     };
+    // Fill the metrics registry from the trial's counters — every trial
+    // shares the standard key set, so cell sums and trend columns are
+    // stable whatever subsystems actually ran.
+    let reg = standard_registry();
+    reg.counter("rebuilt_atoms").set(rebuilt_atoms);
+    reg.counter("rebuilt_bytes").set(rebuilt_bytes);
+    reg.counter("compaction_runs").set(store.compaction_runs());
+    reg.counter("compaction_reclaimed_bytes").set(store.compaction_reclaimed_bytes());
+    reg.counter("repaired_records").set(store.repaired_records());
+    reg.counter("repaired_bytes").set(store.repaired_bytes());
+    reg.counter("skipped_atoms").set(skipped_atoms);
+    reg.counter("skipped_bytes").set(skipped_bytes);
+    reg.counter("backpressure_stalls").set(backpressure_stalls);
+    reg.counter("degraded_records").set(store.degraded_records());
     Ok(TrialResult {
         iteration_cost: total as f64 - traj.converged_iters as f64,
         censored,
@@ -437,6 +501,7 @@ pub fn run_plan_trial_with(
         repaired_bytes: store.repaired_bytes(),
         skipped_atoms,
         skipped_bytes,
+        metrics: reg.snapshot(),
     })
 }
 

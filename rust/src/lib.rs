@@ -28,7 +28,9 @@
 //! implement the paper's strategies; [`harness`] measures iteration
 //! costs; [`cluster`] runs the threaded PS deployment; [`scenario`] turns
 //! whole experiments into data files (`scenarios/*.toml`) executed as
-//! parallel trial sweeps via `scar run-scenario`.
+//! parallel trial sweeps via `scar run-scenario`; [`obs`] is the
+//! deterministic flight recorder + metrics registry behind `--trace`,
+//! `--json`, and `scar trace`.
 
 pub mod advisor;
 pub mod chaos;
@@ -39,6 +41,7 @@ pub mod data;
 pub mod failure;
 pub mod harness;
 pub mod models;
+pub mod obs;
 pub mod params;
 pub mod partition;
 pub mod recovery;

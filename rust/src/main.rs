@@ -19,6 +19,7 @@ use scar::config::RunConfig;
 use scar::failure::{FailureEvent, FailureInjector};
 use scar::harness;
 use scar::models::{build_trainer, default_engine, BuildOpts};
+use scar::obs::{standard_registry, EventKind, Recorder, Registry};
 use scar::params::{AtomLayout, ParamStore, Tensor};
 use scar::recovery;
 use scar::recovery::RebuildPlan;
@@ -43,6 +44,7 @@ fn main() -> Result<()> {
         "compact" => cmd_compact(&args),
         "trend" => cmd_trend(&args),
         "bench" => cmd_bench(&args),
+        "trace" => cmd_trace(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -58,16 +60,21 @@ fn print_help() {
     eprintln!(
         "scar — self-correcting checkpoint-based fault tolerance for ML training
 
-USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|bench> [flags]
+USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|bench|trace> [flags]
 
   info                          list AOT artifacts
   train   --set k=v ...         local training loop with SCAR checkpointing
           [--config run.json]     and an optional injected failure plan
+          [--trace f] [--json]    (--trace dumps a flight-recorder trace:
+                                  .jsonl, or Chrome trace_event otherwise;
+                                  --json prints end-of-run metrics)
   cluster --set k=v ...         threaded PS cluster with heartbeats and a
           [--kills i:n,i:n]       schedule of node kills
+          [--trace f] [--json]
   run-scenario <file.toml|json> declarative scenario sweep on a worker pool
           [--workers n] [--trials n] [--seed s] [--output f.csv] [--dry-run]
           [--backend mem|disk] [--checkpoint-dir d] [--metrics-out f.json]
+          [--trace-dir d]         (per-trial flight-recorder JSONL traces)
   bound   --model <variant>     Theorem 3.2 iteration-cost bounds
   advisor --model <variant>     run a probe, estimate c on-the-fly, and
           [--fail-rate p]         recommend a checkpoint policy (§7)
@@ -86,6 +93,9 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|bench> 
                                   re-encoded, checkpoint bytes written vs
                                   delta-skipped, serial vs parallel
                                   rebuild, allocations avoided
+  trace   <trace.jsonl>         inspect a flight-recorder trace: per-shard
+          [--render out.svg]      SVG timeline, fault -> recovery latency
+          [--chrome out.json]     table, Chrome trace_event conversion
 
 Config keys (for --set): model seed iters target_iters ps_nodes workers
   checkpoint_interval checkpoint_k checkpoint_mode(sync|async) selector
@@ -94,12 +104,15 @@ Config keys (for --set): model seed iters target_iters ps_nodes workers
   fail_fraction fail_geom_p fail_plan fail_nodes fail_cascade_extra
   fail_cascade_gap fail_flaky_period fail_flaky_prob fail_flaky_max
   checkpoint_dir chaos (e.g. \"kill:1@6..9,part:0@4..12,flaky:2@5p8d3c2,
-  bitflip:1@6a9\" — bitflip:SHARD@EPOCH[aATOM] corrupts one record)
+  bitflip:1@6a9,replay:1@7\" — bitflip:SHARD@EPOCH[aATOM] corrupts one
+  record; replay:SHARD@EPOCH re-delivers a stale put batch at a fence)
 
 Scenario files additionally take [chaos] (per-shard
-kill/slow/torn/partition/flaky/fsync/bitflip schedules), checkpoint_dir
-(disk-backed trials), [storage] compact_threshold/compact_min_bytes/
-parity, deploy = \"harness\"|\"cluster\", and ps_nodes.
+kill/slow/torn/partition/flaky/fsync/bitflip/replay schedules),
+checkpoint_dir (disk-backed trials), [storage]
+compact_threshold/compact_min_bytes/parity, deploy =
+\"harness\"|\"cluster\", ps_nodes, and [obs] trace_dir (per-trial
+flight-recorder JSONL traces).
 
 Bundled scenarios: scenarios/fig5.toml, fig6.toml, fig7.toml (paper
 figure sweeps), scenarios/failure_models.toml (correlated/cascade/flaky),
@@ -503,6 +516,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut rng = Rng::new(cfg.seed ^ 0xF00D);
 
     trainer.init(cfg.seed)?;
+    // Flight recorder: enabled only when --trace asks for a dump, so the
+    // untraced hot path never pays for event bookkeeping.
+    let rec = match args.str_opt("trace") {
+        Some(_) => Recorder::enabled(),
+        None => Recorder::disabled(),
+    };
     let layout = trainer.layout().clone();
     let mut ck = AsyncCheckpointer::new(
         cfg.policy(),
@@ -513,7 +532,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.effective_writers(),
     )?
     .with_max_pending(cfg.storage_max_pending)
-    .with_compaction(cfg.storage_compact_threshold, cfg.storage_compact_min_bytes as u64);
+    .with_compaction(cfg.storage_compact_threshold, cfg.storage_compact_min_bytes as u64)
+    .with_recorder(rec.clone());
 
     // Optional failure schedule: the configured plan expands to one or
     // more events (cascades and flaky nodes produce several).
@@ -571,7 +591,16 @@ fn cmd_train(args: &Args) -> Result<()> {
                 report.delta_norm
             );
         }
+        // The update norm costs a full state clone per iteration; only
+        // traced runs pay for it.
+        let prev = if rec.is_enabled() { Some(trainer.state().clone()) } else { None };
         let loss = trainer.step(iter)?;
+        if let Some(prev) = prev {
+            rec.record(
+                iter + 1,
+                EventKind::Progress { loss, update_norm: trainer.state().l2_distance(&prev) },
+            );
+        }
         let stats = ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng)?;
         if iter % 10 == 0 || iter + 1 == cfg.iters {
             println!(
@@ -584,6 +613,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let (rebuilt_atoms, rebuilt_bytes) = (ck.rebuilt_atoms(), ck.rebuilt_bytes());
     let (readopted_atoms, readopted_bytes) = (ck.readopted_atoms(), ck.readopted_bytes());
+    let (skipped_atoms, skipped_bytes) = (ck.skipped_atoms(), ck.skipped_bytes());
+    let stalls = ck.backpressure_stalls();
     ck.finish()?;
     println!(
         "done in {:.1}s; checkpoint bytes written: {}",
@@ -620,6 +651,23 @@ fn cmd_train(args: &Args) -> Result<()> {
             scar::util::fmt_bytes(store.total_on_disk_bytes())
         );
     }
+    if let Some(path) = args.str_opt("trace") {
+        write_trace(path, &rec)?;
+    }
+    if args.bool("json") {
+        let reg = standard_registry();
+        reg.counter("rebuilt_atoms").set(rebuilt_atoms + readopted_atoms);
+        reg.counter("rebuilt_bytes").set(rebuilt_bytes + readopted_bytes);
+        reg.counter("skipped_atoms").set(skipped_atoms);
+        reg.counter("skipped_bytes").set(skipped_bytes);
+        reg.counter("backpressure_stalls").set(stalls);
+        reg.counter("repaired_records").set(store.repaired_records());
+        reg.counter("repaired_bytes").set(store.repaired_bytes());
+        reg.counter("compaction_runs").set(store.compaction_runs());
+        reg.counter("compaction_reclaimed_bytes").set(store.compaction_reclaimed_bytes());
+        reg.counter("degraded_records").set(store.degraded_records());
+        print_json_metrics(&reg);
+    }
     Ok(())
 }
 
@@ -654,6 +702,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "cluster run: {} nodes, {} storage shard(s), {} checkpoints, kill schedule {:?}",
         cfg.ps_nodes, cfg.storage_shards, cfg.checkpoint_mode, kills
     );
+    let rec = match args.str_opt("trace") {
+        Some(_) => Recorder::enabled(),
+        None => Recorder::disabled(),
+    };
     let job = scar::cluster::ClusterJob {
         ckpt_mode: cfg.checkpoint_mode,
         ckpt_writers: cfg.effective_writers(),
@@ -662,9 +714,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         compact_min_bytes: cfg.storage_compact_min_bytes as u64,
         kills,
         detect: scar::cluster::Detect::Heartbeat(Duration::from_millis(20)),
+        recorder: rec.clone(),
         ..scar::cluster::ClusterJob::new(cfg.ps_nodes, cfg.iters, cfg.policy(), cfg.seed)
     };
-    let report = scar::cluster::run_cluster_training(&mut trainer, store, &job)?;
+    let report = scar::cluster::run_cluster_training(&mut trainer, store.clone(), &job)?;
     for e in &report.events {
         println!("event: {e:?}");
     }
@@ -694,6 +747,84 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         report.recovery_delta_norm,
         scar::util::fmt_bytes(report.checkpoint_bytes)
     );
+    if let Some(path) = args.str_opt("trace") {
+        write_trace(path, &rec)?;
+    }
+    if args.bool("json") {
+        let reg = standard_registry();
+        reg.counter("rebuilt_atoms").set(report.rebuilt_atoms);
+        reg.counter("rebuilt_bytes").set(report.rebuilt_bytes);
+        reg.counter("compaction_runs").set(report.compaction_runs);
+        reg.counter("compaction_reclaimed_bytes").set(report.compaction_reclaimed_bytes);
+        reg.counter("repaired_records").set(store.repaired_records());
+        reg.counter("repaired_bytes").set(store.repaired_bytes());
+        reg.counter("degraded_records").set(report.degraded_records);
+        print_json_metrics(&reg);
+    }
+    Ok(())
+}
+
+/// Dump a flight-recorder trace: `.jsonl` gets the line-per-event JSONL
+/// format (`scar trace` input), anything else the Chrome `trace_event`
+/// JSON loadable in `chrome://tracing` / Perfetto.
+fn write_trace(path: &str, rec: &Recorder) -> Result<()> {
+    let events = rec.drain();
+    let body = if path.ends_with(".jsonl") {
+        scar::obs::to_jsonl(&events)
+    } else {
+        scar::obs::to_chrome_trace(&events)
+    };
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating trace dir {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, body).with_context(|| format!("writing trace {path}"))?;
+    println!("trace -> {path} ({} events)", events.len());
+    Ok(())
+}
+
+/// `--json`: machine-readable end-of-run metrics on stdout, one flat
+/// object keyed by standard counter names.
+fn print_json_metrics(reg: &Registry) {
+    use scar::util::json::Json;
+    let mut obj = std::collections::BTreeMap::new();
+    for (k, v) in reg.snapshot() {
+        obj.insert(k, Json::Num(v));
+    }
+    println!("{}", Json::Obj(obj).to_string());
+}
+
+/// `scar trace`: load a JSONL flight-recorder trace and report on it —
+/// event counts, fault -> recovery latency, optionally an SVG timeline
+/// (`--render`) or a Chrome trace_event conversion (`--chrome`).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: scar trace <trace.jsonl> [--render out.svg] [--chrome out.json]")?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let events = scar::obs::parse_jsonl(&text)?;
+    println!("{path}: {} event(s)", events.len());
+    for (tag, n) in scar::obs::timeline::summary_counts(&events) {
+        println!("  {tag:<14} {n}");
+    }
+    let table = scar::obs::timeline::fault_latency_table(&events);
+    if !table.is_empty() {
+        print!("{table}");
+    }
+    if let Some(out) = args.str_opt("chrome") {
+        std::fs::write(out, scar::obs::to_chrome_trace(&events))
+            .with_context(|| format!("writing chrome trace {out}"))?;
+        println!("chrome trace -> {out}");
+    }
+    if let Some(out) = args.str_opt("render") {
+        std::fs::write(out, scar::obs::timeline::render_timeline(&events))
+            .with_context(|| format!("writing timeline {out}"))?;
+        println!("timeline -> {out}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,565 @@
+//! Observability: a deterministic flight recorder and a metrics registry.
+//!
+//! The recorder is iteration-clocked, never wall-clocked: every event
+//! carries the training iteration it belongs to, and `drain()` merges
+//! whatever the producing threads pushed into one canonical order — sort
+//! by `(iter, serialized form)` — so two runs of the same seed produce
+//! byte-identical traces regardless of thread scheduling. A disabled
+//! recorder is a no-op handle (one `Option` check per call, no
+//! allocation, no lock), which is what keeps the byte-identity and bench
+//! contracts intact when tracing is off.
+//!
+//! The registry replaces hand-threaded counter plumbing: subsystems
+//! register `Counter`/`Gauge` handles by name and a `snapshot()` at trial
+//! end produces the `name -> value` map that `TrialResult`, cell sums,
+//! and `--json` output derive from.
+//!
+//! Traces export as JSONL (one event object per line, sorted keys) and as
+//! Chrome `trace_event` JSON (`chrome://tracing` / Perfetto); `scar trace`
+//! loads the JSONL form and renders a per-shard timeline ([`timeline`]).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+use crate::util::json::Json;
+
+pub mod timeline;
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// One recorded event, keyed by the training iteration it happened at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub iter: usize,
+    pub kind: EventKind,
+}
+
+/// The event taxonomy. Mirrors the fault taxonomy plus the checkpoint,
+/// recovery, and training signals the cost model prices.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A checkpoint barrier: atoms/bytes that hit the store after the
+    /// delta-skip filter, and what the filter dropped.
+    Barrier { atoms: usize, bytes: u64, skipped_atoms: u64, skipped_bytes: u64 },
+    /// A flush fence committed the watermark.
+    Flush { watermark: usize },
+    /// Parity-fence scrub phase: stripes examined, records repaired.
+    Scrub { stripes: u64, repaired: u64 },
+    /// Parity-fence re-encode phase.
+    Reencode { stripes: u64 },
+    /// A chaos fault fired (one-shots) or its window opened (kill/slow/
+    /// partition/flaky phases).
+    Fault { fault: String, shard: usize },
+    /// A windowed chaos fault's window closed: the shard is back.
+    Heal { shard: usize },
+    /// A replay fault re-delivered a captured put batch; `superseded`
+    /// records were dropped by the iteration-supersede rule.
+    Replay { shard: usize, records: u64, superseded: u64 },
+    /// A rebuild plan executed (cache re-persist, heal re-adoption,
+    /// parity reconstruction).
+    Rebuild { source: String, atoms: usize, bytes: u64, workers: usize },
+    /// An async barrier blocked on `max_pending` back-pressure.
+    Stall { pending: usize },
+    /// Cluster: a PS node was killed.
+    NodeKill { node: usize },
+    /// Cluster: dead nodes recovered from shared storage, re-introducing
+    /// a perturbation of norm `delta_norm` (the Thm 3.2 input).
+    NodeRecover { nodes: usize, atoms: usize, delta_norm: f64 },
+    /// Per-iteration training progress: loss and ‖xₜ − xₜ₋₁‖ (the update
+    /// norm bounding the slow-mode amplitude in the Thm 3.2 terms).
+    Progress { loss: f64, update_norm: f64 },
+}
+
+impl EventKind {
+    /// Stable tag used in JSONL, Chrome trace names, and tables.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EventKind::Barrier { .. } => "barrier",
+            EventKind::Flush { .. } => "flush",
+            EventKind::Scrub { .. } => "scrub",
+            EventKind::Reencode { .. } => "reencode",
+            EventKind::Fault { .. } => "fault",
+            EventKind::Heal { .. } => "heal",
+            EventKind::Replay { .. } => "replay",
+            EventKind::Rebuild { .. } => "rebuild",
+            EventKind::Stall { .. } => "stall",
+            EventKind::NodeKill { .. } => "node_kill",
+            EventKind::NodeRecover { .. } => "node_recover",
+            EventKind::Progress { .. } => "progress",
+        }
+    }
+
+    /// The shard this event is about, if it is shard-scoped.
+    pub fn shard(&self) -> Option<usize> {
+        match self {
+            EventKind::Fault { shard, .. }
+            | EventKind::Heal { shard }
+            | EventKind::Replay { shard, .. } => Some(*shard),
+            _ => None,
+        }
+    }
+
+    /// Payload fields (everything but `iter` and the tag).
+    fn args(&self) -> BTreeMap<String, Json> {
+        fn num(m: &mut BTreeMap<String, Json>, k: &str, v: f64) {
+            m.insert(k.to_string(), Json::Num(v));
+        }
+        let mut m = BTreeMap::new();
+        match self {
+            EventKind::Barrier { atoms, bytes, skipped_atoms, skipped_bytes } => {
+                num(&mut m, "atoms", *atoms as f64);
+                num(&mut m, "bytes", *bytes as f64);
+                num(&mut m, "skipped_atoms", *skipped_atoms as f64);
+                num(&mut m, "skipped_bytes", *skipped_bytes as f64);
+            }
+            EventKind::Flush { watermark } => num(&mut m, "watermark", *watermark as f64),
+            EventKind::Scrub { stripes, repaired } => {
+                num(&mut m, "stripes", *stripes as f64);
+                num(&mut m, "repaired", *repaired as f64);
+            }
+            EventKind::Reencode { stripes } => num(&mut m, "stripes", *stripes as f64),
+            EventKind::Fault { fault, shard } => {
+                m.insert("fault".to_string(), Json::from(fault.as_str()));
+                num(&mut m, "shard", *shard as f64);
+            }
+            EventKind::Heal { shard } => num(&mut m, "shard", *shard as f64),
+            EventKind::Replay { shard, records, superseded } => {
+                num(&mut m, "shard", *shard as f64);
+                num(&mut m, "records", *records as f64);
+                num(&mut m, "superseded", *superseded as f64);
+            }
+            EventKind::Rebuild { source, atoms, bytes, workers } => {
+                m.insert("source".to_string(), Json::from(source.as_str()));
+                num(&mut m, "atoms", *atoms as f64);
+                num(&mut m, "bytes", *bytes as f64);
+                num(&mut m, "workers", *workers as f64);
+            }
+            EventKind::Stall { pending } => num(&mut m, "pending", *pending as f64),
+            EventKind::NodeKill { node } => num(&mut m, "node", *node as f64),
+            EventKind::NodeRecover { nodes, atoms, delta_norm } => {
+                num(&mut m, "nodes", *nodes as f64);
+                num(&mut m, "atoms", *atoms as f64);
+                num(&mut m, "delta_norm", *delta_norm);
+            }
+            EventKind::Progress { loss, update_norm } => {
+                num(&mut m, "loss", *loss);
+                num(&mut m, "update_norm", *update_norm);
+            }
+        }
+        m
+    }
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let mut m = self.kind.args();
+        m.insert("iter".to_string(), Json::from(self.iter));
+        m.insert("event".to_string(), Json::from(self.kind.tag()));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Event> {
+        fn us(v: &Json, key: &str) -> Result<usize> {
+            v.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("trace event missing numeric field '{key}'"))
+        }
+        fn u(v: &Json, key: &str) -> Result<u64> {
+            Ok(us(v, key)? as u64)
+        }
+        fn f(v: &Json, key: &str) -> Result<f64> {
+            v.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow!("trace event missing numeric field '{key}'"))
+        }
+        fn s(v: &Json, key: &str) -> Result<String> {
+            Ok(v.get(key)
+                .as_str()
+                .ok_or_else(|| anyhow!("trace event missing string field '{key}'"))?
+                .to_string())
+        }
+        let iter = us(v, "iter")?;
+        let tag = s(v, "event")?;
+        let kind = match tag.as_str() {
+            "barrier" => EventKind::Barrier {
+                atoms: us(v, "atoms")?,
+                bytes: u(v, "bytes")?,
+                skipped_atoms: u(v, "skipped_atoms")?,
+                skipped_bytes: u(v, "skipped_bytes")?,
+            },
+            "flush" => EventKind::Flush { watermark: us(v, "watermark")? },
+            "scrub" => EventKind::Scrub { stripes: u(v, "stripes")?, repaired: u(v, "repaired")? },
+            "reencode" => EventKind::Reencode { stripes: u(v, "stripes")? },
+            "fault" => EventKind::Fault { fault: s(v, "fault")?, shard: us(v, "shard")? },
+            "heal" => EventKind::Heal { shard: us(v, "shard")? },
+            "replay" => EventKind::Replay {
+                shard: us(v, "shard")?,
+                records: u(v, "records")?,
+                superseded: u(v, "superseded")?,
+            },
+            "rebuild" => EventKind::Rebuild {
+                source: s(v, "source")?,
+                atoms: us(v, "atoms")?,
+                bytes: u(v, "bytes")?,
+                workers: us(v, "workers")?,
+            },
+            "stall" => EventKind::Stall { pending: us(v, "pending")? },
+            "node_kill" => EventKind::NodeKill { node: us(v, "node")? },
+            "node_recover" => EventKind::NodeRecover {
+                nodes: us(v, "nodes")?,
+                atoms: us(v, "atoms")?,
+                delta_norm: f(v, "delta_norm")?,
+            },
+            "progress" => {
+                EventKind::Progress { loss: f(v, "loss")?, update_norm: f(v, "update_norm")? }
+            }
+            other => bail!("unknown trace event kind '{other}'"),
+        };
+        Ok(Event { iter, kind })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------------
+
+/// A cheap, cloneable handle to a trial's event sink.
+///
+/// `Recorder::disabled()` is the default everywhere: `record()` on it is
+/// one `Option` check — no lock, no allocation — so tracing-off runs pay
+/// nothing (pinned by `rust/tests/obs.rs` byte-identity and the bench
+/// counters). An enabled recorder shares one `Mutex<Vec<Event>>` across
+/// all clones; writer-pool threads may push concurrently because
+/// `drain()` re-sorts into a canonical order anyway.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    core: Option<Arc<Mutex<Vec<Event>>>>,
+}
+
+impl fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Recorder {{ enabled: {} }}", self.is_enabled())
+    }
+}
+
+impl Recorder {
+    /// The no-op sink: records nothing, costs one branch per call.
+    pub fn disabled() -> Recorder {
+        Recorder { core: None }
+    }
+
+    pub fn enabled() -> Recorder {
+        Recorder { core: Some(Arc::new(Mutex::new(Vec::new()))) }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.core.is_some()
+    }
+
+    pub fn record(&self, iter: usize, kind: EventKind) {
+        if let Some(core) = &self.core {
+            core.lock().unwrap().push(Event { iter, kind });
+        }
+    }
+
+    /// Take all recorded events in canonical order: sorted by
+    /// `(iter, serialized event)`. The serialized tiebreak makes the
+    /// merge independent of which thread pushed first, so same-seed
+    /// traces are byte-identical.
+    pub fn drain(&self) -> Vec<Event> {
+        let Some(core) = &self.core else {
+            return Vec::new();
+        };
+        let mut events = std::mem::take(&mut *core.lock().unwrap());
+        events.sort_by_cached_key(|e| (e.iter, e.to_json().to_string()));
+        events
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace serialization
+// ---------------------------------------------------------------------------
+
+/// One event object per line, keys sorted — the `scar trace` input format.
+pub fn to_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+pub fn parse_jsonl(s: &str) -> Result<Vec<Event>> {
+    let mut events = Vec::new();
+    for (lineno, line) in s.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow!("trace line {}: {}", lineno + 1, e))?;
+        events.push(Event::from_json(&v).map_err(|e| anyhow!("trace line {}: {}", lineno + 1, e))?);
+    }
+    Ok(events)
+}
+
+/// Chrome `trace_event` JSON (open in `chrome://tracing` or Perfetto).
+/// Iterations map to microsecond timestamps; shard-scoped events get one
+/// `tid` lane per shard, global lanes hold training (0), checkpoint (1),
+/// and cluster (2) events.
+pub fn to_chrome_trace(events: &[Event]) -> String {
+    let mut arr = Vec::with_capacity(events.len());
+    for e in events {
+        let tid = match &e.kind {
+            EventKind::Progress { .. } => 0,
+            EventKind::NodeKill { .. } | EventKind::NodeRecover { .. } => 2,
+            k => match k.shard() {
+                Some(s) => 3 + s,
+                None => 1,
+            },
+        };
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::from(e.kind.tag()));
+        m.insert("ph".to_string(), Json::from("i"));
+        m.insert("s".to_string(), Json::from("t"));
+        m.insert("ts".to_string(), Json::from(e.iter));
+        m.insert("pid".to_string(), Json::from(0usize));
+        m.insert("tid".to_string(), Json::from(tid));
+        m.insert("args".to_string(), Json::Obj(e.kind.args()));
+        arr.push(Json::Obj(m));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(arr));
+    top.insert("displayTimeUnit".to_string(), Json::from("ms"));
+    Json::Obj(top).to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------------
+
+/// A named-metric registry: `Counter`/`Gauge` handles are registered (or
+/// re-fetched) by name, and `snapshot()` yields the `name -> value` map
+/// that reports and `--json` output derive from. Cloning shares the
+/// underlying metrics.
+#[derive(Clone, Default)]
+pub struct Registry {
+    counters: Arc<Mutex<BTreeMap<String, Arc<AtomicU64>>>>,
+    gauges: Arc<Mutex<BTreeMap<String, Arc<Mutex<f64>>>>>,
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Registry {{ metrics: {} }}", self.snapshot().len())
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter `name`; all handles for one name share
+    /// the same underlying value.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.counters.lock().unwrap();
+        Counter(m.entry(name.to_string()).or_default().clone())
+    }
+
+    /// Get-or-create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.gauges.lock().unwrap();
+        Gauge(m.entry(name.to_string()).or_default().clone())
+    }
+
+    /// All metrics by name. Counters and gauges share one namespace in
+    /// the snapshot; a gauge wins on a (never intended) name collision.
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.insert(k.clone(), v.load(Ordering::Relaxed) as f64);
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.insert(k.clone(), *v.lock().unwrap());
+        }
+        out
+    }
+}
+
+/// A monotonically increasing u64 metric.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Overwrite — for deriving a registry entry from an existing
+    /// subsystem counter at snapshot time.
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins f64 metric.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<Mutex<f64>>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        *self.0.lock().unwrap() = v;
+    }
+    pub fn get(&self) -> f64 {
+        *self.0.lock().unwrap()
+    }
+}
+
+/// The canonical per-trial counters every report carries (zero-valued
+/// when a path never ran, so metric maps always share one key set and
+/// the nightly trend CSV keeps a stable column list).
+pub const STANDARD_COUNTERS: &[&str] = &[
+    "rebuilt_atoms",
+    "rebuilt_bytes",
+    "compaction_runs",
+    "compaction_reclaimed_bytes",
+    "repaired_records",
+    "repaired_bytes",
+    "skipped_atoms",
+    "skipped_bytes",
+    "backpressure_stalls",
+    "degraded_records",
+];
+
+/// A registry with every standard counter pre-registered at zero.
+pub fn standard_registry() -> Registry {
+    let r = Registry::new();
+    for name in STANDARD_COUNTERS {
+        let _ = r.counter(name);
+    }
+    r
+}
+
+/// Sum `src` into `acc` key-wise (cell and scenario aggregation).
+pub fn merge_metrics(acc: &mut BTreeMap<String, f64>, src: &BTreeMap<String, f64>) {
+    for (k, v) in src {
+        *acc.entry(k.clone()).or_insert(0.0) += v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = Recorder::disabled();
+        assert!(!rec.is_enabled());
+        rec.record(3, EventKind::Heal { shard: 1 });
+        assert!(rec.drain().is_empty());
+    }
+
+    #[test]
+    fn drain_order_is_canonical() {
+        // Push the same events in two different orders; drains must match.
+        let a = Recorder::enabled();
+        a.record(5, EventKind::Heal { shard: 0 });
+        a.record(5, EventKind::Fault { fault: "kill".into(), shard: 2 });
+        a.record(2, EventKind::Stall { pending: 4 });
+
+        let b = Recorder::enabled();
+        b.record(2, EventKind::Stall { pending: 4 });
+        b.record(5, EventKind::Fault { fault: "kill".into(), shard: 2 });
+        b.record(5, EventKind::Heal { shard: 0 });
+
+        let ea = a.drain();
+        assert_eq!(ea, b.drain());
+        assert_eq!(ea[0].iter, 2);
+        assert!(a.drain().is_empty(), "drain consumes");
+    }
+
+    #[test]
+    fn clones_share_the_sink() {
+        let rec = Recorder::enabled();
+        let clone = rec.clone();
+        clone.record(1, EventKind::Flush { watermark: 1 });
+        assert_eq!(rec.drain().len(), 1);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let events = vec![
+            Event {
+                iter: 4,
+                kind: EventKind::Barrier { atoms: 3, bytes: 96, skipped_atoms: 1, skipped_bytes: 32 },
+            },
+            Event { iter: 6, kind: EventKind::Fault { fault: "torn".into(), shard: 2 } },
+            Event { iter: 7, kind: EventKind::Replay { shard: 1, records: 5, superseded: 3 } },
+            Event {
+                iter: 8,
+                kind: EventKind::Rebuild { source: "cache".into(), atoms: 12, bytes: 384, workers: 2 },
+            },
+            Event { iter: 9, kind: EventKind::NodeRecover { nodes: 1, atoms: 10, delta_norm: 0.25 } },
+            Event { iter: 9, kind: EventKind::Progress { loss: 0.5, update_norm: 0.01 } },
+        ];
+        let text = to_jsonl(&events);
+        assert_eq!(parse_jsonl(&text).unwrap(), events);
+    }
+
+    #[test]
+    fn parse_jsonl_rejects_garbage() {
+        assert!(parse_jsonl("{\"event\":\"nope\",\"iter\":1}").is_err());
+        assert!(parse_jsonl("not json").is_err());
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let events =
+            vec![Event { iter: 3, kind: EventKind::Fault { fault: "kill".into(), shard: 1 } }];
+        let parsed = Json::parse(&to_chrome_trace(&events)).unwrap();
+        let arr = parsed.get("traceEvents").as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").as_str(), Some("fault"));
+        assert_eq!(arr[0].get("tid").as_usize(), Some(4)); // shard 1 lane
+    }
+
+    #[test]
+    fn registry_counters_and_gauges() {
+        let reg = Registry::new();
+        let c = reg.counter("rebuilt_bytes");
+        c.add(10);
+        reg.counter("rebuilt_bytes").add(5); // same underlying counter
+        reg.gauge("delta_norm").set(1.5);
+        let snap = reg.snapshot();
+        assert_eq!(snap["rebuilt_bytes"], 15.0);
+        assert_eq!(snap["delta_norm"], 1.5);
+    }
+
+    #[test]
+    fn standard_registry_has_all_keys_at_zero() {
+        let snap = standard_registry().snapshot();
+        assert_eq!(snap.len(), STANDARD_COUNTERS.len());
+        assert!(snap.values().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn merge_metrics_sums_keywise() {
+        let mut acc = BTreeMap::new();
+        let mut src = BTreeMap::new();
+        src.insert("a".to_string(), 2.0);
+        merge_metrics(&mut acc, &src);
+        merge_metrics(&mut acc, &src);
+        assert_eq!(acc["a"], 4.0);
+    }
+}

@@ -1,0 +1,359 @@
+//! `scar trace` rendering: a per-shard SVG timeline plus a fault →
+//! recovery-latency summary table.
+//!
+//! The timeline is the per-event view of what `BENCH_7.json` and the
+//! scenario metrics only show in aggregate: one horizontal lane per
+//! shard (plus `train`, `checkpoint`, and — when present — `cluster`
+//! lanes), iterations running left to right, every recorded event drawn
+//! as a colored marker at the iteration it fired. Windowed faults
+//! (kill/flaky/partition) are drawn as translucent spans from the fault
+//! to its heal; the training lane carries the loss curve when the trace
+//! holds `progress` events.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::trend::{xml_escape, PALETTE};
+
+use super::{Event, EventKind};
+
+const WIDTH: f64 = 960.0;
+const LEFT: f64 = 110.0;
+const RIGHT_PAD: f64 = 170.0;
+const TOP: f64 = 34.0;
+const LANE_H: f64 = 34.0;
+const BOTTOM: f64 = 46.0;
+
+/// A lane on the timeline, in display order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum Lane {
+    Train,
+    Checkpoint,
+    Cluster,
+    Shard(usize),
+}
+
+impl Lane {
+    fn label(&self) -> String {
+        match self {
+            Lane::Train => "train".to_string(),
+            Lane::Checkpoint => "checkpoint".to_string(),
+            Lane::Cluster => "cluster".to_string(),
+            Lane::Shard(s) => format!("shard {s}"),
+        }
+    }
+}
+
+fn lane_of(kind: &EventKind) -> Lane {
+    match kind {
+        EventKind::Progress { .. } => Lane::Train,
+        EventKind::NodeKill { .. } | EventKind::NodeRecover { .. } => Lane::Cluster,
+        k => match k.shard() {
+            Some(s) => Lane::Shard(s),
+            None => Lane::Checkpoint,
+        },
+    }
+}
+
+/// Tags in first-appearance order with a palette color each (legend order
+/// is deterministic because the input events are in canonical order).
+fn tag_colors(events: &[Event]) -> Vec<(&'static str, &'static str)> {
+    let mut tags: Vec<&'static str> = Vec::new();
+    for e in events {
+        let t = e.kind.tag();
+        if !tags.contains(&t) {
+            tags.push(t);
+        }
+    }
+    tags.into_iter().enumerate().map(|(i, t)| (t, PALETTE[i % PALETTE.len()])).collect()
+}
+
+/// Render the trace as a self-contained SVG timeline. Always succeeds;
+/// an empty trace renders an empty (but valid) canvas.
+pub fn render_timeline(events: &[Event]) -> String {
+    let max_iter = events.iter().map(|e| e.iter).max().unwrap_or(0).max(1);
+
+    // Lane set: train and checkpoint always exist; cluster and shard
+    // lanes only when the trace mentions them.
+    let mut lanes: BTreeSet<Lane> = BTreeSet::new();
+    lanes.insert(Lane::Train);
+    lanes.insert(Lane::Checkpoint);
+    for e in events {
+        lanes.insert(lane_of(&e.kind));
+    }
+    let lanes: Vec<Lane> = lanes.into_iter().collect();
+    let lane_index: BTreeMap<Lane, usize> =
+        lanes.iter().cloned().enumerate().map(|(i, l)| (l, i)).collect();
+
+    let plot_w = WIDTH - LEFT - RIGHT_PAD;
+    let height = TOP + lanes.len() as f64 * LANE_H + BOTTOM;
+    let x = |iter: usize| LEFT + iter as f64 / max_iter as f64 * plot_w;
+    let lane_top = |i: usize| TOP + i as f64 * LANE_H;
+
+    let colors = tag_colors(events);
+    let color = |tag: &str| {
+        colors.iter().find(|(t, _)| *t == tag).map(|(_, c)| *c).unwrap_or("#000000")
+    };
+
+    let mut svg = String::new();
+    svg.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{WIDTH}\" height=\"{height}\" \
+         viewBox=\"0 0 {WIDTH} {height}\" font-family=\"monospace\" font-size=\"11\">\n"
+    ));
+    svg.push_str("<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n");
+    svg.push_str(&format!(
+        "<text x=\"{LEFT}\" y=\"18\" font-size=\"13\">flight-recorder timeline \
+         ({} events, {} iters)</text>\n",
+        events.len(),
+        max_iter
+    ));
+
+    // Lane stripes + labels.
+    for (i, lane) in lanes.iter().enumerate() {
+        let y = lane_top(i);
+        if i % 2 == 0 {
+            svg.push_str(&format!(
+                "<rect x=\"{LEFT}\" y=\"{y}\" width=\"{plot_w:.1}\" height=\"{LANE_H}\" \
+                 fill=\"#f5f5f5\"/>\n"
+            ));
+        }
+        svg.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"end\">{}</text>\n",
+            LEFT - 8.0,
+            y + LANE_H / 2.0 + 4.0,
+            xml_escape(&lane.label())
+        ));
+    }
+
+    // Windowed fault spans: each Fault pairs with the first later
+    // un-consumed Heal on its shard; unhealed faults span to the end.
+    for (fault_iter, shard, heal_iter) in pair_faults(events) {
+        let Some(&li) = lane_index.get(&Lane::Shard(shard)) else { continue };
+        let x0 = x(fault_iter);
+        let x1 = x(heal_iter.unwrap_or(max_iter));
+        svg.push_str(&format!(
+            "<rect x=\"{x0:.1}\" y=\"{:.1}\" width=\"{:.1}\" height=\"{:.1}\" \
+             fill=\"#d62728\" fill-opacity=\"0.14\"/>\n",
+            lane_top(li) + 3.0,
+            (x1 - x0).max(2.0),
+            LANE_H - 6.0
+        ));
+    }
+
+    // Loss curve on the train lane.
+    let losses: Vec<(usize, f64)> = events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::Progress { loss, .. } => Some((e.iter, *loss)),
+            _ => None,
+        })
+        .collect();
+    if losses.len() >= 2 {
+        let li = lane_index[&Lane::Train];
+        let (lo, hi) = losses
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), (_, l)| (lo.min(*l), hi.max(*l)));
+        let span = (hi - lo).max(1e-12);
+        let pts: Vec<String> = losses
+            .iter()
+            .map(|(it, l)| {
+                let ly = lane_top(li) + LANE_H - 5.0 - (l - lo) / span * (LANE_H - 10.0);
+                format!("{:.1},{:.1}", x(*it), ly)
+            })
+            .collect();
+        svg.push_str(&format!(
+            "<polyline points=\"{}\" fill=\"none\" stroke=\"{}\" stroke-width=\"1.2\"/>\n",
+            pts.join(" "),
+            color("progress")
+        ));
+    }
+
+    // Event markers (progress is the polyline above, skip its dots).
+    for e in events {
+        if matches!(e.kind, EventKind::Progress { .. }) {
+            continue;
+        }
+        let li = lane_index[&lane_of(&e.kind)];
+        let cy = lane_top(li) + LANE_H / 2.0;
+        svg.push_str(&format!(
+            "<circle cx=\"{:.1}\" cy=\"{cy:.1}\" r=\"3.5\" fill=\"{}\"><title>{}</title></circle>\n",
+            x(e.iter),
+            color(e.kind.tag()),
+            xml_escape(&format!("iter {}: {}", e.iter, e.to_json().to_string()))
+        ));
+    }
+
+    // X axis.
+    let axis_y = TOP + lanes.len() as f64 * LANE_H;
+    svg.push_str(&format!(
+        "<line x1=\"{LEFT}\" y1=\"{axis_y:.1}\" x2=\"{:.1}\" y2=\"{axis_y:.1}\" \
+         stroke=\"#333\"/>\n",
+        LEFT + plot_w
+    ));
+    let ticks = 6usize;
+    for t in 0..=ticks {
+        let iter = max_iter * t / ticks;
+        svg.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"middle\" fill=\"#333\">{}</text>\n",
+            x(iter),
+            axis_y + 16.0,
+            iter
+        ));
+    }
+    svg.push_str(&format!(
+        "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"middle\">iteration</text>\n",
+        LEFT + plot_w / 2.0,
+        axis_y + 34.0
+    ));
+
+    // Legend.
+    let lx = WIDTH - RIGHT_PAD + 16.0;
+    for (i, (tag, c)) in colors.iter().enumerate() {
+        let ly = TOP + i as f64 * 16.0;
+        svg.push_str(&format!(
+            "<rect x=\"{lx:.1}\" y=\"{:.1}\" width=\"10\" height=\"10\" fill=\"{c}\"/>\n",
+            ly - 9.0
+        ));
+        svg.push_str(&format!("<text x=\"{:.1}\" y=\"{ly:.1}\">{tag}</text>\n", lx + 16.0));
+    }
+
+    svg.push_str("</svg>\n");
+    svg
+}
+
+/// Pair every `Fault` with the first later un-consumed `Heal` on its
+/// shard. Returns `(fault_iter, shard, heal_iter)` in trace order;
+/// `heal_iter` is `None` for one-shot faults (torn/fsync/bitflip) and
+/// faults that never healed.
+fn pair_faults(events: &[Event]) -> Vec<(usize, usize, Option<usize>)> {
+    let mut heals: Vec<(usize, usize, bool)> = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::Heal { shard } => Some((e.iter, shard, false)),
+            _ => None,
+        })
+        .collect();
+    let mut out = Vec::new();
+    for e in events {
+        if let EventKind::Fault { shard, .. } = e.kind {
+            let heal = heals
+                .iter_mut()
+                .find(|(hi, hs, used)| !*used && *hs == shard && *hi >= e.iter)
+                .map(|h| {
+                    h.2 = true;
+                    h.0
+                });
+            out.push((e.iter, shard, heal));
+        }
+    }
+    out
+}
+
+/// The fault → recovery-latency table: for each injected fault, when it
+/// healed, how many iterations that took, and how many bytes of rebuild
+/// work landed inside its window (faults with overlapping windows on
+/// different shards attribute shared rebuilds to each — the rebuild
+/// events themselves are not shard-scoped).
+pub fn fault_latency_table(events: &[Event]) -> String {
+    let pairs = pair_faults(events);
+    let max_iter = events.iter().map(|e| e.iter).max().unwrap_or(0);
+    let mut out = String::new();
+    out.push_str("fault      shard      at  healed   iters  rebuilt_bytes\n");
+    for (fault_iter, shard, heal) in &pairs {
+        let kind = events
+            .iter()
+            .find_map(|e| match &e.kind {
+                EventKind::Fault { fault, shard: s } if *s == *shard && e.iter == *fault_iter => {
+                    Some(fault.clone())
+                }
+                _ => None,
+            })
+            .unwrap_or_else(|| "?".to_string());
+        let window_end = heal.unwrap_or(max_iter);
+        let rebuilt: u64 = events
+            .iter()
+            .filter(|e| e.iter >= *fault_iter && e.iter <= window_end)
+            .map(|e| match &e.kind {
+                EventKind::Rebuild { bytes, .. } => *bytes,
+                _ => 0,
+            })
+            .sum();
+        let (healed, iters) = match heal {
+            Some(h) => (h.to_string(), (h - fault_iter).to_string()),
+            None => ("-".to_string(), "-".to_string()),
+        };
+        out.push_str(&format!(
+            "{kind:<10} {shard:>5} {fault_iter:>7} {healed:>7} {iters:>7} {rebuilt:>14}\n"
+        ));
+    }
+    if pairs.is_empty() {
+        out.push_str("(no fault events in trace)\n");
+    }
+    out
+}
+
+/// Per-tag event counts, for the `scar trace` text summary.
+pub fn summary_counts(events: &[Event]) -> BTreeMap<&'static str, usize> {
+    let mut out = BTreeMap::new();
+    for e in events {
+        *out.entry(e.kind.tag()).or_insert(0) += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event { iter: 1, kind: EventKind::Progress { loss: 1.0, update_norm: 0.2 } },
+            Event {
+                iter: 2,
+                kind: EventKind::Barrier { atoms: 4, bytes: 128, skipped_atoms: 0, skipped_bytes: 0 },
+            },
+            Event { iter: 3, kind: EventKind::Fault { fault: "flaky".into(), shard: 1 } },
+            Event {
+                iter: 4,
+                kind: EventKind::Rebuild { source: "cache".into(), atoms: 2, bytes: 64, workers: 1 },
+            },
+            Event { iter: 5, kind: EventKind::Progress { loss: 0.5, update_norm: 0.1 } },
+            Event { iter: 6, kind: EventKind::Heal { shard: 1 } },
+            Event { iter: 7, kind: EventKind::Fault { fault: "torn".into(), shard: 2 } },
+        ]
+    }
+
+    #[test]
+    fn timeline_has_lanes_markers_and_legend() {
+        let svg = render_timeline(&sample());
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.contains("shard 1"));
+        assert!(svg.contains("shard 2"));
+        assert!(svg.contains("checkpoint"));
+        assert!(svg.contains(">fault</text>"));
+        assert!(svg.contains("polyline"), "loss curve rendered");
+        assert!(svg.ends_with("</svg>\n"));
+    }
+
+    #[test]
+    fn empty_trace_renders() {
+        let svg = render_timeline(&[]);
+        assert!(svg.starts_with("<svg") && svg.ends_with("</svg>\n"));
+    }
+
+    #[test]
+    fn latency_pairs_fault_with_heal() {
+        let table = fault_latency_table(&sample());
+        let flaky_row = table.lines().find(|l| l.starts_with("flaky")).unwrap();
+        assert!(flaky_row.contains(" 6 "), "healed at 6: {flaky_row}");
+        assert!(flaky_row.ends_with("64"), "rebuild bytes inside window: {flaky_row}");
+        let torn_row = table.lines().find(|l| l.starts_with("torn")).unwrap();
+        assert!(torn_row.contains('-'), "one-shot fault has no heal: {torn_row}");
+    }
+
+    #[test]
+    fn counts_by_tag() {
+        let counts = summary_counts(&sample());
+        assert_eq!(counts["progress"], 2);
+        assert_eq!(counts["fault"], 2);
+    }
+}

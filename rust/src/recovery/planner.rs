@@ -278,6 +278,32 @@ impl RebuildPlan {
             RebuildSource::Parity => self.execute_from_parity(store),
         }
     }
+
+    /// Narrate an execution of this plan into a flight recorder: one
+    /// `Rebuild` event at `iter` carrying the payload source tag
+    /// (`"cache"` / `"parity"`), the plan's atom count, the bytes the
+    /// execute call reported, and the worker fan-out it ran with.
+    pub fn record_into(
+        &self,
+        rec: &crate::obs::Recorder,
+        iter: usize,
+        source: &str,
+        bytes: u64,
+        workers: usize,
+    ) {
+        if !rec.is_enabled() {
+            return;
+        }
+        rec.record(
+            iter,
+            crate::obs::EventKind::Rebuild {
+                source: source.to_string(),
+                atoms: self.rebuilt_atoms(),
+                bytes,
+                workers,
+            },
+        );
+    }
 }
 
 #[cfg(test)]

@@ -21,6 +21,7 @@
 //!               └─ aggregate per-cell CellReports (trial order)
 //! ```
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -33,6 +34,7 @@ use crate::failure::{FailureEvent, FailureInjector, FailurePlan};
 use crate::harness::{self, CheckpointSetup, Perturb, Trajectory};
 use crate::models::presets::{build_preset, try_preset, PresetKind};
 use crate::models::synthetic::SyntheticTrainer;
+use crate::obs::{merge_metrics, standard_registry, Recorder};
 use crate::recovery::RecoveryMode;
 use crate::runtime::Engine;
 use crate::theory::{self, Perturbation};
@@ -62,26 +64,12 @@ pub struct CellReport {
     pub censored_trials: Vec<bool>,
     pub censored: usize,
     pub summary: Summary,
-    /// Atoms selectively rebuilt (storage-shard deaths + heal
-    /// re-adoptions + cluster node-slice reloads), summed over trials.
-    /// Not part of the rendered report — the trend/metrics surface.
-    pub rebuilt_atoms: u64,
-    /// Payload bytes those rebuilds moved, summed over trials.
-    pub rebuilt_bytes: u64,
-    /// Segment-compaction passes, summed over trials.
-    pub compaction_runs: u64,
-    /// Segment bytes compaction reclaimed, summed over trials.
-    pub compaction_reclaimed_bytes: u64,
-    /// Records the parity scrub repaired in place (CRC-failed/bitflipped
-    /// members), summed over trials.
-    pub repaired_records: u64,
-    /// Payload bytes of those repairs, summed over trials.
-    pub repaired_bytes: u64,
-    /// Atoms the delta-skip filter elided from checkpoint barriers
-    /// (unchanged payload CRC), summed over trials.
-    pub skipped_atoms: u64,
-    /// Payload bytes those elided atoms would have written.
-    pub skipped_bytes: u64,
+    /// Standard metric counters ([`crate::obs::STANDARD_COUNTERS`] —
+    /// selective rebuilds, compaction, parity repairs, delta-skip
+    /// savings, back-pressure stalls, degraded routing), summed over
+    /// trials from each trial's registry snapshot. Not part of the
+    /// rendered report — the trend/metrics surface.
+    pub metrics: BTreeMap<String, f64>,
 }
 
 impl CellReport {
@@ -166,36 +154,17 @@ impl ScenarioReport {
     ///
     /// [`render`]: ScenarioReport::render
     /// [`to_csv`]: ScenarioReport::to_csv
-    pub fn metrics(&self) -> std::collections::BTreeMap<String, f64> {
-        let mut rebuilt_atoms = 0u64;
-        let mut rebuilt_bytes = 0u64;
-        let mut compaction_runs = 0u64;
-        let mut compaction_reclaimed = 0u64;
-        let mut repaired_records = 0u64;
-        let mut repaired_bytes = 0u64;
-        let mut skipped_atoms = 0u64;
-        let mut skipped_bytes = 0u64;
+    pub fn metrics(&self) -> BTreeMap<String, f64> {
+        // Start from the standard registry's zeroed snapshot so every
+        // standard counter is present (key-set stability is what the
+        // trend CSV's append-only columns rely on), then fold in each
+        // cell's summed trial snapshots.
+        let mut m = standard_registry().snapshot();
         for p in &self.panels {
             for c in &p.cells {
-                rebuilt_atoms += c.rebuilt_atoms;
-                rebuilt_bytes += c.rebuilt_bytes;
-                compaction_runs += c.compaction_runs;
-                compaction_reclaimed += c.compaction_reclaimed_bytes;
-                repaired_records += c.repaired_records;
-                repaired_bytes += c.repaired_bytes;
-                skipped_atoms += c.skipped_atoms;
-                skipped_bytes += c.skipped_bytes;
+                merge_metrics(&mut m, &c.metrics);
             }
         }
-        let mut m = std::collections::BTreeMap::new();
-        m.insert("rebuilt_atoms".to_string(), rebuilt_atoms as f64);
-        m.insert("rebuilt_bytes".to_string(), rebuilt_bytes as f64);
-        m.insert("compaction_runs".to_string(), compaction_runs as f64);
-        m.insert("compaction_reclaimed_bytes".to_string(), compaction_reclaimed as f64);
-        m.insert("repaired_records".to_string(), repaired_records as f64);
-        m.insert("repaired_bytes".to_string(), repaired_bytes as f64);
-        m.insert("skipped_atoms".to_string(), skipped_atoms as f64);
-        m.insert("skipped_bytes".to_string(), skipped_bytes as f64);
         m
     }
 
@@ -233,9 +202,9 @@ fn csv_field(s: &str) -> String {
 }
 
 /// Apply the standard scenario CLI overrides (`--trials`, `--seed`,
-/// `--workers`, `--output`, `--panels`, `--checkpoint-dir`, `--backend`)
-/// and re-validate — shared by `scar run-scenario` and the fig example
-/// wrappers.
+/// `--workers`, `--output`, `--panels`, `--checkpoint-dir`, `--backend`,
+/// `--trace-dir`) and re-validate — shared by `scar run-scenario` and
+/// the fig example wrappers.
 pub fn apply_cli_overrides(scn: &mut Scenario, args: &Args) -> Result<()> {
     if let Some(t) = args.str_opt("trials") {
         scn.trials = t.parse().context("--trials expects an integer")?;
@@ -254,6 +223,11 @@ pub fn apply_cli_overrides(scn: &mut Scenario, args: &Args) -> Result<()> {
     }
     if let Some(dir) = args.str_opt("checkpoint-dir") {
         scn.checkpoint_dir = Some(dir.to_string());
+    }
+    // `--trace-dir` switches the flight recorder on for every trial
+    // without editing the scenario file.
+    if let Some(dir) = args.str_opt("trace-dir") {
+        scn.trace_dir = Some(dir.to_string());
     }
     // `--backend mem|disk` flips the storage tier of any scenario — the
     // CI backend matrix runs one scenario file both ways and diffs the
@@ -436,14 +410,8 @@ struct Outcome {
     cost: f64,
     delta: f64,
     censored: bool,
-    rebuilt_atoms: u64,
-    rebuilt_bytes: u64,
-    compaction_runs: u64,
-    compaction_reclaimed_bytes: u64,
-    repaired_records: u64,
-    repaired_bytes: u64,
-    skipped_atoms: u64,
-    skipped_bytes: u64,
+    /// Standard-counter registry snapshot for this trial.
+    metrics: BTreeMap<String, f64>,
 }
 
 fn job_rng(scn_seed: u64, cell: usize, trial: usize) -> Rng {
@@ -513,6 +481,11 @@ fn build_jobs(
                         // each gets its own shard directory.
                         checkpoint_dir: scn.checkpoint_dir.as_ref().map(|d| {
                             Path::new(d).join(format!("p{panel_idx}-c{ci}-t{trial}"))
+                        }),
+                        // `[obs] trace_dir`: one JSONL trace per trial,
+                        // keyed like the shard directories.
+                        trace_path: scn.trace_dir.as_ref().map(|d| {
+                            Path::new(d).join(format!("p{panel_idx}-c{ci}-t{trial}.jsonl"))
                         }),
                         parity: scn.storage.parity,
                         scrub_interval: scn.storage.scrub_interval,
@@ -619,6 +592,10 @@ fn run_cluster_job(
 ) -> Result<Outcome> {
     let store = Arc::new(setup.build_store()?);
     let cap = harness::default_cap(traj);
+    let rec = match &setup.trace_path {
+        Some(_) => Recorder::enabled(),
+        None => Recorder::disabled(),
+    };
     let job = ClusterJob {
         n_nodes,
         iters: cap,
@@ -632,8 +609,17 @@ fn run_cluster_job(
         seed: traj.seed,
         detect: Detect::Immediate,
         stop_at_loss: Some(traj.threshold),
+        recorder: rec.clone(),
     };
-    let report = run_cluster_training(trainer, store, &job)?;
+    let report = run_cluster_training(trainer, store.clone(), &job)?;
+    if let Some(path) = &setup.trace_path {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {}", dir.display()))?;
+        }
+        std::fs::write(path, crate::obs::to_jsonl(&rec.drain()))
+            .with_context(|| format!("writing trace {}", path.display()))?;
+    }
     let total = report
         .losses
         .iter()
@@ -643,6 +629,17 @@ fn run_cluster_job(
         Some(t) => (t, false),
         None => (cap, true),
     };
+    // Delta-skip accounting (`skipped_*`) is a harness-path surface for
+    // now; the registry's zeroed defaults cover it. Parity repairs are
+    // read straight off the shared store handle.
+    let reg = standard_registry();
+    reg.counter("rebuilt_atoms").set(report.rebuilt_atoms);
+    reg.counter("rebuilt_bytes").set(report.rebuilt_bytes);
+    reg.counter("compaction_runs").set(report.compaction_runs);
+    reg.counter("compaction_reclaimed_bytes").set(report.compaction_reclaimed_bytes);
+    reg.counter("repaired_records").set(store.repaired_records());
+    reg.counter("repaired_bytes").set(store.repaired_bytes());
+    reg.counter("degraded_records").set(report.degraded_records);
     Ok(Outcome {
         cost: total as f64 - traj.converged_iters as f64,
         // ‖δ‖ is measured inside the cluster's recovery coordinator:
@@ -651,18 +648,7 @@ fn run_cluster_job(
         // recovery distance, feeding the same report column.
         delta: report.recovery_delta_norm,
         censored,
-        rebuilt_atoms: report.rebuilt_atoms,
-        rebuilt_bytes: report.rebuilt_bytes,
-        compaction_runs: report.compaction_runs,
-        compaction_reclaimed_bytes: report.compaction_reclaimed_bytes,
-        // The cluster path shares the store handle, so parity repairs are
-        // read straight off it.
-        repaired_records: store.repaired_records(),
-        repaired_bytes: store.repaired_bytes(),
-        // The cluster path's per-node checkpointers live inside the PS
-        // run; delta-skip accounting is a harness-path surface for now.
-        skipped_atoms: 0,
-        skipped_bytes: 0,
+        metrics: reg.snapshot(),
     })
 }
 
@@ -671,19 +657,9 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
         JobKind::Perturb { kind, at_iter } => {
             let (delta, cost, censored) =
                 harness::run_perturbation_trial(trainer, traj, *at_iter, *kind, job.seed)?;
-            Ok(Outcome {
-                cost,
-                delta,
-                censored,
-                rebuilt_atoms: 0,
-                rebuilt_bytes: 0,
-                compaction_runs: 0,
-                compaction_reclaimed_bytes: 0,
-                repaired_records: 0,
-                repaired_bytes: 0,
-                skipped_atoms: 0,
-                skipped_bytes: 0,
-            })
+            // Perturbation trials never touch storage; the zeroed
+            // standard snapshot keeps every cell's key set identical.
+            Ok(Outcome { cost, delta, censored, metrics: standard_registry().snapshot() })
         }
         JobKind::Plan { setup, mode, events } => {
             let r = harness::run_plan_trial_with(trainer, traj, setup, *mode, events, job.seed)?;
@@ -691,14 +667,7 @@ fn run_job(trainer: &mut dyn Trainer, traj: &Trajectory, job: &Job) -> Result<Ou
                 cost: r.iteration_cost,
                 delta: r.recovery.delta_norm,
                 censored: r.censored,
-                rebuilt_atoms: r.rebuilt_atoms,
-                rebuilt_bytes: r.rebuilt_bytes,
-                compaction_runs: r.compaction_runs,
-                compaction_reclaimed_bytes: r.compaction_reclaimed_bytes,
-                repaired_records: r.repaired_records,
-                repaired_bytes: r.repaired_bytes,
-                skipped_atoms: r.skipped_atoms,
-                skipped_bytes: r.skipped_bytes,
+                metrics: r.metrics,
             })
         }
         JobKind::Cluster { setup, n_nodes, kills } => {
@@ -785,14 +754,7 @@ fn run_panel(
         let mut bounds = Vec::with_capacity(scn.trials);
         let mut censored_trials = Vec::with_capacity(scn.trials);
         let mut censored = 0usize;
-        let mut rebuilt_atoms = 0u64;
-        let mut rebuilt_bytes = 0u64;
-        let mut compaction_runs = 0u64;
-        let mut compaction_reclaimed_bytes = 0u64;
-        let mut repaired_records = 0u64;
-        let mut repaired_bytes = 0u64;
-        let mut skipped_atoms = 0u64;
-        let mut skipped_bytes = 0u64;
+        let mut metrics = standard_registry().snapshot();
         for trial in 0..scn.trials {
             let idx = ci * scn.trials + trial;
             let out = results[idx]
@@ -806,14 +768,7 @@ fn run_panel(
             deltas.push(out.delta);
             censored_trials.push(out.censored);
             censored += out.censored as usize;
-            rebuilt_atoms += out.rebuilt_atoms;
-            rebuilt_bytes += out.rebuilt_bytes;
-            compaction_runs += out.compaction_runs;
-            compaction_reclaimed_bytes += out.compaction_reclaimed_bytes;
-            repaired_records += out.repaired_records;
-            repaired_bytes += out.repaired_bytes;
-            skipped_atoms += out.skipped_atoms;
-            skipped_bytes += out.skipped_bytes;
+            merge_metrics(&mut metrics, &out.metrics);
             let bound = match &jobs[idx].kind {
                 JobKind::Perturb { at_iter, .. }
                     if c.is_finite() && c > 0.0 && c < 1.0 && x0 > 0.0 =>
@@ -837,14 +792,7 @@ fn run_panel(
             censored_trials,
             censored,
             summary,
-            rebuilt_atoms,
-            rebuilt_bytes,
-            compaction_runs,
-            compaction_reclaimed_bytes,
-            repaired_records,
-            repaired_bytes,
-            skipped_atoms,
-            skipped_bytes,
+            metrics,
         });
     }
 

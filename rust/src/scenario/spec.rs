@@ -243,6 +243,12 @@ pub struct Scenario {
     /// CSV output path (written by `scar run-scenario` and the fig
     /// wrappers; in-process callers read the report instead).
     pub output: Option<String>,
+    /// Flight-recorder trace directory (`[obs] trace_dir`): when set,
+    /// every trial writes a JSONL event trace
+    /// (`p{panel}-c{cell}-t{trial}.jsonl`) under it. `None` (the
+    /// default) keeps the recorder a zero-cost no-op — tracing never
+    /// changes results.
+    pub trace_dir: Option<String>,
     pub cells: Vec<CellSpec>,
 }
 
@@ -287,7 +293,7 @@ impl Scenario {
             "name", "model", "panels", "seed", "trials", "workers", "target_iters",
             "max_iters", "perturb_iter", "fail_geom_p", "checkpoint", "storage",
             "checkpoint_dir", "chaos", "deploy", "ps_nodes", "recovery", "output",
-            "cell", "cells",
+            "obs", "cell", "cells",
         ];
         for key in obj.keys() {
             if !TOP_KEYS.contains(&key.as_str()) {
@@ -333,6 +339,11 @@ impl Scenario {
             Some(c) => parse_chaos(c, &ctx)?,
         };
 
+        let trace_dir = match obj.get("obs") {
+            None => None,
+            Some(o) => parse_obs(o, &ctx)?,
+        };
+
         let deploy = match opt_str(obj, "deploy", &ctx)? {
             None => DeployMode::Harness,
             Some(s) => DeployMode::from_str(&s)
@@ -376,6 +387,7 @@ impl Scenario {
             ps_nodes: opt_usize(obj, "ps_nodes", &ctx)?.unwrap_or(4),
             recovery,
             output: opt_str(obj, "output", &ctx)?,
+            trace_dir,
             cells,
         };
         scenario.validate()?;
@@ -488,6 +500,11 @@ impl Scenario {
         if let Some(o) = &self.output {
             obj.insert("output".into(), Json::from(o.as_str()));
         }
+        if let Some(d) = &self.trace_dir {
+            let mut m = BTreeMap::new();
+            m.insert("trace_dir".into(), Json::from(d.as_str()));
+            obj.insert("obs".into(), Json::Obj(m));
+        }
         obj.insert(
             "cells".into(),
             Json::Arr(self.cells.iter().map(cell_json).collect()),
@@ -555,6 +572,9 @@ impl Scenario {
                     f.shard, f.at, f.kind
                 ));
             }
+        }
+        if let Some(d) = &self.trace_dir {
+            out.push_str(&format!("  tracing: per-trial JSONL traces under {d}\n"));
         }
         for p in &self.panels {
             out.push_str(&format!("  panel: {p}\n"));
@@ -767,15 +787,29 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
     })
 }
 
+/// Parse the `[obs]` table: flight-recorder settings. The only key is
+/// `trace_dir` — where per-trial JSONL traces land.
+fn parse_obs(v: &Json, ctx: &str) -> Result<Option<String>> {
+    let obj = v
+        .as_obj()
+        .with_context(|| format!("{ctx}: 'obs' must be a table"))?;
+    for key in obj.keys() {
+        if key.as_str() != "trace_dir" {
+            bail!("{ctx}: obs: unknown key '{key}' (trace_dir)");
+        }
+    }
+    opt_str(obj, "trace_dir", ctx)
+}
+
 /// Parse the `[chaos]` table: per-shard fault schedules under the keys
-/// `kill`, `slow`, `torn`, `partition`, `flaky`, `fsync`, and `bitflip`,
-/// each an array of tables.
+/// `kill`, `slow`, `torn`, `partition`, `flaky`, `fsync`, `bitflip`, and
+/// `replay`, each an array of tables.
 fn parse_chaos(v: &Json, ctx: &str) -> Result<FaultPlan> {
     let obj = v
         .as_obj()
         .with_context(|| format!("{ctx}: 'chaos' must be a table"))?;
     const CHAOS_KEYS: &[&str] =
-        &["kill", "slow", "torn", "partition", "flaky", "fsync", "bitflip"];
+        &["kill", "slow", "torn", "partition", "flaky", "fsync", "bitflip", "replay"];
     for key in obj.keys() {
         if !CHAOS_KEYS.contains(&key.as_str()) {
             bail!("{ctx}: chaos: unknown key '{key}' (expected one of {CHAOS_KEYS:?})");
@@ -895,6 +929,15 @@ fn parse_chaos(v: &Json, ctx: &str) -> Result<FaultPlan> {
         // CLI grammar's `bitflip:SHARD@AT` shorthand.
         let atom = opt_usize(e, "atom", ctx)?.unwrap_or(shard);
         faults.push(ShardFault { shard, at, kind: FaultKind::Bitflip { atom } });
+    }
+    for e in entries(obj, "replay", ctx)? {
+        for key in e.keys() {
+            if !["shard", "at"].contains(&key.as_str()) {
+                bail!("{ctx}: chaos.replay: unknown key '{key}' (shard|at)");
+            }
+        }
+        let (shard, at) = shard_at(e, "replay", ctx)?;
+        faults.push(ShardFault { shard, at, kind: FaultKind::Replay });
     }
     Ok(FaultPlan { faults })
 }
@@ -1396,6 +1439,56 @@ norm_log10 = [-2.0, 0.0]
         )
         .unwrap_err();
         assert!(format!("{e:?}").contains("bit"), "{e:?}");
+    }
+
+    #[test]
+    fn replay_chaos_key_parses_and_roundtrips() {
+        use crate::chaos::FaultKind;
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\nshards=4\n\
+             [[chaos.replay]]\nshard=1\nat=7\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.chaos.faults.len(), 1);
+        assert_eq!((s.chaos.faults[0].shard, s.chaos.faults[0].at), (1, 7));
+        assert_eq!(s.chaos.faults[0].kind, FaultKind::Replay);
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+        // Unknown per-entry keys are named.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[[chaos.replay]]\nshard=0\nat=3\ntimes=2\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("times"), "{e:?}");
+    }
+
+    #[test]
+    fn obs_trace_dir_parses_and_roundtrips() {
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[obs]\ntrace_dir=\"results/traces\"\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.trace_dir.as_deref(), Some("results/traces"));
+        assert!(s.describe().contains("tracing"), "{}", s.describe());
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+        // Omitted: tracing off, and the recorder stays a no-op.
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(s.trace_dir, None);
+        // Unknown obs keys fail loudly.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[obs]\ntracedir=\"x\"\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("tracedir"), "{e:?}");
     }
 
     #[test]

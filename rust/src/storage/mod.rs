@@ -258,6 +258,12 @@ pub trait ShardBackend: Send {
     fn take_corruptions(&mut self) -> Vec<usize> {
         Vec::new()
     }
+
+    /// Attach a flight-recorder handle. Real backends have nothing to
+    /// narrate, so the default drops it;
+    /// [`ChaosBackend`](crate::chaos::ChaosBackend) keeps it and records
+    /// fault injections, heals, and replays as iteration-clocked events.
+    fn set_recorder(&mut self, _rec: crate::obs::Recorder) {}
 }
 
 /// Write/read interface to the shared persistent checkpoint storage, as

@@ -576,6 +576,16 @@ impl ShardedStore {
             .collect()
     }
 
+    /// Attach a flight-recorder handle to every shard backend (data and
+    /// parity). Chaos-wrapped backends narrate their injections, heals,
+    /// and replays through it; plain backends drop it (see
+    /// [`ShardBackend::set_recorder`]).
+    pub fn set_recorder(&self, rec: crate::obs::Recorder) {
+        for shard in self.shards.iter().chain(self.parity.iter()) {
+            shard.lock().unwrap().set_recorder(rec.clone());
+        }
+    }
+
     /// Shard holding the freshest record routed through this handle for
     /// `atom` (`None` when nothing was written for it through this
     /// handle — e.g. a store reopened from disk).

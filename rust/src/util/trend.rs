@@ -151,9 +151,9 @@ pub fn append_and_check(
     Ok(regressions)
 }
 
-/// Line-series colors for [`render_svg`], cycled when a trend tracks
-/// more metrics than the palette holds.
-const PALETTE: &[&str] = &[
+/// Line-series colors for [`render_svg`] (and the `obs` timeline),
+/// cycled when a chart tracks more series than the palette holds.
+pub(crate) const PALETTE: &[&str] = &[
     "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b", "#e377c2", "#7f7f7f",
     "#bcbd22", "#17becf",
 ];
@@ -293,7 +293,7 @@ pub fn render_svg(csv: &str) -> Result<String> {
     Ok(svg)
 }
 
-fn xml_escape(s: &str) -> String {
+pub(crate) fn xml_escape(s: &str) -> String {
     s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
 }
 
