@@ -74,23 +74,44 @@ impl OnlineRateEstimator {
         self.n += 1;
     }
 
-    /// Current estimate of c (None until enough improving observations).
+    /// Current estimate of c (None until the window holds enough clearly
+    /// improving observations for the fit to be trustworthy).
+    ///
+    /// Degenerate windows return `None` instead of a bogus rate:
+    ///
+    /// * decrements below `RATE_EPS` of the loss scale are numeric
+    ///   jitter, not progress — a flat (or float-jittering) curve never
+    ///   reaches the fit;
+    /// * a window where improvements fail to outnumber regressions 2:1
+    ///   is noise-dominated: the log-decrement fit would chase noise;
+    /// * a non-negative fitted slope means the decrements are not
+    ///   shrinking (c >= 1) — not a contraction, so there is nothing for
+    ///   the Thm 3.2 model to price.
     pub fn rate(&self) -> Option<f64> {
+        const RATE_EPS: f64 = 1e-12;
+        let mut worsening = 0usize;
         let pts: Vec<(f64, f64)> = self
             .window
             .iter()
             .zip(self.window.iter().skip(1))
             .filter_map(|(&(_, a), &(k, b))| {
                 let dec = a - b;
-                (dec > 0.0).then(|| (k as f64, dec.ln()))
+                let eps = RATE_EPS * a.abs().max(1.0);
+                if dec < -eps {
+                    worsening += 1;
+                }
+                (dec > eps).then(|| (k as f64, dec.ln()))
             })
             .collect();
-        if pts.len() < 8 {
+        if pts.len() < 8 || pts.len() < 2 * worsening {
             return None;
         }
         let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
         let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
         let (_, slope) = crate::util::stats::linfit(&xs, &ys);
+        if slope >= 0.0 {
+            return None;
+        }
         Some(slope.exp().clamp(1e-3, 0.99999))
     }
 
@@ -204,6 +225,48 @@ mod tests {
             est.observe(10.0 - k as f64);
         }
         assert!(est.rate().is_none());
+    }
+
+    #[test]
+    fn flat_loss_gives_no_rate() {
+        let mut est = OnlineRateEstimator::default();
+        for _ in 0..100 {
+            est.observe(5.0);
+        }
+        assert!(est.rate().is_none(), "flat loss must not produce a rate");
+    }
+
+    #[test]
+    fn float_jitter_around_constant_gives_no_rate() {
+        // ±1e-13 around 5.0 is numeric noise: every smoothed decrement is
+        // far below the relative epsilon, so the fit never sees a point.
+        let mut est = OnlineRateEstimator::default();
+        for k in 0..200 {
+            let jitter = if k % 2 == 0 { 1e-13 } else { -1e-13 };
+            est.observe(5.0 + jitter);
+        }
+        assert!(est.rate().is_none(), "sub-epsilon jitter must not produce a rate");
+    }
+
+    #[test]
+    fn noise_dominated_window_gives_no_rate() {
+        // Pure noise around a constant: regressions are as common as
+        // improvements, so the 2:1 majority guard rejects the window.
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut est = OnlineRateEstimator::default();
+        for _ in 0..400 {
+            est.observe(5.0 + 0.5 * rng.normal());
+        }
+        assert!(est.rate().is_none(), "noise-dominated window must not produce a rate");
+    }
+
+    #[test]
+    fn increasing_loss_gives_no_rate() {
+        let mut est = OnlineRateEstimator::default();
+        for k in 0..100 {
+            est.observe(1.0 + 0.1 * k as f64);
+        }
+        assert!(est.rate().is_none(), "diverging loss must not produce a rate");
     }
 
     #[test]

@@ -138,6 +138,43 @@ pub struct AsyncCheckpointer {
     rec: Recorder,
 }
 
+/// Spawn `n_writers` background writer threads over the store (each
+/// shard's jobs flow through exactly one writer, so per-shard order is
+/// barrier order). Shared by construction-time and lazy
+/// ([`AsyncCheckpointer::with_writer_pool`]) pool creation.
+fn spawn_pool(
+    store: &Arc<ShardedStore>,
+    shared: &Arc<PoolShared>,
+    n_writers: usize,
+) -> Vec<Writer> {
+    let mut pool = Vec::with_capacity(n_writers);
+    for w in 0..n_writers {
+        let (tx, rx): (Sender<WriteJob>, Receiver<WriteJob>) = channel();
+        let store = store.clone();
+        let shared = shared.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("ckpt-writer-{w}"))
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let refs: Vec<(usize, &[f32])> =
+                        job.atoms.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+                    let res = store.put_atoms_at(job.iter, &refs);
+                    let mut p = shared.pending.lock().unwrap();
+                    if let Err(e) = res {
+                        if p.error.is_none() {
+                            p.error = Some(format!("{e:?}"));
+                        }
+                    }
+                    p.in_flight -= 1;
+                    shared.drained.notify_all();
+                }
+            })
+            .expect("spawning checkpoint writer thread");
+        pool.push(Writer { tx: Some(tx), join: Some(join) });
+    }
+    pool
+}
+
 /// Content fingerprint of one atom's payload (the delta-skip key).
 fn payload_crc(vals: &[f32]) -> u32 {
     let mut hasher = crc32fast::Hasher::new();
@@ -188,31 +225,7 @@ impl AsyncCheckpointer {
         // as the writer pool (1 = serial for sync single-writer runs);
         // the fan-out is byte-identical to a serial pass by design.
         store.set_fence_workers(n_writers.max(1));
-        let mut pool = Vec::with_capacity(n_writers);
-        for w in 0..n_writers {
-            let (tx, rx): (Sender<WriteJob>, Receiver<WriteJob>) = channel();
-            let store = store.clone();
-            let shared = shared.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("ckpt-writer-{w}"))
-                .spawn(move || {
-                    while let Ok(job) = rx.recv() {
-                        let refs: Vec<(usize, &[f32])> =
-                            job.atoms.iter().map(|(a, v)| (*a, v.as_slice())).collect();
-                        let res = store.put_atoms_at(job.iter, &refs);
-                        let mut p = shared.pending.lock().unwrap();
-                        if let Err(e) = res {
-                            if p.error.is_none() {
-                                p.error = Some(format!("{e:?}"));
-                            }
-                        }
-                        p.in_flight -= 1;
-                        shared.drained.notify_all();
-                    }
-                })
-                .expect("spawning checkpoint writer thread");
-            pool.push(Writer { tx: Some(tx), join: Some(join) });
-        }
+        let pool = spawn_pool(&store, &shared, n_writers);
         Ok(AsyncCheckpointer {
             coord,
             store,
@@ -320,6 +333,55 @@ impl AsyncCheckpointer {
 
     pub fn policy(&self) -> CheckpointPolicy {
         self.coord.policy
+    }
+
+    /// Live-retune the checkpoint policy — the adaptive controller's
+    /// write path. Safe at any iteration boundary: the schedule gate in
+    /// [`maybe_checkpoint`](AsyncCheckpointer::maybe_checkpoint) reads
+    /// the policy fresh on every call, so a change between barriers only
+    /// reschedules *future* barriers; it never rewrites history. Byte-
+    /// determinism holds as long as the decision itself is a pure
+    /// function of iteration-clocked inputs (see [`crate::policy`]).
+    pub fn set_policy(&mut self, policy: CheckpointPolicy) {
+        self.coord.policy = policy;
+    }
+
+    /// Flip sync ↔ async at a safe switch point. Async → sync drains the
+    /// writer pool first (a mini-fence), so an inline put can never race
+    /// an in-flight async write to the same shard; sync → async requires
+    /// a writer pool (construct in async mode or call
+    /// [`with_writer_pool`](AsyncCheckpointer::with_writer_pool)). The
+    /// stored bytes after any fence are identical either way — the
+    /// sync/async byte-identity contract is exactly what makes this flip
+    /// free to take mid-run.
+    pub fn set_mode(&mut self, mode: CheckpointMode) -> Result<()> {
+        if mode == self.mode {
+            return Ok(());
+        }
+        if self.mode == CheckpointMode::Async {
+            self.wait_pending_at_most(0)?;
+        }
+        if mode == CheckpointMode::Async && self.writers.is_empty() {
+            bail!(
+                "cannot switch to async checkpoints: no writer pool \
+                 (construct in async mode or call with_writer_pool first)"
+            );
+        }
+        self.mode = mode;
+        Ok(())
+    }
+
+    /// Ensure a writer pool exists even when the initial mode is sync, so
+    /// an adaptive policy controller can flip to async mid-run. No-op if
+    /// the pool is already running. Also widens the parity-fence/rebuild
+    /// fan-out to the pool width (byte-identical to serial by design).
+    pub fn with_writer_pool(mut self, writers: usize) -> AsyncCheckpointer {
+        if self.writers.is_empty() {
+            let n = writers.clamp(1, self.store.n_shards());
+            self.store.set_fence_workers(n);
+            self.writers = spawn_pool(&self.store, &self.shared, n);
+        }
+        self
     }
 
     pub fn store(&self) -> &Arc<ShardedStore> {

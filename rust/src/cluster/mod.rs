@@ -23,6 +23,7 @@ use crate::failure::{HeartbeatDetector, Liveness};
 use crate::obs::{EventKind, Recorder};
 use crate::params::{AtomLayout, ParamStore};
 use crate::partition::Partition;
+use crate::policy::{PolicyConfig, PolicyController};
 use crate::storage::{CheckpointStore, ShardedStore};
 use crate::trainer::Trainer;
 use crate::util::rng::Rng;
@@ -359,6 +360,12 @@ pub struct ClusterRunReport {
     pub compaction_runs: u64,
     /// Segment bytes those passes reclaimed.
     pub compaction_reclaimed_bytes: u64,
+    /// Live policy/mode switches the adaptive controller applied
+    /// (0 without [`ClusterJob::adaptive`]).
+    pub policy_switches: u64,
+    /// Checkpoint interval held at end of run (the adaptive controller
+    /// may have retuned it away from the configured policy's).
+    pub final_interval: usize,
 }
 
 /// How scheduled node kills are *detected*.
@@ -402,6 +409,11 @@ pub struct ClusterJob {
     /// plus everything the checkpointer and chaos layer record. The
     /// default disabled recorder is a zero-cost no-op.
     pub recorder: Recorder,
+    /// Adaptive-policy controller config: when set, the training loop
+    /// feeds a [`PolicyController`] the live loss and node-failure
+    /// arrivals and applies its switches at iteration boundaries.
+    /// `None` = static policy (the default).
+    pub adaptive: Option<PolicyConfig>,
 }
 
 impl ClusterJob {
@@ -421,6 +433,7 @@ impl ClusterJob {
             detect: Detect::Heartbeat(Duration::from_millis(20)),
             stop_at_loss: None,
             recorder: Recorder::disabled(),
+            adaptive: None,
         }
     }
 }
@@ -492,6 +505,16 @@ pub fn run_cluster_training(
     .with_max_pending(job.max_pending)
     .with_compaction(job.compact_threshold, job.compact_min_bytes)
     .with_recorder(job.recorder.clone());
+    if job.adaptive.is_some() {
+        // The controller may flip sync → async mid-run; make sure the
+        // writer pool exists even when the job starts sync.
+        ck = ck.with_writer_pool(job.ckpt_writers.max(1));
+    }
+    let mut ctl = job.adaptive.map(|cfg| {
+        let base = cfg.base_interval.max(1) as f64;
+        let initial_k = (base / job.policy.interval.max(1) as f64).round().max(1.0) as usize;
+        PolicyController::new(cfg, initial_k, job.ckpt_mode)
+    });
 
     let mut losses = Vec::with_capacity(job.iters);
     let mut recovery_delta_sq = 0.0f64;
@@ -540,6 +563,10 @@ pub fn run_cluster_training(
                     },
                 );
             }
+            if let Some(ctl) = ctl.as_mut() {
+                let frac = outcome.rebuilt_atoms as f64 / layout.n_atoms().max(1) as f64;
+                ctl.observe_failure(iter, frac);
+            }
             // New records follow the atoms' new owners.
             store.set_route_partition(&cluster.partition);
         }
@@ -554,6 +581,23 @@ pub fn run_cluster_training(
         let atoms: Vec<usize> = (0..layout.n_atoms()).collect();
         cluster.scatter(trainer.state(), &layout, &atoms)?;
 
+        if let Some(ctl) = ctl.as_mut() {
+            ctl.observe_loss(loss);
+            if let Some(sw) = ctl.decide(iter + 1) {
+                ck.set_policy(sw.policy);
+                ck.set_mode(sw.mode)?;
+                if job.recorder.is_enabled() {
+                    job.recorder.record(
+                        iter + 1,
+                        EventKind::PolicySwitch {
+                            k: sw.k,
+                            interval: sw.policy.interval,
+                            mode: sw.mode.to_string(),
+                        },
+                    );
+                }
+            }
+        }
         if let Some(stats) = ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut rng)? {
             cluster
                 .events
@@ -567,6 +611,12 @@ pub fn run_cluster_training(
     // toward the same totals as node-slice reloads.
     rebuilt_atoms += ck.rebuilt_atoms() + ck.readopted_atoms();
     rebuilt_bytes += ck.rebuilt_bytes() + ck.readopted_bytes();
+    if let Some(ctl) = ctl.as_mut() {
+        // Reporting only — stall counts never feed decisions.
+        ctl.note_stalls(ck.backpressure_stalls());
+    }
+    let policy_switches = ctl.as_ref().map(|c| c.switches()).unwrap_or(0);
+    let final_interval = ck.policy().interval;
     ck.finish()?;
     let events = cluster.events.clone();
     let bytes = store.total_bytes();
@@ -584,6 +634,8 @@ pub fn run_cluster_training(
         rebuilt_bytes,
         compaction_runs,
         compaction_reclaimed_bytes,
+        policy_switches,
+        final_interval,
     })
 }
 
@@ -742,6 +794,36 @@ mod tests {
                 && matches!(e.kind, EventKind::NodeRecover { nodes: 1, .. })),
             "missing NodeRecover: {events:?}"
         );
+    }
+
+    #[test]
+    fn adaptive_cluster_job_is_deterministic() {
+        // The controller's decisions are iteration-clocked, so two
+        // adaptive runs on the same seed must agree on losses, events,
+        // and the switch schedule — even with async writers in play.
+        use crate::models::synthetic::SyntheticTrainer;
+        let run = || {
+            let mut trainer = SyntheticTrainer::new(24, 0.85, 6);
+            let store = Arc::new(ShardedStore::new_mem(3));
+            let job = ClusterJob {
+                ckpt_mode: CheckpointMode::Async,
+                ckpt_writers: 2,
+                kills: vec![(10, 1), (14, 2)],
+                detect: Detect::Immediate,
+                adaptive: Some(PolicyConfig {
+                    window: 8,
+                    dump_cost_iters: 2.0,
+                    ..PolicyConfig::default()
+                }),
+                ..ClusterJob::new(4, 80, CheckpointPolicy::full(8), 17)
+            };
+            let report = run_cluster_training(&mut trainer, store, &job).unwrap();
+            (report.losses, report.events, report.policy_switches, report.final_interval)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "adaptive cluster runs must be byte-identical on one seed");
+        assert!(a.0.last().unwrap() < &a.0[0]);
     }
 
     #[test]

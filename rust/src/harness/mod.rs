@@ -24,6 +24,7 @@ use crate::checkpoint::{
 use crate::failure::FailureEvent;
 use crate::obs::{standard_registry, EventKind, Recorder};
 use crate::params::ParamStore;
+use crate::policy::{PolicyConfig, PolicyController};
 use crate::recovery::{recover, RecoveryMode, RecoveryReport};
 use crate::storage::{MemStore, ShardedStore};
 use crate::trainer::Trainer;
@@ -173,6 +174,19 @@ pub struct CheckpointSetup {
     /// traced run's recovered parameters and report are byte-identical
     /// to the untraced run (pinned by `rust/tests/obs.rs`).
     pub trace_path: Option<PathBuf>,
+    /// Blocking cost of one *full-size* checkpoint dump in iteration
+    /// units (`[advisor] dump_cost_iters`), priced into
+    /// `iteration_cost` pro rata per atom actually written. Charged to
+    /// every trial — static and adaptive alike — so policy comparisons
+    /// pay for checkpoint bandwidth, not just rework. `0` (the default)
+    /// keeps checkpoints free and all existing reports byte-identical.
+    pub dump_cost_iters: f64,
+    /// Adaptive-policy controller config (`policy = "adaptive"` cells):
+    /// when set, a [`PolicyController`] watches the live loss curve and
+    /// failure arrivals and retunes the checkpoint policy/mode at
+    /// iteration boundaries mid-trial. `None` = static policy (the
+    /// default).
+    pub adaptive: Option<PolicyConfig>,
 }
 
 impl CheckpointSetup {
@@ -202,6 +216,8 @@ impl CheckpointSetup {
             compact_threshold: 0.0,
             compact_min_bytes: 0,
             trace_path: None,
+            dump_cost_iters: 0.0,
+            adaptive: None,
         }
     }
 
@@ -355,12 +371,48 @@ pub fn run_plan_trial(
     run_plan_trial_with(trainer, traj, &CheckpointSetup::sync(policy), mode, events, trial_seed)
 }
 
+/// Apply the controller's decision (if any) for iteration `iter` at its
+/// fence point: retune the policy/mode on the live checkpointer and
+/// narrate the switch through the flight recorder. Switches land only
+/// here — between `step` and the iteration's barrier — never inside a
+/// barrier or a recovery.
+fn apply_policy_decision(
+    ctl: &mut PolicyController,
+    iter: usize,
+    ck: &mut AsyncCheckpointer,
+    rec: &Recorder,
+) -> Result<()> {
+    if let Some(sw) = ctl.decide(iter) {
+        ck.set_policy(sw.policy);
+        ck.set_mode(sw.mode)?;
+        if rec.is_enabled() {
+            rec.record(
+                iter,
+                EventKind::PolicySwitch {
+                    k: sw.k,
+                    interval: sw.policy.interval,
+                    mode: sw.mode.to_string(),
+                },
+            );
+        }
+    }
+    Ok(())
+}
+
 /// [`run_plan_trial`] with an explicit [`CheckpointSetup`]: the trial's
 /// running checkpoint lives in a sharded store driven sync or async by an
 /// [`AsyncCheckpointer`], and every recovery is preceded by the `flush`
 /// epoch fence — so the result is a pure function of (scenario inputs,
 /// seed) whatever the mode, shard count, writer count, or injected
 /// storage-fault schedule.
+///
+/// With `setup.adaptive` set, a [`PolicyController`] rides along: it is
+/// fed every loss and failure arrival (iteration-clocked, so decisions
+/// stay deterministic), and its switches are applied at iteration
+/// boundaries via [`apply_policy_decision`]. With `dump_cost_iters > 0`,
+/// every barrier's written atoms are priced into `iteration_cost` at
+/// `dump_cost_iters / n_atoms` each — for static and adaptive cells
+/// alike, so the comparison charges both for checkpoint bandwidth.
 pub fn run_plan_trial_with(
     trainer: &mut dyn Trainer,
     traj: &Trajectory,
@@ -391,11 +443,34 @@ pub fn run_plan_trial_with(
     .with_max_pending(setup.max_pending)
     .with_compaction(setup.compact_threshold, setup.compact_min_bytes)
     .with_recorder(rec.clone());
+    if setup.adaptive.is_some() {
+        // The controller may flip sync → async mid-run; make sure the
+        // writer pool exists even when the trial starts sync.
+        ck = ck.with_writer_pool(setup.writers.max(1));
+    }
+    let mut ctl = setup.adaptive.map(|cfg| {
+        // Map the configured policy onto the controller's candidate
+        // grid: k ≈ base_interval / interval (k = 1 ⇔ full dumps every
+        // base_interval iterations).
+        let base = cfg.base_interval.max(1) as f64;
+        let initial_k = (base / setup.policy.interval.max(1) as f64).round().max(1.0) as usize;
+        PolicyController::new(cfg, initial_k, setup.mode)
+    });
+    let dump_price = setup.dump_cost_iters / layout.n_atoms().max(1) as f64;
+    let mut dump_cost = 0.0f64;
     // Replay barriers along the cached trajectory up to the failure
     // (same RNG stream as replay_checkpoints).
     let mut replay_rng = Rng::new(trial_seed);
     for iter in 1..=first_iter {
-        ck.maybe_checkpoint(iter, traj.state_at(iter), &layout, &mut replay_rng)?;
+        if let Some(ctl) = ctl.as_mut() {
+            ctl.observe_loss(traj.losses[iter - 1]);
+            apply_policy_decision(ctl, iter, &mut ck, &rec)?;
+        }
+        if let Some(stats) =
+            ck.maybe_checkpoint(iter, traj.state_at(iter), &layout, &mut replay_rng)?
+        {
+            dump_cost += dump_price * stats.atoms_saved as f64;
+        }
         if rec.is_enabled() {
             // The replayed prefix comes straight off the cached
             // trajectory: per-iteration loss and update norm are
@@ -415,6 +490,10 @@ pub fn run_plan_trial_with(
     let mut report = recover(mode, &mut state, &layout, &events[0].lost_atoms, store.as_ref())
         .context("recovery failed")?;
     let mut delta_sq = report.delta_norm * report.delta_norm;
+    if let Some(ctl) = ctl.as_mut() {
+        let frac = events[0].lost_atoms.len() as f64 / layout.n_atoms().max(1) as f64;
+        ctl.observe_failure(first_iter, frac);
+    }
 
     let cap = default_cap(traj);
     trainer.init(traj.seed)?;
@@ -437,6 +516,11 @@ pub fn run_plan_trial_with(
             report.elems_restored += r.elems_restored;
             report.secs += r.secs;
             delta_sq += r.delta_norm * r.delta_norm;
+            if let Some(ctl) = ctl.as_mut() {
+                let frac = events[next_event].lost_atoms.len() as f64
+                    / layout.n_atoms().max(1) as f64;
+                ctl.observe_failure(events[next_event].iter, frac);
+            }
             next_event += 1;
         }
         // The update norm is only computed when tracing: it costs a full
@@ -450,7 +534,15 @@ pub fn run_plan_trial_with(
                 EventKind::Progress { loss, update_norm: trainer.state().l2_distance(&prev) },
             );
         }
-        ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut ckpt_rng)?;
+        if let Some(ctl) = ctl.as_mut() {
+            ctl.observe_loss(loss);
+            apply_policy_decision(ctl, iter + 1, &mut ck, &rec)?;
+        }
+        if let Some(stats) =
+            ck.maybe_checkpoint(iter + 1, trainer.state(), &layout, &mut ckpt_rng)?
+        {
+            dump_cost += dump_price * stats.atoms_saved as f64;
+        }
         if loss <= traj.threshold {
             total = Some(iter + 1);
             break;
@@ -461,6 +553,13 @@ pub fn run_plan_trial_with(
     let skipped_atoms = ck.skipped_atoms();
     let skipped_bytes = ck.skipped_bytes();
     let backpressure_stalls = ck.backpressure_stalls();
+    let final_interval = ck.policy().interval;
+    if let Some(ctl) = ctl.as_mut() {
+        // Stalls are wall-clock observability, outside the determinism
+        // surface: the controller records them for reporting but never
+        // reads them in `decide`.
+        ctl.note_stalls(backpressure_stalls);
+    }
     ck.finish()?;
     if let Some(path) = &setup.trace_path {
         if let Some(dir) = path.parent() {
@@ -489,8 +588,13 @@ pub fn run_plan_trial_with(
     reg.counter("skipped_bytes").set(skipped_bytes);
     reg.counter("backpressure_stalls").set(backpressure_stalls);
     reg.counter("degraded_records").set(store.degraded_records());
+    if let Some(ctl) = &ctl {
+        reg.counter("policy_switches").set(ctl.switches());
+        reg.counter("interval_chosen").set(final_interval as u64);
+        reg.gauge("policy_regret").set(ctl.regret_per_iter(total));
+    }
     Ok(TrialResult {
-        iteration_cost: total as f64 - traj.converged_iters as f64,
+        iteration_cost: total as f64 - traj.converged_iters as f64 + dump_cost,
         censored,
         recovery: report,
         rebuilt_atoms,
@@ -885,6 +989,68 @@ mod tests {
         assert_eq!(sync.censored, asynced.censored);
         assert_eq!(sync.recovery.atoms_restored, asynced.recovery.atoms_restored);
         assert_eq!(sync.recovery.delta_norm, asynced.recovery.delta_norm);
+    }
+
+    #[test]
+    fn adaptive_with_zero_window_matches_static() {
+        let mut t = Decay::new(8, 0.85);
+        let traj = run_trajectory(&mut t, 0, 60, 25).unwrap();
+        let events = [crate::failure::FailureEvent {
+            iter: 9,
+            lost_atoms: vec![0, 3, 5],
+            failed_nodes: vec![],
+        }];
+        let policy = CheckpointPolicy::partial(6, 3, Selector::Priority);
+        let fixed = run_plan_trial_with(
+            &mut t,
+            &traj,
+            &CheckpointSetup::sync(policy),
+            RecoveryMode::Partial,
+            &events,
+            5,
+        )
+        .unwrap();
+        // window = 0 disables the controller: the adaptive plumbing must
+        // be a pure pass-through.
+        let mut setup = CheckpointSetup::sync(policy);
+        setup.adaptive =
+            Some(crate::policy::PolicyConfig { window: 0, ..Default::default() });
+        let adaptive =
+            run_plan_trial_with(&mut t, &traj, &setup, RecoveryMode::Partial, &events, 5)
+                .unwrap();
+        assert_eq!(fixed.iteration_cost, adaptive.iteration_cost);
+        assert_eq!(fixed.censored, adaptive.censored);
+        assert_eq!(fixed.recovery.delta_norm, adaptive.recovery.delta_norm);
+        assert_eq!(adaptive.metrics["policy_switches"], 0.0);
+    }
+
+    #[test]
+    fn dump_cost_prices_checkpoint_bandwidth_into_cost() {
+        let mut t = Decay::new(8, 0.85);
+        let traj = run_trajectory(&mut t, 0, 60, 25).unwrap();
+        let events = [crate::failure::FailureEvent {
+            iter: 9,
+            lost_atoms: vec![0, 3, 5],
+            failed_nodes: vec![],
+        }];
+        let policy = CheckpointPolicy::full(4);
+        let free = run_plan_trial_with(
+            &mut t,
+            &traj,
+            &CheckpointSetup::sync(policy),
+            RecoveryMode::Partial,
+            &events,
+            5,
+        )
+        .unwrap();
+        let mut priced = CheckpointSetup::sync(policy);
+        priced.dump_cost_iters = 3.0;
+        let charged =
+            run_plan_trial_with(&mut t, &traj, &priced, RecoveryMode::Partial, &events, 5)
+                .unwrap();
+        // Decay moves every atom every iteration, so barriers write real
+        // bytes and the priced run must cost strictly more.
+        assert!(charged.iteration_cost > free.iteration_cost);
     }
 
     #[test]

@@ -30,7 +30,9 @@
 //! whole experiments into data files (`scenarios/*.toml`) executed as
 //! parallel trial sweeps via `scar run-scenario`; [`obs`] is the
 //! deterministic flight recorder + metrics registry behind `--trace`,
-//! `--json`, and `scar trace`.
+//! `--json`, and `scar trace`; [`policy`] closes the advisor loop with a
+//! runtime controller that retunes checkpointing mid-run
+//! (`policy = "adaptive"` scenario cells).
 
 pub mod advisor;
 pub mod chaos;
@@ -44,6 +46,7 @@ pub mod models;
 pub mod obs;
 pub mod params;
 pub mod partition;
+pub mod policy;
 pub mod recovery;
 pub mod runtime;
 pub mod scenario;

@@ -43,6 +43,7 @@ fn main() -> Result<()> {
         "advisor" => cmd_advisor(&args),
         "compact" => cmd_compact(&args),
         "trend" => cmd_trend(&args),
+        "policy-gate" => cmd_policy_gate(&args),
         "bench" => cmd_bench(&args),
         "trace" => cmd_trace(&args),
         "help" | "--help" | "-h" => {
@@ -60,7 +61,7 @@ fn print_help() {
     eprintln!(
         "scar — self-correcting checkpoint-based fault tolerance for ML training
 
-USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|bench|trace> [flags]
+USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|policy-gate|bench|trace> [flags]
 
   info                          list AOT artifacts
   train   --set k=v ...         local training loop with SCAR checkpointing
@@ -87,6 +88,10 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|bench|t
           --from-metrics a.json[,b.json...]   vs the previous row
           [--max-regress 0.25] [--gate wall_secs,rebuilt_bytes]
           [--render out.svg|out.html]  plot the accumulated CSV instead
+  policy-gate --report f.csv    assert every adaptive cell's total
+                                  iteration cost <= every static cell's
+                                  (per panel; labels containing
+                                  \"adaptive\" are the adaptive cells)
   bench   [--quick] [--out BENCH_7.json]  hot-path benchmark sweep over
           [--dir d]               {mem,disk} x {sync,async} x parity
                                   {off,on}: fence wall-clock + stripes
@@ -111,8 +116,13 @@ Scenario files additionally take [chaos] (per-shard
 kill/slow/torn/partition/flaky/fsync/bitflip/replay schedules),
 checkpoint_dir (disk-backed trials), [storage]
 compact_threshold/compact_min_bytes/parity, deploy =
-\"harness\"|\"cluster\", ps_nodes, and [obs] trace_dir (per-trial
-flight-recorder JSONL traces).
+\"harness\"|\"cluster\", ps_nodes, [obs] trace_dir (per-trial
+flight-recorder JSONL traces), policy = \"static\"|\"adaptive\" (per
+scenario or per cell: the runtime policy controller retunes the
+checkpoint interval and sync/async mode mid-run), and [advisor]
+window/dump_cost_iters/hysteresis/lost_fraction (controller tuning;
+dump_cost_iters also prices checkpoint bandwidth into every cell's
+iteration cost).
 
 Bundled scenarios: scenarios/fig5.toml, fig6.toml, fig7.toml (paper
 figure sweeps), scenarios/failure_models.toml (correlated/cascade/flaky),
@@ -121,7 +131,9 @@ chaos), scenarios/disk_chaos.toml (the same chaos family over real
 on-disk shards, with compaction), scenarios/selective_recovery.toml
 (partition + flaky-shard families over the selective rebuild planner),
 scenarios/erasure_recovery.toml (parity-coded shards under bitflip and
-kill faults)."
+kill faults), scenarios/adaptive_policy.toml (fixed-interval cells vs
+the adaptive policy controller across bursty/quiet/flaky failure
+regimes — `scar policy-gate` asserts adaptive wins)."
     );
 }
 
@@ -164,6 +176,82 @@ fn cmd_run_scenario(args: &Args) -> Result<()> {
             .with_context(|| format!("writing {}", path.display()))?;
         println!("-> {}", path.display());
     }
+    Ok(())
+}
+
+/// `scar policy-gate`: CI assertion over a scenario report CSV — in every
+/// panel, each adaptive cell's total iteration cost must be no worse than
+/// every static cell's. Cells are classified by label: a label containing
+/// "adaptive" is an adaptive cell, the rest are the static baselines.
+/// Exits nonzero (with a per-panel breakdown) when the gate fails.
+fn cmd_policy_gate(args: &Args) -> Result<()> {
+    let file = args
+        .str_opt("report")
+        .context("usage: scar policy-gate --report results/report.csv")?;
+    let text = std::fs::read_to_string(file)
+        .with_context(|| format!("reading report csv {file}"))?;
+    // (panel, cell) -> (total cost, trials, censored trials). The CSV is
+    // scar's own `scenario,panel,cell,trial,cost,delta,bound,censored`;
+    // labels never contain commas in bundled scenarios, so a plain split
+    // suffices (quoted fields are rejected loudly rather than misparsed).
+    let mut cells: std::collections::BTreeMap<(String, String), (f64, usize, usize)> =
+        std::collections::BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate().skip(1) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 8 || line.contains('"') {
+            bail!("{file}:{} is not a scar report row: {line}", lineno + 1);
+        }
+        let cost: f64 = f[4]
+            .parse()
+            .with_context(|| format!("{file}:{}: bad cost '{}'", lineno + 1, f[4]))?;
+        let censored = f[7].trim() == "1";
+        let e = cells.entry((f[1].to_string(), f[2].to_string())).or_insert((0.0, 0, 0));
+        e.0 += cost;
+        e.1 += 1;
+        e.2 += censored as usize;
+    }
+    if cells.is_empty() {
+        bail!("no data rows in {file}");
+    }
+    let mut panels: Vec<String> = cells.keys().map(|(p, _)| p.clone()).collect();
+    panels.dedup();
+    let mut failures = 0usize;
+    for panel in &panels {
+        let (adaptive, fixed): (Vec<_>, Vec<_>) = cells
+            .iter()
+            .filter(|((p, _), _)| p == panel)
+            .partition(|((_, c), _)| c.contains("adaptive"));
+        if adaptive.is_empty() {
+            bail!("panel '{panel}' has no adaptive cell (label containing 'adaptive')");
+        }
+        if fixed.is_empty() {
+            bail!("panel '{panel}' has no static baseline cells");
+        }
+        for ((_, alabel), (acost, atrials, acens)) in &adaptive {
+            println!(
+                "panel {panel}: {alabel} total cost {acost:.2} over {atrials} trial(s), \
+                 {acens} censored"
+            );
+            for ((_, slabel), (scost, _, _)) in &fixed {
+                if acost > scost {
+                    eprintln!(
+                        "POLICY GATE: panel {panel}: adaptive '{alabel}' ({acost:.2}) \
+                         costs more than static '{slabel}' ({scost:.2})"
+                    );
+                    failures += 1;
+                } else {
+                    println!("  <= static {slabel} ({scost:.2})");
+                }
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("policy gate failed: {failures} adaptive-vs-static comparison(s) regressed");
+    }
+    println!("policy gate passed: adaptive cost <= every static cell in every panel");
     Ok(())
 }
 

@@ -73,6 +73,10 @@ pub enum EventKind {
     /// Per-iteration training progress: loss and ‖xₜ − xₜ₋₁‖ (the update
     /// norm bounding the slow-mode amplitude in the Thm 3.2 terms).
     Progress { loss: f64, update_norm: f64 },
+    /// The adaptive policy controller applied a new checkpoint policy at
+    /// a fence point: grid index k (fraction 1/k), the new interval, and
+    /// the new sync/async mode.
+    PolicySwitch { k: usize, interval: usize, mode: String },
 }
 
 impl EventKind {
@@ -91,6 +95,7 @@ impl EventKind {
             EventKind::NodeKill { .. } => "node_kill",
             EventKind::NodeRecover { .. } => "node_recover",
             EventKind::Progress { .. } => "progress",
+            EventKind::PolicySwitch { .. } => "policy_switch",
         }
     }
 
@@ -149,6 +154,11 @@ impl EventKind {
             EventKind::Progress { loss, update_norm } => {
                 num(&mut m, "loss", *loss);
                 num(&mut m, "update_norm", *update_norm);
+            }
+            EventKind::PolicySwitch { k, interval, mode } => {
+                num(&mut m, "k", *k as f64);
+                num(&mut m, "interval", *interval as f64);
+                m.insert("mode".to_string(), Json::from(mode.as_str()));
             }
         }
         m
@@ -218,6 +228,11 @@ impl Event {
             "progress" => {
                 EventKind::Progress { loss: f(v, "loss")?, update_norm: f(v, "update_norm")? }
             }
+            "policy_switch" => EventKind::PolicySwitch {
+                k: us(v, "k")?,
+                interval: us(v, "interval")?,
+                mode: s(v, "mode")?,
+            },
             other => bail!("unknown trace event kind '{other}'"),
         };
         Ok(Event { iter, kind })
@@ -440,13 +455,24 @@ pub const STANDARD_COUNTERS: &[&str] = &[
     "skipped_bytes",
     "backpressure_stalls",
     "degraded_records",
+    "policy_switches",
+    "interval_chosen",
 ];
 
-/// A registry with every standard counter pre-registered at zero.
+/// Standard gauges that join the counters in every snapshot (same
+/// stable-column rationale; gauges because they carry fractional,
+/// last-value-wins quantities).
+pub const STANDARD_GAUGES: &[&str] = &["policy_regret"];
+
+/// A registry with every standard counter and gauge pre-registered at
+/// zero.
 pub fn standard_registry() -> Registry {
     let r = Registry::new();
     for name in STANDARD_COUNTERS {
         let _ = r.counter(name);
+    }
+    for name in STANDARD_GAUGES {
+        let _ = r.gauge(name);
     }
     r
 }
@@ -512,6 +538,10 @@ mod tests {
             },
             Event { iter: 9, kind: EventKind::NodeRecover { nodes: 1, atoms: 10, delta_norm: 0.25 } },
             Event { iter: 9, kind: EventKind::Progress { loss: 0.5, update_norm: 0.01 } },
+            Event {
+                iter: 16,
+                kind: EventKind::PolicySwitch { k: 4, interval: 2, mode: "sync".into() },
+            },
         ];
         let text = to_jsonl(&events);
         assert_eq!(parse_jsonl(&text).unwrap(), events);
@@ -549,8 +579,10 @@ mod tests {
     #[test]
     fn standard_registry_has_all_keys_at_zero() {
         let snap = standard_registry().snapshot();
-        assert_eq!(snap.len(), STANDARD_COUNTERS.len());
+        assert_eq!(snap.len(), STANDARD_COUNTERS.len() + STANDARD_GAUGES.len());
         assert!(snap.values().all(|v| *v == 0.0));
+        assert!(snap.contains_key("policy_switches"));
+        assert!(snap.contains_key("policy_regret"));
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! Runtime policy controller — the advisor loop, closed (paper §7;
+//! ROADMAP "adaptive fault-tolerance policy engine").
+//!
+//! [`crate::advisor`] estimates the contraction rate `c` from the live
+//! loss curve and scores candidate checkpoint policies under the
+//! Thm 3.2 / Daly-style overhead trade, but nothing ever *acted* on the
+//! scores: every knob was frozen per trial. The [`PolicyController`]
+//! turns the estimate into live reconfiguration:
+//!
+//! 1. **Observe.** Every iteration the training loop feeds it the loss
+//!    ([`observe_loss`](PolicyController::observe_loss)) and any failure
+//!    arrivals with their lost-parameter fraction
+//!    ([`observe_failure`](PolicyController::observe_failure)). Both are
+//!    iteration-clocked and deterministic for a fixed seed.
+//! 2. **Decide.** At each observation-window boundary
+//!    ([`decide`](PolicyController::decide)) it re-evaluates the
+//!    candidate grid of [`recommend_policy`] under the current rate
+//!    estimate and the *windowed* failure arrival rate, and proposes a
+//!    switch when a candidate beats the held policy's predicted overhead
+//!    by more than the hysteresis margin. It also proposes the
+//!    checkpoint mode: sync while failures are arriving (fences are
+//!    taken constantly anyway, so the pipeline buys nothing), async in
+//!    quiet regimes (overlap the dump with training).
+//! 3. **Apply.** The caller applies the decision at the next safe fence
+//!    point only — `AsyncCheckpointer::set_policy` /
+//!    `AsyncCheckpointer::set_mode` at an iteration boundary — and
+//!    narrates it as a `policy_switch` flight-recorder event.
+//!
+//! **Determinism contract.** Decisions are a pure function of
+//! iteration-clocked observations (losses, failure iterations, lost
+//! fractions). Wall-clock observables — back-pressure stall counts in
+//! particular, which the docs on
+//! [`wait_for_queue_room`](crate::checkpoint::AsyncCheckpointer) place
+//! explicitly outside the determinism surface — are *recorded* via
+//! [`note_stalls`](PolicyController::note_stalls) for reporting but are
+//! never an input to `decide`. Same seed ⇒ same switch schedule ⇒
+//! byte-identical runs (`rust/tests/policy.rs` pins this across
+//! {mem, disk} × {sync, async}).
+//!
+//! **Regret.** At end of run,
+//! [`regret_per_iter`](PolicyController::regret_per_iter) scores the
+//! *held* policy schedule against the best fixed policy in hindsight
+//! (the oracle), both priced by the same cost model under the final
+//! rate estimate and the whole-run failure rate — a model-based
+//! regret-vs-oracle number that needs no extra runs and stays
+//! deterministic.
+
+use crate::advisor::{expected_rework_iters, recommend_policy, AdvisorInputs};
+use crate::checkpoint::{CheckpointMode, CheckpointPolicy, Selector};
+
+pub use crate::advisor::OnlineRateEstimator;
+
+/// Tuning knobs of the controller (scenario `[advisor]` table).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicyConfig {
+    /// Iterations between decision points — the observation window.
+    /// `0` disables the controller entirely.
+    pub window: usize,
+    /// Blocking cost of one *full-size* checkpoint dump in iteration
+    /// units (the advisor's `t_dump_full / t_iter` ratio). This both
+    /// drives the overhead trade and is priced into every trial's
+    /// iteration cost (static cells too), so adaptive-vs-static
+    /// comparisons charge for checkpoint bandwidth. `0` (the default)
+    /// keeps all existing reports byte-identical.
+    pub dump_cost_iters: f64,
+    /// Relative predicted-overhead improvement a candidate must show
+    /// over the held policy before the controller switches.
+    pub hysteresis: f64,
+    /// Base full-checkpoint interval C the candidate grid derives from.
+    pub base_interval: usize,
+    /// Prior for the fraction of parameters lost per failure, used until
+    /// the first observed failure reports its real fraction.
+    pub lost_fraction: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            window: 16,
+            dump_cost_iters: 0.0,
+            hysteresis: 0.1,
+            base_interval: 8,
+            lost_fraction: 0.25,
+        }
+    }
+}
+
+/// One applied (or proposed) switch: the new policy, its grid index k,
+/// the new mode, and the predicted overhead that justified it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySwitch {
+    pub iter: usize,
+    pub policy: CheckpointPolicy,
+    pub k: usize,
+    pub mode: CheckpointMode,
+    /// Predicted overhead per iteration of the switched-to policy under
+    /// the inputs that drove the decision.
+    pub predicted_overhead: f64,
+}
+
+/// Predicted overhead per iteration of candidate `k` under `inputs`
+/// (the advisor's scoring formula, callable for any k — including a
+/// held k that is not on the power-of-two grid).
+fn overhead_of(inputs: &AdvisorInputs, k: usize) -> f64 {
+    let policy = CheckpointPolicy::partial(inputs.base_interval, k, Selector::Priority);
+    let mean_lag = (inputs.base_interval as f64) / 2.0 + (policy.interval as f64) / 2.0;
+    let rework = expected_rework_iters(inputs.c, mean_lag, inputs.lost_fraction);
+    inputs.t_dump_full * policy.fraction / policy.interval as f64
+        + inputs.failure_rate * rework * inputs.t_iter
+}
+
+/// The runtime policy controller. See the module docs for the protocol.
+#[derive(Debug, Clone)]
+pub struct PolicyController {
+    cfg: PolicyConfig,
+    est: OnlineRateEstimator,
+    /// Iteration-keyed failure arrivals: (iteration, lost fraction).
+    failures: Vec<(usize, f64)>,
+    /// Wall-clock stall observations — reporting only, never a decision
+    /// input (they are outside the determinism surface).
+    stalls_seen: u64,
+    held_k: usize,
+    held_mode: CheckpointMode,
+    /// (adoption iteration, k) — the held-policy schedule, seeded with
+    /// the initial policy at iteration 0. Feeds regret accounting.
+    history: Vec<(usize, usize)>,
+    switches: u64,
+}
+
+impl PolicyController {
+    pub fn new(cfg: PolicyConfig, initial_k: usize, initial_mode: CheckpointMode) -> Self {
+        PolicyController {
+            cfg,
+            est: OnlineRateEstimator::default(),
+            failures: Vec::new(),
+            stalls_seen: 0,
+            held_k: initial_k.max(1),
+            held_mode: initial_mode,
+            history: vec![(0, initial_k.max(1))],
+            switches: 0,
+        }
+    }
+
+    /// Feed the loss after one training iteration.
+    pub fn observe_loss(&mut self, loss: f64) {
+        self.est.observe(loss);
+    }
+
+    /// Record a failure arrival at `iter` that lost `lost_fraction` of
+    /// the parameters (e.g. `lost_atoms / n_atoms`).
+    pub fn observe_failure(&mut self, iter: usize, lost_fraction: f64) {
+        self.failures.push((iter, lost_fraction.clamp(0.0, 1.0)));
+    }
+
+    /// Record back-pressure stalls. Reporting only: stall counts are
+    /// wall-clock nondeterministic, so they MUST NOT feed `decide` —
+    /// `stalls_never_affect_decisions` pins this.
+    pub fn note_stalls(&mut self, n: u64) {
+        self.stalls_seen += n;
+    }
+
+    pub fn stalls_seen(&self) -> u64 {
+        self.stalls_seen
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// The currently held grid index k (fraction 1/k every C/k iters).
+    pub fn held_k(&self) -> usize {
+        self.held_k
+    }
+
+    pub fn held_mode(&self) -> CheckpointMode {
+        self.held_mode
+    }
+
+    /// Windowed failure arrival rate: failures per iteration over the
+    /// trailing `4 * window` iterations — recent enough to track regime
+    /// shifts, wide enough not to flap on a single arrival.
+    fn windowed_failure_rate(&self, iter: usize) -> f64 {
+        let span = (4 * self.cfg.window).min(iter).max(1);
+        let from = iter - span;
+        let recent = self.failures.iter().filter(|(fi, _)| *fi > from && *fi <= iter).count();
+        recent as f64 / span as f64
+    }
+
+    /// Failures inside the trailing `2 * window` iterations (the mode
+    /// rule's activity test).
+    fn recent_failures(&self, iter: usize) -> usize {
+        let from = iter.saturating_sub(2 * self.cfg.window);
+        self.failures.iter().filter(|(fi, _)| *fi > from && *fi <= iter).count()
+    }
+
+    /// Mean observed lost fraction, or the configured prior before any
+    /// failure has been seen.
+    fn lost_fraction(&self) -> f64 {
+        if self.failures.is_empty() {
+            return self.cfg.lost_fraction;
+        }
+        self.failures.iter().map(|(_, p)| p).sum::<f64>() / self.failures.len() as f64
+    }
+
+    /// Cost-model inputs at `iter` under the current estimates.
+    fn inputs_at(&self, c: f64, failure_rate: f64) -> AdvisorInputs {
+        AdvisorInputs {
+            c,
+            lost_fraction: self.lost_fraction(),
+            failure_rate,
+            t_iter: 1.0,
+            t_dump_full: self.cfg.dump_cost_iters,
+            base_interval: self.cfg.base_interval.max(1),
+        }
+    }
+
+    /// Re-evaluate at an observation-window boundary. Returns the switch
+    /// to apply at this iteration's fence point, or `None` when `iter`
+    /// is not a boundary, the rate estimate is not yet trustworthy, or
+    /// the held policy is still (near-)best.
+    pub fn decide(&mut self, iter: usize) -> Option<PolicySwitch> {
+        if self.cfg.window == 0 || iter == 0 || iter % self.cfg.window != 0 {
+            return None;
+        }
+        let c = self.est.rate()?;
+        let failure_rate = self.windowed_failure_rate(iter);
+        let inputs = self.inputs_at(c, failure_rate);
+        let scores = recommend_policy(&inputs);
+        let best = scores.first()?;
+        let held_overhead = overhead_of(&inputs, self.held_k);
+
+        // k rule: switch only past the hysteresis margin, so ties and
+        // noise-level differences never flap the interval.
+        let k_changed = best.k != self.held_k
+            && best.overhead_per_iter < held_overhead * (1.0 - self.cfg.hysteresis);
+        // Mode rule: failures arriving ⇒ sync (every failure forces a
+        // drain fence anyway, and recovery reads want a settled store);
+        // quiet ⇒ async (overlap dumps with training). Iteration-keyed
+        // arrivals only — deterministic by construction.
+        let want_mode = if self.recent_failures(iter) >= 2 {
+            CheckpointMode::Sync
+        } else {
+            CheckpointMode::Async
+        };
+        let mode_changed = want_mode != self.held_mode;
+        if !k_changed && !mode_changed {
+            return None;
+        }
+        let (new_k, predicted) = if k_changed {
+            (best.k, best.overhead_per_iter)
+        } else {
+            (self.held_k, held_overhead)
+        };
+        self.held_k = new_k;
+        self.held_mode = want_mode;
+        self.history.push((iter, new_k));
+        self.switches += 1;
+        Some(PolicySwitch {
+            iter,
+            policy: CheckpointPolicy::partial(
+                self.cfg.base_interval.max(1),
+                new_k,
+                Selector::Priority,
+            ),
+            k: new_k,
+            mode: want_mode,
+            predicted_overhead: predicted,
+        })
+    }
+
+    /// Model-based regret vs the fixed-policy oracle, in overhead units
+    /// per iteration: the time-weighted predicted overhead of the held
+    /// schedule minus the best single policy's, both under the final
+    /// rate estimate and the whole-run failure rate. `0.0` when no rate
+    /// was ever estimable (nothing to regret against).
+    pub fn regret_per_iter(&self, total_iters: usize) -> f64 {
+        if total_iters == 0 {
+            return 0.0;
+        }
+        let Some(c) = self.est.rate() else {
+            return 0.0;
+        };
+        let failure_rate = self.failures.len() as f64 / total_iters as f64;
+        let inputs = self.inputs_at(c, failure_rate);
+        // Held schedule: each span priced at its k.
+        let mut held = 0.0;
+        for (i, &(start, k)) in self.history.iter().enumerate() {
+            let end = self.history.get(i + 1).map(|&(s, _)| s).unwrap_or(total_iters);
+            let span = end.saturating_sub(start).min(total_iters - start.min(total_iters));
+            held += span as f64 * overhead_of(&inputs, k);
+        }
+        held /= total_iters as f64;
+        // Oracle: best fixed k on the candidate grid, in hindsight.
+        let oracle = recommend_policy(&inputs)
+            .first()
+            .map(|s| s.overhead_per_iter)
+            .unwrap_or(held);
+        (held - oracle).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Converging loss curve at rate c, long enough to warm the
+    /// estimator.
+    fn feed_losses(ctl: &mut PolicyController, n: usize, c: f64) {
+        for k in 0..n {
+            ctl.observe_loss(1.0 + 5.0 * c.powi(k as i32));
+        }
+    }
+
+    fn cfg() -> PolicyConfig {
+        PolicyConfig {
+            window: 8,
+            dump_cost_iters: 2.0,
+            hysteresis: 0.1,
+            base_interval: 8,
+            lost_fraction: 0.25,
+        }
+    }
+
+    #[test]
+    fn no_decision_off_window_boundary() {
+        let mut ctl = PolicyController::new(cfg(), 1, CheckpointMode::Sync);
+        feed_losses(&mut ctl, 32, 0.9);
+        for iter in [1, 3, 7, 9, 15] {
+            assert!(ctl.decide(iter).is_none(), "iter {iter} is not a boundary");
+        }
+    }
+
+    #[test]
+    fn no_decision_before_rate_warm() {
+        let mut ctl = PolicyController::new(cfg(), 1, CheckpointMode::Sync);
+        ctl.observe_loss(1.0);
+        ctl.observe_loss(0.9);
+        assert!(ctl.decide(8).is_none(), "cold estimator must not switch");
+    }
+
+    #[test]
+    fn bursty_failures_shorten_the_interval() {
+        let mut ctl = PolicyController::new(cfg(), 1, CheckpointMode::Sync);
+        feed_losses(&mut ctl, 16, 0.9);
+        for iter in 5..=10 {
+            ctl.observe_failure(iter, 0.5);
+        }
+        let sw = ctl.decide(16).expect("frequent failures must trigger a switch");
+        assert!(sw.k > 1, "expected a finer-grained policy, got k={}", sw.k);
+        assert!(sw.policy.interval < 8);
+        assert_eq!(ctl.switches(), 1);
+    }
+
+    #[test]
+    fn quiet_regime_holds_and_prefers_async() {
+        let mut ctl = PolicyController::new(cfg(), 1, CheckpointMode::Async);
+        feed_losses(&mut ctl, 32, 0.9);
+        // No failures: every k costs the same dump bytes, so the held
+        // k=1 stays (hysteresis kills ties) and async stays.
+        assert!(ctl.decide(32).is_none());
+        assert_eq!(ctl.switches(), 0);
+    }
+
+    #[test]
+    fn failure_burst_flips_to_sync_then_quiet_flips_back() {
+        let mut ctl = PolicyController::new(cfg(), 1, CheckpointMode::Async);
+        feed_losses(&mut ctl, 200, 0.9);
+        ctl.observe_failure(3, 0.25);
+        ctl.observe_failure(6, 0.25);
+        let sw = ctl.decide(8).expect("burst inside the window must flip the mode");
+        assert_eq!(sw.mode, CheckpointMode::Sync);
+        // Far later, the trailing window is quiet again: flip back.
+        let back = ctl
+            .decide(craft_quiet_boundary())
+            .expect("quiet regime must flip back to async");
+        assert_eq!(back.mode, CheckpointMode::Async);
+    }
+
+    /// A window boundary far past the burst (trailing 2*window quiet).
+    fn craft_quiet_boundary() -> usize {
+        64
+    }
+
+    #[test]
+    fn stalls_never_affect_decisions() {
+        let drive = |stalls: u64| {
+            let mut ctl = PolicyController::new(cfg(), 1, CheckpointMode::Sync);
+            feed_losses(&mut ctl, 16, 0.9);
+            for iter in 5..=10 {
+                ctl.observe_failure(iter, 0.5);
+            }
+            ctl.note_stalls(stalls);
+            let d = ctl.decide(16);
+            (d, ctl.held_k(), ctl.held_mode())
+        };
+        assert_eq!(drive(0), drive(1_000_000), "stall counts must never change a decision");
+    }
+
+    #[test]
+    fn regret_zero_when_held_matches_oracle() {
+        let mut ctl = PolicyController::new(cfg(), 1, CheckpointMode::Sync);
+        feed_losses(&mut ctl, 64, 0.9);
+        // No failures ⇒ every k has equal predicted overhead ⇒ the held
+        // schedule is an oracle.
+        assert!(ctl.regret_per_iter(64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regret_positive_when_held_policy_was_wrong() {
+        // Hold k=1 the whole run while failures were frequent: the
+        // oracle (finer k) must be strictly better.
+        let mut ctl = PolicyController::new(
+            PolicyConfig { window: 0, ..cfg() },
+            1,
+            CheckpointMode::Sync,
+        );
+        feed_losses(&mut ctl, 64, 0.9);
+        for iter in (4..64).step_by(4) {
+            ctl.observe_failure(iter, 0.5);
+        }
+        assert!(ctl.decide(16).is_none(), "window = 0 disables the controller");
+        assert!(ctl.regret_per_iter(64) > 0.0);
+    }
+}

@@ -43,7 +43,7 @@ use crate::util::cli::Args;
 use crate::util::rng::Rng;
 use crate::util::stats::{summarize, Summary};
 
-use super::spec::{CellAction, DeployMode, NormSpec, PerturbSpec, Scenario};
+use super::spec::{CellAction, DeployMode, NormSpec, PerturbSpec, PolicyMode, Scenario};
 
 /// Dataset seed shared with the `examples/fig*.rs` drivers.
 const DATA_SEED: u64 = 1234;
@@ -491,6 +491,12 @@ fn build_jobs(
                         scrub_interval: scn.storage.scrub_interval,
                         compact_threshold: scn.storage.compact_threshold,
                         compact_min_bytes: scn.storage.compact_min_bytes as u64,
+                        // Checkpoint bandwidth is priced into every
+                        // cell's cost so adaptive-vs-static comparisons
+                        // charge both sides the same way.
+                        dump_cost_iters: scn.advisor.dump_cost_iters,
+                        adaptive: (cell.policy.unwrap_or(scn.policy) == PolicyMode::Adaptive)
+                            .then(|| scn.advisor.config(ckpt.interval)),
                     };
                     match scn.deploy {
                         DeployMode::Harness => {
@@ -610,6 +616,7 @@ fn run_cluster_job(
         detect: Detect::Immediate,
         stop_at_loss: Some(traj.threshold),
         recorder: rec.clone(),
+        adaptive: setup.adaptive,
     };
     let report = run_cluster_training(trainer, store.clone(), &job)?;
     if let Some(path) = &setup.trace_path {
@@ -640,6 +647,10 @@ fn run_cluster_job(
     reg.counter("repaired_records").set(store.repaired_records());
     reg.counter("repaired_bytes").set(store.repaired_bytes());
     reg.counter("degraded_records").set(report.degraded_records);
+    if setup.adaptive.is_some() {
+        reg.counter("policy_switches").set(report.policy_switches);
+        reg.counter("interval_chosen").set(report.final_interval as u64);
+    }
     Ok(Outcome {
         cost: total as f64 - traj.converged_iters as f64,
         // ‖δ‖ is measured inside the cluster's recovery coordinator:

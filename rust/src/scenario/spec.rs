@@ -135,6 +135,103 @@ impl StorageSpec {
     }
 }
 
+/// Fault-tolerance policy axis: does a trial hold the configured
+/// checkpoint policy, or let the runtime controller retune it?
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyMode {
+    /// Every checkpoint knob stays fixed for the whole trial (the
+    /// default — every pre-existing scenario means this).
+    #[default]
+    Static,
+    /// A [`crate::policy::PolicyController`] watches the live loss and
+    /// failure arrivals and retunes interval/k and sync↔async at
+    /// iteration boundaries mid-trial.
+    Adaptive,
+}
+
+impl FromStr for PolicyMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "static" => Ok(PolicyMode::Static),
+            "adaptive" => Ok(PolicyMode::Adaptive),
+            other => Err(format!("unknown policy mode '{other}' (static|adaptive)")),
+        }
+    }
+}
+
+impl std::fmt::Display for PolicyMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PolicyMode::Static => "static",
+            PolicyMode::Adaptive => "adaptive",
+        })
+    }
+}
+
+/// Tuning of the adaptive controller (`[advisor]` table), shared by every
+/// adaptive cell. `dump_cost_iters` does double duty: it is the
+/// controller's dump-vs-rework price *and* it is charged into every
+/// trial's iteration cost (static cells too), so adaptive-vs-static
+/// comparisons pay for checkpoint bandwidth on both sides.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdvisorSpec {
+    /// Iterations between controller decision points.
+    pub window: usize,
+    /// Cost of one full-size checkpoint dump, in iteration units.
+    pub dump_cost_iters: f64,
+    /// Relative overhead improvement required before a switch.
+    pub hysteresis: f64,
+    /// Prior lost-parameter fraction until the first observed failure.
+    pub lost_fraction: f64,
+}
+
+impl Default for AdvisorSpec {
+    fn default() -> Self {
+        let d = crate::policy::PolicyConfig::default();
+        AdvisorSpec {
+            window: d.window,
+            dump_cost_iters: d.dump_cost_iters,
+            hysteresis: d.hysteresis,
+            lost_fraction: d.lost_fraction,
+        }
+    }
+}
+
+impl AdvisorSpec {
+    /// The controller config for a cell whose base checkpoint interval is
+    /// `base_interval` (the candidate grid is derived from it).
+    pub fn config(&self, base_interval: usize) -> crate::policy::PolicyConfig {
+        crate::policy::PolicyConfig {
+            window: self.window,
+            dump_cost_iters: self.dump_cost_iters,
+            hysteresis: self.hysteresis,
+            base_interval,
+            lost_fraction: self.lost_fraction,
+        }
+    }
+
+    fn validate(&self, ctx: &str) -> Result<()> {
+        if !(0.0..1.0).contains(&self.hysteresis) {
+            bail!("{ctx}: advisor hysteresis must be in [0, 1), got {}", self.hysteresis);
+        }
+        if !(0.0..=1.0).contains(&self.lost_fraction) {
+            bail!(
+                "{ctx}: advisor lost_fraction must be in [0, 1], got {}",
+                self.lost_fraction
+            );
+        }
+        if self.dump_cost_iters < 0.0 {
+            bail!(
+                "{ctx}: advisor dump_cost_iters must be >= 0, got {}",
+                self.dump_cost_iters
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Which execution substrate a scenario's failure cells run on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum DeployMode {
@@ -202,6 +299,9 @@ pub struct CellSpec {
     pub action: CellAction,
     pub mode: Option<RecoveryMode>,
     pub checkpoint: Option<CheckpointSpec>,
+    /// Per-cell override of the scenario-level policy axis, so one sweep
+    /// can pit `policy = "adaptive"` against fixed-interval static cells.
+    pub policy: Option<PolicyMode>,
 }
 
 /// A full declarative experiment.
@@ -226,6 +326,12 @@ pub struct Scenario {
     /// Geometric parameter for failure iterations (§5.3).
     pub fail_geom_p: f64,
     pub checkpoint: CheckpointSpec,
+    /// Scenario-level policy axis (`policy = "static" | "adaptive"`),
+    /// overridable per cell.
+    pub policy: PolicyMode,
+    /// Adaptive-controller tuning (`[advisor]`); its `dump_cost_iters`
+    /// also prices checkpoint dumps into every cell's iteration cost.
+    pub advisor: AdvisorSpec,
     pub storage: StorageSpec,
     /// Root directory for disk-backed trials: every trial gets its own
     /// on-disk sharded store under it (`None` = in-memory shards). A
@@ -291,9 +397,9 @@ impl Scenario {
         let obj = v.as_obj().context("scenario: top level must be a table/object")?;
         const TOP_KEYS: &[&str] = &[
             "name", "model", "panels", "seed", "trials", "workers", "target_iters",
-            "max_iters", "perturb_iter", "fail_geom_p", "checkpoint", "storage",
-            "checkpoint_dir", "chaos", "deploy", "ps_nodes", "recovery", "output",
-            "obs", "cell", "cells",
+            "max_iters", "perturb_iter", "fail_geom_p", "checkpoint", "policy",
+            "advisor", "storage", "checkpoint_dir", "chaos", "deploy", "ps_nodes",
+            "recovery", "output", "obs", "cell", "cells",
         ];
         for key in obj.keys() {
             if !TOP_KEYS.contains(&key.as_str()) {
@@ -327,6 +433,17 @@ impl Scenario {
         let checkpoint = match obj.get("checkpoint") {
             None => CheckpointSpec::default(),
             Some(c) => parse_checkpoint(c, &CheckpointSpec::default(), &ctx)?,
+        };
+
+        let policy = match opt_str(obj, "policy", &ctx)? {
+            None => PolicyMode::Static,
+            Some(s) => PolicyMode::from_str(&s)
+                .map_err(|e| anyhow::anyhow!("{ctx}: policy: {e}"))?,
+        };
+
+        let advisor = match obj.get("advisor") {
+            None => AdvisorSpec::default(),
+            Some(a) => parse_advisor(a, &ctx)?,
         };
 
         let storage = match obj.get("storage") {
@@ -380,6 +497,8 @@ impl Scenario {
             perturb_iter: opt_usize(obj, "perturb_iter", &ctx)?,
             fail_geom_p: opt_f64(obj, "fail_geom_p", &ctx)?.unwrap_or(0.05),
             checkpoint,
+            policy,
+            advisor,
             storage,
             checkpoint_dir: opt_str(obj, "checkpoint_dir", &ctx)?,
             chaos,
@@ -403,6 +522,7 @@ impl Scenario {
             bail!("{ctx}: fail_geom_p must be in (0, 1], got {}", self.fail_geom_p);
         }
         self.checkpoint.validate(&ctx)?;
+        self.advisor.validate(&ctx)?;
         self.storage.validate(&ctx)?;
         self.chaos
             .validate(self.storage.shards)
@@ -487,6 +607,8 @@ impl Scenario {
         }
         obj.insert("fail_geom_p".into(), Json::Num(self.fail_geom_p));
         obj.insert("checkpoint".into(), checkpoint_json(&self.checkpoint));
+        obj.insert("policy".into(), Json::from(self.policy.to_string()));
+        obj.insert("advisor".into(), advisor_json(&self.advisor));
         obj.insert("storage".into(), storage_json(&self.storage));
         if let Some(d) = &self.checkpoint_dir {
             obj.insert("checkpoint_dir".into(), Json::from(d.as_str()));
@@ -546,6 +668,15 @@ impl Scenario {
                 DeployMode::Cluster => format!("cluster ({} PS nodes)", self.ps_nodes),
             }
         ));
+        let any_adaptive = self.policy == PolicyMode::Adaptive
+            || self.cells.iter().any(|c| c.policy == Some(PolicyMode::Adaptive));
+        if any_adaptive {
+            out.push_str(&format!(
+                "  policy: adaptive cells retune live (window {}, dump cost {} iters, \
+                 hysteresis {})\n",
+                self.advisor.window, self.advisor.dump_cost_iters, self.advisor.hysteresis
+            ));
+        }
         if self.storage.compact_threshold > 0.0 {
             out.push_str(&format!(
                 "  compaction: garbage ratio >= {:.2} at flush fences (min {} bytes)\n",
@@ -585,7 +716,8 @@ impl Scenario {
                 CellAction::Fail(plan) => format!("fail {plan:?}"),
             };
             let mode = c.mode.map(|m| format!(" mode={}", mode_str(m))).unwrap_or_default();
-            out.push_str(&format!("  cell '{}': {action}{mode}\n", c.label));
+            let policy = c.policy.map(|p| format!(" policy={p}")).unwrap_or_default();
+            out.push_str(&format!("  cell '{}': {action}{mode}{policy}\n", c.label));
         }
         out
     }
@@ -597,6 +729,15 @@ fn checkpoint_json(c: &CheckpointSpec) -> Json {
     m.insert("k".into(), Json::from(c.k));
     m.insert("selector".into(), Json::from(c.selector.to_string()));
     m.insert("mode".into(), Json::from(c.mode.to_string()));
+    Json::Obj(m)
+}
+
+fn advisor_json(a: &AdvisorSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("window".into(), Json::from(a.window));
+    m.insert("dump_cost_iters".into(), Json::Num(a.dump_cost_iters));
+    m.insert("hysteresis".into(), Json::Num(a.hysteresis));
+    m.insert("lost_fraction".into(), Json::Num(a.lost_fraction));
     Json::Obj(m)
 }
 
@@ -623,6 +764,9 @@ fn cell_json(c: &CellSpec) -> Json {
         m.insert("k".into(), Json::from(ck.k));
         m.insert("selector".into(), Json::from(ck.selector.to_string()));
         m.insert("checkpoint_mode".into(), Json::from(ck.mode.to_string()));
+    }
+    if let Some(p) = c.policy {
+        m.insert("policy".into(), Json::from(p.to_string()));
     }
     match &c.action {
         CellAction::Perturb(PerturbSpec::Random { norm }) => {
@@ -750,6 +894,26 @@ fn parse_checkpoint(v: &Json, base: &CheckpointSpec, ctx: &str) -> Result<Checkp
         k: opt_usize(obj, "k", ctx)?.unwrap_or(base.k),
         selector,
         mode,
+    })
+}
+
+/// Parse the `[advisor]` table: adaptive-controller tuning.
+fn parse_advisor(v: &Json, ctx: &str) -> Result<AdvisorSpec> {
+    let obj = v
+        .as_obj()
+        .with_context(|| format!("{ctx}: 'advisor' must be a table"))?;
+    const ADVISOR_KEYS: &[&str] = &["window", "dump_cost_iters", "hysteresis", "lost_fraction"];
+    for key in obj.keys() {
+        if !ADVISOR_KEYS.contains(&key.as_str()) {
+            bail!("{ctx}: advisor: unknown key '{key}' (expected one of {ADVISOR_KEYS:?})");
+        }
+    }
+    let base = AdvisorSpec::default();
+    Ok(AdvisorSpec {
+        window: opt_usize(obj, "window", ctx)?.unwrap_or(base.window),
+        dump_cost_iters: opt_f64(obj, "dump_cost_iters", ctx)?.unwrap_or(base.dump_cost_iters),
+        hysteresis: opt_f64(obj, "hysteresis", ctx)?.unwrap_or(base.hysteresis),
+        lost_fraction: opt_f64(obj, "lost_fraction", ctx)?.unwrap_or(base.lost_fraction),
     })
 }
 
@@ -1012,6 +1176,7 @@ fn parse_cell(
     const PERTURB_COMMON: &[&str] = &["label", "perturb", "fail"];
     const FAIL_COMMON: &[&str] = &[
         "label", "perturb", "fail", "mode", "interval", "k", "selector", "checkpoint_mode",
+        "policy",
     ];
     let check_keys = |common: &[&str], allowed: &[&str], kind: &str| -> Result<()> {
         for key in obj.keys() {
@@ -1103,6 +1268,13 @@ fn parse_cell(
         }
     };
 
+    let policy = match opt_str(obj, "policy", &ctx)? {
+        None => None,
+        Some(s) => {
+            Some(PolicyMode::from_str(&s).map_err(|e| anyhow::anyhow!("{ctx}: policy: {e}"))?)
+        }
+    };
+
     // Per-cell checkpoint override: missing components inherit the
     // scenario-level spec. `checkpoint_mode` is the cell-level spelling
     // of `[checkpoint] mode` ('mode' on a cell is the recovery mode), so
@@ -1125,7 +1297,7 @@ fn parse_cell(
         None
     };
 
-    Ok(CellSpec { label, action, mode, checkpoint })
+    Ok(CellSpec { label, action, mode, checkpoint, policy })
 }
 
 #[cfg(test)]
@@ -1552,6 +1724,77 @@ norm_log10 = [-2.0, 0.0]
         )
         .unwrap_err();
         assert!(format!("{e:?}").contains("cloud"), "{e:?}");
+    }
+
+    #[test]
+    fn policy_axis_and_advisor_parse_and_roundtrip() {
+        let s = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\npolicy=\"static\"\n\
+             [advisor]\nwindow=8\ndump_cost_iters=2.0\nhysteresis=0.05\n\
+             [[cell]]\nlabel=\"fixed\"\nfail=\"single\"\nfraction=0.5\n\
+             [[cell]]\nlabel=\"adaptive\"\nfail=\"single\"\nfraction=0.5\npolicy=\"adaptive\"\n",
+        )
+        .unwrap();
+        assert_eq!(s.policy, PolicyMode::Static);
+        assert_eq!(s.advisor.window, 8);
+        assert!((s.advisor.dump_cost_iters - 2.0).abs() < 1e-12);
+        assert!((s.advisor.hysteresis - 0.05).abs() < 1e-12);
+        // Unset advisor keys inherit the controller defaults.
+        assert!((s.advisor.lost_fraction - 0.25).abs() < 1e-12);
+        assert_eq!(s.cells[0].policy, None);
+        assert_eq!(s.cells[1].policy, Some(PolicyMode::Adaptive));
+        let desc = s.describe();
+        assert!(desc.contains("policy: adaptive"), "{desc}");
+        assert!(desc.contains("policy=adaptive"), "{desc}");
+        let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, again);
+
+        // The derived controller config carries the cell's base interval.
+        let cfg = s.advisor.config(12);
+        assert_eq!((cfg.window, cfg.base_interval), (8, 12));
+
+        // Omitted entirely: static, default advisor.
+        let d = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(d.policy, PolicyMode::Static);
+        assert_eq!(d.advisor, AdvisorSpec::default());
+        assert!(!d.describe().contains("policy: adaptive"));
+    }
+
+    #[test]
+    fn policy_axis_rejects_bad_values_by_name() {
+        // Bad axis value names the options.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\npolicy=\"clever\"\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("clever"), "{e:?}");
+        // Unknown advisor keys fail loudly.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[advisor]\nwindows=8\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("windows"), "{e:?}");
+        // Out-of-range hysteresis is rejected by name.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[advisor]\nhysteresis=1.5\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("hysteresis"), "{e:?}");
+        // A perturbation cell never checkpoints, so the axis is rejected
+        // there (like checkpoint_mode).
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n\
+             [[cell]]\nlabel=\"x\"\nperturb=\"reset\"\nfraction=0.5\npolicy=\"adaptive\"\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("policy"), "{e:?}");
     }
 
     #[test]

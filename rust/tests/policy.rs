@@ -1,0 +1,125 @@
+//! Integration tests for the runtime policy controller (`scar::policy`)
+//! driven through the harness: live strategy switches land only at
+//! observation-window fences, and adaptive runs stay byte-identical
+//! across storage backends, checkpoint modes, and repeats on one seed.
+
+use scar::checkpoint::{CheckpointMode, CheckpointPolicy};
+use scar::failure::FailureEvent;
+use scar::harness::{self, CheckpointSetup};
+use scar::models::synthetic::SyntheticTrainer;
+use scar::obs::{parse_jsonl, EventKind};
+use scar::policy::PolicyConfig;
+use scar::recovery::RecoveryMode;
+
+const WINDOW: usize = 8;
+
+/// A bursty pair of losses early, one straggler later: enough arrivals
+/// to warm the rate estimator, flip the mode to sync, and flip it back.
+fn burst_then_quiet(n_atoms: usize) -> Vec<FailureEvent> {
+    let lose = |iter: usize, step: usize| FailureEvent {
+        iter,
+        lost_atoms: (0..n_atoms).step_by(step).collect(),
+        failed_nodes: vec![],
+    };
+    vec![lose(9, 2), lose(13, 3), lose(33, 2)]
+}
+
+fn adaptive_cfg() -> PolicyConfig {
+    PolicyConfig { window: WINDOW, dump_cost_iters: 2.0, ..PolicyConfig::default() }
+}
+
+fn adaptive_setup(mode: CheckpointMode) -> CheckpointSetup {
+    let mut setup = CheckpointSetup::new(CheckpointPolicy::full(WINDOW), mode, 3, 2);
+    setup.adaptive = Some(adaptive_cfg());
+    setup.dump_cost_iters = 2.0;
+    setup
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("scar-policy-it-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn adaptive_switches_land_only_at_window_fences() {
+    let mut t = SyntheticTrainer::new(32, 0.85, 5);
+    let traj = harness::run_trajectory(&mut t, 7, 90, 50).unwrap();
+    let events = burst_then_quiet(32);
+    let trace = tmp("fences").join("trial.jsonl");
+    let mut setup = adaptive_setup(CheckpointMode::Async);
+    setup.trace_path = Some(trace.clone());
+    let r = harness::run_plan_trial_with(&mut t, &traj, &setup, RecoveryMode::Partial, &events, 77)
+        .unwrap();
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let switches: Vec<usize> = parse_jsonl(&text)
+        .unwrap()
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::PolicySwitch { .. }))
+        .map(|e| e.iter)
+        .collect();
+    // The failure burst (iters 9 and 13) forces at least one live switch
+    // once the estimator warms up.
+    assert!(!switches.is_empty(), "expected live policy switches, trace: {text}");
+    for iter in &switches {
+        assert!(
+            *iter > 0 && *iter % WINDOW == 0,
+            "switch at iter {iter} is off the window fence (window {WINDOW}): {switches:?}"
+        );
+    }
+    // The registry counter agrees with the narrated trace.
+    assert_eq!(r.metrics["policy_switches"], switches.len() as f64);
+    assert!(r.metrics["interval_chosen"] >= 1.0);
+    std::fs::remove_dir_all(tmp("fences")).ok();
+}
+
+#[test]
+fn adaptive_runs_are_byte_identical_across_backends_modes_and_repeats() {
+    let mut t = SyntheticTrainer::new(32, 0.85, 5);
+    let traj = harness::run_trajectory(&mut t, 7, 90, 50).unwrap();
+    let events = burst_then_quiet(32);
+    let mut fingerprints = Vec::new();
+    let mut run = |label: &str, mode: CheckpointMode, dir: Option<std::path::PathBuf>| {
+        let mut setup = adaptive_setup(mode);
+        setup.checkpoint_dir = dir;
+        let r = harness::run_plan_trial_with(
+            &mut t,
+            &traj,
+            &setup,
+            RecoveryMode::Partial,
+            &events,
+            77,
+        )
+        .unwrap();
+        let fp = (
+            r.iteration_cost.to_bits(),
+            r.censored,
+            r.recovery.delta_norm.to_bits(),
+            r.metrics["policy_switches"].to_bits(),
+            r.metrics["interval_chosen"].to_bits(),
+            r.metrics["policy_regret"].to_bits(),
+        );
+        fingerprints.push((label.to_string(), fp));
+    };
+    run("mem-sync", CheckpointMode::Sync, None);
+    run("mem-sync-again", CheckpointMode::Sync, None);
+    run("mem-async", CheckpointMode::Async, None);
+    run("disk-sync", CheckpointMode::Sync, Some(tmp("id-ds")));
+    run("disk-async", CheckpointMode::Async, Some(tmp("id-da")));
+    let by_label = |want: &str| {
+        fingerprints.iter().find(|(l, _)| l == want).map(|(_, fp)| fp.clone()).unwrap()
+    };
+    // Same seed, same starting mode: repeats and backends are fully
+    // byte-identical — every metric, including the switch count.
+    assert_eq!(by_label("mem-sync"), by_label("mem-sync-again"), "repeat diverged");
+    assert_eq!(by_label("mem-sync"), by_label("disk-sync"), "disk backend diverged (sync)");
+    assert_eq!(by_label("mem-async"), by_label("disk-async"), "disk backend diverged (async)");
+    // Across starting modes the controller's sync/async flip count may
+    // legitimately differ (it depends on the held mode), but decisions
+    // are iteration-clocked functions of the same losses and failures,
+    // so cost, censoring, ‖δ‖, and the final interval all agree.
+    let (s, a) = (by_label("mem-sync"), by_label("mem-async"));
+    assert_eq!((s.0, s.1, s.2, s.4), (a.0, a.1, a.2, a.4), "sync vs async start diverged");
+    // The controller actually acted — this is not a trivially static run.
+    assert!(f64::from_bits(a.3) >= 1.0, "expected at least one switch");
+    std::fs::remove_dir_all(tmp("id-ds")).ok();
+    std::fs::remove_dir_all(tmp("id-da")).ok();
+}
