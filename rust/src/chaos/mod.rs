@@ -921,7 +921,7 @@ impl ShardBackend for ChaosBackend {
         self.inner.on_disk_bytes()
     }
 
-    fn compact(&mut self) -> Result<Option<CompactionStats>> {
+    fn compact(&mut self, max_pass_bytes: u64) -> Result<Option<CompactionStats>> {
         if self.down_at(self.epoch) {
             bail!("shard {} is down (injected kill)", self.shard);
         }
@@ -931,14 +931,22 @@ impl ShardBackend for ChaosBackend {
             // swap) never happens. In-process reads are unaffected; a
             // reopen recovers the last manifest that reached the disk
             // and removes the orphaned fresh segments.
-            self.inner.compact_abandoned()?;
+            self.inner.compact_abandoned(max_pass_bytes)?;
             return Ok(None);
         }
-        self.inner.compact()
+        self.inner.compact(max_pass_bytes)
     }
 
-    fn compact_abandoned(&mut self) -> Result<()> {
-        self.inner.compact_abandoned()
+    fn compact_abandoned(&mut self, max_pass_bytes: u64) -> Result<()> {
+        self.inner.compact_abandoned(max_pass_bytes)
+    }
+
+    fn fsyncs(&self) -> u64 {
+        self.inner.fsyncs()
+    }
+
+    fn set_group_commit(&mut self, on: bool) {
+        self.inner.set_group_commit(on);
     }
 
     fn corrupt_record(&mut self, atom: usize) -> Result<bool> {

@@ -112,6 +112,15 @@ pub struct AsyncCheckpointer {
     compact_threshold: f64,
     /// Minimum on-disk shard size before compaction is worthwhile.
     compact_min_bytes: u64,
+    /// Per-pass segment-byte budget for generational compaction
+    /// (0 = monolithic full-shard passes, the default).
+    compact_max_pass_bytes: u64,
+    /// Flush fences run so far (denominator for per-fence gauges).
+    fences: u64,
+    /// Wall-clock of the most recent flush fence, in milliseconds.
+    last_fence_wall_ms: f64,
+    /// Total wall-clock across all flush fences, in milliseconds.
+    total_fence_wall_ms: f64,
     /// Atoms selectively rebuilt onto survivors after shard deaths.
     rebuilt_atoms: u64,
     /// Payload bytes those rebuilds re-persisted (the selective-recovery
@@ -238,6 +247,10 @@ impl AsyncCheckpointer {
             last_tick_iter: usize::MAX,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
+            compact_max_pass_bytes: 0,
+            fences: 0,
+            last_fence_wall_ms: 0.0,
+            total_fence_wall_ms: 0.0,
             rebuilt_atoms: 0,
             rebuilt_bytes: 0,
             readopted_atoms: 0,
@@ -284,6 +297,37 @@ impl AsyncCheckpointer {
         self.compact_threshold = threshold;
         self.compact_min_bytes = min_bytes;
         self
+    }
+
+    /// Bound each triggered compaction pass to a generational fold of at
+    /// most `max_pass_bytes` segment bytes (worst-garbage segments
+    /// first), so pass latency stays flat regardless of shard size.
+    /// `0` (the default) keeps monolithic full-shard passes.
+    pub fn with_compaction_budget(mut self, max_pass_bytes: u64) -> AsyncCheckpointer {
+        self.compact_max_pass_bytes = max_pass_bytes;
+        self
+    }
+
+    /// Flush fences run so far.
+    pub fn fences(&self) -> u64 {
+        self.fences
+    }
+
+    /// Measured wall-clock of the most recent flush fence, in
+    /// milliseconds. Observability only — wall-clock never feeds a
+    /// decision, so byte-determinism is untouched; the policy controller
+    /// can consume it as a measured dump-cost signal.
+    pub fn last_fence_wall_ms(&self) -> f64 {
+        self.last_fence_wall_ms
+    }
+
+    /// Mean measured flush-fence wall-clock so far, in milliseconds.
+    pub fn avg_fence_wall_ms(&self) -> f64 {
+        if self.fences == 0 {
+            0.0
+        } else {
+            self.total_fence_wall_ms / self.fences as f64
+        }
     }
 
     pub fn mode(&self) -> CheckpointMode {
@@ -646,6 +690,7 @@ impl AsyncCheckpointer {
     /// disk shards are folded into fresh segments — the store is settled
     /// here, so the trigger fires at the same points in every run.
     pub fn flush(&mut self) -> Result<()> {
+        let fence_start = std::time::Instant::now();
         if self.mode == CheckpointMode::Async {
             self.wait_pending_at_most(0)?;
             if let Some(e) = self.shared.pending.lock().unwrap().error.take() {
@@ -676,8 +721,30 @@ impl AsyncCheckpointer {
             self.rec.record(at, EventKind::Flush { watermark: at });
         }
         if self.compact_threshold > 0.0 {
-            self.store.compact_if_needed(self.compact_threshold, self.compact_min_bytes)?;
+            let runs = self.store.compact_if_needed(
+                self.compact_threshold,
+                self.compact_min_bytes,
+                self.compact_max_pass_bytes,
+            )?;
+            if self.rec.is_enabled() {
+                for (shard, stats) in &runs {
+                    self.rec.record(
+                        self.last_barrier_iter,
+                        EventKind::Compaction {
+                            shard: *shard,
+                            generation: stats.generation,
+                            segments: stats.segments_compacted as u64,
+                            reclaimed: stats.reclaimed_bytes,
+                        },
+                    );
+                }
+            }
         }
+        // Measured, not modeled: the gauge the policy controller can
+        // later learn dump costs from. Never feeds a decision here.
+        self.last_fence_wall_ms = fence_start.elapsed().as_secs_f64() * 1e3;
+        self.total_fence_wall_ms += self.last_fence_wall_ms;
+        self.fences += 1;
         Ok(())
     }
 

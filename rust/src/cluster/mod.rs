@@ -396,6 +396,9 @@ pub struct ClusterJob {
     pub compact_threshold: f64,
     /// Minimum on-disk shard size before compaction runs.
     pub compact_min_bytes: u64,
+    /// Per-pass segment-byte budget for generational compaction
+    /// (0 = monolithic full-shard passes).
+    pub compact_max_pass_bytes: u64,
     /// `(iteration, node)` kill schedule: same-iteration entries model a
     /// correlated rack loss, increasing iterations a cascade. Nodes are
     /// not revived.
@@ -428,6 +431,7 @@ impl ClusterJob {
             max_pending: 0,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
+            compact_max_pass_bytes: 0,
             kills: Vec::new(),
             seed,
             detect: Detect::Heartbeat(Duration::from_millis(20)),
@@ -504,6 +508,7 @@ pub fn run_cluster_training(
     )?
     .with_max_pending(job.max_pending)
     .with_compaction(job.compact_threshold, job.compact_min_bytes)
+    .with_compaction_budget(job.compact_max_pass_bytes)
     .with_recorder(job.recorder.clone());
     if job.adaptive.is_some() {
         // The controller may flip sync → async mid-run; make sure the

@@ -46,6 +46,13 @@ pub struct RunConfig {
     pub storage_compact_threshold: f64,
     /// Minimum on-disk shard bytes before compaction runs.
     pub storage_compact_min_bytes: usize,
+    /// Per-pass segment-byte budget for generational compaction
+    /// (0 = monolithic full-shard passes).
+    pub storage_compact_max_bytes_per_pass: usize,
+    /// Group-commit write batching: one coalesced write + one durability
+    /// barrier per shard per fence (byte-identical to per-record writes;
+    /// no-op on memory shards).
+    pub storage_group_commit: bool,
     /// Erasure-coded parity shards (0 = off, 1 = single-parity XOR
     /// coding): flush fences encode each stripe of atom records into a
     /// parity record, so a dead shard's slice is reconstructable from
@@ -100,6 +107,8 @@ impl Default for RunConfig {
             storage_max_pending: 0,
             storage_compact_threshold: 0.0,
             storage_compact_min_bytes: 0,
+            storage_compact_max_bytes_per_pass: 0,
+            storage_group_commit: false,
             storage_parity: 0,
             selector: Selector::Priority,
             recovery: RecoveryMode::Partial,
@@ -172,6 +181,13 @@ impl RunConfig {
             "storage_compact_min_bytes" => {
                 self.storage_compact_min_bytes =
                     value.parse().context("storage_compact_min_bytes")?
+            }
+            "storage_compact_max_bytes_per_pass" => {
+                self.storage_compact_max_bytes_per_pass =
+                    value.parse().context("storage_compact_max_bytes_per_pass")?
+            }
+            "storage_group_commit" => {
+                self.storage_group_commit = value.parse().context("storage_group_commit")?
             }
             "storage_parity" => {
                 self.storage_parity = value.parse().context("storage_parity")?
@@ -353,6 +369,11 @@ mod tests {
         assert_eq!(cfg.storage_compact_min_bytes, 1024);
         cfg.apply("storage_parity", "1").unwrap();
         assert_eq!(cfg.storage_parity, 1);
+        cfg.apply("storage_compact_max_bytes_per_pass", "65536").unwrap();
+        assert_eq!(cfg.storage_compact_max_bytes_per_pass, 65536);
+        cfg.apply("storage_group_commit", "true").unwrap();
+        assert!(cfg.storage_group_commit);
+        assert!(cfg.apply("storage_group_commit", "yes").is_err());
         assert!(cfg.apply("storage_shards", "0").is_err());
         assert!(cfg.apply("checkpoint_mode", "never").is_err());
         assert!(cfg.apply("storage_compact_threshold", "1.5").is_err());

@@ -168,6 +168,15 @@ pub struct CheckpointSetup {
     pub compact_threshold: f64,
     /// Minimum on-disk shard size before compaction runs.
     pub compact_min_bytes: u64,
+    /// Per-pass segment-byte budget for generational compaction
+    /// (`storage.compact_max_bytes_per_pass`; 0 = monolithic full-shard
+    /// passes).
+    pub compact_max_pass_bytes: u64,
+    /// Group-commit write batching (`storage.group_commit`): one
+    /// coalesced write + one durability barrier per shard per fence
+    /// instead of a barrier per record plus a manifest rewrite. Byte-
+    /// identical to the per-record path; no-op on memory shards.
+    pub group_commit: bool,
     /// Write the trial's flight-recorder trace to this JSONL file
     /// (`None` = recorder disabled, the default — a single untaken
     /// branch per would-be event). Tracing never changes results: the
@@ -215,6 +224,8 @@ impl CheckpointSetup {
             checkpoint_dir: None,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
+            compact_max_pass_bytes: 0,
+            group_commit: false,
             trace_path: None,
             dump_cost_iters: 0.0,
             adaptive: None,
@@ -254,7 +265,7 @@ impl CheckpointSetup {
                 self.chaos.disk_store(dir, self.shards)?.with_disk_parity(dir, self.parity)?
             }
         };
-        Ok(store.with_scrub_interval(self.scrub_interval))
+        Ok(store.with_scrub_interval(self.scrub_interval).with_group_commit(self.group_commit))
     }
 }
 
@@ -442,6 +453,7 @@ pub fn run_plan_trial_with(
     )?
     .with_max_pending(setup.max_pending)
     .with_compaction(setup.compact_threshold, setup.compact_min_bytes)
+    .with_compaction_budget(setup.compact_max_pass_bytes)
     .with_recorder(rec.clone());
     if setup.adaptive.is_some() {
         // The controller may flip sync → async mid-run; make sure the
@@ -554,11 +566,16 @@ pub fn run_plan_trial_with(
     let skipped_bytes = ck.skipped_bytes();
     let backpressure_stalls = ck.backpressure_stalls();
     let final_interval = ck.policy().interval;
+    let fences = ck.fences();
+    let fence_wall_ms = ck.avg_fence_wall_ms();
     if let Some(ctl) = ctl.as_mut() {
         // Stalls are wall-clock observability, outside the determinism
         // surface: the controller records them for reporting but never
         // reads them in `decide`.
         ctl.note_stalls(backpressure_stalls);
+        // Measured fence wall-clock feeds the controller's future
+        // learned dump-cost model — same reporting-only rule as stalls.
+        ctl.observe_fence_wall_ms(ck.last_fence_wall_ms());
     }
     ck.finish()?;
     if let Some(path) = &setup.trace_path {
@@ -588,6 +605,13 @@ pub fn run_plan_trial_with(
     reg.counter("skipped_bytes").set(skipped_bytes);
     reg.counter("backpressure_stalls").set(backpressure_stalls);
     reg.counter("degraded_records").set(store.degraded_records());
+    reg.counter("fence_fsyncs").set(store.total_fsyncs());
+    reg.counter("segments_compacted").set(store.segments_compacted());
+    reg.counter("compact_pass_bytes").set(store.compact_pass_bytes());
+    if fences > 0 {
+        reg.gauge("fsyncs_per_fence").set(store.total_fsyncs() as f64 / fences as f64);
+        reg.gauge("fence_wall_ms").set(fence_wall_ms);
+    }
     if let Some(ctl) = &ctl {
         reg.counter("policy_switches").set(ctl.switches());
         reg.counter("interval_chosen").set(final_interval as u64);

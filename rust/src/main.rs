@@ -92,12 +92,13 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|policy-
                                   iteration cost <= every static cell's
                                   (per panel; labels containing
                                   \"adaptive\" are the adaptive cells)
-  bench   [--quick] [--out BENCH_7.json]  hot-path benchmark sweep over
+  bench   [--quick] [--out BENCH_10.json]  hot-path benchmark sweep over
           [--dir d]               {mem,disk} x {sync,async} x parity
                                   {off,on}: fence wall-clock + stripes
                                   re-encoded, checkpoint bytes written vs
-                                  delta-skipped, serial vs parallel
-                                  rebuild, allocations avoided
+                                  delta-skipped, per-record vs group-commit
+                                  fsyncs, budgeted compaction passes,
+                                  serial vs parallel rebuild
   trace   <trace.jsonl>         inspect a flight-recorder trace: per-shard
           [--render out.svg]      SVG timeline, fault -> recovery latency
           [--chrome out.json]     table, Chrome trace_event conversion
@@ -105,7 +106,8 @@ USAGE: scar <info|train|cluster|run-scenario|bound|advisor|compact|trend|policy-
 Config keys (for --set): model seed iters target_iters ps_nodes workers
   checkpoint_interval checkpoint_k checkpoint_mode(sync|async) selector
   recovery storage_shards storage_writers storage_max_pending
-  storage_compact_threshold storage_compact_min_bytes storage_parity
+  storage_compact_threshold storage_compact_min_bytes
+  storage_compact_max_bytes_per_pass storage_group_commit storage_parity
   fail_fraction fail_geom_p fail_plan fail_nodes fail_cascade_extra
   fail_cascade_gap fail_flaky_period fail_flaky_prob fail_flaky_max
   checkpoint_dir chaos (e.g. \"kill:1@6..9,part:0@4..12,flaky:2@5p8d3c2,
@@ -115,7 +117,8 @@ Config keys (for --set): model seed iters target_iters ps_nodes workers
 Scenario files additionally take [chaos] (per-shard
 kill/slow/torn/partition/flaky/fsync/bitflip/replay schedules),
 checkpoint_dir (disk-backed trials), [storage]
-compact_threshold/compact_min_bytes/parity, deploy =
+compact_threshold/compact_min_bytes/compact_max_bytes_per_pass/
+group_commit/parity, deploy =
 \"harness\"|\"cluster\", ps_nodes, [obs] trace_dir (per-trial
 flight-recorder JSONL traces), policy = \"static\"|\"adaptive\" (per
 scenario or per cell: the runtime policy controller retunes the
@@ -345,25 +348,32 @@ fn cmd_trend(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `scar bench`: the hot-path benchmark sweep behind `BENCH_7.json`.
+/// `scar bench`: the hot-path benchmark sweep behind `BENCH_10.json`.
 ///
-/// Two pinned workloads:
+/// Four pinned workloads:
 /// * **fence**: a single-atom-update checkpoint loop over every
 ///   {mem, disk} × {sync, async} × parity {0, 1} cell — per-fence stripes
 ///   re-encoded (the dirty-only fence's work unit), checkpoint bytes
-///   written vs delta-skipped, and the fence loop's wall-clock.
+///   written vs delta-skipped, durability barriers paid, and the fence
+///   loop's wall-clock. Disk cells run with group-commit on.
+/// * **group-commit**: the same multi-atom fence schedule driven through
+///   the per-record and batched disk write paths, counting durability
+///   barriers each pays.
+/// * **compaction**: a churned single-shard log folded by repeated
+///   budgeted generational passes — bytes processed per pass (bounded by
+///   the budget), segments folded, generations stepped, pass latency.
 /// * **rebuild**: a wiped shard slice reconstructed from parity, serial
 ///   vs fanned out over 4 workers, with the pooled-buffer allocation
 ///   savings counted.
 ///
-/// Work counters (stripes, bytes, allocations) are deterministic — they
-/// are what the nightly trend gates on; wall-clocks ride along for
-/// humans and plots. `--quick` shrinks the workload for the CI smoke
-/// job; `--out` defaults to `BENCH_7.json`.
+/// Work counters (stripes, bytes, fsyncs, allocations) are deterministic
+/// — they are what the nightly trend gates on; wall-clocks ride along
+/// for humans and plots. `--quick` shrinks the workload for the CI smoke
+/// job; `--out` defaults to `BENCH_10.json`.
 fn cmd_bench(args: &Args) -> Result<()> {
     use scar::util::json::Json;
     let quick = args.bool("quick");
-    let out = args.str_or("out", "BENCH_7.json");
+    let out = args.str_or("out", "BENCH_10.json");
     let base_dir = std::path::PathBuf::from(args.str_or("dir", "results/bench-ckpt"));
     let (n_rows, n_fences, rebuild_reps) = if quick { (64, 8, 3) } else { (256, 32, 10) };
     let shards = 4usize;
@@ -390,7 +400,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
                                 .with_context(|| format!("clearing {}", dir.display()))?;
                         }
                         std::fs::create_dir_all(&dir)?;
-                        ShardedStore::open_disk(&dir, shards)?.with_disk_parity(&dir, parity)?
+                        ShardedStore::open_disk(&dir, shards)?
+                            .with_disk_parity(&dir, parity)?
+                            .with_group_commit(true)
                     }
                 };
                 let store = Arc::new(store);
@@ -429,6 +441,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 let skipped_bytes = ck.skipped_bytes() - s_skip_b;
                 let bytes_written = store.total_bytes();
                 ck.finish()?;
+                let cell_fsyncs = store.total_fsyncs();
                 println!(
                     "  {label:<22} fence {wall_ms:>8.2} ms  stripes re-encoded {reencoded:>4} \
                      (full would be {})  skipped {}",
@@ -442,6 +455,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 m.insert("skipped_atoms".to_string(), Json::Num(skipped_atoms as f64));
                 m.insert("skipped_bytes".to_string(), Json::Num(skipped_bytes as f64));
                 m.insert("bytes_written".to_string(), Json::Num(bytes_written as f64));
+                m.insert("fence_fsyncs".to_string(), Json::Num(cell_fsyncs as f64));
                 cells.insert(label.clone(), Json::Obj(m));
                 if backend == "mem" && mode == CheckpointMode::Async && parity == 1 {
                     // The canonical cell feeds the flat, trend-gateable
@@ -513,6 +527,102 @@ fn cmd_bench(args: &Args) -> Result<()> {
     top.insert("bench_rebuild_parallel_ms".to_string(), Json::Num(parallel_ms));
     top.insert("bench_rebuild_bytes".to_string(), Json::Num(rebuilt_bytes as f64));
     top.insert("bench_rebuild_allocs_avoided".to_string(), Json::Num(allocs_avoided as f64));
+
+    // Group-commit comparison: one fence schedule, two disk write paths.
+    // Every fence updates 3 atoms on each of the 4 shards; the per-record
+    // path pays a durability barrier per acknowledged record plus a
+    // manifest rewrite per dirty shard, the batched path exactly one
+    // barrier per shard per fence.
+    let mut gc_fsyncs = [0u64; 2];
+    for (slot, group) in [false, true].into_iter().enumerate() {
+        let dir = base_dir.join(if group { "group-commit" } else { "per-record" });
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)
+                .with_context(|| format!("clearing {}", dir.display()))?;
+        }
+        std::fs::create_dir_all(&dir)?;
+        let store = ShardedStore::open_disk(&dir, shards)?.with_group_commit(group);
+        for fence in 0..n_fences {
+            // (fence*3 + slot)*shards + residue keeps atom % shards == residue
+            // because n_rows is a multiple of the shard count.
+            let payloads: Vec<(usize, Vec<f32>)> = (0..3 * shards)
+                .map(|i| {
+                    let atom = ((fence * 3 + i / shards) * shards + i % shards) % n_rows;
+                    (atom, vec![(fence * 12 + i) as f32; row_elems])
+                })
+                .collect();
+            let refs: Vec<(usize, &[f32])> =
+                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+            store.put_atoms_at(fence + 1, &refs)?;
+            store.sync_all()?;
+        }
+        gc_fsyncs[slot] = store.total_fsyncs();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    println!(
+        "  group-commit: {} per-record fsyncs vs {} batched ({} fences x {} shards, {:.1}x)",
+        gc_fsyncs[0],
+        gc_fsyncs[1],
+        n_fences,
+        shards,
+        gc_fsyncs[0] as f64 / gc_fsyncs[1].max(1) as f64
+    );
+    top.insert("bench_shards".to_string(), Json::from(shards));
+    top.insert("bench_group_fences".to_string(), Json::from(n_fences));
+    top.insert("bench_fence_fsyncs_per_record".to_string(), Json::Num(gc_fsyncs[0] as f64));
+    top.insert("bench_fence_fsyncs_group".to_string(), Json::Num(gc_fsyncs[1] as f64));
+
+    // Compaction latency: one disk shard carved into many small sealed
+    // segments by overwrite churn, folded by repeated budgeted passes.
+    // Every pass processes at most the byte budget and steps the
+    // generation clock; the byte/segment counters are deterministic, the
+    // pass wall-clock rides along.
+    let compact_dir = base_dir.join("compact-bench");
+    if compact_dir.exists() {
+        std::fs::remove_dir_all(&compact_dir)
+            .with_context(|| format!("clearing {}", compact_dir.display()))?;
+    }
+    let mut disk = scar::storage::DiskStore::open(&compact_dir)?;
+    disk.set_segment_limit(256);
+    let compact_budget = 2048u64;
+    let compact_rounds = 6usize;
+    let compact_atoms = 32usize;
+    let mut pass_ms = f64::INFINITY;
+    let mut pass_bytes_max = 0u64;
+    let mut segments_total = 0u64;
+    let mut generation = 0u64;
+    for round in 0..compact_rounds {
+        // Two overwrites of every atom per round: the first rep's records
+        // are garbage as soon as the second lands.
+        for rep in 0..2usize {
+            let iter = round * 2 + rep + 1;
+            let payloads: Vec<(usize, Vec<f32>)> = (0..compact_atoms)
+                .map(|a| (a, vec![(iter + a) as f32; row_elems]))
+                .collect();
+            let refs: Vec<(usize, &[f32])> =
+                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+            scar::storage::ShardBackend::put_atoms(&mut disk, iter, &refs)?;
+        }
+        disk.write_manifest()?;
+        let t0 = std::time::Instant::now();
+        let stats = disk.compact(compact_budget)?;
+        pass_ms = pass_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        pass_bytes_max = pass_bytes_max.max(stats.pass_bytes);
+        segments_total += stats.segments_compacted as u64;
+        generation = stats.generation;
+    }
+    let _ = std::fs::remove_dir_all(&compact_dir);
+    println!(
+        "  compaction: {compact_rounds} budgeted passes -> generation {generation}, \
+         {segments_total} segment(s) folded, max pass {} of budget {}, best {pass_ms:.2} ms",
+        scar::util::fmt_bytes(pass_bytes_max),
+        scar::util::fmt_bytes(compact_budget)
+    );
+    top.insert("bench_compact_pass_ms".to_string(), Json::Num(pass_ms));
+    top.insert("bench_compact_pass_bytes".to_string(), Json::Num(pass_bytes_max as f64));
+    top.insert("bench_compact_budget_bytes".to_string(), Json::Num(compact_budget as f64));
+    top.insert("bench_compact_segments".to_string(), Json::Num(segments_total as f64));
+    top.insert("bench_compact_generations".to_string(), Json::Num(generation as f64));
     top.insert("cells".to_string(), Json::Obj(cells));
 
     let path = std::path::Path::new(&out);
@@ -538,7 +648,8 @@ fn parse_config(args: &Args) -> Result<RunConfig> {
         "model", "seed", "iters", "target_iters", "ps_nodes", "workers",
         "checkpoint_interval", "checkpoint_k", "checkpoint_mode", "selector",
         "recovery", "storage_shards", "storage_writers", "storage_max_pending",
-        "storage_compact_threshold", "storage_compact_min_bytes", "storage_parity",
+        "storage_compact_threshold", "storage_compact_min_bytes",
+        "storage_compact_max_bytes_per_pass", "storage_group_commit", "storage_parity",
         "fail_fraction", "fail_geom_p", "fail_plan", "fail_nodes",
         "fail_cascade_extra", "fail_cascade_gap", "fail_flaky_period",
         "fail_flaky_prob", "fail_flaky_max", "checkpoint_dir", "chaos",
@@ -593,7 +704,7 @@ fn make_store(cfg: &RunConfig) -> Result<Arc<ShardedStore>> {
                 .with_disk_parity(dir, cfg.storage_parity)?
         }
     };
-    Ok(Arc::new(store))
+    Ok(Arc::new(store.with_group_commit(cfg.storage_group_commit)))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -621,6 +732,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     )?
     .with_max_pending(cfg.storage_max_pending)
     .with_compaction(cfg.storage_compact_threshold, cfg.storage_compact_min_bytes as u64)
+    .with_compaction_budget(cfg.storage_compact_max_bytes_per_pass as u64)
     .with_recorder(rec.clone());
 
     // Optional failure schedule: the configured plan expands to one or
@@ -800,6 +912,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         max_pending: cfg.storage_max_pending,
         compact_threshold: cfg.storage_compact_threshold,
         compact_min_bytes: cfg.storage_compact_min_bytes as u64,
+        compact_max_pass_bytes: cfg.storage_compact_max_bytes_per_pass as u64,
         kills,
         detect: scar::cluster::Detect::Heartbeat(Duration::from_millis(20)),
         recorder: rec.clone(),
@@ -899,6 +1012,25 @@ fn cmd_trace(args: &Args) -> Result<()> {
     for (tag, n) in scar::obs::timeline::summary_counts(&events) {
         println!("  {tag:<14} {n}");
     }
+    // Aggregate the compaction narration: how much the generational
+    // passes folded and reclaimed across the run.
+    let (mut passes, mut segments, mut reclaimed, mut max_gen) = (0u64, 0u64, 0u64, 0u64);
+    for e in &events {
+        if let scar::obs::EventKind::Compaction { generation, segments: s, reclaimed: r, .. } =
+            &e.kind
+        {
+            passes += 1;
+            segments += s;
+            reclaimed += r;
+            max_gen = max_gen.max(*generation);
+        }
+    }
+    if passes > 0 {
+        println!(
+            "compaction: {passes} pass(es), {segments} segment(s) folded, \
+             {reclaimed} byte(s) reclaimed, max generation {max_gen}"
+        );
+    }
     let table = scar::obs::timeline::fault_latency_table(&events);
     if !table.is_empty() {
         print!("{table}");
@@ -921,7 +1053,10 @@ fn cmd_trace(args: &Args) -> Result<()> {
 fn cmd_compact(args: &Args) -> Result<()> {
     let dir = args
         .str_opt("dir")
-        .context("usage: scar compact --dir <checkpoint_dir> [--shards n] [--threshold r]")?;
+        .context(
+            "usage: scar compact --dir <checkpoint_dir> [--shards n] [--threshold r] \
+             [--budget bytes]",
+        )?;
     let dir = std::path::Path::new(dir);
     let shards = match args.str_opt("shards") {
         Some(s) => s.parse().context("--shards expects an integer")?,
@@ -929,14 +1064,27 @@ fn cmd_compact(args: &Args) -> Result<()> {
     };
     let threshold = args.f64_or("threshold", 0.0);
     let min_bytes = args.u64_or("min-bytes", 0);
+    // --budget bounds each shard's pass to a generational fold of the
+    // worst-garbage segments; 0 keeps the monolithic full-shard pass.
+    let budget = args.u64_or("budget", 0);
     let store = ShardedStore::open_disk(dir, shards)?;
     let before = store.total_on_disk_bytes();
     let ratios = store.garbage_ratios();
-    let runs = store.compact_if_needed(threshold, min_bytes)?;
+    let runs = store.compact_if_needed(threshold, min_bytes, budget)?;
     for (s, stats) in &runs {
+        let pass = if stats.generation > 0 {
+            format!(
+                " (generation {}: {} segment(s), {} read)",
+                stats.generation,
+                stats.segments_compacted,
+                scar::util::fmt_bytes(stats.pass_bytes)
+            )
+        } else {
+            String::new()
+        };
         println!(
             "shard {s}: garbage {:.1}% -> {} live record(s), {} dead dropped, {} reclaimed, \
-             {} segment file(s) removed",
+             {} segment file(s) removed{pass}",
             ratios[*s] * 100.0,
             stats.live_records,
             stats.dead_records,

@@ -77,6 +77,10 @@ pub enum EventKind {
     /// a fence point: grid index k (fraction 1/k), the new interval, and
     /// the new sync/async mode.
     PolicySwitch { k: usize, interval: usize, mode: String },
+    /// A segment-compaction pass ran on a shard: the generation its
+    /// outputs were stamped with (0 = monolithic full pass), segments
+    /// folded, and segment bytes reclaimed.
+    Compaction { shard: usize, generation: u64, segments: u64, reclaimed: u64 },
 }
 
 impl EventKind {
@@ -96,6 +100,7 @@ impl EventKind {
             EventKind::NodeRecover { .. } => "node_recover",
             EventKind::Progress { .. } => "progress",
             EventKind::PolicySwitch { .. } => "policy_switch",
+            EventKind::Compaction { .. } => "compaction",
         }
     }
 
@@ -104,7 +109,8 @@ impl EventKind {
         match self {
             EventKind::Fault { shard, .. }
             | EventKind::Heal { shard }
-            | EventKind::Replay { shard, .. } => Some(*shard),
+            | EventKind::Replay { shard, .. }
+            | EventKind::Compaction { shard, .. } => Some(*shard),
             _ => None,
         }
     }
@@ -159,6 +165,12 @@ impl EventKind {
                 num(&mut m, "k", *k as f64);
                 num(&mut m, "interval", *interval as f64);
                 m.insert("mode".to_string(), Json::from(mode.as_str()));
+            }
+            EventKind::Compaction { shard, generation, segments, reclaimed } => {
+                num(&mut m, "shard", *shard as f64);
+                num(&mut m, "generation", *generation as f64);
+                num(&mut m, "segments", *segments as f64);
+                num(&mut m, "reclaimed", *reclaimed as f64);
             }
         }
         m
@@ -232,6 +244,12 @@ impl Event {
                 k: us(v, "k")?,
                 interval: us(v, "interval")?,
                 mode: s(v, "mode")?,
+            },
+            "compaction" => EventKind::Compaction {
+                shard: us(v, "shard")?,
+                generation: u(v, "generation")?,
+                segments: u(v, "segments")?,
+                reclaimed: u(v, "reclaimed")?,
             },
             other => bail!("unknown trace event kind '{other}'"),
         };
@@ -457,12 +475,15 @@ pub const STANDARD_COUNTERS: &[&str] = &[
     "degraded_records",
     "policy_switches",
     "interval_chosen",
+    "fence_fsyncs",
+    "segments_compacted",
+    "compact_pass_bytes",
 ];
 
 /// Standard gauges that join the counters in every snapshot (same
 /// stable-column rationale; gauges because they carry fractional,
 /// last-value-wins quantities).
-pub const STANDARD_GAUGES: &[&str] = &["policy_regret"];
+pub const STANDARD_GAUGES: &[&str] = &["policy_regret", "fsyncs_per_fence", "fence_wall_ms"];
 
 /// A registry with every standard counter and gauge pre-registered at
 /// zero.
@@ -542,6 +563,10 @@ mod tests {
                 iter: 16,
                 kind: EventKind::PolicySwitch { k: 4, interval: 2, mode: "sync".into() },
             },
+            Event {
+                iter: 20,
+                kind: EventKind::Compaction { shard: 2, generation: 3, segments: 4, reclaimed: 512 },
+            },
         ];
         let text = to_jsonl(&events);
         assert_eq!(parse_jsonl(&text).unwrap(), events);
@@ -583,6 +608,9 @@ mod tests {
         assert!(snap.values().all(|v| *v == 0.0));
         assert!(snap.contains_key("policy_switches"));
         assert!(snap.contains_key("policy_regret"));
+        assert!(snap.contains_key("fence_fsyncs"));
+        assert!(snap.contains_key("fsyncs_per_fence"));
+        assert!(snap.contains_key("fence_wall_ms"));
     }
 
     #[test]

@@ -119,6 +119,12 @@ pub struct PolicyController {
     /// Wall-clock stall observations — reporting only, never a decision
     /// input (they are outside the determinism surface).
     stalls_seen: u64,
+    /// Measured per-fence wall-clock (last value + EWMA, milliseconds).
+    /// Reporting only for now, same determinism rule as stalls: this is
+    /// the seed for a learned dump-cost model (ROADMAP), but `decide`
+    /// MUST NOT read it until that model replays deterministically.
+    last_fence_wall_ms: f64,
+    ewma_fence_wall_ms: f64,
     held_k: usize,
     held_mode: CheckpointMode,
     /// (adoption iteration, k) — the held-policy schedule, seeded with
@@ -134,6 +140,8 @@ impl PolicyController {
             est: OnlineRateEstimator::default(),
             failures: Vec::new(),
             stalls_seen: 0,
+            last_fence_wall_ms: 0.0,
+            ewma_fence_wall_ms: 0.0,
             held_k: initial_k.max(1),
             held_mode: initial_mode,
             history: vec![(0, initial_k.max(1))],
@@ -161,6 +169,32 @@ impl PolicyController {
 
     pub fn stalls_seen(&self) -> u64 {
         self.stalls_seen
+    }
+
+    /// Record a measured flush-fence wall-clock, in milliseconds.
+    /// Reporting only (see the field docs): the EWMA is the input a
+    /// future learned dump-cost model would consume in place of the
+    /// configured `dump_cost_iters`; nothing reads it in `decide` today.
+    pub fn observe_fence_wall_ms(&mut self, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        self.last_fence_wall_ms = ms;
+        self.ewma_fence_wall_ms = if self.ewma_fence_wall_ms == 0.0 {
+            ms
+        } else {
+            0.2 * ms + 0.8 * self.ewma_fence_wall_ms
+        };
+    }
+
+    /// The most recently observed fence wall-clock (ms).
+    pub fn last_fence_wall_ms(&self) -> f64 {
+        self.last_fence_wall_ms
+    }
+
+    /// Smoothed fence wall-clock (ms; EWMA with alpha 0.2).
+    pub fn ewma_fence_wall_ms(&self) -> f64 {
+        self.ewma_fence_wall_ms
     }
 
     pub fn switches(&self) -> u64 {

@@ -491,6 +491,8 @@ fn build_jobs(
                         scrub_interval: scn.storage.scrub_interval,
                         compact_threshold: scn.storage.compact_threshold,
                         compact_min_bytes: scn.storage.compact_min_bytes as u64,
+                        compact_max_pass_bytes: scn.storage.compact_max_bytes_per_pass as u64,
+                        group_commit: scn.storage.group_commit,
                         // Checkpoint bandwidth is priced into every
                         // cell's cost so adaptive-vs-static comparisons
                         // charge both sides the same way.
@@ -611,6 +613,7 @@ fn run_cluster_job(
         max_pending: setup.max_pending,
         compact_threshold: setup.compact_threshold,
         compact_min_bytes: setup.compact_min_bytes,
+        compact_max_pass_bytes: setup.compact_max_pass_bytes,
         kills: kills.to_vec(),
         seed: traj.seed,
         detect: Detect::Immediate,
@@ -647,6 +650,9 @@ fn run_cluster_job(
     reg.counter("repaired_records").set(store.repaired_records());
     reg.counter("repaired_bytes").set(store.repaired_bytes());
     reg.counter("degraded_records").set(report.degraded_records);
+    reg.counter("fence_fsyncs").set(store.total_fsyncs());
+    reg.counter("segments_compacted").set(store.segments_compacted());
+    reg.counter("compact_pass_bytes").set(store.compact_pass_bytes());
     if setup.adaptive.is_some() {
         reg.counter("policy_switches").set(report.policy_switches);
         reg.counter("interval_chosen").set(report.final_interval as u64);

@@ -92,6 +92,12 @@ pub struct StorageSpec {
     pub max_pending: usize,
     pub compact_threshold: f64,
     pub compact_min_bytes: usize,
+    /// Per-pass segment-byte budget for generational compaction
+    /// (0 = monolithic full-shard passes).
+    pub compact_max_bytes_per_pass: usize,
+    /// Batch each fence's disk appends into one coalesced write + one
+    /// durability barrier per shard (no-op on memory backends).
+    pub group_commit: bool,
     pub parity: usize,
     pub scrub_interval: usize,
 }
@@ -104,6 +110,8 @@ impl Default for StorageSpec {
             max_pending: 0,
             compact_threshold: 0.0,
             compact_min_bytes: 0,
+            compact_max_bytes_per_pass: 0,
+            group_commit: false,
             parity: 0,
             scrub_interval: 0,
         }
@@ -677,11 +685,20 @@ impl Scenario {
                 self.advisor.window, self.advisor.dump_cost_iters, self.advisor.hysteresis
             ));
         }
+        if self.storage.group_commit {
+            out.push_str("  group commit: one coalesced write + barrier per shard per fence\n");
+        }
         if self.storage.compact_threshold > 0.0 {
             out.push_str(&format!(
                 "  compaction: garbage ratio >= {:.2} at flush fences (min {} bytes)\n",
                 self.storage.compact_threshold, self.storage.compact_min_bytes
             ));
+            if self.storage.compact_max_bytes_per_pass > 0 {
+                out.push_str(&format!(
+                    "  generational passes: <= {} segment byte(s) folded per pass\n",
+                    self.storage.compact_max_bytes_per_pass
+                ));
+            }
         }
         if self.storage.parity > 0 {
             out.push_str(&format!(
@@ -748,6 +765,8 @@ fn storage_json(s: &StorageSpec) -> Json {
     m.insert("max_pending".into(), Json::from(s.max_pending));
     m.insert("compact_threshold".into(), Json::Num(s.compact_threshold));
     m.insert("compact_min_bytes".into(), Json::from(s.compact_min_bytes));
+    m.insert("compact_max_bytes_per_pass".into(), Json::from(s.compact_max_bytes_per_pass));
+    m.insert("group_commit".into(), Json::Bool(s.group_commit));
     m.insert("parity".into(), Json::from(s.parity));
     m.insert("scrub_interval".into(), Json::from(s.scrub_interval));
     Json::Obj(m)
@@ -847,6 +866,14 @@ fn opt_f64(obj: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<Option<
     }
 }
 
+fn opt_bool(obj: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<Option<bool>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => bail!("{ctx}: '{key}' must be a boolean"),
+    }
+}
+
 fn opt_usize(obj: &BTreeMap<String, Json>, key: &str, ctx: &str) -> Result<Option<usize>> {
     match obj.get(key) {
         None => Ok(None),
@@ -927,6 +954,8 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
         "max_pending",
         "compact_threshold",
         "compact_min_bytes",
+        "compact_max_bytes_per_pass",
+        "group_commit",
         "parity",
         "scrub_interval",
     ];
@@ -946,6 +975,9 @@ fn parse_storage(v: &Json, ctx: &str) -> Result<StorageSpec> {
             .unwrap_or(base.compact_threshold),
         compact_min_bytes: opt_usize(obj, "compact_min_bytes", ctx)?
             .unwrap_or(base.compact_min_bytes),
+        compact_max_bytes_per_pass: opt_usize(obj, "compact_max_bytes_per_pass", ctx)?
+            .unwrap_or(base.compact_max_bytes_per_pass),
+        group_commit: opt_bool(obj, "group_commit", ctx)?.unwrap_or(base.group_commit),
         parity: opt_usize(obj, "parity", ctx)?.unwrap_or(base.parity),
         scrub_interval: opt_usize(obj, "scrub_interval", ctx)?.unwrap_or(base.scrub_interval),
     })
@@ -1432,18 +1464,30 @@ norm_log10 = [-2.0, 0.0]
         let s = Scenario::from_toml_str(
             "name=\"s\"\nmodel=\"synthetic\"\ncheckpoint_dir=\"results/s-ckpt\"\n\
              [storage]\nshards=2\ncompact_threshold=0.4\ncompact_min_bytes=4096\n\
+             compact_max_bytes_per_pass=65536\ngroup_commit=true\n\
              [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
         )
         .unwrap();
         assert_eq!(s.checkpoint_dir.as_deref(), Some("results/s-ckpt"));
         assert!((s.storage.compact_threshold - 0.4).abs() < 1e-12);
         assert_eq!(s.storage.compact_min_bytes, 4096);
+        assert_eq!(s.storage.compact_max_bytes_per_pass, 65536);
+        assert!(s.storage.group_commit);
         let again = Scenario::from_json_str(&s.to_json().to_string()).unwrap();
         assert_eq!(s, again);
         // The dry-run description names the backend and the trigger.
         let desc = s.describe();
         assert!(desc.contains("disk (results/s-ckpt)"), "{desc}");
         assert!(desc.contains("compaction"), "{desc}");
+        assert!(desc.contains("group commit"), "{desc}");
+        assert!(desc.contains("generational"), "{desc}");
+        // group_commit must be a boolean, not a number.
+        let e = Scenario::from_toml_str(
+            "name=\"s\"\nmodel=\"synthetic\"\n[storage]\ngroup_commit=1\n\
+             [[cell]]\nlabel=\"x\"\nfail=\"single\"\nfraction=0.5\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:?}").contains("group_commit"), "{e:?}");
 
         // Threshold outside [0, 1) is rejected with a named key.
         let e = Scenario::from_toml_str(

@@ -36,7 +36,7 @@ pub mod parity;
 pub mod shard;
 
 use std::cell::{Cell, Ref, RefCell};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fs;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -181,6 +181,21 @@ pub trait ShardBackend: Send {
         Ok(())
     }
 
+    /// Durability barriers the backend's write protocol has required so
+    /// far (modeled fsyncs — see [`DiskStore`]: one per acknowledged
+    /// record append plus one per manifest rewrite on the per-record
+    /// path, one per non-empty fence under group commit). Backends with
+    /// no durability protocol report 0.
+    fn fsyncs(&self) -> u64 {
+        0
+    }
+
+    /// Switch the backend between per-record appends (every put durable
+    /// on return) and group-commit batching (a fence's appends coalesce
+    /// into one segment write + one manifest delta + one barrier at
+    /// `sync`). No-op for backends with no write buffering to speak of.
+    fn set_group_commit(&mut self, _on: bool) {}
+
     /// Advance the injected-fault epoch clock to training iteration
     /// `iter`. Real backends have no fault schedule, so this is a no-op;
     /// [`ChaosBackend`](crate::chaos::ChaosBackend) uses it to trigger
@@ -228,7 +243,11 @@ pub trait ShardBackend: Send {
 
     /// Fold superseded records into fresh segments, if the backend has a
     /// segment log to compact; `None` when there is nothing to do.
-    fn compact(&mut self) -> Result<Option<CompactionStats>> {
+    /// `max_pass_bytes` bounds one pass: `0` folds the whole log (the
+    /// monolithic full pass); a nonzero budget runs a *generational*
+    /// pass over only the worst-garbage-ratio sealed segments whose
+    /// combined size fits the budget.
+    fn compact(&mut self, _max_pass_bytes: u64) -> Result<Option<CompactionStats>> {
         Ok(None)
     }
 
@@ -236,7 +255,8 @@ pub trait ShardBackend: Send {
     /// window*: phase one (fresh segments hit the disk) completes, the
     /// commit never lands. Used by the chaos fsync-fault injection; the
     /// default — backends with no manifest to lose — does nothing.
-    fn compact_abandoned(&mut self) -> Result<()> {
+    /// `max_pass_bytes` selects the same segments the real pass would.
+    fn compact_abandoned(&mut self, _max_pass_bytes: u64) -> Result<()> {
         Ok(())
     }
 
@@ -455,6 +475,15 @@ pub struct CompactionStats {
     pub reclaimed_bytes: u64,
     /// Old segment files deleted.
     pub segments_removed: usize,
+    /// Input segments the pass folded (every sealed segment for a full
+    /// pass, the worst-garbage subset for a generational one).
+    pub segments_compacted: usize,
+    /// Input segment bytes the pass processed — bounded by
+    /// `storage.compact_max_bytes_per_pass` for generational passes.
+    pub pass_bytes: u64,
+    /// Generation tag stamped on the pass's output segments (0 for a
+    /// full pass, which resets the generation clock).
+    pub generation: u64,
 }
 
 /// Everything phase one of a compaction produced, before the manifest
@@ -464,9 +493,35 @@ pub struct CompactionStats {
 /// [`DiskStore::open`] (`rust/tests/proptests.rs` pins that recovery
 /// after such a crash returns the pre-compaction parameters).
 pub struct CompactionPlan {
+    /// Atoms rewritten into output segments: their new `latest` record
+    /// (the `prev` fallback is dropped — it was redundancy).
     entries: Vec<(usize, RecordLoc)>,
+    /// Atoms whose `prev` slot pointed into a folded segment while the
+    /// latest record is readable elsewhere: drop the fallback, no rewrite.
+    drop_prev: Vec<usize>,
+    /// Input segments the pass folds (deleted at commit).
+    selected: Vec<u64>,
     new_segments: Vec<u64>,
     new_bytes: u64,
+    /// Combined on-disk size of the selected segments.
+    pass_bytes: u64,
+    /// Generation tag for the output segments.
+    generation: u64,
+    /// Full pass (rebuild the whole log) vs a budgeted generational one.
+    full: bool,
+}
+
+/// Per-segment accounting that drives generational compaction: which
+/// pass produced the segment and how much of it is still live.
+#[derive(Debug, Clone, Copy, Default)]
+struct SegMeta {
+    /// Budgeted pass that wrote this segment (0 = plain append segment
+    /// or full-pass output).
+    generation: u64,
+    /// Bytes referenced as some atom's latest record.
+    live: u64,
+    /// Total segment-file bytes.
+    total: u64,
 }
 
 /// Per-atom index entry: the latest record plus the one before it. The
@@ -506,13 +561,44 @@ pub struct DiskStore {
     compactions: u64,
     /// Cumulative bytes reclaimed by this handle's compactions.
     reclaimed_bytes: u64,
+    /// Group-commit mode: appends coalesce into `wbuf` and hit the file
+    /// as one write (plus one manifest delta line) per `sync` fence.
+    group_commit: bool,
+    /// Pending coalesced record bytes for the active segment.
+    wbuf: Vec<u8>,
+    /// File offset at which `wbuf` begins (the active segment's flushed
+    /// length). Buffered records live at offsets `>= wbuf_base`.
+    wbuf_base: u64,
+    /// Atoms whose index entry changed since the last manifest write —
+    /// the working set one manifest delta line covers.
+    dirty_atoms: HashSet<usize>,
+    /// Durability barriers issued so far (modeled fsyncs): one per
+    /// acknowledged record append + one per manifest rewrite on the
+    /// per-record path; one per non-empty fence under group commit.
+    fsyncs: u64,
+    /// Manifest epoch: bumped by every full rewrite. Delta lines carry
+    /// the epoch they extend, so a crash between a full rewrite and the
+    /// delta-file truncation can never replay stale deltas.
+    manifest_epoch: u64,
+    /// Delta lines appended since the last full rewrite (growth bound).
+    delta_lines: u64,
+    /// Per-segment generation/live/total accounting.
+    seg_meta: HashMap<u64, SegMeta>,
+    /// Highest segment number ever allocated. Generational passes write
+    /// output segments numbered past the active one, so the append
+    /// roll-over allocates from here, never from `current_segment + 1`.
+    high_segment: u64,
+    /// Generation tag the next budgeted pass will stamp on its outputs
+    /// (persisted; a full pass resets it to 1).
+    next_generation: u64,
 }
 
 impl DiskStore {
     /// Open (or create) a store rooted at `dir`. Replays the manifest if
     /// one exists, so a coordinator restart sees the running checkpoint.
     /// Segment files the manifest does not know about (a crash after a
-    /// segment roll-over, or mid-compaction before the manifest swap)
+    /// segment roll-over, or mid-compaction before the manifest swap —
+    /// including the orphaned outputs of a partial generational pass)
     /// are removed: their records were never durable by the manifest's
     /// account, and leaving them would collide with future appends.
     pub fn open(dir: &Path) -> Result<DiskStore> {
@@ -534,18 +620,42 @@ impl DiskStore {
             dead_records: 0,
             compactions: 0,
             reclaimed_bytes: 0,
+            group_commit: false,
+            wbuf: Vec::new(),
+            wbuf_base: 0,
+            dirty_atoms: HashSet::new(),
+            fsyncs: 0,
+            manifest_epoch: 0,
+            delta_lines: 0,
+            seg_meta: HashMap::new(),
+            high_segment: 0,
+            next_generation: 1,
         };
         let manifest = dir.join("manifest.json");
         if manifest.exists() {
             store.load_manifest(&manifest)?;
         }
         for seg in store.segment_numbers()? {
-            if seg > store.current_segment {
+            // A segment is live if the manifest's segment table knows it
+            // (generational outputs may be numbered past the active
+            // segment) or it predates the active one (legacy manifests
+            // carry no table). Everything else is a crash orphan.
+            let known = seg <= store.current_segment || store.seg_meta.contains_key(&seg);
+            if !known {
                 let _ = fs::remove_file(store.segment_path(seg));
             } else if let Ok(meta) = fs::metadata(store.segment_path(seg)) {
                 store.disk_bytes += meta.len();
+                store.seg_meta.entry(seg).or_default().total = meta.len();
             }
         }
+        // Per-segment live bytes are rebuilt from the index, not trusted
+        // from the manifest: the segment files are the ground truth for
+        // totals, the index for liveness.
+        for e in store.index.values() {
+            store.seg_meta.entry(e.latest.segment).or_default().live += e.latest.len;
+        }
+        store.high_segment =
+            store.seg_meta.keys().copied().max().unwrap_or(0).max(store.current_segment);
         // Manifests written before record sizes were tracked load every
         // entry with rlen = 0 (a real record is never smaller than its
         // header). Unknown live size must read as "fully live", not
@@ -554,6 +664,9 @@ impl DiskStore {
         // compaction rebuilds exact accounting.
         if store.index.values().any(|e| e.latest.len == 0) {
             store.live_bytes = store.disk_bytes;
+            for m in store.seg_meta.values_mut() {
+                m.live = m.total;
+            }
         }
         Ok(store)
     }
@@ -599,66 +712,162 @@ impl DiskStore {
         self.current_segment = v.get("next_segment").as_usize().unwrap_or(0) as u64;
         self.bytes = v.get("bytes").as_usize().unwrap_or(0) as u64;
         self.records = v.get("records").as_usize().unwrap_or(0) as u64;
+        self.manifest_epoch = v.get("epoch").as_usize().unwrap_or(0) as u64;
+        self.next_generation = v.get("next_generation").as_usize().unwrap_or(1).max(1) as u64;
+        if let Some(segs) = v.get("segments").as_arr() {
+            for e in segs {
+                let Some(seg) = e.get("seg").as_usize() else { continue };
+                let generation = e.get("gen").as_usize().unwrap_or(0) as u64;
+                self.seg_meta
+                    .insert(seg as u64, SegMeta { generation, live: 0, total: 0 });
+            }
+        }
         if let Some(entries) = v.get("atoms").as_arr() {
             for e in entries {
-                let atom = e.get("atom").as_usize().context("manifest atom id")?;
-                let latest = RecordLoc {
-                    segment: e.get("seg").as_usize().unwrap_or(0) as u64,
-                    offset: e.get("off").as_usize().unwrap_or(0) as u64,
-                    iter: e.get("iter").as_usize().unwrap_or(0),
-                    len: e.get("rlen").as_usize().unwrap_or(0) as u64,
-                    torn: e.get("torn").as_usize().unwrap_or(0) != 0,
-                };
-                let prev = match e.get("pseg").as_usize() {
-                    Some(pseg) => Some(RecordLoc {
-                        segment: pseg as u64,
-                        offset: e.get("poff").as_usize().unwrap_or(0) as u64,
-                        iter: e.get("piter").as_usize().unwrap_or(0),
-                        len: e.get("prlen").as_usize().unwrap_or(0) as u64,
-                        torn: false, // prev slots only ever hold readable records
-                    }),
-                    None => None,
-                };
-                self.live_bytes += latest.len;
-                self.index.insert(atom, AtomIndex { latest, prev });
+                let (atom, entry) = parse_index_entry(e)?;
+                self.live_bytes += entry.latest.len;
+                self.index.insert(atom, entry);
+            }
+        }
+        // Replay the group-commit manifest deltas on top: each line is
+        // one fence's changed atoms. Lines from a stale epoch (a crash
+        // landed between a full rewrite and the delta truncation) are
+        // skipped; an unparseable tail (torn delta append) ends the
+        // replay — everything after it was never acknowledged.
+        let delta = self.dir.join("manifest.delta.jsonl");
+        if let Ok(text) = fs::read_to_string(&delta) {
+            for line in text.lines() {
+                let Ok(d) = Json::parse(line) else { break };
+                if d.get("base").as_usize().unwrap_or(usize::MAX) as u64 != self.manifest_epoch {
+                    continue;
+                }
+                self.current_segment =
+                    d.get("next_segment").as_usize().unwrap_or(self.current_segment as usize)
+                        as u64;
+                self.bytes = d.get("bytes").as_usize().unwrap_or(self.bytes as usize) as u64;
+                self.records =
+                    d.get("records").as_usize().unwrap_or(self.records as usize) as u64;
+                if let Some(entries) = d.get("atoms").as_arr() {
+                    for e in entries {
+                        let (atom, entry) = parse_index_entry(e)?;
+                        if let Some(old) = self.index.insert(atom, entry) {
+                            self.live_bytes = self.live_bytes.saturating_sub(old.latest.len);
+                        }
+                        self.live_bytes += entry.latest.len;
+                        self.delta_lines += 1;
+                    }
+                }
             }
         }
         Ok(())
     }
 
-    /// Persist the manifest; called by the coordinator after each
-    /// checkpoint barrier (cheap: proportional to atom count).
-    pub fn write_manifest(&self) -> Result<()> {
+    /// Persist the full manifest (atomic tmp + rename — the commit point
+    /// for compaction) and truncate the group-commit delta file the new
+    /// epoch supersedes. Cost is proportional to atom count; the
+    /// group-commit fence path instead appends one delta line per fence
+    /// and only falls back here when the delta file has grown enough to
+    /// be worth folding.
+    pub fn write_manifest(&mut self) -> Result<()> {
+        // Buffered appends must be on disk before a manifest (full or
+        // delta) is allowed to reference their offsets.
+        self.flush_wbuf()?;
+        self.manifest_epoch += 1;
         let mut atoms = Vec::with_capacity(self.index.len());
-        for (atom, idx) in &self.index {
-            let loc = &idx.latest;
-            let mut fields = vec![
-                ("atom", Json::from(*atom)),
-                ("seg", Json::from(loc.segment as usize)),
-                ("off", Json::from(loc.offset as usize)),
-                ("iter", Json::from(loc.iter)),
-                ("rlen", Json::from(loc.len as usize)),
-            ];
-            if loc.torn {
-                fields.push(("torn", Json::from(1usize)));
-            }
-            if let Some(p) = &idx.prev {
-                fields.push(("pseg", Json::from(p.segment as usize)));
-                fields.push(("poff", Json::from(p.offset as usize)));
-                fields.push(("piter", Json::from(p.iter)));
-                fields.push(("prlen", Json::from(p.len as usize)));
-            }
-            atoms.push(crate::util::json::obj(fields));
+        let mut ids: Vec<usize> = self.index.keys().copied().collect();
+        ids.sort_unstable();
+        for atom in ids {
+            atoms.push(manifest_atom_entry(atom, &self.index[&atom]));
         }
+        let mut segs: Vec<u64> = self.seg_meta.keys().copied().collect();
+        segs.sort_unstable();
+        let segments = segs
+            .into_iter()
+            .map(|seg| {
+                let m = &self.seg_meta[&seg];
+                crate::util::json::obj([
+                    ("seg", Json::from(seg as usize)),
+                    ("gen", Json::from(m.generation as usize)),
+                    ("live", Json::from(m.live as usize)),
+                    ("total", Json::from(m.total as usize)),
+                ])
+            })
+            .collect();
         let v = crate::util::json::obj([
             ("next_segment", Json::from(self.current_segment as usize)),
             ("bytes", Json::from(self.bytes as usize)),
             ("records", Json::from(self.records as usize)),
+            ("epoch", Json::from(self.manifest_epoch as usize)),
+            ("next_generation", Json::from(self.next_generation as usize)),
+            ("segments", Json::Arr(segments)),
             ("atoms", Json::Arr(atoms)),
         ]);
         let tmp = self.dir.join("manifest.json.tmp");
         fs::write(&tmp, v.to_string())?;
         fs::rename(&tmp, self.dir.join("manifest.json"))?;
+        // Stale delta lines carry the previous epoch, so even if this
+        // removal is lost to a crash they can never replay.
+        let _ = fs::remove_file(self.dir.join("manifest.delta.jsonl"));
+        self.delta_lines = 0;
+        self.dirty_atoms.clear();
+        self.fsyncs += 1;
+        Ok(())
+    }
+
+    /// One group-commit durability fence: flush the coalesced append
+    /// buffer as a single segment write, then cover the fence's changed
+    /// atoms with one manifest delta line — one barrier per shard per
+    /// fence instead of one per record plus a full manifest rewrite. A
+    /// clean fence (nothing buffered, nothing dirty) pays nothing.
+    fn group_commit_fence(&mut self) -> Result<()> {
+        if self.wbuf.is_empty() && self.dirty_atoms.is_empty() {
+            return Ok(());
+        }
+        // Bound delta growth: fold into a full rewrite once the delta
+        // file carries more entries than the index itself is worth.
+        if self.delta_lines >= (self.index.len() as u64 * 4).max(64) {
+            return self.write_manifest();
+        }
+        self.flush_wbuf()?;
+        let mut ids: Vec<usize> = self.dirty_atoms.iter().copied().collect();
+        ids.sort_unstable();
+        let atoms = ids
+            .into_iter()
+            .filter_map(|a| self.index.get(&a).map(|idx| manifest_atom_entry(a, idx)))
+            .collect::<Vec<_>>();
+        let n = atoms.len() as u64;
+        let line = crate::util::json::obj([
+            ("base", Json::from(self.manifest_epoch as usize)),
+            ("next_segment", Json::from(self.current_segment as usize)),
+            ("bytes", Json::from(self.bytes as usize)),
+            ("records", Json::from(self.records as usize)),
+            ("atoms", Json::Arr(atoms)),
+        ]);
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.dir.join("manifest.delta.jsonl"))?;
+        f.write_all(line.to_string().as_bytes())?;
+        f.write_all(b"\n")?;
+        self.dirty_atoms.clear();
+        self.delta_lines += n;
+        self.fsyncs += 1;
+        Ok(())
+    }
+
+    /// Write the pending group-commit buffer to the active segment as
+    /// one coalesced append. No-op when nothing is buffered.
+    fn flush_wbuf(&mut self) -> Result<()> {
+        if self.wbuf.is_empty() {
+            return Ok(());
+        }
+        let file = self
+            .current_file
+            .as_mut()
+            .expect("buffered record bytes require an open segment");
+        file.write_all(&self.wbuf)?;
+        self.wbuf.clear();
+        self.wbuf_base = self.current_len;
         Ok(())
     }
 
@@ -667,8 +876,14 @@ impl DiskStore {
             return Ok(());
         }
         if self.current_file.is_some() {
-            self.current_segment += 1;
+            // Seal the old segment with its buffered tail before rolling.
+            self.flush_wbuf()?;
+            // Generational passes allocate output segments numbered past
+            // the active one; continue after ALL known segments so a
+            // fresh append segment never collides with a live generation.
+            self.current_segment = self.high_segment + 1;
         }
+        self.high_segment = self.high_segment.max(self.current_segment);
         let path = self.segment_path(self.current_segment);
         let file = fs::OpenOptions::new()
             .create(true)
@@ -676,6 +891,7 @@ impl DiskStore {
             .open(&path)
             .with_context(|| format!("opening segment {}", path.display()))?;
         self.current_len = file.metadata()?.len();
+        self.wbuf_base = self.current_len;
         self.current_file = Some(file);
         Ok(())
     }
@@ -718,7 +934,19 @@ impl DiskStore {
     /// active segment, and platforms without mmap, use pread-style file
     /// reads into an owned record.
     fn read_any(&self, atom: usize, loc: &RecordLoc) -> Result<AtomRead<'_>> {
-        if loc.segment < self.current_segment {
+        // A group-commit record still sitting in the append buffer is
+        // served straight from it (torn buffered records fail validation
+        // exactly like their on-disk form, so the fallback chain holds).
+        if !self.wbuf.is_empty()
+            && loc.segment == self.current_segment
+            && loc.offset >= self.wbuf_base
+        {
+            let off = (loc.offset - self.wbuf_base) as usize;
+            return Ok(AtomRead::Owned(decode_record(atom, &self.wbuf, off)?));
+        }
+        // Sealed segments — everything but the active one, including
+        // generational outputs numbered past it — may be mmap'd.
+        if loc.segment != self.current_segment {
             if let Some(atom_ref) = self.mapped_ref(atom, loc)? {
                 return Ok(AtomRead::Mapped(atom_ref));
             }
@@ -809,6 +1037,50 @@ fn encode_record(atom: usize, iter: usize, vals: &[f32]) -> Vec<u8> {
     buf
 }
 
+/// One atom's manifest/delta JSON entry — shared by the full manifest
+/// writer and the group-commit delta appender.
+fn manifest_atom_entry(atom: usize, idx: &AtomIndex) -> Json {
+    let loc = &idx.latest;
+    let mut fields = vec![
+        ("atom", Json::from(atom)),
+        ("seg", Json::from(loc.segment as usize)),
+        ("off", Json::from(loc.offset as usize)),
+        ("iter", Json::from(loc.iter)),
+        ("rlen", Json::from(loc.len as usize)),
+    ];
+    if loc.torn {
+        fields.push(("torn", Json::from(1usize)));
+    }
+    if let Some(p) = &idx.prev {
+        fields.push(("pseg", Json::from(p.segment as usize)));
+        fields.push(("poff", Json::from(p.offset as usize)));
+        fields.push(("piter", Json::from(p.iter)));
+        fields.push(("prlen", Json::from(p.len as usize)));
+    }
+    crate::util::json::obj(fields)
+}
+
+/// Inverse of [`manifest_atom_entry`] — shared by the manifest loader
+/// and the delta replayer.
+fn parse_index_entry(e: &Json) -> Result<(usize, AtomIndex)> {
+    let atom = e.get("atom").as_usize().context("manifest atom id")?;
+    let latest = RecordLoc {
+        segment: e.get("seg").as_usize().unwrap_or(0) as u64,
+        offset: e.get("off").as_usize().unwrap_or(0) as u64,
+        iter: e.get("iter").as_usize().unwrap_or(0),
+        len: e.get("rlen").as_usize().unwrap_or(0) as u64,
+        torn: e.get("torn").as_usize().unwrap_or(0) != 0,
+    };
+    let prev = e.get("pseg").as_usize().map(|pseg| RecordLoc {
+        segment: pseg as u64,
+        offset: e.get("poff").as_usize().unwrap_or(0) as u64,
+        iter: e.get("piter").as_usize().unwrap_or(0),
+        len: e.get("prlen").as_usize().unwrap_or(0) as u64,
+        torn: false, // prev slots only ever hold readable records
+    });
+    Ok((atom, AtomIndex { latest, prev }))
+}
+
 /// Validate the record at `offset` within `seg` (a whole mapped segment,
 /// or a single record read from the file) without decoding its payload:
 /// returns the record's iteration and the payload byte range — what the
@@ -871,8 +1143,17 @@ impl ShardBackend for DiskStore {
             self.ensure_segment()?;
             let buf = encode_record(*id, iter, vals);
             let offset = self.current_len;
-            let file = self.current_file.as_mut().unwrap();
-            file.write_all(&buf)?;
+            if self.group_commit {
+                // Coalesce: the bytes land at exactly this offset when
+                // the fence flushes the buffer in one write.
+                self.wbuf.extend_from_slice(&buf);
+            } else {
+                let file = self.current_file.as_mut().unwrap();
+                file.write_all(&buf)?;
+                // Per-record durability: every acknowledged append is
+                // its own barrier.
+                self.fsyncs += 1;
+            }
             self.current_len += buf.len() as u64;
             let rec_len = buf.len() as u64;
             let loc = RecordLoc {
@@ -896,8 +1177,15 @@ impl ShardBackend for DiskStore {
                 // The superseded record is a tombstone from here on.
                 self.live_bytes = self.live_bytes.saturating_sub(old.latest.len);
                 self.dead_records += 1;
+                if let Some(m) = self.seg_meta.get_mut(&old.latest.segment) {
+                    m.live = m.live.saturating_sub(old.latest.len);
+                }
             }
             self.index.insert(*id, AtomIndex { latest: loc, prev });
+            self.dirty_atoms.insert(*id);
+            let m = self.seg_meta.entry(self.current_segment).or_default();
+            m.total += rec_len;
+            m.live += rec_len;
             self.disk_bytes += rec_len;
             self.live_bytes += rec_len;
             self.bytes += (vals.len() * 4) as u64;
@@ -921,10 +1209,18 @@ impl ShardBackend for DiskStore {
         let torn_len = RECORD_HEADER + (vals.len() * 4) / 2;
         self.ensure_segment()?;
         let offset = self.current_len;
-        let file = self.current_file.as_mut().unwrap();
-        file.write_all(&buf[..torn_len])?;
+        if self.group_commit {
+            // The crash cut the coalesced fence write short: the torn
+            // prefix is what the next flush puts on disk. No barrier is
+            // counted — a torn write is by definition unacknowledged.
+            self.wbuf.extend_from_slice(&buf[..torn_len]);
+        } else {
+            let file = self.current_file.as_mut().unwrap();
+            file.write_all(&buf[..torn_len])?;
+        }
         self.current_len += torn_len as u64;
         self.disk_bytes += torn_len as u64;
+        self.seg_meta.entry(self.current_segment).or_default().total += torn_len as u64;
         // Only an atom with a durable prior record gets its index entry
         // retargeted at the torn bytes (prev = that record): the crash
         // analogue of an acknowledged-then-torn append. An atom with no
@@ -941,10 +1237,15 @@ impl ShardBackend for DiskStore {
             self.live_bytes =
                 self.live_bytes.saturating_sub(entry.latest.len) + torn_len as u64;
             self.dead_records += 1;
+            if let Some(m) = self.seg_meta.get_mut(&entry.latest.segment) {
+                m.live = m.live.saturating_sub(entry.latest.len);
+            }
+            self.seg_meta.entry(self.current_segment).or_default().live += torn_len as u64;
             // Back-to-back tears: the fallback stays the last *readable*
             // record, never an earlier torn one.
             let prev = if entry.latest.torn { entry.prev } else { Some(entry.latest) };
             self.index.insert(atom, AtomIndex { latest: loc, prev });
+            self.dirty_atoms.insert(atom);
         }
         Ok(())
     }
@@ -986,7 +1287,23 @@ impl ShardBackend for DiskStore {
     }
 
     fn sync(&mut self) -> Result<()> {
-        self.write_manifest()
+        if self.group_commit {
+            self.group_commit_fence()
+        } else {
+            self.write_manifest()
+        }
+    }
+
+    fn fsyncs(&self) -> u64 {
+        self.fsyncs
+    }
+
+    fn set_group_commit(&mut self, on: bool) {
+        if !on {
+            // Leaving group-commit mode must not strand buffered bytes.
+            let _ = self.flush_wbuf();
+        }
+        self.group_commit = on;
     }
 
     fn garbage_ratio(&self) -> f64 {
@@ -997,17 +1314,23 @@ impl ShardBackend for DiskStore {
         self.disk_bytes
     }
 
-    fn compact(&mut self) -> Result<Option<CompactionStats>> {
-        Ok(Some(DiskStore::compact(self)?))
+    fn compact(&mut self, max_pass_bytes: u64) -> Result<Option<CompactionStats>> {
+        let plan = self.prepare_compaction(max_pass_bytes)?;
+        if !plan.full && plan.selected.is_empty() {
+            // Budgeted pass found no sealed garbage worth folding (all
+            // the garbage may still sit in the active segment).
+            return Ok(None);
+        }
+        Ok(Some(self.commit_compaction(plan)?))
     }
 
-    fn compact_abandoned(&mut self) -> Result<()> {
+    fn compact_abandoned(&mut self, max_pass_bytes: u64) -> Result<()> {
         // Phase one only: fresh segments land on disk, the manifest swap
         // (the commit point) never happens — exactly a crash inside the
         // rename window. Dropping the plan loses nothing: the in-memory
         // index still governs every read, and the next `open` removes the
-        // orphaned fresh segments.
-        let _abandoned = DiskStore::prepare_compaction(self)?;
+        // orphaned fresh segments (generational or full-pass alike).
+        let _abandoned = DiskStore::prepare_compaction(self, max_pass_bytes)?;
         Ok(())
     }
 
@@ -1025,6 +1348,9 @@ impl ShardBackend for DiskStore {
         if loc.torn {
             return Ok(false);
         }
+        // A group-commit record may still be buffered; materialize it so
+        // the flip below damages the real on-disk bytes.
+        self.flush_wbuf()?;
         let path = self.segment_path(loc.segment);
         let mut file = fs::OpenOptions::new()
             .read(true)
@@ -1075,22 +1401,118 @@ impl DiskStore {
         (self.compactions, self.reclaimed_bytes)
     }
 
-    /// Phase one of a compaction: fold every atom's latest readable
-    /// record into fresh segments, numbered after the active one.
-    /// Nothing becomes visible — the index, the manifest, and the old
-    /// segments are untouched, so dropping the plan instead of committing
-    /// it is exactly a mid-compaction crash (and loses nothing: the next
-    /// [`DiskStore::open`] removes the orphaned fresh segments).
-    pub fn prepare_compaction(&mut self) -> Result<CompactionPlan> {
-        let mut atoms: Vec<usize> = self.index.keys().copied().collect();
+    /// Highest generation tag currently present among the store's
+    /// segments (0 = no budgeted pass has left outputs).
+    pub fn max_generation(&self) -> u64 {
+        self.seg_meta.values().map(|m| m.generation).max().unwrap_or(0)
+    }
+
+    /// Pick the input segments for a budgeted generational pass: sealed
+    /// segments only (the active one keeps absorbing appends), worst
+    /// garbage ratio first, greedily while the combined size fits
+    /// `max_pass_bytes`. When nothing fits, the single worst segment is
+    /// taken alone so a bounded pass always makes progress — the one
+    /// case a pass may exceed its budget.
+    fn select_segments(&self, max_pass_bytes: u64) -> (Vec<u64>, u64) {
+        let mut candidates: Vec<(u64, u64, u64)> = self
+            .seg_meta
+            .iter()
+            .filter(|(seg, m)| {
+                **seg != self.current_segment && m.total > 0 && m.total > m.live
+            })
+            .map(|(seg, m)| (*seg, m.total.saturating_sub(m.live), m.total))
+            .collect();
+        // Worst garbage ratio first; segment number breaks ties so the
+        // pass layout is deterministic.
+        candidates.sort_by(|a, b| {
+            let ra = a.1 as f64 / a.2 as f64;
+            let rb = b.1 as f64 / b.2 as f64;
+            rb.partial_cmp(&ra).unwrap().then(a.0.cmp(&b.0))
+        });
+        let mut selected = Vec::new();
+        let mut pass_bytes = 0u64;
+        for (seg, _garbage, total) in &candidates {
+            if pass_bytes + total <= max_pass_bytes {
+                selected.push(*seg);
+                pass_bytes += total;
+            }
+        }
+        if selected.is_empty() {
+            if let Some((seg, _g, total)) = candidates.first() {
+                selected.push(*seg);
+                pass_bytes = *total;
+            }
+        }
+        selected.sort_unstable();
+        (selected, pass_bytes)
+    }
+
+    /// Phase one of a compaction: fold live records into fresh output
+    /// segments, numbered after every known segment. `max_pass_bytes = 0`
+    /// is the monolithic full pass (every atom rewritten); a nonzero
+    /// budget folds only the worst-garbage sealed segments whose
+    /// combined size fits it, stamping the outputs with the next
+    /// generation tag. Nothing becomes visible — the index, the
+    /// manifest, and the old segments are untouched, so dropping the
+    /// plan instead of committing it is exactly a mid-compaction crash
+    /// (and loses nothing: the next [`DiskStore::open`] removes the
+    /// orphaned fresh segments).
+    pub fn prepare_compaction(&mut self, max_pass_bytes: u64) -> Result<CompactionPlan> {
+        // The active segment's buffered tail must be on disk: a pass
+        // reads records through the normal fallback chain, and the
+        // output it writes must survive the buffer being dropped.
+        self.flush_wbuf()?;
+        let full = max_pass_bytes == 0;
+        let (selected, pass_bytes, generation) = if full {
+            let segs: Vec<u64> = {
+                let mut s: Vec<u64> = self.seg_meta.keys().copied().collect();
+                if !s.contains(&self.current_segment) {
+                    s.push(self.current_segment);
+                }
+                s.sort_unstable();
+                s
+            };
+            (segs, self.disk_bytes, 0)
+        } else {
+            let (sel, bytes) = self.select_segments(max_pass_bytes);
+            (sel, bytes, self.next_generation)
+        };
+        let in_pass: HashSet<u64> = selected.iter().copied().collect();
+        let mut atoms: Vec<usize> = if full {
+            self.index.keys().copied().collect()
+        } else {
+            self.index
+                .iter()
+                .filter(|(_, e)| {
+                    in_pass.contains(&e.latest.segment)
+                        || e.prev.map(|p| in_pass.contains(&p.segment)).unwrap_or(false)
+                })
+                .map(|(a, _)| *a)
+                .collect()
+        };
         atoms.sort_unstable(); // deterministic segment layout
-        let mut seg = self.current_segment + 1;
+        let mut seg = self.high_segment + 1;
         let mut entries = Vec::with_capacity(atoms.len());
+        let mut drop_prev = Vec::new();
         let mut new_segments: Vec<u64> = Vec::new();
         let mut file: Option<fs::File> = None;
         let mut offset = 0u64;
         let mut new_bytes = 0u64;
         for atom in atoms {
+            if !full {
+                let entry = self.index[&atom];
+                if !in_pass.contains(&entry.latest.segment) {
+                    // Only the prev fallback sits in a folded segment. If
+                    // the latest record is readable where it is, the
+                    // fallback is pure redundancy — drop it, no rewrite.
+                    // An unreadable latest means prev holds the readable
+                    // copy: fall through and rewrite it as the new latest.
+                    if self.read_any(atom, &entry.latest).is_ok() {
+                        drop_prev.push(atom);
+                        continue;
+                    }
+                }
+            }
             // get_atom applies the torn/corrupt fallback, so compaction
             // always carries the *readable* copy forward.
             let saved = ShardBackend::get_atom(self, atom)?
@@ -1124,60 +1546,134 @@ impl DiskStore {
             offset += rec_len;
             new_bytes += rec_len;
         }
-        Ok(CompactionPlan { entries, new_segments, new_bytes })
+        Ok(CompactionPlan {
+            entries,
+            drop_prev,
+            selected,
+            new_segments,
+            new_bytes,
+            pass_bytes,
+            generation,
+            full,
+        })
     }
 
     /// Phase two: atomically swap the manifest onto the fresh segments,
-    /// retarget the in-memory index, and delete every superseded segment
+    /// retarget the in-memory index, and delete every folded segment
     /// file. The manifest rename is the commit point — a crash before it
     /// recovers the pre-compaction store, a crash after it the compacted
-    /// one; no interleaving reads half of each.
+    /// one; no interleaving reads half of each. Generational commits
+    /// touch only the folded segments' index entries; the active segment
+    /// (and its group-commit buffer) keeps absorbing appends.
     pub fn commit_compaction(&mut self, plan: CompactionPlan) -> Result<CompactionStats> {
         let old_bytes = self.disk_bytes;
         let old_segments = self.segment_numbers()?;
         let dead = self.dead_records;
-        self.index.clear();
-        for (atom, loc) in &plan.entries {
-            // Latest-only: after a rewrite of every live record the prev
-            // fallback is redundancy the pass exists to reclaim.
-            self.index.insert(*atom, AtomIndex { latest: *loc, prev: None });
+        let live_records = plan.entries.len() as u64;
+        if plan.full {
+            self.index.clear();
+            for (atom, loc) in &plan.entries {
+                // Latest-only: after a rewrite of every live record the
+                // prev fallback is redundancy the pass exists to reclaim.
+                self.index.insert(*atom, AtomIndex { latest: *loc, prev: None });
+            }
+            // Appends continue at the end of the last fresh segment (or a
+            // brand-new one when the store was empty).
+            self.current_segment =
+                plan.new_segments.last().copied().unwrap_or(self.high_segment + 1);
+            self.current_file = None;
+            self.current_len = 0;
+            self.wbuf.clear();
+            self.wbuf_base = 0;
+            self.seg_meta.clear();
+            self.disk_bytes = plan.new_bytes;
+            self.live_bytes = plan.new_bytes;
+            self.dead_records = 0;
+            // A full pass resets the generation clock.
+            self.next_generation = 1;
+        } else {
+            for (atom, loc) in &plan.entries {
+                let old = self
+                    .index
+                    .insert(*atom, AtomIndex { latest: *loc, prev: None })
+                    .expect("compaction plan rewrote an atom the index no longer holds");
+                self.live_bytes = self.live_bytes.saturating_sub(old.latest.len) + loc.len;
+                if let Some(m) = self.seg_meta.get_mut(&old.latest.segment) {
+                    m.live = m.live.saturating_sub(old.latest.len);
+                }
+            }
+            for atom in &plan.drop_prev {
+                if let Some(e) = self.index.get_mut(atom) {
+                    e.prev = None;
+                }
+            }
+            for seg in &plan.selected {
+                self.seg_meta.remove(seg);
+            }
+            self.disk_bytes =
+                self.disk_bytes.saturating_sub(plan.pass_bytes) + plan.new_bytes;
+            self.next_generation = plan.generation + 1;
         }
-        // Appends continue at the end of the last fresh segment (or a
-        // brand-new one when the store was empty).
-        self.current_segment =
-            plan.new_segments.last().copied().unwrap_or(self.current_segment + 1);
-        self.current_file = None;
-        self.current_len = 0;
+        for (_, loc) in &plan.entries {
+            let m = self
+                .seg_meta
+                .entry(loc.segment)
+                .or_insert(SegMeta { generation: plan.generation, live: 0, total: 0 });
+            m.total += loc.len;
+            m.live += loc.len;
+        }
+        if plan.full {
+            self.seg_meta.entry(self.current_segment).or_default();
+        }
+        self.high_segment = self
+            .high_segment
+            .max(self.current_segment)
+            .max(plan.new_segments.last().copied().unwrap_or(0));
         self.write_manifest()?; // the commit point
-        self.maps.borrow_mut().clear();
-        let mut removed = 0usize;
-        for segnum in old_segments {
-            if !plan.new_segments.contains(&segnum)
-                && fs::remove_file(self.segment_path(segnum)).is_ok()
-            {
-                removed += 1;
+        if plan.full {
+            self.maps.borrow_mut().clear();
+        } else {
+            let mut maps = self.maps.borrow_mut();
+            for seg in &plan.selected {
+                maps.remove(seg);
             }
         }
-        let live_records = plan.entries.len() as u64;
-        self.disk_bytes = plan.new_bytes;
-        self.live_bytes = plan.new_bytes;
-        self.dead_records = 0;
+        let mut removed = 0usize;
+        if plan.full {
+            for segnum in old_segments {
+                if !plan.new_segments.contains(&segnum)
+                    && fs::remove_file(self.segment_path(segnum)).is_ok()
+                {
+                    removed += 1;
+                }
+            }
+        } else {
+            for seg in &plan.selected {
+                if fs::remove_file(self.segment_path(*seg)).is_ok() {
+                    removed += 1;
+                }
+            }
+        }
         self.compactions += 1;
-        let reclaimed = old_bytes.saturating_sub(plan.new_bytes);
+        let reclaimed = old_bytes.saturating_sub(self.disk_bytes);
         self.reclaimed_bytes += reclaimed;
         Ok(CompactionStats {
             live_records,
-            dead_records: dead,
+            dead_records: if plan.full { dead } else { 0 },
             reclaimed_bytes: reclaimed,
             segments_removed: removed,
+            segments_compacted: plan.selected.len(),
+            pass_bytes: plan.pass_bytes,
+            generation: plan.generation,
         })
     }
 
     /// Fold superseded records into fresh segments (prepare + commit).
     /// Reads before and after return identical values; only the on-disk
-    /// footprint shrinks.
-    pub fn compact(&mut self) -> Result<CompactionStats> {
-        let plan = self.prepare_compaction()?;
+    /// footprint shrinks. `max_pass_bytes = 0` folds the whole log;
+    /// nonzero runs one budgeted generational pass.
+    pub fn compact(&mut self, max_pass_bytes: u64) -> Result<CompactionStats> {
+        let plan = self.prepare_compaction(max_pass_bytes)?;
         self.commit_compaction(plan)
     }
 }
@@ -1455,10 +1951,13 @@ mod tests {
         assert!(DiskStore::garbage_ratio(&s) > 0.5, "7/8 of each atom's records are garbage");
         let a0 = s.get_atom(0).unwrap().unwrap();
         let a1 = s.get_atom(1).unwrap().unwrap();
-        let stats = DiskStore::compact(&mut s).unwrap();
+        let stats = DiskStore::compact(&mut s, 0).unwrap();
         assert_eq!(stats.live_records, 2);
         assert!(stats.reclaimed_bytes > 0);
         assert!(stats.segments_removed >= 1);
+        assert!(stats.segments_compacted >= 1);
+        assert_eq!(stats.pass_bytes, before_disk, "a full pass processes the whole log");
+        assert_eq!(stats.generation, 0, "full-pass outputs reset the generation clock");
         assert!(s.on_disk_bytes() < before_disk, "compaction must shrink the on-disk bytes");
         assert_eq!(DiskStore::garbage_ratio(&s), 0.0);
         assert_eq!(s.get_atom(0).unwrap().unwrap(), a0);
@@ -1527,7 +2026,7 @@ mod tests {
         let a1 = s.get_atom(1).unwrap().unwrap();
         // Phase one only — the manifest swap (the commit point) never
         // happens, exactly a crash mid-compaction.
-        let _plan = s.prepare_compaction().unwrap();
+        let _plan = s.prepare_compaction(0).unwrap();
         assert!(dir.join("seg-000001.bin").exists(), "fresh segment written by phase one");
         drop(s);
         let s = DiskStore::open(&dir).unwrap();
@@ -1537,6 +2036,162 @@ mod tests {
             !s.segment_path(1).exists(),
             "orphaned compaction segment must be removed on reopen"
         );
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The group-commit path must be byte-identical to the per-record
+    /// path: same segment files, same reads, while paying one barrier
+    /// per fence instead of one per record plus a manifest rewrite.
+    #[test]
+    fn group_commit_is_byte_identical_and_batches_barriers() {
+        let dir_a = tmpdir("gc-per-record");
+        let dir_b = tmpdir("gc-group");
+        let mut a = DiskStore::open(&dir_a).unwrap();
+        let mut b = DiskStore::open(&dir_b).unwrap();
+        b.set_group_commit(true);
+        for fence in 0..4usize {
+            for s in [&mut a, &mut b] {
+                s.put_atoms(
+                    fence + 1,
+                    &[
+                        (0, &[fence as f32, 1.0][..]),
+                        (1, &[-(fence as f32)][..]),
+                        (2, &[0.5, 0.5, 0.5][..]),
+                    ],
+                )
+                .unwrap();
+            }
+            // Buffered reads are served before the fence lands.
+            assert_eq!(
+                b.get_atom(2).unwrap().unwrap().values,
+                vec![0.5, 0.5, 0.5],
+                "buffered record must be readable pre-fence"
+            );
+            ShardBackend::sync(&mut a).unwrap();
+            ShardBackend::sync(&mut b).unwrap();
+        }
+        let seg_a = fs::read(dir_a.join("seg-000000.bin")).unwrap();
+        let seg_b = fs::read(dir_b.join("seg-000000.bin")).unwrap();
+        assert_eq!(seg_a, seg_b, "coalesced writes must produce identical segment bytes");
+        for atom in 0..3usize {
+            assert_eq!(a.get_atom(atom).unwrap(), b.get_atom(atom).unwrap());
+        }
+        // Per-record: 3 record barriers + 1 manifest rewrite per fence.
+        // Group commit: exactly one barrier per (non-empty) fence.
+        assert_eq!(ShardBackend::fsyncs(&a), 4 * (3 + 1));
+        assert_eq!(ShardBackend::fsyncs(&b), 4);
+        // A clean fence pays nothing.
+        ShardBackend::sync(&mut b).unwrap();
+        assert_eq!(ShardBackend::fsyncs(&b), 4);
+        // The delta manifest governs a reopen identically to the full one.
+        drop(b);
+        let b = DiskStore::open(&dir_b).unwrap();
+        for atom in 0..3usize {
+            assert_eq!(a.get_atom(atom).unwrap(), b.get_atom(atom).unwrap());
+        }
+        fs::remove_dir_all(&dir_a).unwrap();
+        fs::remove_dir_all(&dir_b).unwrap();
+    }
+
+    /// A crash before the group-commit fence (buffer dropped, delta line
+    /// never appended) must land the reopen on the last fenced state —
+    /// the same fallback the per-record path gets from its manifest.
+    #[test]
+    fn group_commit_dropped_fence_recovers_last_fenced_state() {
+        let dir = tmpdir("gc-crash");
+        {
+            let mut s = DiskStore::open(&dir).unwrap();
+            s.set_group_commit(true);
+            s.put_atoms(1, &[(0, &[1.0][..]), (1, &[2.0][..])]).unwrap();
+            ShardBackend::sync(&mut s).unwrap();
+            // Unfenced overwrite: buffered, then the handle is dropped.
+            s.put_atoms(2, &[(0, &[9.0][..])]).unwrap();
+        }
+        let s = DiskStore::open(&dir).unwrap();
+        let got = s.get_atom(0).unwrap().unwrap();
+        assert_eq!((got.iter, got.values.clone()), (1, vec![1.0]));
+        assert_eq!(s.get_atom(1).unwrap().unwrap().values, vec![2.0]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A budgeted generational pass folds only the worst-garbage sealed
+    /// segments within the byte budget, stamps its outputs with a fresh
+    /// generation, preserves every read, and survives a reopen (the
+    /// manifest segment table keeps outputs numbered past the active
+    /// segment from being swept as orphans).
+    #[test]
+    fn generational_pass_respects_budget_and_preserves_reads() {
+        let dir = tmpdir("generational");
+        let mut s = DiskStore::open(&dir).unwrap();
+        s.set_segment_limit(128); // small segments => many sealed ones
+        for round in 1..=8usize {
+            for atom in 0..4usize {
+                s.put_atoms(round, &[(atom, &[round as f32, atom as f32][..])]).unwrap();
+            }
+        }
+        ShardBackend::sync(&mut s).unwrap();
+        let before: Vec<_> = (0..4).map(|a| s.get_atom(a).unwrap().unwrap()).collect();
+        let before_disk = s.on_disk_bytes();
+        let budget = 300u64;
+        let stats = DiskStore::compact(&mut s, budget).unwrap();
+        assert!(stats.segments_compacted >= 1);
+        assert!(
+            stats.pass_bytes <= budget,
+            "pass bytes {} exceeded budget {budget}",
+            stats.pass_bytes
+        );
+        assert_eq!(stats.generation, 1, "first budgeted pass stamps generation 1");
+        assert!(s.on_disk_bytes() < before_disk);
+        for (atom, want) in before.iter().enumerate() {
+            assert_eq!(&s.get_atom(atom).unwrap().unwrap(), want);
+        }
+        // Passes chain: the next one stamps the next generation.
+        for atom in 0..4usize {
+            s.put_atoms(9, &[(atom, &[9.0, atom as f32][..])]).unwrap();
+        }
+        ShardBackend::sync(&mut s).unwrap();
+        let stats2 = DiskStore::compact(&mut s, budget).unwrap();
+        assert_eq!(stats2.generation, 2);
+        assert!(s.max_generation() >= 1);
+        // Reopen: generational outputs survive, reads identical, and
+        // appends keep working.
+        drop(s);
+        let mut s = DiskStore::open(&dir).unwrap();
+        for atom in 0..4usize {
+            assert_eq!(s.get_atom(atom).unwrap().unwrap().values, vec![9.0, atom as f32]);
+        }
+        s.put_atoms(10, &[(0, &[10.0, 0.0][..])]).unwrap();
+        assert_eq!(s.get_atom(0).unwrap().unwrap().values, vec![10.0, 0.0]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// An abandoned generational pass (crash before the manifest swap)
+    /// leaves orphan generation segments; the reopen removes them and
+    /// recovers the pre-pass state.
+    #[test]
+    fn abandoned_generational_pass_is_cleaned_up_on_reopen() {
+        let dir = tmpdir("generational-crash");
+        let mut s = DiskStore::open(&dir).unwrap();
+        s.set_segment_limit(128);
+        for round in 1..=6usize {
+            for atom in 0..3usize {
+                s.put_atoms(round, &[(atom, &[round as f32][..])]).unwrap();
+            }
+        }
+        ShardBackend::sync(&mut s).unwrap();
+        let before: Vec<_> = (0..3).map(|a| s.get_atom(a).unwrap().unwrap()).collect();
+        let segs_before = s.segment_numbers().unwrap();
+        ShardBackend::compact_abandoned(&mut s, 300).unwrap();
+        assert!(
+            s.segment_numbers().unwrap().len() > segs_before.len(),
+            "phase one must have written orphan generation segments"
+        );
+        drop(s);
+        let s = DiskStore::open(&dir).unwrap();
+        assert_eq!(s.segment_numbers().unwrap(), segs_before, "orphans must be swept");
+        for (atom, want) in before.iter().enumerate() {
+            assert_eq!(&s.get_atom(atom).unwrap().unwrap(), want);
+        }
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -62,16 +62,33 @@ fn drive_chaos_parity(
     compact_threshold: f64,
     lost: &[usize],
 ) -> ChaosRun {
+    drive_chaos_opts(mode, shards, m, plan, dir, compact_threshold, false, lost)
+}
+
+/// The fully-parameterized chaos harness: parity shards and the
+/// group-commit write path are both optional.
+#[allow(clippy::too_many_arguments)]
+fn drive_chaos_opts(
+    mode: CheckpointMode,
+    shards: usize,
+    m: usize,
+    plan: &FaultPlan,
+    dir: Option<&Path>,
+    compact_threshold: f64,
+    group_commit: bool,
+    lost: &[usize],
+) -> ChaosRun {
     let mut trainer = SyntheticTrainer::new(32, 0.85, 3);
     trainer.init(7).unwrap();
     let layout = trainer.layout().clone();
-    let store = Arc::new(match dir {
+    let store = match dir {
         None => plan.mem_store(shards).with_mem_parity(m),
         Some(d) => {
             let _ = std::fs::remove_dir_all(d);
             plan.disk_store(d, shards).unwrap().with_disk_parity(d, m).unwrap()
         }
-    });
+    };
+    let store = Arc::new(store.with_group_commit(group_commit));
     let policy = CheckpointPolicy::partial(6, 3, Selector::Priority);
     let mut ck = AsyncCheckpointer::new(
         policy,
@@ -254,7 +271,7 @@ fn fsync_fault_in_the_compaction_window_lands_on_last_readable_manifest() {
     store.put_atoms_at(7, &[(0, &[5.0][..])]).unwrap();
     // The compaction trigger fires; the pending fsync fault turns the
     // pass into a crash inside the rename window (no stats recorded).
-    assert!(store.compact_if_needed(0.1, 0).unwrap().is_empty());
+    assert!(store.compact_if_needed(0.1, 0, 0).unwrap().is_empty());
     assert_eq!(store.compaction_runs(), 0);
     // In-process reads still serve the freshest records.
     assert_eq!(store.get_atom_any(0).unwrap().unwrap().values, vec![5.0]);
@@ -267,7 +284,7 @@ fn fsync_fault_in_the_compaction_window_lands_on_last_readable_manifest() {
     let a1 = reopened.get_atom_any(1).unwrap().unwrap();
     assert_eq!((a1.iter, a1.values), (4, vec![14.0]));
     // A later real compaction still works on the reopened store.
-    assert!(!reopened.compact_if_needed(0.0, 0).unwrap().is_empty());
+    assert!(!reopened.compact_if_needed(0.0, 0, 0).unwrap().is_empty());
     assert_eq!(reopened.get_atom_any(0).unwrap().unwrap().values, vec![4.0]);
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -403,6 +420,114 @@ fn torn_disk_record_recovers_from_manifest_tracked_previous_record() {
         );
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn group_commit_dropped_fence_recovers_identically_to_per_record() {
+    // A batched fence dropped by an fsync fault must cost exactly what
+    // the per-record path's dropped manifest write costs: a crash
+    // reopens on the last fenced state, nothing more, nothing less —
+    // pinned by running the same schedule over both write paths and
+    // comparing the reopened stores record for record.
+    let base = tmpdir("gc-fence-identity");
+    let _ = std::fs::remove_dir_all(&base);
+    let plan = FaultPlan {
+        faults: vec![ShardFault { shard: 0, at: 6, kind: FaultKind::FsyncFail }],
+    };
+    let mut reopened_stores = Vec::new();
+    for group in [false, true] {
+        let dir = base.join(if group { "group" } else { "per-record" });
+        let store = plan.disk_store(&dir, 2).unwrap().with_group_commit(group);
+        for iter in 1..=4usize {
+            store
+                .put_atoms_at(iter, &[(0, &[iter as f32][..]), (1, &[10.0 + iter as f32][..])])
+                .unwrap();
+        }
+        store.sync_all().unwrap(); // durable fence before the fault arms
+        store.advance_epoch(6);
+        store.put_atoms_at(7, &[(0, &[70.0][..]), (1, &[71.0][..])]).unwrap();
+        store.sync_all().unwrap(); // shard 0's fence silently dropped
+        store.put_atoms_at(8, &[(0, &[80.0][..])]).unwrap(); // never fenced
+        // In-process reads are unaffected on both paths.
+        assert_eq!(store.get_atom_any(0).unwrap().unwrap().values, vec![80.0]);
+        assert_eq!(store.get_atom_any(1).unwrap().unwrap().values, vec![71.0]);
+        drop(store);
+        reopened_stores.push(ShardedStore::open_disk(&dir, 2).unwrap());
+    }
+    let (pr, gc) = (&reopened_stores[0], &reopened_stores[1]);
+    for atom in 0..2 {
+        assert_eq!(
+            pr.get_atom_any(atom).unwrap(),
+            gc.get_atom_any(atom).unwrap(),
+            "atom {atom}: group-commit crash fallback diverged from per-record"
+        );
+    }
+    // Both land on the pre-fault fence: atom 0 (shard 0, fence dropped)
+    // falls back to its last manifest-tracked record at iter 4; atom 1
+    // (shard 1, fence landed) keeps iter 7.
+    let a0 = gc.get_atom_any(0).unwrap().unwrap();
+    assert_eq!((a0.iter, a0.values), (4, vec![4.0]));
+    let a1 = gc.get_atom_any(1).unwrap().unwrap();
+    assert_eq!((a1.iter, a1.values), (7, vec![71.0]));
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn group_commit_torn_write_keeps_manifest_tracked_fallback() {
+    // The torn-write pin over the batched write path: a torn record in
+    // the coalesced fence buffer flushes as physically truncated bytes,
+    // and reads fall back to the manifest-tracked previous record
+    // exactly as on the per-record path — in process, against the
+    // mem-backend torn semantics, and across a reopen.
+    let evens: Vec<usize> = (0..32).step_by(2).collect();
+    let reference =
+        drive_chaos(CheckpointMode::Sync, 2, &FaultPlan::default(), None, 0.0, &evens).params;
+    let torn_plan = FaultPlan {
+        faults: vec![ShardFault { shard: 1, at: 5, kind: FaultKind::TornWrite }],
+    };
+    let mem = drive_chaos(CheckpointMode::Sync, 2, &torn_plan, None, 0.0, &evens);
+    let pr_dir = tmpdir("gc-torn-pr");
+    let pr =
+        drive_chaos(CheckpointMode::Sync, 2, &torn_plan, Some(pr_dir.as_path()), 0.0, &evens);
+    let gc_dir = tmpdir("gc-torn-gc");
+    let gc = drive_chaos_opts(
+        CheckpointMode::Sync,
+        2,
+        0,
+        &torn_plan,
+        Some(gc_dir.as_path()),
+        0.0,
+        true,
+        &evens,
+    );
+    assert_eq!(reference, gc.params, "group-commit torn run diverged from fault-free");
+    // Batching must actually batch: the same schedule pays fewer
+    // durability barriers under group commit than per-record appends.
+    assert!(
+        gc.store.total_fsyncs() < pr.store.total_fsyncs(),
+        "group commit paid {} barriers vs per-record {}",
+        gc.store.total_fsyncs(),
+        pr.store.total_fsyncs()
+    );
+    let (mem_store, gc_store) = (mem.store, gc.store);
+    for atom in 0..32 {
+        assert_eq!(
+            mem_store.get_atom_any(atom).unwrap(),
+            gc_store.get_atom_any(atom).unwrap(),
+            "atom {atom}: group-commit torn fallback diverged from mem semantics"
+        );
+    }
+    drop(gc_store);
+    let reopened = ShardedStore::open_disk(&gc_dir, 2).unwrap();
+    for atom in 0..32 {
+        assert_eq!(
+            mem_store.get_atom_any(atom).unwrap(),
+            reopened.get_atom_any(atom).unwrap(),
+            "atom {atom}: manifest-tracked fallback lost after group-commit reopen"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&pr_dir);
+    let _ = std::fs::remove_dir_all(&gc_dir);
 }
 
 #[test]

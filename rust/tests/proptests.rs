@@ -262,22 +262,30 @@ fn prop_bound_nonnegative_and_monotone() {
 #[test]
 fn prop_recovery_unchanged_by_mid_compaction_crash() {
     // Compaction never races recovery: write a history of overwrites to
-    // a DiskStore, crash mid-compaction (fresh segments written, the
-    // manifest never swapped), reopen, and full recovery must return the
-    // exact pre-compaction parameters. A *committed* compaction must
-    // change nothing either.
+    // a DiskStore (small segments, so the log spans several sealed ones;
+    // group commit on half the cases), crash at a random point inside a
+    // compaction pass — a monolithic full pass, a budgeted generational
+    // pass (orphaned generation-tagged output segments), or a
+    // generational pass following a *committed* one (orphans numbered
+    // past live generation outputs) — reopen, and full recovery must
+    // return the exact pre-crash parameters. A committed pass, full or
+    // budgeted, must change nothing either.
     let base = std::env::temp_dir().join(format!("scar-prop-compact-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&base);
     let mut case = 0usize;
-    prop_check("compaction crash safety", 20, |rng| {
+    prop_check("compaction crash safety", 18, |rng| {
         case += 1;
         let dir = base.join(format!("case-{case}"));
         let _ = std::fs::remove_dir_all(&dir);
         let (state, layout) = random_store(rng);
         let n = layout.n_atoms();
         let mut disk = DiskStore::open(&dir).unwrap();
+        disk.set_segment_limit(96 + 32 * rng.below(8) as u64);
+        if rng.below(2) == 1 {
+            scar::storage::ShardBackend::set_group_commit(&mut disk, true);
+        }
         let mut buf = Vec::new();
-        for iter in 0..4usize {
+        for iter in 0..6usize {
             let source = if iter == 0 { state.clone() } else { perturbed(rng, &state, 1.0) };
             let atoms: Vec<usize> = if iter == 0 {
                 (0..n).collect() // x(0) for every atom first
@@ -295,12 +303,26 @@ fn prop_recovery_unchanged_by_mid_compaction_crash() {
             let refs: Vec<(usize, &[f32])> =
                 payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
             disk.put_atoms(iter, &refs).unwrap();
+            if rng.below(2) == 0 {
+                disk.sync().unwrap(); // mid-run fence (a delta line under group commit)
+            }
         }
         disk.sync().unwrap();
         let mut before = state.clone();
         recover(RecoveryMode::Full, &mut before, &layout, &[], &disk).unwrap();
-        // Crash mid-compaction: phase one only.
-        let _abandoned_plan = disk.prepare_compaction().unwrap();
+        // Crash mid-pass: phase one only — fresh segments hit the disk,
+        // the manifest swap never lands.
+        let budget = (64 + rng.below(1024)) as u64;
+        match rng.below(3) {
+            0 => drop(disk.prepare_compaction(0).unwrap()),
+            1 => drop(disk.prepare_compaction(budget).unwrap()),
+            _ => {
+                // A committed generational pass first, so the abandoned
+                // orphans are numbered past live generation outputs.
+                let _ = disk.compact(budget).unwrap();
+                drop(disk.prepare_compaction(budget).unwrap());
+            }
+        }
         drop(disk);
         let mut reopened = DiskStore::open(&dir).unwrap();
         let mut after = state.clone();
@@ -310,8 +332,12 @@ fn prop_recovery_unchanged_by_mid_compaction_crash() {
             0.0,
             "mid-compaction crash changed recovered parameters"
         );
-        // Committed compaction: still byte-identical recovery.
-        reopened.compact().unwrap();
+        // Committed compaction (full or budgeted): still byte-identical.
+        if rng.below(2) == 0 {
+            reopened.compact(0).unwrap();
+        } else {
+            reopened.compact(budget).unwrap();
+        }
         let mut compacted = state.clone();
         recover(RecoveryMode::Full, &mut compacted, &layout, &[], &reopened).unwrap();
         assert_eq!(
@@ -319,6 +345,120 @@ fn prop_recovery_unchanged_by_mid_compaction_crash() {
             0.0,
             "committed compaction changed recovered parameters"
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn prop_generational_crash_matrix_matches_mem_over_parity() {
+    // {mem, disk} x parity {0, 1}: the same random put/fence schedule
+    // lands on a memory-backed and a disk-backed sharded store; each
+    // disk shard is then caught at a random point of its own budgeted
+    // generational pass — abandoned mid-swap (orphan generation
+    // segments left behind), committed, or never started — and the
+    // store reopens cold. Every atom must read back exactly the mem
+    // cell's record, and a full-state parity scrub must find nothing to
+    // repair.
+    use scar::storage::ShardedStore;
+
+    fn mem_cell(shards: usize, m: usize) -> ShardedStore {
+        let backends = (0..shards)
+            .map(|_| Box::new(MemStore::new()) as Box<dyn scar::storage::ShardBackend>)
+            .collect();
+        ShardedStore::from_backends(backends).with_mem_parity(m)
+    }
+
+    fn disk_cell(
+        dir: &std::path::Path,
+        shards: usize,
+        m: usize,
+        seg_limit: u64,
+        group: bool,
+    ) -> ShardedStore {
+        let backends = (0..shards)
+            .map(|s| {
+                let mut d = DiskStore::open(&dir.join(format!("shard-{s:03}"))).unwrap();
+                d.set_segment_limit(seg_limit);
+                Box::new(d) as Box<dyn scar::storage::ShardBackend>
+            })
+            .collect();
+        let mut store = ShardedStore::from_backends(backends);
+        if m > 0 {
+            store = store.with_disk_parity(dir, m).unwrap();
+        }
+        store.with_placement_dir(dir).with_group_commit(group)
+    }
+
+    let base = std::env::temp_dir().join(format!("scar-prop-genx-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let mut case = 0usize;
+    prop_check("generational crash matrix", 10, |rng| {
+        case += 1;
+        let shards = 1 + rng.below(3); // 1..=3
+        let m = rng.below(2); // parity 0 or 1
+        let group = rng.below(2) == 1;
+        let dir = base.join(format!("case-{case}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (state, layout) = random_store(rng);
+        let n = layout.n_atoms();
+        let mem = mem_cell(shards, m);
+        let disk = disk_cell(&dir, shards, m, (96 + 32 * rng.below(6)) as u64, group);
+        let mut buf = Vec::new();
+        for iter in 0..6usize {
+            let source = if iter == 0 { state.clone() } else { perturbed(rng, &state, 1.0) };
+            let atoms: Vec<usize> = if iter == 0 {
+                (0..n).collect()
+            } else {
+                rng.sample_indices(n, 1 + rng.below(n))
+            };
+            let payloads: Vec<(usize, Vec<f32>)> = atoms
+                .iter()
+                .map(|&a| {
+                    source.read_atom(&layout, a, &mut buf);
+                    (a, buf.clone())
+                })
+                .collect();
+            let refs: Vec<(usize, &[f32])> =
+                payloads.iter().map(|(a, v)| (*a, v.as_slice())).collect();
+            mem.put_atoms_at(iter, &refs).unwrap();
+            disk.put_atoms_at(iter, &refs).unwrap();
+            if m > 0 {
+                mem.parity_fence().unwrap();
+                disk.parity_fence().unwrap();
+            }
+        }
+        disk.sync_all().unwrap();
+        drop(disk);
+        let budget = (64 + rng.below(768)) as u64;
+        for s in 0..shards {
+            let mut d = DiskStore::open(&dir.join(format!("shard-{s:03}"))).unwrap();
+            match rng.below(3) {
+                0 => drop(d.prepare_compaction(budget).unwrap()),
+                1 => {
+                    let _ = d.compact(budget).unwrap();
+                }
+                _ => {}
+            }
+        }
+        let reopened = ShardedStore::open_disk(&dir, shards).unwrap().with_scrub_interval(1);
+        for atom in 0..n {
+            assert_eq!(
+                mem.get_atom_any(atom).unwrap(),
+                reopened.get_atom_any(atom).unwrap(),
+                "atom {atom}: disk cell diverged after a generational crash \
+                 ({shards} shards, parity {m}, group_commit {group})"
+            );
+        }
+        if m > 0 {
+            // scrub_interval 1 makes this fence a full-state deep scrub:
+            // every stripe re-checked against parity, nothing to repair.
+            assert_eq!(
+                reopened.parity_fence().unwrap(),
+                0,
+                "a generational crash left records for parity to repair"
+            );
+        }
         let _ = std::fs::remove_dir_all(&dir);
     });
     let _ = std::fs::remove_dir_all(&base);
